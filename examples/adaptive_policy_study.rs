@@ -1,0 +1,54 @@
+//! Policy study: how each adaptive mechanism of §III-D behaves on a
+//! DL-PIM winner (SPLRad), a loser (PLYgemm), and a neutral streaming
+//! workload (STRTriad) — including the epoch-by-epoch decision trace.
+//!
+//! ```bash
+//! cargo run --release --example adaptive_policy_study
+//! ```
+
+use dlpim::config::SimConfig;
+use dlpim::coordinator::driver::simulate;
+use dlpim::policy::PolicyKind;
+use dlpim::workloads::catalog;
+
+fn main() {
+    let workloads = ["SPLRad", "PLYgemm", "STRTriad"];
+    let policies = [
+        PolicyKind::Always,
+        PolicyKind::AdaptiveHops,
+        PolicyKind::AdaptiveLatency,
+        PolicyKind::Adaptive,
+    ];
+
+    for wl in workloads {
+        let mut base_cfg = SimConfig::hmc().quick();
+        base_cfg.policy = PolicyKind::Never;
+        let base = simulate(&base_cfg, catalog::build(wl, &base_cfg).unwrap());
+        println!("== {wl} (baseline {:.0} cycles, {:.1} cyc/req)", base.cycles(), base.avg_latency());
+
+        for p in policies {
+            let mut cfg = base_cfg.clone();
+            cfg.policy = p;
+            let rep = simulate(&cfg, catalog::build(wl, &cfg).unwrap());
+            let decisions = &rep.runs[0].decisions;
+            let on_epochs = decisions.iter().filter(|d| d.enabled).count();
+            println!(
+                "  {:<17} speedup {:.3} | latency impr {:+5.1}% | epochs on/total {}/{}",
+                p.as_str(),
+                rep.speedup_vs(&base),
+                rep.latency_improvement_vs(&base) * 100.0,
+                on_epochs,
+                decisions.len(),
+            );
+            if p == PolicyKind::Adaptive && !decisions.is_empty() {
+                let trace: Vec<&str> =
+                    decisions.iter().take(12).map(|d| if d.enabled { "on" } else { "off" }).collect();
+                println!("                    decision trace: {}", trace.join(" -> "));
+            }
+        }
+        println!();
+    }
+    println!("expected shape: SPLRad gains under every subscribe policy; PLYgemm is");
+    println!("hurt by always-subscribe and recovered by the adaptive policies;");
+    println!("STRTriad is indifferent (no post-L1 reuse to exploit).");
+}

@@ -1,0 +1,43 @@
+//! Quickstart: simulate one workload under baseline and DL-PIM adaptive,
+//! print the paper's headline metrics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dlpim::config::SimConfig;
+use dlpim::coordinator::driver::simulate;
+use dlpim::policy::PolicyKind;
+use dlpim::workloads::catalog;
+
+fn main() {
+    // Radix sort: the paper's biggest DL-PIM winner (+105% in Fig 9).
+    let workload = "SPLRad";
+
+    let mut base_cfg = SimConfig::hmc().quick();
+    base_cfg.policy = PolicyKind::Never;
+    let mut dl_cfg = base_cfg.clone();
+    dl_cfg.policy = PolicyKind::Adaptive;
+
+    println!("simulating {workload} on a 6x6 HMC mesh (32 vaults)...\n");
+
+    let base = simulate(&base_cfg, catalog::build(workload, &base_cfg).unwrap());
+    let dlpim = simulate(&dl_cfg, catalog::build(workload, &dl_cfg).unwrap());
+
+    let (bn, bq, ba) = base.latency_fractions();
+    println!("baseline   : {:>9.0} cycles | {:6.1} cyc/req | net {:.0}% queue {:.0}% array {:.0}% | CoV {:.2}",
+        base.cycles(), base.avg_latency(), bn * 100.0, bq * 100.0, ba * 100.0, base.cov());
+    let (dn, dq, da) = dlpim.latency_fractions();
+    println!("dl-pim     : {:>9.0} cycles | {:6.1} cyc/req | net {:.0}% queue {:.0}% array {:.0}% | CoV {:.2}",
+        dlpim.cycles(), dlpim.avg_latency(), dn * 100.0, dq * 100.0, da * 100.0, dlpim.cov());
+    println!();
+    println!("speedup            : {:.2}x", dlpim.speedup_vs(&base));
+    println!("latency improvement: {:.1}%", dlpim.latency_improvement_vs(&base) * 100.0);
+    println!("local accesses     : {:.1}% (baseline {:.1}%)",
+        dlpim.local_fraction() * 100.0, base.local_fraction() * 100.0);
+    let r = &dlpim.runs[0];
+    println!(
+        "protocol activity  : {} subscriptions, {} resubscriptions, {} unsubscriptions",
+        r.stats.subscriptions, r.stats.resubscriptions, r.stats.unsubscriptions
+    );
+}

@@ -1,0 +1,55 @@
+"""AOT pipeline: lower every Layer-2 model to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile()`` or proto ``.serialize()`` — is the
+interchange format: jax >= 0.5 serializes HloModuleProto with 64-bit
+instruction ids, which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name: str) -> str:
+    fn, args = ARTIFACTS[name]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--only", nargs="*", default=None, help="subset of artifact names"
+    )
+    ns = ap.parse_args()
+    out = pathlib.Path(ns.out)
+    out.mkdir(parents=True, exist_ok=True)
+    names = ns.only if ns.only else sorted(ARTIFACTS)
+    for name in names:
+        text = lower_one(name)
+        path = out / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

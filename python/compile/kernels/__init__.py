@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels (build-time only; lowered AOT into the HLO
+artifacts the Rust runtime executes)."""
+
+from . import gemm, ref, stencil2d, stream  # noqa: F401

@@ -1,0 +1,60 @@
+"""Layer-1 Pallas GEMM kernel, tiled for the MXU/VMEM hierarchy.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): DL-PIM moves a DRAM
+block next to the PIM core that reuses it; on a TPU-shaped machine the
+same insight is the HBM->VMEM schedule. The BlockSpec below *is* a
+subscription: grid step (i, j) reserves VMEM for one (bm, K) x (K, bn)
+operand pair (the "reserved space"), pulls it local to the MXU, and
+amortizes the transfer over bm*bn*K MACs of in-tile reuse — the analogue
+of Fig 10's local-reuse count. Zero-reuse workloads (STREAM) gain nothing
+from bigger tiles, the same crossover as the paper's Fig 9.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the Rust
+runtime loads. On a real TPU the same kernel compiles natively.
+
+VMEM budget at the default bm = bn = 64, K <= 512, f32:
+  A tile 64*512*4 = 128 KiB, B tile 512*64*4 = 128 KiB, out 16 KiB
+  => ~272 KiB per grid step, comfortably inside a 16 MiB VMEM with
+  double-buffering headroom (DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    # One (bm, K) x (K, bn) MXU contraction per grid step.
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def gemm(a, b, bm=64, bn=64):
+    """C = A @ B with (bm, bn) output tiles; K is kept whole per step."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0, "dims must tile evenly"
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def gemm_tile(a, b):
+    """Single-tile (64x64) multiply — the unit the Rust e2e driver calls
+    through PJRT while the simulator replays its memory trace."""
+    return gemm(a, b, bm=64, bn=64)

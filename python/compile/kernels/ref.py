@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth
+pytest compares against (the CORE correctness signal of the L1 layer)."""
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b):
+    """Plain matmul in f32."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def stencil5_ref(x, c_center=0.5, c_neigh=0.125):
+    """5-point stencil with zero-padding boundaries.
+
+    y[i,j] = c_center*x[i,j] + c_neigh*(x[i-1,j]+x[i+1,j]+x[i,j-1]+x[i,j+1])
+    """
+    p = jnp.pad(x, 1)
+    return (
+        c_center * x
+        + c_neigh
+        * (p[:-2, 1:-1] + p[2:, 1:-1] + p[1:-1, :-2] + p[1:-1, 2:])
+    ).astype(x.dtype)
+
+
+def triad_ref(b, c, scalar):
+    """STREAM triad: a = b + scalar * c."""
+    return b + scalar * c
+
+
+def linreg_ref(x, y):
+    """Least-squares slope & intercept via the moment sums the Phoenix
+    map/reduce kernel accumulates."""
+    n = x.shape[0]
+    sx = jnp.sum(x)
+    sy = jnp.sum(y)
+    sxx = jnp.sum(x * x)
+    sxy = jnp.sum(x * y)
+    denom = n * sxx - sx * sx
+    slope = (n * sxy - sx * sy) / denom
+    intercept = (sy - slope * sx) / n
+    return slope, intercept

@@ -1,0 +1,55 @@
+"""Layer-1 Pallas 5-point stencil (PLYcon2d / SPLOcnpJac compute kernel).
+
+Row-band BlockSpec: each grid step owns a (bh, W) band plus one halo row
+on each side — the VMEM incarnation of the neighbour-row reuse the L3
+StencilSweep generator models (two of the three row reads per output block
+are to rows another band also needs: the stencil's "remote" accesses).
+
+Halo handling: rather than overlapping BlockSpecs (unsupported in
+interpret mode), the kernel receives the *whole* padded array and slices
+its band with dynamic indexing; bands stay VMEM-sized for realistic
+shapes (W <= 4096 f32 => <= 16 KiB per row).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stencil_kernel(c_ref, p_ref, o_ref, *, bh):
+    i = pl.program_id(0)
+    r0 = i * bh
+    # p_ref is the zero-padded array: p[r+1, c+1] == x[r, c].
+    band_c = jax.lax.dynamic_slice_in_dim(p_ref[...], r0 + 1, bh, axis=0)
+    band_n = jax.lax.dynamic_slice_in_dim(p_ref[...], r0, bh, axis=0)
+    band_s = jax.lax.dynamic_slice_in_dim(p_ref[...], r0 + 2, bh, axis=0)
+    center = band_c[:, 1:-1]
+    north = band_n[:, 1:-1]
+    south = band_s[:, 1:-1]
+    west = band_c[:, :-2]
+    east = band_c[:, 2:]
+    coef = c_ref[...]
+    o_ref[...] = coef[0] * center + coef[1] * (north + south + west + east)
+
+
+@functools.partial(jax.jit, static_argnames=("bh",))
+def stencil5(x, c_center=0.5, c_neigh=0.125, bh=32):
+    """y = c_center*x + c_neigh*(N+S+E+W) with zero boundaries."""
+    h, w = x.shape
+    assert h % bh == 0, "height must tile by bh"
+    p = jnp.pad(x, 1)
+    coef = jnp.array([c_center, c_neigh], dtype=jnp.float32)
+    grid = (h // bh,)
+    return pl.pallas_call(
+        functools.partial(_stencil_kernel, bh=bh),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((h + 2, w + 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bh, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(coef, p)

@@ -1,0 +1,38 @@
+"""Layer-1 Pallas STREAM kernels (STRAdd/STRCpy/STRSca/STRTriad compute).
+
+One-dimensional tiling: each grid step moves a `bs`-element block
+HBM->VMEM, does one FMA, and writes back — deliberately the *zero-reuse*
+end of the BlockSpec-as-subscription spectrum (see gemm.py): each block is
+"subscribed" once and never touched again, exactly why STREAM sits at
+speedup 1.00 in the paper's Fig 9.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _triad_kernel(s_ref, b_ref, c_ref, a_ref):
+    a_ref[...] = b_ref[...] + s_ref[0] * c_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bs",))
+def triad(b, c, scalar, bs=1024):
+    """a = b + scalar * c, tiled by `bs` elements."""
+    (n,) = b.shape
+    assert n % bs == 0, "length must tile by bs"
+    s = jnp.asarray(scalar, dtype=jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _triad_kernel,
+        grid=(n // bs,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(s, b, c)

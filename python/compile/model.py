@@ -1,0 +1,68 @@
+"""Layer-2 JAX models: the compute graphs of the workload kernels the L3
+simulator drives, built on the Layer-1 Pallas kernels.
+
+Each model is a plain jitted-jax function over fixed example shapes (the
+AOT contract); `aot.py` lowers every entry of `ARTIFACTS` to HLO text.
+Outputs are tuples — the Rust side unwraps with `to_tuple`.
+
+L2 optimization notes (DESIGN.md §Perf): every model is a single fused
+HLO module — no Python-level loops survive lowering; the blocked GEMM's
+accumulation is the kernel grid, not a scan, so XLA sees one fusion
+region per tile; nothing is recomputed between tiles.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm as gemm_k
+from .kernels import stencil2d, stream
+
+
+def gemm_model(a, b):
+    """Full blocked GEMM (DRKYolo / PLYgemm compute): C = A @ B."""
+    return (gemm_k.gemm(a, b),)
+
+
+def gemm_tile_model(a, b):
+    """One 64x64 tile multiply — the unit the Rust e2e driver executes
+    per simulated tile-op."""
+    return (gemm_k.gemm_tile(a, b),)
+
+
+def stencil_model(x):
+    """One 5-point relaxation sweep (PLYcon2d / SPLOcnpJac compute)."""
+    return (stencil2d.stencil5(x),)
+
+
+def triad_model(b, c):
+    """STREAM triad with the canonical scalar (STRTriad compute)."""
+    return (stream.triad(b, c, 3.0),)
+
+
+def linreg_model(x, y):
+    """Phoenix linear regression: the map-phase moment sums and the final
+    fit, in one fused graph (pure L2 — its hot spot is the reduction, which
+    XLA already emits optimally; no Pallas kernel needed)."""
+    n = jnp.float32(x.shape[0])
+    sx = jnp.sum(x)
+    sy = jnp.sum(y)
+    sxx = jnp.sum(x * x)
+    sxy = jnp.sum(x * y)
+    denom = n * sxx - sx * sx
+    slope = (n * sxy - sx * sy) / denom
+    intercept = (sy - slope * sx) / n
+    return (slope, intercept)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+#: name -> (function, example argument shapes): the AOT manifest.
+ARTIFACTS = {
+    "gemm": (gemm_model, (_f32(256, 256), _f32(256, 256))),
+    "gemm_tile": (gemm_tile_model, (_f32(64, 64), _f32(64, 64))),
+    "stencil2d": (stencil_model, (_f32(256, 256),)),
+    "stream_triad": (triad_model, (_f32(1 << 16), _f32(1 << 16))),
+    "linreg": (linreg_model, (_f32(1 << 16), _f32(1 << 16))),
+}

@@ -1,0 +1,156 @@
+"""Layer-1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes and value distributions; fixed cases pin the
+shapes the AOT artifacts use.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import gemm, ref, stencil2d, stream
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- gemm
+
+
+class TestGemm:
+    def test_artifact_shape(self):
+        rng = np.random.default_rng(0)
+        a, b = rand(rng, 256, 256), rand(rng, 256, 256)
+        np.testing.assert_allclose(
+            gemm.gemm(a, b), ref.gemm_ref(a, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_tile_kernel(self):
+        rng = np.random.default_rng(1)
+        a, b = rand(rng, 64, 64), rand(rng, 64, 64)
+        np.testing.assert_allclose(
+            gemm.gemm_tile(a, b), ref.gemm_ref(a, b), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(deadline=None, max_examples=12)
+    @given(
+        mi=st.integers(1, 3),
+        ni=st.integers(1, 3),
+        k=st.sampled_from([32, 64, 96]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shape_sweep(self, mi, ni, k, seed):
+        rng = np.random.default_rng(seed)
+        a = rand(rng, mi * 64, k)
+        b = rand(rng, k, ni * 64)
+        np.testing.assert_allclose(
+            gemm.gemm(a, b), ref.gemm_ref(a, b), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(deadline=None, max_examples=8)
+    @given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**16))
+    def test_value_scale_sweep(self, scale, seed):
+        rng = np.random.default_rng(seed)
+        a = rand(rng, 64, 64) * scale
+        b = rand(rng, 64, 64)
+        np.testing.assert_allclose(
+            gemm.gemm(a, b), ref.gemm_ref(a, b), rtol=1e-3, atol=1e-3 * scale
+        )
+
+    def test_identity(self):
+        eye = jnp.eye(64, dtype=jnp.float32)
+        rng = np.random.default_rng(2)
+        a = rand(rng, 64, 64)
+        np.testing.assert_allclose(gemm.gemm(a, eye), a, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_ragged(self):
+        rng = np.random.default_rng(3)
+        with pytest.raises(AssertionError):
+            gemm.gemm(rand(rng, 65, 64), rand(rng, 64, 64))
+
+
+# ------------------------------------------------------------- stencil
+
+
+class TestStencil:
+    def test_artifact_shape(self):
+        rng = np.random.default_rng(4)
+        x = rand(rng, 256, 256)
+        np.testing.assert_allclose(
+            stencil2d.stencil5(x), ref.stencil5_ref(x), rtol=1e-5, atol=1e-5
+        )
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        hb=st.integers(1, 4),
+        w=st.sampled_from([32, 64, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shape_sweep(self, hb, w, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, hb * 32, w)
+        np.testing.assert_allclose(
+            stencil2d.stencil5(x), ref.stencil5_ref(x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_constant_field_interior(self):
+        # Interior of a constant field: 0.5 + 4*0.125 = 1.0 x the value.
+        x = jnp.full((96, 96), 2.0, dtype=jnp.float32)
+        y = stencil2d.stencil5(x)
+        np.testing.assert_allclose(y[1:-1, 1:-1], 2.0, rtol=1e-6)
+
+    def test_zero_boundary(self):
+        x = jnp.ones((32, 32), dtype=jnp.float32)
+        y = stencil2d.stencil5(x)
+        # Corner sees 2 zero-padded neighbours: 0.5 + 2*0.125 = 0.75.
+        assert abs(float(y[0, 0]) - 0.75) < 1e-6
+
+    def test_coefficients(self):
+        rng = np.random.default_rng(5)
+        x = rand(rng, 64, 64)
+        np.testing.assert_allclose(
+            stencil2d.stencil5(x, c_center=1.0, c_neigh=0.0),
+            x,
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+
+# --------------------------------------------------------------- triad
+
+
+class TestTriad:
+    def test_artifact_shape(self):
+        rng = np.random.default_rng(6)
+        b, c = rand(rng, 1 << 16), rand(rng, 1 << 16)
+        np.testing.assert_allclose(
+            stream.triad(b, c, 3.0), ref.triad_ref(b, c, 3.0), rtol=1e-5, atol=1e-5
+        )
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        nblocks=st.integers(1, 8),
+        scalar=st.floats(-10, 10),
+        seed=st.integers(0, 2**16),
+    )
+    def test_sweep(self, nblocks, scalar, seed):
+        rng = np.random.default_rng(seed)
+        n = nblocks * 1024
+        b, c = rand(rng, n), rand(rng, n)
+        np.testing.assert_allclose(
+            stream.triad(b, c, scalar),
+            ref.triad_ref(b, c, scalar),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_zero_scalar_is_copy(self):
+        rng = np.random.default_rng(7)
+        b, c = rand(rng, 2048), rand(rng, 2048)
+        np.testing.assert_allclose(stream.triad(b, c, 0.0), b, rtol=1e-6)

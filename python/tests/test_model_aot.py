@@ -1,0 +1,99 @@
+"""Layer-2 model shapes + the AOT lowering contract: every artifact in the
+manifest lowers to parseable HLO text with the expected entry signature."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+class TestModels:
+    def test_gemm_model_matches_ref(self):
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.standard_normal((256, 256)), dtype=jnp.float32)
+        b = jnp.asarray(rng.standard_normal((256, 256)), dtype=jnp.float32)
+        (out,) = model.gemm_model(a, b)
+        np.testing.assert_allclose(out, ref.gemm_ref(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_linreg_model_recovers_line(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal(1 << 16), dtype=jnp.float32)
+        y = 2.5 * x + 1.25
+        slope, intercept = model.linreg_model(x, y)
+        assert abs(float(slope) - 2.5) < 1e-3
+        assert abs(float(intercept) - 1.25) < 1e-3
+
+    @settings(deadline=None, max_examples=6)
+    @given(
+        slope=st.floats(-5, 5),
+        intercept=st.floats(-5, 5),
+        seed=st.integers(0, 2**16),
+    )
+    def test_linreg_sweep(self, slope, intercept, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal(1 << 14), dtype=jnp.float32)
+        y = slope * x + intercept
+        s, i = model.linreg_model(x, y)
+        assert abs(float(s) - slope) < 5e-3
+        assert abs(float(i) - intercept) < 5e-3
+
+    def test_triad_model(self):
+        b = jnp.ones(1 << 16, dtype=jnp.float32)
+        c = jnp.full(1 << 16, 2.0, dtype=jnp.float32)
+        (out,) = model.triad_model(b, c)
+        np.testing.assert_allclose(out, 7.0, rtol=1e-6)
+
+
+class TestAot:
+    def test_manifest_complete(self):
+        # The Makefile's artifact list must exactly match the manifest.
+        assert set(model.ARTIFACTS) == {
+            "gemm",
+            "gemm_tile",
+            "stencil2d",
+            "stream_triad",
+            "linreg",
+        }
+
+    def test_every_artifact_lowers_to_hlo_text(self):
+        for name in model.ARTIFACTS:
+            text = aot.lower_one(name)
+            assert text.startswith("HloModule"), f"{name}: not HLO text"
+            assert "ENTRY" in text, f"{name}: no entry computation"
+
+    def test_gemm_tile_signature(self):
+        text = aot.lower_one("gemm_tile")
+        # Two f32[64,64] parameters, tuple output.
+        assert text.count("f32[64,64]") >= 3
+        assert "(f32[64,64])" in text or "tuple" in text.lower()
+
+    def test_hlo_text_is_deterministic(self):
+        a = aot.lower_one("stream_triad")
+        b = aot.lower_one("stream_triad")
+        assert a == b
+
+    def test_writes_files(self, tmp_path):
+        import subprocess
+        import sys
+
+        out = tmp_path / "arts"
+        r = subprocess.run(
+            [
+                sys.executable,
+                "-m",
+                "compile.aot",
+                "--out",
+                str(out),
+                "--only",
+                "gemm_tile",
+            ],
+            capture_output=True,
+            text=True,
+            cwd=str(jax.numpy.__file__ and __import__("pathlib").Path(__file__).parent.parent),
+        )
+        assert r.returncode == 0, r.stderr
+        assert (out / "gemm_tile.hlo.txt").exists()

@@ -1,0 +1,27 @@
+//! Fig 3: coefficient of variation of per-vault demand — HMC baseline.
+//! Paper: PHELinReg, CHABsBez and SPLRad dominate; most others are low.
+
+use dlpim::benchkit::Csv;
+use dlpim::config::MemKind;
+use dlpim::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = figures::fig_cov(MemKind::Hmc);
+    let mut csv = Csv::new("workload,cov");
+    for (name, cov) in &rows {
+        println!("fig03 | {name:<12} | cov {cov:.3}");
+        csv.push(&[name.to_string(), format!("{cov:.4}")]);
+    }
+    let top: Vec<&str> = {
+        let mut sorted = rows.clone();
+        sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        sorted.iter().take(3).map(|(n, _)| *n).collect()
+    };
+    println!(
+        "fig03 | top-3 CoV: {} (paper: PHELinReg, CHABsBez, SPLRad) | wallclock {:.1}s",
+        top.join(", "),
+        t0.elapsed().as_secs_f64()
+    );
+    csv.write("target/figures/fig03.csv").expect("write csv");
+}

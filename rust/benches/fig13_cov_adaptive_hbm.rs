@@ -1,0 +1,17 @@
+//! Fig 13: CoV of memory access distribution, baseline vs adaptive — HBM.
+
+use dlpim::benchkit::Csv;
+use dlpim::config::MemKind;
+use dlpim::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = figures::fig_cov_policies(MemKind::Hbm, false);
+    let mut csv = Csv::new("workload,baseline,adaptive");
+    for (name, covs) in &rows {
+        println!("fig13 | {name:<12} | base {:.3} | adaptive {:.3}", covs[0], covs[1]);
+        csv.push(&[name.to_string(), format!("{:.4}", covs[0]), format!("{:.4}", covs[1])]);
+    }
+    println!("fig13 | wallclock {:.1}s", t0.elapsed().as_secs_f64());
+    csv.write("target/figures/fig13.csv").expect("write csv");
+}

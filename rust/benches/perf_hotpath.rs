@@ -1,0 +1,119 @@
+//! Microbenchmarks over the simulator's hot paths, used by the §Perf
+//! optimization loop (EXPERIMENTS.md §Perf records before/after).
+//!
+//! Targets: mesh transfer (link walk), DRAM access, subscription-table
+//! lookup, full request service, and end-to-end simulation throughput
+//! (simulated requests per wall-second).
+
+use dlpim::benchkit::{report, time};
+use dlpim::config::SimConfig;
+use dlpim::coordinator::driver::simulate_once;
+use dlpim::policy::{PolicyKind, PolicyRuntime};
+use dlpim::sim::{Mesh, VaultMem};
+use dlpim::stats::SimStats;
+use dlpim::subscription::protocol::{Access, SubSystem};
+use dlpim::subscription::table::{Role, SubState, SubTable};
+use dlpim::workloads::catalog;
+
+fn main() {
+    let cfg = SimConfig::hmc();
+
+    // Mesh transfer: worst-case corner-to-corner.
+    {
+        let mut mesh = Mesh::new(&cfg);
+        let mut t = 0u64;
+        let timing = time(100, 1000, || {
+            for _ in 0..100 {
+                std::hint::black_box(mesh.transfer(0, 31, 5, t));
+                t += 1;
+            }
+        });
+        report("perf_hotpath", "mesh_transfer_x100", &timing);
+    }
+
+    // DRAM bank access.
+    {
+        let mut mem = VaultMem::new(&cfg);
+        let mut addr = 0u64;
+        let mut t = 0u64;
+        let timing = time(100, 1000, || {
+            for _ in 0..100 {
+                std::hint::black_box(mem.access(addr, t));
+                addr = addr.wrapping_add(4096);
+                t += 10;
+            }
+        });
+        report("perf_hotpath", "dram_access_x100", &timing);
+    }
+
+    // Subscription-table lookup (hit path).
+    {
+        let mut table = SubTable::new(cfg.sub_table_sets, cfg.sub_table_ways);
+        for b in 0..1000u64 {
+            let set = (b % cfg.sub_table_sets as u64) as u32;
+            if let Some(w) = table.free_way(set) {
+                table.install(w, b, Role::Holder, 0, SubState::Subscribed, 0, 0);
+            }
+        }
+        let mut b = 0u64;
+        let timing = time(100, 1000, || {
+            for _ in 0..100 {
+                let set = (b % cfg.sub_table_sets as u64) as u32;
+                std::hint::black_box(table.lookup(set, b, 1_000_000));
+                b = (b + 1) % 1000;
+            }
+        });
+        report("perf_hotpath", "subtable_lookup_x100", &timing);
+    }
+
+    // Full request service (remote read, no subscription).
+    {
+        let mut cfgn = cfg.clone();
+        cfgn.policy = PolicyKind::Never;
+        let mut sys = SubSystem::new(&cfgn);
+        let mut mesh = Mesh::new(&cfgn);
+        let mut vaults: Vec<VaultMem> =
+            (0..cfgn.n_vaults).map(|_| VaultMem::new(&cfgn)).collect();
+        let mut stats = SimStats::new(cfgn.n_vaults);
+        let policy = PolicyRuntime::new(&cfgn);
+        let mut t = 0u64;
+        let mut b = 0u64;
+        let timing = time(100, 1000, || {
+            for _ in 0..100 {
+                std::hint::black_box(sys.serve(
+                    Access { requester: (b % 32) as u16, block: b * 7 + 31, write: false },
+                    t,
+                    &mut mesh,
+                    &mut vaults,
+                    &mut stats,
+                    &policy,
+                ));
+                b += 1;
+                t += 20;
+            }
+        });
+        report("perf_hotpath", "serve_remote_x100", &timing);
+    }
+
+    // End-to-end throughput: simulated requests / wall-second.
+    for (wl, policy) in
+        [("STRTriad", PolicyKind::Never), ("SPLRad", PolicyKind::Adaptive), ("PLYgemm", PolicyKind::Always)]
+    {
+        let mut c = cfg.clone();
+        c.policy = policy;
+        c.warmup_requests = 5_000;
+        c.measure_requests = 50_000;
+        let mut w = catalog::build(wl, &c).unwrap();
+        w.reset(1);
+        let t0 = std::time::Instant::now();
+        let rep = simulate_once(&c, w.as_mut());
+        let dt = t0.elapsed().as_secs_f64();
+        let reqs = rep.stats.requests + c.warmup_requests;
+        println!(
+            "bench | perf_hotpath               | e2e_{wl}_{:<10} | {:.2}M req/s | {:.2}s wall",
+            policy.as_str(),
+            reqs as f64 / dt / 1e6,
+            dt
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timing with median / MAD statistics and a
+//! uniform row printer so every `cargo bench` target emits the same
+//! machine-greppable format:
+//!
+//! ```text
+//! fig09 | SPLRad           | speedup 2.05 | ...
+//! bench | serve_remote     | median 412ns | mad 3ns | n 100
+//! ```
+
+use std::time::Instant;
+
+/// Timing summary of one benchmarked closure.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub min_ns: f64,
+    pub iters: usize,
+}
+
+/// Time `f` with `warmup` throwaway calls and `iters` measured calls.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing {
+        median_ns: median,
+        mad_ns: devs[devs.len() / 2],
+        min_ns: samples[0],
+        iters: samples.len(),
+    }
+}
+
+/// Human-scale formatting for nanosecond values.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Print one benchmark row.
+pub fn report(target: &str, name: &str, t: &Timing) {
+    println!(
+        "bench | {:<28} | {:<20} | median {} | mad {} | min {} | n {}",
+        target,
+        name,
+        fmt_ns(t.median_ns),
+        fmt_ns(t.mad_ns),
+        fmt_ns(t.min_ns),
+        t.iters
+    );
+}
+
+/// Print a figure-table row (figure benches share this shape).
+pub fn row(figure: &str, label: &str, cols: &[(&str, f64)]) {
+    let mut line = format!("{figure} | {label:<12}");
+    for (k, v) in cols {
+        line.push_str(&format!(" | {k} {v:.4}"));
+    }
+    println!("{line}");
+}
+
+/// A tiny CSV writer for figure data (plotted offline if desired).
+pub struct Csv {
+    rows: Vec<String>,
+}
+
+impl Csv {
+    pub fn new(header: &str) -> Self {
+        Csv { rows: vec![header.to_string()] }
+    }
+
+    pub fn push(&mut self, cells: &[String]) {
+        self.rows.push(cells.join(","));
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.rows.join("\n") + "\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_something() {
+        let t = time(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.median_ns >= 0.0);
+        assert_eq!(t.iters, 5);
+        assert!(t.min_ns <= t.median_ns);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20s");
+    }
+
+    #[test]
+    fn csv_accumulates() {
+        let mut c = Csv::new("a,b");
+        c.push(&["1".into(), "2".into()]);
+        assert_eq!(c.rows.len(), 2);
+    }
+}

@@ -1,0 +1,134 @@
+//! Hand-rolled CLI (clap is unavailable offline): subcommands + `--key
+//! value` flags with help text.
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, positional args, and flags.
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Cli {
+    /// Parse `args` (without argv[0]). Flags are `--key value` or
+    /// `--switch` (value "true").
+    pub fn parse(args: &[String]) -> Result<Self, String> {
+        let mut cli = Cli::default();
+        let mut it = args.iter().peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with("--") {
+                return Err(format!("expected subcommand before {cmd}"));
+            }
+            cli.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare `--` not supported".into());
+                }
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                cli.flags.insert(key.to_string(), value);
+            } else {
+                cli.positional.push(a.clone());
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flag(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn flag_u64(&self, key: &str) -> Result<Option<u64>, String> {
+        match self.flag(key) {
+            None => Ok(None),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+}
+
+/// Top-level help text.
+pub const HELP: &str = "\
+dlpim repro — DL-PIM (Tian et al., 2025) reproduction harness
+
+USAGE:
+    repro <COMMAND> [FLAGS]
+
+COMMANDS:
+    run           Simulate one workload: --workload NAME [--memory hmc|hbm]
+                  [--policy never|always|adaptive|adaptive-hops|adaptive-latency]
+                  [--measure N] [--warmup N] [--runs N] [--seed N] [--config FILE]
+    figure        Regenerate one figure: figure <1|2|3|4|9|10|11|12|13|14|15|16|17|18>
+    all-figures   Regenerate every figure (writes target/figures/*.csv)
+    workloads     Print Table III (the 31 representative workloads)
+    config        Print the resolved config: --memory hmc|hbm [--policy P]
+    artifacts     List and smoke-run the AOT artifacts via PJRT
+    help          This text
+
+SCALE FLAGS (also env REPRO_WARMUP / REPRO_MEASURE / REPRO_RUNS / REPRO_EPOCH):
+    --quick        small run (CI scale)
+    --paper-scale  the paper's 1e6-cycle epochs / 1e6-request warmup (slow)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let c = Cli::parse(&args(&["run", "--workload", "SPLRad", "--quick"])).unwrap();
+        assert_eq!(c.command, "run");
+        assert_eq!(c.flag("workload"), Some("SPLRad"));
+        assert!(c.has("quick"));
+        assert_eq!(c.flag("quick"), Some("true"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let c = Cli::parse(&args(&["figure", "11"])).unwrap();
+        assert_eq!(c.command, "figure");
+        assert_eq!(c.positional, vec!["11"]);
+    }
+
+    #[test]
+    fn numeric_flags() {
+        let c = Cli::parse(&args(&["run", "--measure", "10_000"])).unwrap();
+        assert_eq!(c.flag_u64("measure").unwrap(), Some(10_000));
+        assert!(Cli::parse(&args(&["run", "--measure", "ten"]))
+            .unwrap()
+            .flag_u64("measure")
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_flag_first() {
+        assert!(Cli::parse(&args(&["--oops", "run"])).is_err());
+    }
+
+    #[test]
+    fn empty_is_ok() {
+        let c = Cli::parse(&[]).unwrap();
+        assert_eq!(c.command, "");
+    }
+}

@@ -1,0 +1,300 @@
+//! System configuration: memory-technology presets (Table I / Table II of
+//! the paper) plus every tunable the evaluation sweeps over.
+
+pub mod parse;
+pub mod presets;
+
+use crate::policy::PolicyKind;
+use crate::Cycle;
+
+/// Which 3-D stacked memory the mesh models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemKind {
+    /// Hybrid Memory Cube: 6x6 mesh, 32 vaults, 8 banks/vault (Table I).
+    Hmc,
+    /// High Bandwidth Memory: 4x2 mesh, 8 channels, 4 bank groups x 4 banks
+    /// (Table II).
+    Hbm,
+}
+
+impl MemKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MemKind::Hmc => "hmc",
+            MemKind::Hbm => "hbm",
+        }
+    }
+}
+
+/// Complete configuration of one simulation run.
+///
+/// Defaults come from the paper's Table I / Table II and §III; anything the
+/// evaluation sweeps (policy, subscription-table geometry, epoch length) is
+/// a plain public field.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub mem: MemKind,
+    /// Mesh width (6 for HMC, 4 for HBM).
+    pub net_w: u16,
+    /// Mesh height (6 for HMC, 2 for HBM).
+    pub net_h: u16,
+    /// Number of active vaults/channels (32 for HMC on the 6x6 grid with the
+    /// four corner routers acting as host-interface nodes; 8 for HBM).
+    pub n_vaults: u16,
+
+    /// Memory block (subscription granularity), bytes. HMC supports
+    /// 16/32/64/128 B blocks; DAMOV and our model use 64 B.
+    pub block_bytes: u32,
+    /// FLIT size, bytes (128-bit FLITs in the HMC spec).
+    pub flit_bytes: u32,
+
+    /// DRAM banks per vault (8 in HMC; 16 = 4 bank groups x 4 in HBM2).
+    pub banks_per_vault: u16,
+    /// Row-buffer size, bytes (256 B in Table I).
+    pub row_buffer_bytes: u32,
+    /// Array access latency on a row-buffer hit, core cycles.
+    pub t_row_hit: u32,
+    /// Array access latency on a row-buffer miss (precharge + activate +
+    /// access), core cycles.
+    pub t_row_miss: u32,
+    /// Vault-controller occupancy per request: "each vault can only serve
+    /// one location per cycle" (§II-C).
+    pub vault_service_cycles: u32,
+    /// Router input-buffer capacity in FLITs-worth of packets (16 entries in
+    /// §II-C); bounds how far ahead a link can be reserved before the sender
+    /// stalls (backpressure).
+    pub input_buffer_entries: u32,
+
+    /// Per-PIM-core L1 size in bytes (32 KB in the baseline).
+    pub l1_bytes: u32,
+    pub l1_ways: u16,
+    pub l1_line: u32,
+    /// Maximum outstanding L1 misses per in-order PIM core (bounded MLP).
+    pub mlp: u16,
+
+    /// Subscription policy for this run.
+    pub policy: PolicyKind,
+    /// Subscription-table sets per vault (2048 in §III-A, swept by Fig 16).
+    pub sub_table_sets: u32,
+    /// Subscription-table associativity (4-way in §III-A).
+    pub sub_table_ways: u16,
+    /// Subscription-buffer entries (32, fully associative, §III-A).
+    pub sub_buffer_entries: u32,
+    /// Access-count threshold before subscribing. The paper found 0 (first
+    /// access) optimal and dropped the count table; kept for the ablation.
+    pub count_threshold: u32,
+
+    /// Epoch length in cycles. Paper: 1e6. Our default scales to 20k so the
+    /// adaptive machinery sees tens of epochs within benchmark-sized runs
+    /// (the paper's runs span hundreds of 1e6-cycle epochs);
+    /// `--paper-scale` restores 1e6.
+    pub epoch_cycles: Cycle,
+    /// Latency-based adaptive threshold, percent (2% in §III-D3).
+    pub latency_threshold_pct: f64,
+    /// Latency of the central vault's global decision + broadcast (~1000
+    /// cycles, §III-D4).
+    pub global_broadcast_lat: u32,
+    /// Leading-set dynamic set sampling (§III-D5). Number of leading sets
+    /// *per group* (always-on group and always-off group).
+    pub leading_sets: u32,
+
+    /// Requests to simulate before statistics reset (cache & table warmup).
+    /// Paper: 1e6; default scaled for benchmark turnaround.
+    pub warmup_requests: u64,
+    /// Requests measured after warmup.
+    pub measure_requests: u64,
+    /// Independent repetitions averaged per data point (5 in §IV-A).
+    pub runs: u32,
+    /// Base PRNG seed; run `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// Table I baseline: HMC v2.0, 32 vaults on a 6x6 mesh.
+    pub fn hmc() -> Self {
+        SimConfig {
+            mem: MemKind::Hmc,
+            net_w: 6,
+            net_h: 6,
+            n_vaults: 32,
+            block_bytes: 64,
+            flit_bytes: 16,
+            banks_per_vault: 8,
+            row_buffer_bytes: 256,
+            t_row_hit: 14,
+            t_row_miss: 38,
+            vault_service_cycles: 1,
+            input_buffer_entries: 16,
+            l1_bytes: 32 * 1024,
+            l1_ways: 4,
+            l1_line: 64,
+            mlp: 4,
+            policy: PolicyKind::Never,
+            sub_table_sets: 2048,
+            sub_table_ways: 4,
+            sub_buffer_entries: 32,
+            count_threshold: 0,
+            epoch_cycles: 20_000,
+            latency_threshold_pct: 2.0,
+            global_broadcast_lat: 1000,
+            leading_sets: 32,
+            warmup_requests: 50_000,
+            measure_requests: 300_000,
+            runs: 1,
+            seed: 0x5eed_d1b1,
+        }
+    }
+
+    /// Table II baseline: HBM2, 8 channels on a 4x2 mesh.
+    pub fn hbm() -> Self {
+        SimConfig {
+            mem: MemKind::Hbm,
+            net_w: 4,
+            net_h: 2,
+            n_vaults: 8,
+            banks_per_vault: 16, // 4 bank groups x 4 banks
+            ..Self::hmc()
+        }
+    }
+
+    /// Preset by name ("hmc" | "hbm").
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "hmc" => Some(Self::hmc()),
+            "hbm" => Some(Self::hbm()),
+            _ => None,
+        }
+    }
+
+    /// Restore the paper's unscaled epoch/warmup parameters (slow).
+    pub fn paper_scale(mut self) -> Self {
+        self.epoch_cycles = 1_000_000;
+        self.warmup_requests = 1_000_000;
+        self.measure_requests = 4_000_000;
+        self.runs = 5;
+        self
+    }
+
+    /// Scale request counts for fast CI/bench runs, preserving the
+    /// warmup:measure ratio.
+    pub fn quick(mut self) -> Self {
+        self.warmup_requests = 10_000;
+        self.measure_requests = 60_000;
+        self.epoch_cycles = 10_000;
+        self
+    }
+
+    /// Total subscription-table entries per vault.
+    pub fn sub_table_entries(&self) -> u32 {
+        self.sub_table_sets * self.sub_table_ways as u32
+    }
+
+    /// FLITs in a data-bearing packet: 1 header FLIT + ceil(block/flit).
+    /// 64 B block / 16 B FLIT -> k = 5, matching the paper's "between 2 and
+    /// 9 FLITs" range for 16..128 B blocks.
+    pub fn data_packet_flits(&self) -> u32 {
+        1 + self.block_bytes.div_ceil(self.flit_bytes)
+    }
+
+    /// Validate internal consistency; returns a human-readable error list.
+    pub fn validate(&self) -> Result<(), Vec<String>> {
+        let mut errs = Vec::new();
+        if (self.net_w as u32) * (self.net_h as u32) < self.n_vaults as u32 {
+            errs.push(format!(
+                "mesh {}x{} cannot host {} vaults",
+                self.net_w, self.net_h, self.n_vaults
+            ));
+        }
+        if !self.block_bytes.is_power_of_two() {
+            errs.push("block_bytes must be a power of two".into());
+        }
+        if !self.sub_table_sets.is_power_of_two() {
+            errs.push("sub_table_sets must be a power of two".into());
+        }
+        if self.l1_line != self.block_bytes {
+            errs.push("l1_line must equal block_bytes (DAMOV model)".into());
+        }
+        if self.mlp == 0 {
+            errs.push("mlp must be >= 1".into());
+        }
+        if self.epoch_cycles == 0 {
+            errs.push("epoch_cycles must be >= 1".into());
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hmc_preset_matches_table1() {
+        let c = SimConfig::hmc();
+        assert_eq!(c.n_vaults, 32);
+        assert_eq!((c.net_w, c.net_h), (6, 6));
+        assert_eq!(c.banks_per_vault, 8);
+        assert_eq!(c.row_buffer_bytes, 256);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn hbm_preset_matches_table2() {
+        let c = SimConfig::hbm();
+        assert_eq!(c.n_vaults, 8);
+        assert_eq!((c.net_w, c.net_h), (4, 2));
+        assert_eq!(c.banks_per_vault, 16);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn data_packet_is_five_flits_for_64b_blocks() {
+        assert_eq!(SimConfig::hmc().data_packet_flits(), 5);
+    }
+
+    #[test]
+    fn sixteen_byte_blocks_need_two_flits() {
+        let mut c = SimConfig::hmc();
+        c.block_bytes = 16;
+        assert_eq!(c.data_packet_flits(), 2);
+    }
+
+    #[test]
+    fn hundred_twenty_eight_byte_blocks_need_nine_flits() {
+        let mut c = SimConfig::hmc();
+        c.block_bytes = 128;
+        assert_eq!(c.data_packet_flits(), 9);
+    }
+
+    #[test]
+    fn validate_rejects_overfull_mesh() {
+        let mut c = SimConfig::hmc();
+        c.n_vaults = 64;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_non_pow2_block() {
+        let mut c = SimConfig::hmc();
+        c.block_bytes = 48;
+        c.l1_line = 48;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn paper_scale_restores_epoch() {
+        let c = SimConfig::hmc().paper_scale();
+        assert_eq!(c.epoch_cycles, 1_000_000);
+        assert_eq!(c.runs, 5);
+    }
+
+    #[test]
+    fn table_entries_product() {
+        let c = SimConfig::hmc();
+        assert_eq!(c.sub_table_entries(), 8192);
+    }
+}

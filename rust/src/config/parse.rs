@@ -1,0 +1,191 @@
+//! Minimal `key = value` config-file parser (TOML subset).
+//!
+//! `serde`/`toml` are unavailable offline (see DESIGN.md), so run
+//! configurations are plain text files of `key = value` lines with `#`
+//! comments. Every tunable of [`SimConfig`](crate::config::SimConfig) is
+//! addressable by its field name; `preset` selects the base.
+//!
+//! ```text
+//! # dlpim run config
+//! preset = hmc
+//! policy = adaptive
+//! sub_table_sets = 4096
+//! measure_requests = 500000
+//! ```
+
+use super::{MemKind, SimConfig};
+use crate::policy::PolicyKind;
+
+/// A parsed `key = value` file.
+#[derive(Debug, Default, Clone)]
+pub struct KvFile {
+    pairs: Vec<(String, String)>,
+}
+
+impl KvFile {
+    /// Parse the text of a config file. Returns `Err(line_no, message)` on
+    /// the first malformed line.
+    pub fn parse(text: &str) -> Result<Self, (usize, String)> {
+        let mut pairs = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(p) => &raw[..p],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err((i + 1, format!("expected `key = value`, got {line:?}")));
+            };
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim().trim_matches('"');
+            if key.is_empty() {
+                return Err((i + 1, "empty key".to_string()));
+            }
+            if val.is_empty() {
+                return Err((i + 1, format!("empty value for key {key:?}")));
+            }
+            pairs.push((key.to_string(), val.to_string()));
+        }
+        Ok(KvFile { pairs })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        // Last occurrence wins, like TOML re-assignment in our subset.
+        self.pairs
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.pairs.iter().map(|(k, _)| k.as_str())
+    }
+}
+
+/// Apply a parsed file on top of its preset and return the final config.
+pub fn config_from_text(text: &str) -> Result<SimConfig, String> {
+    let kv = KvFile::parse(text).map_err(|(l, m)| format!("line {l}: {m}"))?;
+    let mut cfg = match kv.get("preset") {
+        Some(p) => SimConfig::preset(p).ok_or(format!("unknown preset {p:?}"))?,
+        None => SimConfig::hmc(),
+    };
+    apply(&mut cfg, &kv)?;
+    cfg.validate()
+        .map_err(|errs| format!("invalid config: {}", errs.join("; ")))?;
+    Ok(cfg)
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, v: &str) -> Result<T, String> {
+    v.replace('_', "")
+        .parse::<T>()
+        .map_err(|_| format!("bad numeric value {v:?} for {key}"))
+}
+
+/// Apply every recognized key; unknown keys are an error (catches typos).
+pub fn apply(cfg: &mut SimConfig, kv: &KvFile) -> Result<(), String> {
+    for key in kv.keys().collect::<Vec<_>>() {
+        let v = kv.get(key).unwrap();
+        match key {
+            "preset" => {} // handled by caller
+            "mem" => {
+                cfg.mem = match v {
+                    "hmc" => MemKind::Hmc,
+                    "hbm" => MemKind::Hbm,
+                    _ => return Err(format!("unknown mem {v:?}")),
+                }
+            }
+            "policy" => {
+                cfg.policy =
+                    PolicyKind::parse(v).ok_or(format!("unknown policy {v:?}"))?
+            }
+            "net_w" => cfg.net_w = parse_num(key, v)?,
+            "net_h" => cfg.net_h = parse_num(key, v)?,
+            "n_vaults" => cfg.n_vaults = parse_num(key, v)?,
+            "block_bytes" => cfg.block_bytes = parse_num(key, v)?,
+            "flit_bytes" => cfg.flit_bytes = parse_num(key, v)?,
+            "banks_per_vault" => cfg.banks_per_vault = parse_num(key, v)?,
+            "row_buffer_bytes" => cfg.row_buffer_bytes = parse_num(key, v)?,
+            "t_row_hit" => cfg.t_row_hit = parse_num(key, v)?,
+            "t_row_miss" => cfg.t_row_miss = parse_num(key, v)?,
+            "vault_service_cycles" => cfg.vault_service_cycles = parse_num(key, v)?,
+            "input_buffer_entries" => cfg.input_buffer_entries = parse_num(key, v)?,
+            "l1_bytes" => cfg.l1_bytes = parse_num(key, v)?,
+            "l1_ways" => cfg.l1_ways = parse_num(key, v)?,
+            "l1_line" => cfg.l1_line = parse_num(key, v)?,
+            "mlp" => cfg.mlp = parse_num(key, v)?,
+            "sub_table_sets" => cfg.sub_table_sets = parse_num(key, v)?,
+            "sub_table_ways" => cfg.sub_table_ways = parse_num(key, v)?,
+            "sub_buffer_entries" => cfg.sub_buffer_entries = parse_num(key, v)?,
+            "count_threshold" => cfg.count_threshold = parse_num(key, v)?,
+            "epoch_cycles" => cfg.epoch_cycles = parse_num(key, v)?,
+            "latency_threshold_pct" => cfg.latency_threshold_pct = parse_num(key, v)?,
+            "global_broadcast_lat" => cfg.global_broadcast_lat = parse_num(key, v)?,
+            "leading_sets" => cfg.leading_sets = parse_num(key, v)?,
+            "warmup_requests" => cfg.warmup_requests = parse_num(key, v)?,
+            "measure_requests" => cfg.measure_requests = parse_num(key, v)?,
+            "runs" => cfg.runs = parse_num(key, v)?,
+            "seed" => cfg.seed = parse_num(key, v)?,
+            other => return Err(format!("unknown config key {other:?}")),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_simple_file() {
+        let cfg = config_from_text(
+            "preset = hbm\npolicy = always\nmeasure_requests = 123_000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.mem, MemKind::Hbm);
+        assert_eq!(cfg.policy, PolicyKind::Always);
+        assert_eq!(cfg.measure_requests, 123_000);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let kv = KvFile::parse("# top\n\n a = 1 # trailing\n").unwrap();
+        assert_eq!(kv.get("a"), Some("1"));
+    }
+
+    #[test]
+    fn last_assignment_wins() {
+        let kv = KvFile::parse("a = 1\na = 2\n").unwrap();
+        assert_eq!(kv.get("a"), Some("2"));
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(config_from_text("bogus_key = 3\n").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_equals() {
+        assert!(KvFile::parse("justakey\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_number() {
+        assert!(config_from_text("net_w = six\n").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_final_config() {
+        // 64 vaults cannot fit the default 6x6 mesh.
+        assert!(config_from_text("n_vaults = 64\n").is_err());
+    }
+
+    #[test]
+    fn quoted_values_accepted() {
+        let cfg = config_from_text("preset = \"hmc\"\n").unwrap();
+        assert_eq!(cfg.mem, MemKind::Hmc);
+    }
+}

@@ -1,0 +1,122 @@
+//! Named experiment presets: one per paper configuration that the
+//! evaluation section exercises, so benches and the CLI share exact setups.
+
+use super::SimConfig;
+use crate::policy::PolicyKind;
+
+/// All policy configurations compared in the paper's figures.
+pub const POLICY_SET: [PolicyKind; 3] =
+    [PolicyKind::Never, PolicyKind::Always, PolicyKind::Adaptive];
+
+/// Baseline (never-subscribe) HMC — the denominator of every HMC speedup.
+pub fn hmc_baseline() -> SimConfig {
+    SimConfig::hmc()
+}
+
+/// Always-subscribe HMC (Fig 9).
+pub fn hmc_always() -> SimConfig {
+    let mut c = SimConfig::hmc();
+    c.policy = PolicyKind::Always;
+    c
+}
+
+/// Adaptive HMC (Fig 11/12/14): latency-based global decision with
+/// leading-set sampling — the paper's headline configuration.
+pub fn hmc_adaptive() -> SimConfig {
+    let mut c = SimConfig::hmc();
+    c.policy = PolicyKind::Adaptive;
+    c
+}
+
+/// Baseline HBM (Fig 2/4/13/15).
+pub fn hbm_baseline() -> SimConfig {
+    SimConfig::hbm()
+}
+
+/// Adaptive HBM (Fig 13/15).
+pub fn hbm_adaptive() -> SimConfig {
+    let mut c = SimConfig::hbm();
+    c.policy = PolicyKind::Adaptive;
+    c
+}
+
+/// Fig 16 sweep: subscription-table sizes (total entries per vault).
+pub const TABLE_SIZE_SWEEP: [u32; 5] = [1024, 2048, 4096, 8192, 16384];
+
+/// Build an adaptive-HMC config with the given total table entries,
+/// preserving 4-way associativity.
+pub fn hmc_adaptive_with_table_entries(entries: u32) -> SimConfig {
+    let mut c = hmc_adaptive();
+    c.sub_table_sets = (entries / c.sub_table_ways as u32).max(1);
+    c
+}
+
+/// Render a config as the `key = value` text our parser reads back —
+/// `repro config` uses this to print Table I / Table II equivalents.
+pub fn render(cfg: &SimConfig) -> String {
+    let mut s = String::new();
+    let mut kv = |k: &str, v: String| {
+        s.push_str(k);
+        s.push_str(" = ");
+        s.push_str(&v);
+        s.push('\n');
+    };
+    kv("mem", cfg.mem.as_str().to_string());
+    kv("policy", cfg.policy.as_str().to_string());
+    kv("net_w", cfg.net_w.to_string());
+    kv("net_h", cfg.net_h.to_string());
+    kv("n_vaults", cfg.n_vaults.to_string());
+    kv("block_bytes", cfg.block_bytes.to_string());
+    kv("flit_bytes", cfg.flit_bytes.to_string());
+    kv("banks_per_vault", cfg.banks_per_vault.to_string());
+    kv("row_buffer_bytes", cfg.row_buffer_bytes.to_string());
+    kv("t_row_hit", cfg.t_row_hit.to_string());
+    kv("t_row_miss", cfg.t_row_miss.to_string());
+    kv("vault_service_cycles", cfg.vault_service_cycles.to_string());
+    kv("input_buffer_entries", cfg.input_buffer_entries.to_string());
+    kv("l1_bytes", cfg.l1_bytes.to_string());
+    kv("l1_ways", cfg.l1_ways.to_string());
+    kv("l1_line", cfg.l1_line.to_string());
+    kv("mlp", cfg.mlp.to_string());
+    kv("sub_table_sets", cfg.sub_table_sets.to_string());
+    kv("sub_table_ways", cfg.sub_table_ways.to_string());
+    kv("sub_buffer_entries", cfg.sub_buffer_entries.to_string());
+    kv("count_threshold", cfg.count_threshold.to_string());
+    kv("epoch_cycles", cfg.epoch_cycles.to_string());
+    kv("latency_threshold_pct", cfg.latency_threshold_pct.to_string());
+    kv("global_broadcast_lat", cfg.global_broadcast_lat.to_string());
+    kv("leading_sets", cfg.leading_sets.to_string());
+    kv("warmup_requests", cfg.warmup_requests.to_string());
+    kv("measure_requests", cfg.measure_requests.to_string());
+    kv("runs", cfg.runs.to_string());
+    kv("seed", cfg.seed.to_string());
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse::config_from_text;
+
+    #[test]
+    fn render_roundtrips_through_parser() {
+        for cfg in [hmc_adaptive(), hbm_baseline(), hmc_always()] {
+            let text = render(&cfg);
+            let back = config_from_text(&text).unwrap();
+            assert_eq!(back.mem, cfg.mem);
+            assert_eq!(back.policy, cfg.policy);
+            assert_eq!(back.n_vaults, cfg.n_vaults);
+            assert_eq!(back.sub_table_sets, cfg.sub_table_sets);
+            assert_eq!(back.epoch_cycles, cfg.epoch_cycles);
+        }
+    }
+
+    #[test]
+    fn table_sweep_preserves_ways() {
+        for e in TABLE_SIZE_SWEEP {
+            let c = hmc_adaptive_with_table_entries(e);
+            assert_eq!(c.sub_table_entries(), e);
+            assert_eq!(c.sub_table_ways, 4);
+        }
+    }
+}

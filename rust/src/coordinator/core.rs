@@ -1,0 +1,119 @@
+//! The PIM core model: a simple in-order core on each vault's logic die
+//! (2.4 GHz, 32 KB L1, Table I) with a bounded miss-level-parallelism
+//! window.
+//!
+//! DAMOV's PIM cores are single-issue in-order with a small non-blocking
+//! L1: a handful of outstanding misses overlap, then the core stalls on the
+//! oldest. We model that with a FIFO window of `mlp` outstanding miss
+//! completion times — issuing into a full window blocks the core until the
+//! oldest miss returns.
+
+use std::collections::VecDeque;
+
+use crate::config::SimConfig;
+use crate::coordinator::l1::L1Cache;
+use crate::{CoreId, Cycle, VaultId};
+
+/// One PIM core and its private state.
+pub struct PimCore {
+    pub id: CoreId,
+    /// The vault this core is attached to (same index in our model).
+    pub vault: VaultId,
+    /// Core-local clock: when the core can issue its next operation.
+    pub time: Cycle,
+    pub l1: L1Cache,
+    window: VecDeque<Cycle>,
+    mlp: usize,
+    /// Memory requests this core has issued past its L1.
+    pub misses: u64,
+    /// Total ops (including L1 hits) executed.
+    pub ops: u64,
+    /// True once the workload stream for this core is exhausted.
+    pub finished: bool,
+}
+
+impl PimCore {
+    pub fn new(id: CoreId, cfg: &SimConfig) -> Self {
+        PimCore {
+            id,
+            vault: id,
+            time: 0,
+            l1: L1Cache::new(cfg.l1_bytes, cfg.l1_ways, cfg.l1_line),
+            window: VecDeque::with_capacity(cfg.mlp as usize),
+            mlp: cfg.mlp as usize,
+            misses: 0,
+            ops: 0,
+            finished: false,
+        }
+    }
+
+    /// Register an issued miss completing at `done`; if the MLP window is
+    /// full the core stalls until the oldest outstanding miss retires.
+    pub fn note_miss(&mut self, done: Cycle) {
+        self.misses += 1;
+        self.window.push_back(done);
+        if self.window.len() > self.mlp {
+            let oldest = self.window.pop_front().unwrap();
+            self.time = self.time.max(oldest);
+        }
+    }
+
+    /// Drain the window (end of simulation): core finishes when its last
+    /// miss returns.
+    pub fn drain(&mut self) {
+        while let Some(t) = self.window.pop_front() {
+            self.time = self.time.max(t);
+        }
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.window.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn core() -> PimCore {
+        let mut cfg = SimConfig::hmc();
+        cfg.mlp = 2;
+        PimCore::new(3, &cfg)
+    }
+
+    #[test]
+    fn vault_matches_id() {
+        assert_eq!(core().vault, 3);
+    }
+
+    #[test]
+    fn window_overlaps_up_to_mlp() {
+        let mut c = core();
+        c.note_miss(100);
+        c.note_miss(200);
+        assert_eq!(c.time, 0, "two misses in flight, no stall");
+        c.note_miss(300);
+        assert_eq!(c.time, 100, "third miss stalls on the oldest");
+        assert_eq!(c.outstanding(), 2);
+    }
+
+    #[test]
+    fn stall_never_rewinds_clock() {
+        let mut c = core();
+        c.time = 500;
+        c.note_miss(100);
+        c.note_miss(200);
+        c.note_miss(300);
+        assert_eq!(c.time, 500, "completed misses don't move time backwards");
+    }
+
+    #[test]
+    fn drain_waits_for_last_miss() {
+        let mut c = core();
+        c.note_miss(100);
+        c.note_miss(900);
+        c.drain();
+        assert_eq!(c.time, 900);
+        assert_eq!(c.outstanding(), 0);
+    }
+}

@@ -1,0 +1,309 @@
+//! The discrete-event simulation driver: runs a workload's cores over the
+//! memory system under a policy and produces a [`SimReport`].
+//!
+//! Methodology follows §IV-A: a warmup of `warmup_requests` memory
+//! requests (caches and subscription tables stay warm, statistics reset),
+//! then a measured window of `measure_requests`, repeated `runs` times with
+//! different seeds and averaged.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::SimConfig;
+use crate::coordinator::core::PimCore;
+use crate::coordinator::l1::L1Result;
+use crate::coordinator::report::{RunReport, SimReport};
+use crate::policy::PolicyRuntime;
+use crate::sim::{Mesh, PacketKind, VaultMem};
+use crate::stats::SimStats;
+use crate::subscription::protocol::{Access, SubSystem};
+use crate::workloads::Workload;
+use crate::Cycle;
+
+/// Hard safety valve against a workload that stops missing its L1.
+const MAX_OPS_PER_RUN: u64 = 2_000_000_000;
+
+/// Run `cfg.runs` independent simulations of `workload` and aggregate.
+pub fn simulate(cfg: &SimConfig, mut workload: Box<dyn Workload>) -> SimReport {
+    let name = workload.name().to_string();
+    let mut runs = Vec::with_capacity(cfg.runs as usize);
+    for r in 0..cfg.runs.max(1) {
+        workload.reset(cfg.seed.wrapping_add(r as u64));
+        runs.push(simulate_once(cfg, workload.as_mut()));
+    }
+    SimReport { workload: name, policy: cfg.policy.as_str(), runs }
+}
+
+/// One simulation run over an already-seeded workload.
+pub fn simulate_once(cfg: &SimConfig, workload: &mut dyn Workload) -> RunReport {
+    debug_assert!(cfg.validate().is_ok());
+    let n = cfg.n_vaults;
+    let mut mesh = Mesh::new(cfg);
+    let mut vaults: Vec<VaultMem> = (0..n).map(|_| VaultMem::new(cfg)).collect();
+    let mut subs = SubSystem::new(cfg);
+    let mut policy = PolicyRuntime::new(cfg);
+    let mut stats = SimStats::new(n);
+    let mut cores: Vec<PimCore> = (0..n).map(|i| PimCore::new(i, cfg)).collect();
+    let central = mesh.central_vault();
+    let flit_bytes = cfg.flit_bytes;
+    let block_shift = cfg.block_bytes.trailing_zeros();
+
+    // Event heap: (next issue time, core id), earliest first.
+    let mut heap: BinaryHeap<Reverse<(Cycle, u16)>> =
+        (0..n).map(|c| Reverse((0, c))).collect();
+
+    let mut total_requests: u64 = 0; // memory (post-L1) requests, incl. warmup
+    let mut measured: u64 = 0;
+    let mut warmed = cfg.warmup_requests == 0;
+    let mut measure_start: Cycle = 0;
+    let mut decisions_seen = 0usize;
+    let mut ops: u64 = 0;
+    let mut last_t: Cycle = 0;
+
+    while let Some(Reverse((t, c))) = heap.pop() {
+        last_t = last_t.max(t);
+
+        // Epoch machinery: decisions broadcast from the central vault; the
+        // per-vault stats reports and policy packets contend like any
+        // other traffic (§III-D4).
+        for d in policy.tick(t) {
+            subs.decay_all(); // LFU aging at the epoch boundary
+            for v in 0..n {
+                if v == central {
+                    continue;
+                }
+                let tr = mesh.transfer(v, central, 1, d.at);
+                stats.traffic.record(1, tr.hops, flit_bytes, true);
+                let kind = if d.enabled {
+                    PacketKind::TurnOnSubscription
+                } else {
+                    PacketKind::TurnOffSubscription
+                };
+                let tr = mesh.transfer(central, v, kind.flits(cfg), d.at);
+                stats.traffic.record(1, tr.hops, flit_bytes, true);
+            }
+        }
+        decisions_seen = policy.decisions.len();
+
+        let Some(op) = workload.next_op(c) else {
+            cores[c as usize].finished = true;
+            if cores.iter().all(|k| k.finished) {
+                break;
+            }
+            continue;
+        };
+        ops += 1;
+        if ops > MAX_OPS_PER_RUN {
+            break;
+        }
+
+        let core = &mut cores[c as usize];
+        core.time = t + op.gap as Cycle;
+        core.ops += 1;
+        let block = op.addr >> block_shift;
+
+        match core.l1.access(block, op.write) {
+            L1Result::Hit => {
+                core.time += 1; // L1 hit latency
+                if warmed {
+                    stats.l1_hits += 1;
+                }
+            }
+            L1Result::WriteMiss => {
+                // Streaming store: write-no-allocate, straight to memory.
+                let now = core.time;
+                let res = subs.serve(
+                    Access { requester: c, block, write: true },
+                    now,
+                    &mut mesh,
+                    &mut vaults,
+                    &mut stats,
+                    &policy,
+                );
+                cores[c as usize].note_miss(res.done);
+                if warmed {
+                    stats.latency.record(res.network, res.queued, res.array);
+                    stats.queue_net += res.queued_net;
+                    stats.queue_mem += res.queued - res.queued_net;
+                    stats.requests += 1;
+                    measured += 1;
+                }
+                total_requests += 1;
+                policy.on_request(
+                    c,
+                    res.served_by,
+                    res.subscribed_path,
+                    res.actual_hops,
+                    res.baseline_hops,
+                    res.network + res.queued + res.array,
+                    res.set,
+                    now,
+                );
+                if !warmed && total_requests >= cfg.warmup_requests {
+                    stats.reset();
+                    warmed = true;
+                    measure_start = cores[c as usize].time;
+                }
+            }
+            L1Result::Miss { writeback } => {
+                // Dirty eviction: a posted write to the victim's home.
+                if let Some(wb) = writeback {
+                    let now = core.time;
+                    let res = subs.serve(
+                        Access { requester: c, block: wb, write: true },
+                        now,
+                        &mut mesh,
+                        &mut vaults,
+                        &mut stats,
+                        &policy,
+                    );
+                    cores[c as usize].note_miss(res.done);
+                    if warmed {
+                        stats.latency.record(res.network, res.queued, res.array);
+                        stats.requests += 1;
+                        measured += 1;
+                    }
+                    total_requests += 1;
+                    policy.on_request(
+                        c,
+                        res.served_by,
+                        res.subscribed_path,
+                        res.actual_hops,
+                        res.baseline_hops,
+                        res.network + res.queued + res.array,
+                        res.set,
+                        now,
+                    );
+                }
+                // Read miss: fill the line (stores to resident lines merge
+                // in L1 and reach memory later as full-block writebacks).
+                let core = &mut cores[c as usize];
+                let now = core.time;
+                let res = subs.serve(
+                    Access { requester: c, block, write: false },
+                    now,
+                    &mut mesh,
+                    &mut vaults,
+                    &mut stats,
+                    &policy,
+                );
+                cores[c as usize].note_miss(res.done);
+                if warmed {
+                    stats.latency.record(res.network, res.queued, res.array);
+                    stats.queue_net += res.queued_net;
+                    stats.queue_mem += res.queued - res.queued_net;
+                    stats.requests += 1;
+                    measured += 1;
+                }
+                total_requests += 1;
+                policy.on_request(
+                    c,
+                    res.served_by,
+                    res.subscribed_path,
+                    res.actual_hops,
+                    res.baseline_hops,
+                    res.network + res.queued + res.array,
+                    res.set,
+                    now,
+                );
+
+                if !warmed && total_requests >= cfg.warmup_requests {
+                    stats.reset();
+                    warmed = true;
+                    measure_start = cores[c as usize].time;
+                }
+            }
+        }
+
+        if warmed && measured >= cfg.measure_requests {
+            break;
+        }
+        let next = cores[c as usize].time;
+        heap.push(Reverse((next, c)));
+    }
+
+    let _ = decisions_seen;
+    for core in &mut cores {
+        core.drain();
+        last_t = last_t.max(core.time);
+    }
+
+    RunReport {
+        cycles: last_t.saturating_sub(measure_start),
+        stats,
+        decisions: policy.decisions.clone(),
+        exhausted: cores.iter().any(|c| c.finished),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::PolicyKind;
+    use crate::workloads::catalog;
+
+    fn quick(policy: PolicyKind, wl: &str) -> SimReport {
+        let mut cfg = SimConfig::hmc().quick();
+        cfg.warmup_requests = 2000;
+        cfg.measure_requests = 10_000;
+        cfg.policy = policy;
+        let w = catalog::build(wl, &cfg).unwrap();
+        simulate(&cfg, w)
+    }
+
+    #[test]
+    fn baseline_run_completes_and_measures() {
+        let r = quick(PolicyKind::Never, "STRAdd");
+        assert_eq!(r.runs.len(), 1);
+        assert!(r.runs[0].stats.requests >= 10_000);
+        assert!(r.runs[0].cycles > 0);
+        assert!(r.avg_latency() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_across_identical_runs() {
+        let a = quick(PolicyKind::Never, "STRCpy");
+        let b = quick(PolicyKind::Never, "STRCpy");
+        assert_eq!(a.runs[0].cycles, b.runs[0].cycles);
+        assert_eq!(a.runs[0].stats.requests, b.runs[0].stats.requests);
+        assert_eq!(a.runs[0].stats.latency, b.runs[0].stats.latency);
+    }
+
+    #[test]
+    fn never_policy_does_not_subscribe() {
+        let r = quick(PolicyKind::Never, "PLYgemm");
+        assert_eq!(r.runs[0].stats.subscriptions, 0);
+    }
+
+    #[test]
+    fn always_policy_subscribes() {
+        let r = quick(PolicyKind::Always, "PLYgemm");
+        assert!(r.runs[0].stats.subscriptions > 0);
+    }
+
+    #[test]
+    fn adaptive_policy_makes_epoch_decisions() {
+        let r = quick(PolicyKind::Adaptive, "SPLRad");
+        assert!(!r.runs[0].decisions.is_empty(), "epochs must tick");
+    }
+
+    #[test]
+    fn latency_breakdown_components_all_present() {
+        let r = quick(PolicyKind::Never, "HSJNPO");
+        let (n, q, a) = r.latency_fractions();
+        assert!(n > 0.0, "network share");
+        assert!(a > 0.0, "array share");
+        assert!((n + q + a - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_run_aggregates() {
+        let mut cfg = SimConfig::hmc().quick();
+        cfg.warmup_requests = 500;
+        cfg.measure_requests = 2000;
+        cfg.runs = 3;
+        let w = catalog::build("STRTriad", &cfg).unwrap();
+        let r = simulate(&cfg, w);
+        assert_eq!(r.runs.len(), 3);
+    }
+}

@@ -1,0 +1,211 @@
+//! Per-PIM-core L1 cache (32 KB in the baseline, Table I/II).
+//!
+//! Write-back, write-allocate, set-associative with true-LRU. The L1
+//! filters the workload's raw access stream: only misses (and dirty
+//! evictions) reach the vault network, so the *post-L1* reuse of a block is
+//! what the subscription machinery can exploit — exactly the quantity
+//! Fig 10 plots.
+
+/// Outcome of one L1 access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum L1Result {
+    Hit,
+    /// Read miss; the line is filled. If the victim was dirty, its block
+    /// must be written back.
+    Miss { writeback: Option<u64> },
+    /// Write miss: the store bypasses the cache (write-no-allocate, the
+    /// streaming-store behaviour of simple PIM cores) and goes straight to
+    /// the memory system as a full-block write.
+    WriteMiss,
+}
+
+/// One core's L1 tag store.
+pub struct L1Cache {
+    sets: usize,
+    ways: usize,
+    /// tag per line; u64::MAX = invalid. Indexed set * ways + way.
+    tags: Vec<u64>,
+    dirty: Vec<bool>,
+    lru: Vec<u64>,
+    tick: u64,
+}
+
+impl L1Cache {
+    /// `bytes` capacity, `ways` associativity, `line` bytes per line.
+    pub fn new(bytes: u32, ways: u16, line: u32) -> Self {
+        let lines = (bytes / line) as usize;
+        let ways = ways as usize;
+        assert!(lines % ways == 0, "capacity must divide into ways");
+        let sets = lines / ways;
+        assert!(sets.is_power_of_two(), "L1 sets must be a power of two");
+        L1Cache {
+            sets,
+            ways,
+            tags: vec![u64::MAX; lines],
+            dirty: vec![false; lines],
+            lru: vec![0; lines],
+            tick: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.tags.fill(u64::MAX);
+        self.dirty.fill(false);
+        self.lru.fill(0);
+        self.tick = 0;
+    }
+
+    /// Access `block` (a global block index). Returns hit/miss and fills
+    /// the line on miss.
+    pub fn access(&mut self, block: u64, write: bool) -> L1Result {
+        self.tick += 1;
+        let set = (block as usize) & (self.sets - 1);
+        let base = set * self.ways;
+        // Hit?
+        for w in 0..self.ways {
+            if self.tags[base + w] == block {
+                self.lru[base + w] = self.tick;
+                if write {
+                    self.dirty[base + w] = true;
+                }
+                return L1Result::Hit;
+            }
+        }
+        if write {
+            // Write-no-allocate: the store goes straight to memory.
+            return L1Result::WriteMiss;
+        }
+        // Read miss: pick invalid way or LRU victim and fill.
+        let mut victim = base;
+        let mut oldest = u64::MAX;
+        for w in 0..self.ways {
+            let i = base + w;
+            if self.tags[i] == u64::MAX {
+                victim = i;
+                break;
+            }
+            if self.lru[i] < oldest {
+                oldest = self.lru[i];
+                victim = i;
+            }
+        }
+        let writeback = if self.tags[victim] != u64::MAX && self.dirty[victim] {
+            Some(self.tags[victim])
+        } else {
+            None
+        };
+        self.tags[victim] = block;
+        self.dirty[victim] = false;
+        self.lru[victim] = self.tick;
+        L1Result::Miss { writeback }
+    }
+
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l1() -> L1Cache {
+        L1Cache::new(32 * 1024, 4, 64) // 128 sets x 4 ways
+    }
+
+    #[test]
+    fn geometry() {
+        assert_eq!(l1().sets(), 128);
+    }
+
+    #[test]
+    fn second_access_hits() {
+        let mut c = l1();
+        assert!(matches!(c.access(5, false), L1Result::Miss { .. }));
+        assert_eq!(c.access(5, false), L1Result::Hit);
+    }
+
+    #[test]
+    fn conflict_evicts_lru() {
+        let mut c = l1();
+        // Five blocks in the same set (stride = sets).
+        for i in 0..5u64 {
+            c.access(i * 128, false);
+        }
+        // Block 0 (oldest) must have been evicted.
+        assert!(matches!(c.access(0, false), L1Result::Miss { .. }));
+        // Block 4*128 must still be resident... but the re-fill of block 0
+        // evicted the next-oldest (1*128), so 4*128 hits:
+        assert_eq!(c.access(4 * 128, false), L1Result::Hit);
+    }
+
+    #[test]
+    fn dirty_eviction_reports_writeback() {
+        let mut c = l1();
+        c.access(0, false); // fill...
+        c.access(0, true); // ...then dirty via a write hit
+        for i in 1..=4u64 {
+            let r = c.access(i * 128, false);
+            if i == 4 {
+                assert_eq!(r, L1Result::Miss { writeback: Some(0) });
+            } else {
+                assert_eq!(r, L1Result::Miss { writeback: None });
+            }
+        }
+    }
+
+    #[test]
+    fn write_miss_bypasses_cache() {
+        let mut c = l1();
+        assert_eq!(c.access(0, true), L1Result::WriteMiss);
+        // Not installed: the next read still misses.
+        assert!(matches!(c.access(0, false), L1Result::Miss { .. }));
+    }
+
+    #[test]
+    fn clean_eviction_has_no_writeback() {
+        let mut c = l1();
+        for i in 0..=4u64 {
+            let r = c.access(i * 128, false);
+            assert!(matches!(r, L1Result::Miss { writeback: None }), "i={i}");
+        }
+    }
+
+    #[test]
+    fn write_hit_sets_dirty() {
+        let mut c = l1();
+        c.access(0, false);
+        assert_eq!(c.access(0, true), L1Result::Hit); // dirty via hit
+        for i in 1..=4u64 {
+            if let L1Result::Miss { writeback: Some(b) } = c.access(i * 128, false) {
+                assert_eq!(b, 0);
+                return;
+            }
+        }
+        panic!("dirty block never written back");
+    }
+
+    #[test]
+    fn streaming_never_hits() {
+        let mut c = l1();
+        let mut misses = 0;
+        for i in 0..10_000u64 {
+            if matches!(c.access(i, false), L1Result::Miss { .. }) {
+                misses += 1;
+            }
+        }
+        assert_eq!(misses, 10_000);
+    }
+
+    #[test]
+    fn working_set_within_capacity_hits_forever() {
+        let mut c = l1();
+        let blocks: Vec<u64> = (0..512).collect(); // 32 KB exactly
+        for &b in &blocks {
+            c.access(b, false);
+        }
+        for &b in &blocks {
+            assert_eq!(c.access(b, false), L1Result::Hit, "block {b}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Layer-3 coordination: the PIM cores (one per vault logic die), their
+//! L1 caches, and the discrete-event driver that runs a workload over the
+//! memory system and produces a [`report::SimReport`].
+
+pub mod core;
+pub mod driver;
+pub mod l1;
+pub mod report;
+
+pub use core::PimCore;
+pub use driver::{simulate, simulate_once};
+pub use l1::{L1Cache, L1Result};
+pub use report::{RunReport, SimReport};

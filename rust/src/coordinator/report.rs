@@ -1,0 +1,173 @@
+//! Simulation reports: per-run raw numbers and multi-run averages — the
+//! quantities every figure of the paper is computed from.
+
+use crate::policy::EpochDecision;
+use crate::stats::SimStats;
+use crate::Cycle;
+
+/// Raw results of a single simulation run (one seed).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Cycles elapsed over the measured window (fixed request count), the
+    /// execution-time proxy used for speedups.
+    pub cycles: Cycle,
+    /// Statistics accumulated over the measured window.
+    pub stats: SimStats,
+    /// Epoch decisions taken during the whole run (incl. warmup).
+    pub decisions: Vec<EpochDecision>,
+    /// True if the workload stream ended before `measure_requests`.
+    pub exhausted: bool,
+}
+
+impl RunReport {
+    pub fn avg_latency(&self) -> f64 {
+        self.stats.latency.avg()
+    }
+
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.stats.traffic.bytes_per_cycle(self.cycles)
+    }
+}
+
+/// Aggregate over `runs` independent seeds (5 in the paper's methodology;
+/// every accessor reports the mean across runs).
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub workload: String,
+    pub policy: &'static str,
+    pub runs: Vec<RunReport>,
+}
+
+impl SimReport {
+    fn mean<F: Fn(&RunReport) -> f64>(&self, f: F) -> f64 {
+        if self.runs.is_empty() {
+            return 0.0;
+        }
+        self.runs.iter().map(f).sum::<f64>() / self.runs.len() as f64
+    }
+
+    /// Mean execution cycles for the fixed measured work.
+    pub fn cycles(&self) -> f64 {
+        self.mean(|r| r.cycles as f64)
+    }
+
+    /// Mean memory latency per request (cycles) — the orange lines of
+    /// Figs 11/15.
+    pub fn avg_latency(&self) -> f64 {
+        self.mean(|r| r.avg_latency())
+    }
+
+    /// Mean (network, queue, array) latency fractions — Figs 1/2.
+    pub fn latency_fractions(&self) -> (f64, f64, f64) {
+        (
+            self.mean(|r| r.stats.latency.fractions().0),
+            self.mean(|r| r.stats.latency.fractions().1),
+            self.mean(|r| r.stats.latency.fractions().2),
+        )
+    }
+
+    /// Mean CoV of per-vault served demand — Figs 3/4/12/13.
+    pub fn cov(&self) -> f64 {
+        self.mean(|r| r.stats.demand.cov())
+    }
+
+    /// Mean network traffic in bytes/cycle — Fig 14.
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.mean(|r| r.bytes_per_cycle())
+    }
+
+    /// Mean local & remote reuse per subscription — Fig 10.
+    pub fn reuse(&self) -> (f64, f64) {
+        (
+            self.mean(|r| r.stats.reuse.avg_local()),
+            self.mean(|r| r.stats.reuse.avg_remote()),
+        )
+    }
+
+    /// Speedup of this report relative to a baseline run of the same
+    /// workload: `baseline.cycles / self.cycles` (Figs 9/11/15/16).
+    pub fn speedup_vs(&self, baseline: &SimReport) -> f64 {
+        let own = self.cycles();
+        if own == 0.0 {
+            return 1.0;
+        }
+        baseline.cycles() / own
+    }
+
+    /// Memory-latency improvement vs baseline: `1 - lat/lat_base`
+    /// (54% HMC / 50% HBM headline numbers).
+    pub fn latency_improvement_vs(&self, baseline: &SimReport) -> f64 {
+        let b = baseline.avg_latency();
+        if b == 0.0 {
+            return 0.0;
+        }
+        1.0 - self.avg_latency() / b
+    }
+
+    /// Fraction of demand served without leaving the requester vault.
+    pub fn local_fraction(&self) -> f64 {
+        self.mean(|r| {
+            if r.stats.requests == 0 {
+                0.0
+            } else {
+                r.stats.local_requests as f64 / r.stats.requests as f64
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::SimStats;
+
+    fn run(cycles: u64, lat_total: u64, reqs: u64) -> RunReport {
+        let mut stats = SimStats::new(4);
+        for _ in 0..reqs {
+            stats.latency.record(0, 0, lat_total / reqs);
+        }
+        stats.requests = reqs;
+        RunReport { cycles, stats, decisions: vec![], exhausted: false }
+    }
+
+    fn report(cycles: u64) -> SimReport {
+        SimReport {
+            workload: "test".into(),
+            policy: "never",
+            runs: vec![run(cycles, 1000, 10)],
+        }
+    }
+
+    #[test]
+    fn speedup_is_cycle_ratio() {
+        let base = report(2000);
+        let fast = report(1000);
+        assert!((fast.speedup_vs(&base) - 2.0).abs() < 1e-12);
+        assert!((base.speedup_vs(&base) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_improvement_halved_is_50pct() {
+        let mut base = report(1000);
+        base.runs[0].stats.latency = Default::default();
+        for _ in 0..10 {
+            base.runs[0].stats.latency.record(0, 0, 100);
+        }
+        let mut dl = report(1000);
+        dl.runs[0].stats.latency = Default::default();
+        for _ in 0..10 {
+            dl.runs[0].stats.latency.record(0, 0, 50);
+        }
+        assert!((dl.latency_improvement_vs(&base) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn means_average_across_runs() {
+        let r = SimReport {
+            workload: "t".into(),
+            policy: "never",
+            runs: vec![run(100, 100, 10), run(300, 100, 10)],
+        };
+        assert!((r.cycles() - 200.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,387 @@
+//! Figure regeneration harness: one function per figure/table of the
+//! paper's evaluation, shared by the `cargo bench` targets and the
+//! `repro` CLI.
+//!
+//! Absolute numbers differ from the paper (our substrate is our own
+//! simulator, not the authors' DAMOV testbed); the *shape* — who wins, by
+//! roughly what factor, where the crossovers fall — is the reproduction
+//! target (see EXPERIMENTS.md for paper-vs-measured).
+
+use std::sync::Mutex;
+
+use crate::config::{MemKind, SimConfig};
+use crate::coordinator::driver::simulate;
+use crate::coordinator::report::SimReport;
+use crate::policy::PolicyKind;
+use crate::workloads::catalog;
+
+/// Scale knobs, overridable from the environment:
+/// `REPRO_WARMUP` / `REPRO_MEASURE` / `REPRO_RUNS` / `REPRO_EPOCH`.
+pub fn scaled(mut cfg: SimConfig) -> SimConfig {
+    fn env_u64(key: &str) -> Option<u64> {
+        std::env::var(key).ok()?.parse().ok()
+    }
+    if let Some(v) = env_u64("REPRO_WARMUP") {
+        cfg.warmup_requests = v;
+    }
+    if let Some(v) = env_u64("REPRO_MEASURE") {
+        cfg.measure_requests = v;
+    }
+    if let Some(v) = env_u64("REPRO_RUNS") {
+        cfg.runs = v as u32;
+    }
+    if let Some(v) = env_u64("REPRO_EPOCH") {
+        cfg.epoch_cycles = v;
+    }
+    cfg
+}
+
+/// Base config for a memory kind with a policy, at harness scale.
+pub fn cfg_for(mem: MemKind, policy: PolicyKind) -> SimConfig {
+    let mut cfg = match mem {
+        MemKind::Hmc => SimConfig::hmc(),
+        MemKind::Hbm => SimConfig::hbm(),
+    };
+    cfg.policy = policy;
+    scaled(cfg)
+}
+
+/// Run one workload under one config.
+pub fn run(cfg: &SimConfig, workload: &str) -> SimReport {
+    let w = catalog::build(workload, cfg)
+        .unwrap_or_else(|| panic!("unknown workload {workload}"));
+    simulate(cfg, w)
+}
+
+/// Run `names x configs` in parallel across OS threads; returns results in
+/// `[workload][config]` order.
+pub fn run_matrix(names: &[&str], cfgs: &[SimConfig]) -> Vec<Vec<SimReport>> {
+    let jobs: Vec<(usize, usize)> = (0..names.len())
+        .flat_map(|w| (0..cfgs.len()).map(move |c| (w, c)))
+        .collect();
+    let results: Mutex<Vec<Option<SimReport>>> =
+        Mutex::new((0..jobs.len()).map(|_| None).collect());
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(jobs.len()) {
+            scope.spawn(|| loop {
+                let j = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if j >= jobs.len() {
+                    break;
+                }
+                let (w, c) = jobs[j];
+                let rep = run(&cfgs[c], names[w]);
+                results.lock().unwrap()[j] = Some(rep);
+            });
+        }
+    });
+    let flat = results.into_inner().unwrap();
+    let mut out: Vec<Vec<Option<SimReport>>> =
+        (0..names.len()).map(|_| (0..cfgs.len()).map(|_| None).collect()).collect();
+    for (j, rep) in flat.into_iter().enumerate() {
+        let (w, c) = jobs[j];
+        out[w][c] = rep;
+    }
+    out.into_iter().map(|row| row.into_iter().map(Option::unwrap).collect()).collect()
+}
+
+// ---------------------------------------------------------------------
+// Figure rows
+// ---------------------------------------------------------------------
+
+/// Figs 1 & 2: latency breakdown per workload under the baseline.
+pub struct BreakdownRow {
+    pub workload: &'static str,
+    pub network: f64,
+    pub queue: f64,
+    pub array: f64,
+    pub avg_latency: f64,
+}
+
+pub fn fig_latency_breakdown(mem: MemKind) -> Vec<BreakdownRow> {
+    let cfg = cfg_for(mem, PolicyKind::Never);
+    let reports = run_matrix(&catalog::ALL_NAMES, std::slice::from_ref(&cfg));
+    catalog::ALL_NAMES
+        .iter()
+        .zip(reports)
+        .map(|(name, mut r)| {
+            let rep = r.remove(0);
+            let (n, q, a) = rep.latency_fractions();
+            BreakdownRow {
+                workload: name,
+                network: n,
+                queue: q,
+                array: a,
+                avg_latency: rep.avg_latency(),
+            }
+        })
+        .collect()
+}
+
+/// Figs 3 & 4: baseline CoV per workload.
+pub fn fig_cov(mem: MemKind) -> Vec<(&'static str, f64)> {
+    let cfg = cfg_for(mem, PolicyKind::Never);
+    let reports = run_matrix(&catalog::ALL_NAMES, std::slice::from_ref(&cfg));
+    catalog::ALL_NAMES
+        .iter()
+        .zip(reports)
+        .map(|(name, mut r)| (*name, r.remove(0).cov()))
+        .collect()
+}
+
+/// Fig 9: always-subscribe speedup over baseline, all 31 workloads (HMC).
+pub struct SpeedupRow {
+    pub workload: &'static str,
+    pub speedup: f64,
+    pub latency_improvement: f64,
+}
+
+pub fn fig9_always_subscribe() -> Vec<SpeedupRow> {
+    let base = cfg_for(MemKind::Hmc, PolicyKind::Never);
+    let always = cfg_for(MemKind::Hmc, PolicyKind::Always);
+    let reports = run_matrix(&catalog::ALL_NAMES, &[base, always]);
+    catalog::ALL_NAMES
+        .iter()
+        .zip(reports)
+        .map(|(name, r)| SpeedupRow {
+            workload: name,
+            speedup: r[1].speedup_vs(&r[0]),
+            latency_improvement: r[1].latency_improvement_vs(&r[0]),
+        })
+        .collect()
+}
+
+/// Fig 10: reuse per subscription under always-subscribe (HMC).
+pub fn fig10_reuse() -> Vec<(&'static str, f64, f64)> {
+    let always = cfg_for(MemKind::Hmc, PolicyKind::Always);
+    let reports = run_matrix(&catalog::ALL_NAMES, std::slice::from_ref(&always));
+    catalog::ALL_NAMES
+        .iter()
+        .zip(reports)
+        .map(|(name, mut r)| {
+            let (l, rm) = r.remove(0).reuse();
+            (*name, l, rm)
+        })
+        .collect()
+}
+
+/// Fig 11: selected workloads, always vs adaptive speedup + adaptive
+/// latency improvement (HMC).
+pub struct AdaptiveRow {
+    pub workload: &'static str,
+    pub always_speedup: f64,
+    pub adaptive_speedup: f64,
+    pub latency_improvement: f64,
+}
+
+pub fn fig11_adaptive() -> Vec<AdaptiveRow> {
+    let cfgs = [
+        cfg_for(MemKind::Hmc, PolicyKind::Never),
+        cfg_for(MemKind::Hmc, PolicyKind::Always),
+        cfg_for(MemKind::Hmc, PolicyKind::Adaptive),
+    ];
+    let reports = run_matrix(&catalog::SELECTED, &cfgs);
+    catalog::SELECTED
+        .iter()
+        .zip(reports)
+        .map(|(name, r)| AdaptiveRow {
+            workload: name,
+            always_speedup: r[1].speedup_vs(&r[0]),
+            adaptive_speedup: r[2].speedup_vs(&r[0]),
+            latency_improvement: r[2].latency_improvement_vs(&r[0]),
+        })
+        .collect()
+}
+
+/// Fig 12 (HMC) / Fig 13 (HBM): CoV under baseline / always / adaptive.
+pub fn fig_cov_policies(mem: MemKind, include_always: bool) -> Vec<(&'static str, Vec<f64>)> {
+    let mut cfgs = vec![cfg_for(mem, PolicyKind::Never)];
+    if include_always {
+        cfgs.push(cfg_for(mem, PolicyKind::Always));
+    }
+    cfgs.push(cfg_for(mem, PolicyKind::Adaptive));
+    let reports = run_matrix(&catalog::SELECTED, &cfgs);
+    catalog::SELECTED
+        .iter()
+        .zip(reports)
+        .map(|(name, r)| (*name, r.iter().map(|x| x.cov()).collect()))
+        .collect()
+}
+
+/// Fig 14: traffic (bytes/cycle) under baseline / always / adaptive (HMC).
+pub fn fig14_traffic() -> Vec<(&'static str, f64, f64, f64)> {
+    let cfgs = [
+        cfg_for(MemKind::Hmc, PolicyKind::Never),
+        cfg_for(MemKind::Hmc, PolicyKind::Always),
+        cfg_for(MemKind::Hmc, PolicyKind::Adaptive),
+    ];
+    let reports = run_matrix(&catalog::SELECTED, &cfgs);
+    catalog::SELECTED
+        .iter()
+        .zip(reports)
+        .map(|(name, r)| {
+            (
+                *name,
+                r[0].bytes_per_cycle(),
+                r[1].bytes_per_cycle(),
+                r[2].bytes_per_cycle(),
+            )
+        })
+        .collect()
+}
+
+/// Fig 15: HBM latency baseline vs adaptive + speedup, all 31 workloads.
+pub struct HbmRow {
+    pub workload: &'static str,
+    pub base_latency: f64,
+    pub adaptive_latency: f64,
+    pub speedup: f64,
+}
+
+pub fn fig15_hbm_adaptive() -> Vec<HbmRow> {
+    let cfgs =
+        [cfg_for(MemKind::Hbm, PolicyKind::Never), cfg_for(MemKind::Hbm, PolicyKind::Adaptive)];
+    let reports = run_matrix(&catalog::ALL_NAMES, &cfgs);
+    catalog::ALL_NAMES
+        .iter()
+        .zip(reports)
+        .map(|(name, r)| HbmRow {
+            workload: name,
+            base_latency: r[0].avg_latency(),
+            adaptive_latency: r[1].avg_latency(),
+            speedup: r[1].speedup_vs(&r[0]),
+        })
+        .collect()
+}
+
+/// Fig 16: adaptive speedup vs subscription-table size, table-sensitive
+/// workloads.
+pub const FIG16_WORKLOADS: [&str; 4] = ["PLYDoitgen", "PHELinReg", "SPLRad", "CHABsBez"];
+
+pub fn fig16_table_size() -> Vec<(&'static str, Vec<(u32, f64)>)> {
+    let base = cfg_for(MemKind::Hmc, PolicyKind::Never);
+    let mut cfgs = vec![base];
+    for entries in crate::config::presets::TABLE_SIZE_SWEEP {
+        let mut c = crate::config::presets::hmc_adaptive_with_table_entries(entries);
+        c = scaled(c);
+        cfgs.push(c);
+    }
+    let reports = run_matrix(&FIG16_WORKLOADS, &cfgs);
+    FIG16_WORKLOADS
+        .iter()
+        .zip(reports)
+        .map(|(name, r)| {
+            let series = crate::config::presets::TABLE_SIZE_SWEEP
+                .iter()
+                .enumerate()
+                .map(|(i, &entries)| (entries, r[i + 1].speedup_vs(&r[0])))
+                .collect();
+            (*name, series)
+        })
+        .collect()
+}
+
+/// Fig 17 (ablation): count-threshold filter vs subscribe-on-first-access.
+pub fn fig17_threshold_ablation() -> Vec<(&'static str, Vec<(u32, f64)>)> {
+    const THRESHOLDS: [u32; 4] = [0, 1, 4, 16];
+    let names = ["SPLRad", "PHELinReg", "PLYgemm", "HSJNPO"];
+    let base = cfg_for(MemKind::Hmc, PolicyKind::Never);
+    let mut cfgs = vec![base];
+    for t in THRESHOLDS {
+        let mut c = cfg_for(MemKind::Hmc, PolicyKind::Always);
+        c.count_threshold = t;
+        cfgs.push(c);
+    }
+    let reports = run_matrix(&names, &cfgs);
+    names
+        .iter()
+        .zip(reports)
+        .map(|(name, r)| {
+            let series = THRESHOLDS
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| (t, r[i + 1].speedup_vs(&r[0])))
+                .collect();
+            (*name, series)
+        })
+        .collect()
+}
+
+/// Fig 18 (ablation): adaptive-policy variants.
+pub fn fig18_policy_ablation() -> Vec<(&'static str, Vec<(&'static str, f64)>)> {
+    const POLICIES: [PolicyKind; 4] = [
+        PolicyKind::Always,
+        PolicyKind::AdaptiveHops,
+        PolicyKind::AdaptiveLatency,
+        PolicyKind::Adaptive,
+    ];
+    let names = ["SPLRad", "PHELinReg", "PLYgemm", "PLY3mm", "STRTriad"];
+    let mut cfgs = vec![cfg_for(MemKind::Hmc, PolicyKind::Never)];
+    for p in POLICIES {
+        cfgs.push(cfg_for(MemKind::Hmc, p));
+    }
+    let reports = run_matrix(&names, &cfgs);
+    names
+        .iter()
+        .zip(reports)
+        .map(|(name, r)| {
+            let series = POLICIES
+                .iter()
+                .enumerate()
+                .map(|(i, p)| (p.as_str(), r[i + 1].speedup_vs(&r[0])))
+                .collect();
+            (*name, series)
+        })
+        .collect()
+}
+
+/// Geometric mean (the paper's averages over workloads).
+pub fn geomean(xs: impl Iterator<Item = f64>) -> f64 {
+    let (mut logsum, mut n) = (0.0, 0usize);
+    for x in xs {
+        if x > 0.0 {
+            logsum += x.ln();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        (logsum / n as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_of_constants() {
+        assert!((geomean([2.0, 2.0, 2.0].into_iter()) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_ignores_nonpositive() {
+        assert!((geomean([4.0, 0.0, -1.0].into_iter()) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cfg_for_sets_policy_and_mem() {
+        let c = cfg_for(MemKind::Hbm, PolicyKind::Adaptive);
+        assert_eq!(c.mem, MemKind::Hbm);
+        assert_eq!(c.policy, PolicyKind::Adaptive);
+    }
+
+    #[test]
+    fn run_matrix_shape() {
+        let mut cfg = cfg_for(MemKind::Hmc, PolicyKind::Never);
+        cfg.warmup_requests = 200;
+        cfg.measure_requests = 1000;
+        let out = run_matrix(&["STRAdd", "STRCpy"], &[cfg.clone(), cfg]);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), 2);
+        assert_eq!(out[0][0].workload, "STRAdd");
+        assert_eq!(out[1][1].workload, "STRCpy");
+    }
+}

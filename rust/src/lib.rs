@@ -1,0 +1,57 @@
+//! # DL-PIM — Data-Locality-based Processing-in-Memory
+//!
+//! Full reproduction of *"DL-PIM: Improving Data Locality in
+//! Processing-in-Memory Systems"* (Tian, Yousefijamarani, Alameldeen, 2025)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the PIM memory-system coordinator: a
+//!   discrete-event, cycle-resolution model of an HMC / HBM vault mesh with
+//!   the paper's subscription tables, subscription protocol, and adaptive
+//!   subscription policies; plus the 31 DAMOV-representative workload
+//!   traffic generators and the measurement harness that regenerates every
+//!   figure in the paper's evaluation.
+//! * **Layer 2 / Layer 1 (python/, build-time only)** — JAX compute graphs
+//!   and Pallas kernels for the workloads' arithmetic hot-spots, AOT-lowered
+//!   to HLO text and executed from Rust through the PJRT CPU client
+//!   ([`runtime`]). Python never runs on the request path.
+//!
+//! ## Quick example
+//!
+//! ```no_run
+//! use dlpim::config::SimConfig;
+//! use dlpim::coordinator::driver::simulate;
+//! use dlpim::policy::PolicyKind;
+//! use dlpim::workloads::catalog;
+//!
+//! let mut cfg = SimConfig::hmc();
+//! cfg.policy = PolicyKind::Adaptive;
+//! let wl = catalog::build("SPLRad", &cfg).unwrap();
+//! let report = simulate(&cfg, wl);
+//! println!("avg latency = {:.1} cycles", report.avg_latency());
+//! ```
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod policy;
+pub mod proptest_lite;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod subscription;
+pub mod workloads;
+
+/// Simulation clock, in PIM-core cycles (2.4 GHz in the paper's testbed).
+pub type Cycle = u64;
+/// Byte address within the simulated physical address space.
+pub type Addr = u64;
+/// Index of a vault (HMC) or channel (HBM) — also the index of the PIM core
+/// that lives on that vault's logic layer.
+pub type VaultId = u16;
+/// Index of a PIM core. One core per vault in this model, so `CoreId` and
+/// [`VaultId`] coincide numerically, but the types are kept distinct for
+/// clarity at call sites.
+pub type CoreId = u16;

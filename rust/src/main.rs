@@ -1,0 +1,307 @@
+//! `repro` — the DL-PIM launcher: run simulations, regenerate paper
+//! figures, inspect configs and artifacts.
+
+use anyhow::{anyhow, bail, Result};
+
+use dlpim::cli::{Cli, HELP};
+use dlpim::config::{presets, MemKind, SimConfig};
+use dlpim::coordinator::driver::simulate;
+use dlpim::figures;
+use dlpim::policy::PolicyKind;
+use dlpim::runtime::ArtifactStore;
+use dlpim::workloads::catalog;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = Cli::parse(args).map_err(|e| anyhow!(e))?;
+    match cli.command.as_str() {
+        "" | "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "run" => cmd_run(&cli),
+        "figure" => cmd_figure(&cli),
+        "all-figures" => cmd_all_figures(),
+        "workloads" => cmd_workloads(),
+        "config" => cmd_config(&cli),
+        "artifacts" => cmd_artifacts(),
+        other => bail!("unknown command {other:?}; try `repro help`"),
+    }
+}
+
+fn config_from_cli(cli: &Cli) -> Result<SimConfig> {
+    let mut cfg = if let Some(path) = cli.flag("config") {
+        let text = std::fs::read_to_string(path)?;
+        dlpim::config::parse::config_from_text(&text).map_err(|e| anyhow!(e))?
+    } else {
+        let mem = cli.flag_or("memory", "hmc");
+        SimConfig::preset(mem).ok_or_else(|| anyhow!("unknown memory {mem:?}"))?
+    };
+    if let Some(p) = cli.flag("policy") {
+        cfg.policy = PolicyKind::parse(p).ok_or_else(|| anyhow!("unknown policy {p:?}"))?;
+    }
+    if cli.has("quick") {
+        cfg = cfg.quick();
+    }
+    if cli.has("paper-scale") {
+        cfg = cfg.paper_scale();
+    }
+    if let Some(v) = cli.flag_u64("warmup").map_err(|e| anyhow!(e))? {
+        cfg.warmup_requests = v;
+    }
+    if let Some(v) = cli.flag_u64("measure").map_err(|e| anyhow!(e))? {
+        cfg.measure_requests = v;
+    }
+    if let Some(v) = cli.flag_u64("runs").map_err(|e| anyhow!(e))? {
+        cfg.runs = v as u32;
+    }
+    if let Some(v) = cli.flag_u64("seed").map_err(|e| anyhow!(e))? {
+        cfg.seed = v;
+    }
+    if let Some(v) = cli.flag_u64("epoch").map_err(|e| anyhow!(e))? {
+        cfg.epoch_cycles = v;
+    }
+    cfg.validate().map_err(|e| anyhow!("invalid config: {}", e.join("; ")))?;
+    Ok(cfg)
+}
+
+fn cmd_run(cli: &Cli) -> Result<()> {
+    let cfg = config_from_cli(cli)?;
+    let name = cli.flag("workload").ok_or_else(|| anyhow!("--workload required"))?;
+    let w = catalog::build(name, &cfg).ok_or_else(|| anyhow!("unknown workload {name:?}"))?;
+    let t0 = std::time::Instant::now();
+    let rep = simulate(&cfg, w);
+    let dt = t0.elapsed();
+    let (n, q, a) = rep.latency_fractions();
+    println!("workload        {name}");
+    println!("memory/policy   {}/{}", cfg.mem.as_str(), cfg.policy.as_str());
+    println!("runs            {}", rep.runs.len());
+    println!("cycles          {:.0}", rep.cycles());
+    println!("avg latency     {:.1} cycles/request", rep.avg_latency());
+    println!(
+        "breakdown       network {:.1}% | queue {:.1}% | array {:.1}%",
+        n * 100.0,
+        q * 100.0,
+        a * 100.0
+    );
+    let r0q = &rep.runs[0].stats;
+    if r0q.queue_net + r0q.queue_mem > 0 {
+        println!(
+            "queue split     links {:.1}% | vault mem {:.1}%",
+            r0q.queue_net as f64 / (r0q.queue_net + r0q.queue_mem) as f64 * 100.0,
+            r0q.queue_mem as f64 / (r0q.queue_net + r0q.queue_mem) as f64 * 100.0
+        );
+    }
+    println!("CoV             {:.3}", rep.cov());
+    println!("traffic         {:.2} B/cycle", rep.bytes_per_cycle());
+    let (rl, rr) = rep.reuse();
+    println!("reuse/sub       local {rl:.2} remote {rr:.2}");
+    println!("local fraction  {:.1}%", rep.local_fraction() * 100.0);
+    let r0 = &rep.runs[0];
+    println!(
+        "protocol        subs {} | resubs {} | unsubs {} | nacks {}",
+        r0.stats.subscriptions,
+        r0.stats.resubscriptions,
+        r0.stats.unsubscriptions,
+        r0.stats.sub_nacks
+    );
+    println!("epochs          {}", r0.decisions.len());
+    println!("wallclock       {:.2}s", dt.as_secs_f64());
+    Ok(())
+}
+
+fn cmd_workloads() -> Result<()> {
+    println!("{:<10} {:<26} {:<36} {}", "Suite", "Benchmark", "Function", "Short");
+    for e in &catalog::TABLE3 {
+        println!("{:<10} {:<26} {:<36} {}", e.suite, e.benchmark, e.function, e.short);
+    }
+    println!("\nselected (non-negligible reuse): {}", catalog::SELECTED.join(" "));
+    Ok(())
+}
+
+fn cmd_config(cli: &Cli) -> Result<()> {
+    let cfg = config_from_cli(cli)?;
+    print!("{}", presets::render(&cfg));
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let mut store = ArtifactStore::discover()?;
+    println!("platform: {}", store.platform());
+    for name in store.list()? {
+        let exe = store.get(&name)?;
+        println!("compiled: {}", exe.name);
+    }
+    Ok(())
+}
+
+fn cmd_figure(cli: &Cli) -> Result<()> {
+    let which = cli
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: repro figure <N>"))?
+        .as_str();
+    print_figure(which)
+}
+
+fn cmd_all_figures() -> Result<()> {
+    for f in ["1", "2", "3", "4", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18"] {
+        print_figure(f)?;
+        println!();
+    }
+    Ok(())
+}
+
+fn print_figure(which: &str) -> Result<()> {
+    match which {
+        "1" | "2" => {
+            let mem = if which == "1" { MemKind::Hmc } else { MemKind::Hbm };
+            println!("Figure {which}: latency breakdown ({})", mem.as_str());
+            let rows = figures::fig_latency_breakdown(mem);
+            let mut overhead = Vec::new();
+            for r in &rows {
+                println!(
+                    "fig{which:0>2} | {:<12} | network {:.3} | queue {:.3} | array {:.3} | avg {:.1}",
+                    r.workload, r.network, r.queue, r.array, r.avg_latency
+                );
+                overhead.push(r.network + r.queue);
+            }
+            println!(
+                "fig{which:0>2} | AVG remote overhead (network+queue) = {:.1}% (paper: {}%)",
+                overhead.iter().sum::<f64>() / overhead.len() as f64 * 100.0,
+                if which == "1" { 53 } else { 43 }
+            );
+        }
+        "3" | "4" => {
+            let mem = if which == "3" { MemKind::Hmc } else { MemKind::Hbm };
+            println!("Figure {which}: CoV of per-vault demand ({})", mem.as_str());
+            for (name, cov) in figures::fig_cov(mem) {
+                println!("fig{which:0>2} | {name:<12} | cov {cov:.3}");
+            }
+        }
+        "9" => {
+            println!("Figure 9: always-subscribe speedup (HMC)");
+            let rows = figures::fig9_always_subscribe();
+            for r in &rows {
+                println!("fig09 | {:<12} | speedup {:.3}", r.workload, r.speedup);
+            }
+            println!(
+                "fig09 | GEOMEAN speedup = {:.3} (paper: ~1.06)",
+                figures::geomean(rows.iter().map(|r| r.speedup))
+            );
+        }
+        "10" => {
+            println!("Figure 10: reuse per subscription under always-subscribe");
+            for (name, l, r) in figures::fig10_reuse() {
+                println!(
+                    "fig10 | {name:<12} | local {l:.2} | remote {r:.2} | total {:.2}",
+                    l + r
+                );
+            }
+        }
+        "11" => {
+            println!("Figure 11: always vs adaptive on reuse workloads (HMC)");
+            let rows = figures::fig11_adaptive();
+            for r in &rows {
+                println!(
+                    "fig11 | {:<12} | always {:.3} | adaptive {:.3} | latency impr {:.1}%",
+                    r.workload,
+                    r.always_speedup,
+                    r.adaptive_speedup,
+                    r.latency_improvement * 100.0
+                );
+            }
+            println!(
+                "fig11 | GEOMEAN always {:.3} adaptive {:.3} | AVG latency impr {:.1}% (paper: ~1.14 / ~1.15 / 54%)",
+                figures::geomean(rows.iter().map(|r| r.always_speedup)),
+                figures::geomean(rows.iter().map(|r| r.adaptive_speedup)),
+                rows.iter().map(|r| r.latency_improvement).sum::<f64>() / rows.len() as f64
+                    * 100.0
+            );
+        }
+        "12" | "13" => {
+            let (mem, always) =
+                if which == "12" { (MemKind::Hmc, true) } else { (MemKind::Hbm, false) };
+            println!("Figure {which}: CoV by policy ({})", mem.as_str());
+            for (name, covs) in figures::fig_cov_policies(mem, always) {
+                let cols: Vec<String> = covs.iter().map(|c| format!("{c:.3}")).collect();
+                let labels: &[&str] =
+                    if always { &["base", "always", "adaptive"] } else { &["base", "adaptive"] };
+                let joined: Vec<String> = labels
+                    .iter()
+                    .zip(&cols)
+                    .map(|(l, c)| format!("{l} {c}"))
+                    .collect();
+                println!("fig{which} | {name:<12} | {}", joined.join(" | "));
+            }
+        }
+        "14" => {
+            println!("Figure 14: network traffic (B/cycle)");
+            let rows = figures::fig14_traffic();
+            let (mut sb, mut sa, mut sd) = (0.0, 0.0, 0.0);
+            for (name, b, a, d) in &rows {
+                println!("fig14 | {name:<12} | base {b:.2} | always {a:.2} | adaptive {d:.2}");
+                sb += b;
+                sa += a;
+                sd += d;
+            }
+            println!(
+                "fig14 | AVG increase: always {:+.0}% adaptive {:+.0}% (paper: +88% / +14%)",
+                (sa / sb - 1.0) * 100.0,
+                (sd / sb - 1.0) * 100.0
+            );
+        }
+        "15" => {
+            println!("Figure 15: HBM latency baseline vs adaptive");
+            let rows = figures::fig15_hbm_adaptive();
+            let mut impr = Vec::new();
+            for r in &rows {
+                println!(
+                    "fig15 | {:<12} | base {:.1} | adaptive {:.1} | speedup {:.3}",
+                    r.workload, r.base_latency, r.adaptive_latency, r.speedup
+                );
+                if r.base_latency > 0.0 {
+                    impr.push(1.0 - r.adaptive_latency / r.base_latency);
+                }
+            }
+            println!(
+                "fig15 | AVG latency improvement = {:.1}% | GEOMEAN speedup {:.3} (paper: ~50% / ~1.03)",
+                impr.iter().sum::<f64>() / impr.len() as f64 * 100.0,
+                figures::geomean(rows.iter().map(|r| r.speedup))
+            );
+        }
+        "16" => {
+            println!("Figure 16: adaptive speedup vs subscription-table entries");
+            for (name, series) in figures::fig16_table_size() {
+                let cols: Vec<String> =
+                    series.iter().map(|(e, s)| format!("{e}:{s:.3}")).collect();
+                println!("fig16 | {name:<12} | {}", cols.join(" | "));
+            }
+        }
+        "17" => {
+            println!("Figure 17 (ablation): count-threshold filter (always-subscribe)");
+            for (name, series) in figures::fig17_threshold_ablation() {
+                let cols: Vec<String> =
+                    series.iter().map(|(t, s)| format!("thr{t}:{s:.3}")).collect();
+                println!("fig17 | {name:<12} | {}", cols.join(" | "));
+            }
+        }
+        "18" => {
+            println!("Figure 18 (ablation): adaptive-policy variants");
+            for (name, series) in figures::fig18_policy_ablation() {
+                let cols: Vec<String> =
+                    series.iter().map(|(p, s)| format!("{p}:{s:.3}")).collect();
+                println!("fig18 | {name:<12} | {}", cols.join(" | "));
+            }
+        }
+        other => bail!("unknown figure {other:?} (1-4, 9-18)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Subscription policies (§III-D): the binary always/never configurations
+//! and the adaptive mechanisms that turn subscription on or off at epoch
+//! granularity based on measured cost/benefit.
+
+pub mod registers;
+pub mod runtime;
+
+pub use registers::{FeedbackRegister, LatencyRegisters};
+pub use runtime::{EpochDecision, PolicyRuntime, SetGroup};
+
+/// Which subscription policy a run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Baseline: no subscriptions ever (the speedup denominator).
+    Never,
+    /// Subscribe on first access, unconditionally (Fig 9).
+    Always,
+    /// Hops-based adaptive (§III-D2): per-vault feedback registers compare
+    /// actual vs estimated-unsubscribed hop counts.
+    AdaptiveHops,
+    /// Latency-based adaptive (§III-D3): global epoch-over-epoch average
+    /// latency comparison with a 2% threshold, decided at the central vault.
+    AdaptiveLatency,
+    /// The paper's headline *adaptive* policy: latency-based global decision
+    /// with leading-set dynamic set sampling (§III-D5) to escape the
+    /// always-unsubscription problem.
+    Adaptive,
+}
+
+impl PolicyKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PolicyKind::Never => "never",
+            PolicyKind::Always => "always",
+            PolicyKind::AdaptiveHops => "adaptive-hops",
+            PolicyKind::AdaptiveLatency => "adaptive-latency",
+            PolicyKind::Adaptive => "adaptive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "never" | "baseline" => Some(PolicyKind::Never),
+            "always" | "always-subscribe" => Some(PolicyKind::Always),
+            "adaptive-hops" | "hops" => Some(PolicyKind::AdaptiveHops),
+            "adaptive-latency" | "latency" => Some(PolicyKind::AdaptiveLatency),
+            "adaptive" => Some(PolicyKind::Adaptive),
+            _ => None,
+        }
+    }
+
+    /// Does this policy ever subscribe?
+    pub fn can_subscribe(self) -> bool {
+        self != PolicyKind::Never
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [
+            PolicyKind::Never,
+            PolicyKind::Always,
+            PolicyKind::AdaptiveHops,
+            PolicyKind::AdaptiveLatency,
+            PolicyKind::Adaptive,
+        ] {
+            assert_eq!(PolicyKind::parse(k.as_str()), Some(k));
+        }
+    }
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(PolicyKind::parse("baseline"), Some(PolicyKind::Never));
+        assert_eq!(PolicyKind::parse("always-subscribe"), Some(PolicyKind::Always));
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+}

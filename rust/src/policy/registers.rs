@@ -1,0 +1,95 @@
+//! The hardware registers of Fig 7: per-vault feedback registers (hops
+//! cost/benefit) and latency/request accumulators, plus the central vault's
+//! previous-epoch latency register.
+
+/// Hops-based feedback register (§III-D2). Saturating signed counter:
+/// positive = subscriptions shortened paths this epoch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FeedbackRegister {
+    value: i64,
+}
+
+impl FeedbackRegister {
+    /// A subscribed request travelled fewer hops than its unsubscribed
+    /// estimate.
+    pub fn benefit(&mut self) {
+        self.value = self.value.saturating_add(1);
+    }
+
+    /// A subscribed request travelled more hops (charged to the requester
+    /// *and* to the subscribed vault — the "subscription away" fix,
+    /// §III-D4).
+    pub fn cost(&mut self) {
+        self.value = self.value.saturating_sub(1);
+    }
+
+    pub fn value(&self) -> i64 {
+        self.value
+    }
+
+    pub fn is_positive(&self) -> bool {
+        self.value >= 0
+    }
+
+    pub fn clear(&mut self) {
+        self.value = 0;
+    }
+}
+
+/// Latency + request-count accumulators for one vault or one leading-set
+/// group (§III-D3).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyRegisters {
+    pub latency_sum: u64,
+    pub requests: u64,
+}
+
+impl LatencyRegisters {
+    pub fn record(&mut self, latency: u64) {
+        self.latency_sum += latency;
+        self.requests += 1;
+    }
+
+    /// Average latency per request this epoch; `None` with no requests.
+    pub fn avg(&self) -> Option<f64> {
+        if self.requests == 0 {
+            None
+        } else {
+            Some(self.latency_sum as f64 / self.requests as f64)
+        }
+    }
+
+    pub fn clear(&mut self) {
+        *self = LatencyRegisters::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feedback_counts_signed() {
+        let mut f = FeedbackRegister::default();
+        f.benefit();
+        f.benefit();
+        f.cost();
+        assert_eq!(f.value(), 1);
+        assert!(f.is_positive());
+        f.cost();
+        f.cost();
+        assert_eq!(f.value(), -1);
+        assert!(!f.is_positive());
+    }
+
+    #[test]
+    fn latency_avg() {
+        let mut r = LatencyRegisters::default();
+        assert!(r.avg().is_none());
+        r.record(10);
+        r.record(30);
+        assert_eq!(r.avg(), Some(20.0));
+        r.clear();
+        assert!(r.avg().is_none());
+    }
+}

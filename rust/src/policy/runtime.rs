@@ -1,0 +1,494 @@
+//! Epoch-granular adaptive policy engine (§III-D).
+//!
+//! Execution is divided into epochs (10^6 cycles in the paper; scaled by
+//! config). During an epoch every vault accumulates its registers; at the
+//! epoch boundary a decision is made for the next epoch:
+//!
+//! * **hops-based** — each vault keeps subscription on iff its feedback
+//!   register (benefit minus cost in hop counts) is non-negative;
+//! * **latency-based** — the central vault compares the epoch's global
+//!   average latency to the previous epoch's (2% threshold) and reverses
+//!   the policy when latency regressed; the broadcast takes ~1000 cycles
+//!   to reach all vaults;
+//! * **leading-set sampling** — two sampled set groups run always-on and
+//!   always-off permanently; followers adopt whichever leader saw lower
+//!   average latency (§III-D5), solving the always-unsubscription problem.
+
+use super::registers::{FeedbackRegister, LatencyRegisters};
+use super::PolicyKind;
+use crate::config::SimConfig;
+use crate::{Cycle, VaultId};
+
+/// Leading-set classification of a subscription-table set (§III-D5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SetGroup {
+    /// Subscription always enabled for these sets.
+    LeadAlways,
+    /// Subscription always disabled for these sets.
+    LeadNever,
+    /// Follows the epoch decision.
+    Follower,
+}
+
+/// One epoch-boundary decision (logged for tests, figures and the CLI).
+#[derive(Clone, Copy, Debug)]
+pub struct EpochDecision {
+    pub epoch: u64,
+    pub at: Cycle,
+    /// Global (or follower-group) subscription setting for the next epoch.
+    pub enabled: bool,
+    /// Number of vaults individually enabled (hops-based policy).
+    pub vaults_enabled: u32,
+    /// Global average latency observed in the closing epoch.
+    pub avg_latency: Option<f64>,
+}
+
+/// Runtime state of the active policy.
+pub struct PolicyRuntime {
+    kind: PolicyKind,
+    n_vaults: usize,
+
+    feedback: Vec<FeedbackRegister>,
+    vault_latency: Vec<LatencyRegisters>,
+    vault_enabled: Vec<bool>,
+
+    global_enabled: bool,
+    prev_global_enabled: bool,
+    global_effective_at: Cycle,
+    prev_avg_latency: Option<f64>,
+
+    lead_always: LatencyRegisters,
+    lead_never: LatencyRegisters,
+    lead_stride: u32,
+
+    /// Most recent global average latency observed in an epoch that ran
+    /// with subscription ON / OFF (the central vault's memory across
+    /// epochs). Leading sets alone cannot see *global* damage — e.g. a
+    /// zero-reuse workload whose subscription traffic slows every set
+    /// equally — so the follower decision also compares these.
+    last_on_avg: Option<f64>,
+    last_off_avg: Option<f64>,
+    /// Epochs since the losing setting was last tried; forces periodic
+    /// re-exploration so phase changes are noticed (§III-D5's concern).
+    epochs_since_flip: u32,
+    /// The epoch now ending began right after a policy flip: its latency
+    /// sample is a transient (e.g. the unsubscription drain after turning
+    /// off) and must not be recorded as that setting's steady state.
+    transient: bool,
+
+    epoch_cycles: Cycle,
+    next_epoch_end: Cycle,
+    epoch_index: u64,
+    threshold_pct: f64,
+    broadcast_lat: Cycle,
+
+    /// Decision log (one per completed epoch).
+    pub decisions: Vec<EpochDecision>,
+}
+
+impl PolicyRuntime {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let n = cfg.n_vaults as usize;
+        let lead_stride = if cfg.kind_uses_sampling() && cfg.leading_sets > 0 {
+            (cfg.sub_table_sets / cfg.leading_sets).max(2)
+        } else {
+            0
+        };
+        PolicyRuntime {
+            kind: cfg.policy,
+            n_vaults: n,
+            feedback: vec![FeedbackRegister::default(); n],
+            vault_latency: vec![LatencyRegisters::default(); n],
+            // "In the first epoch, we turn on subscription across all
+            // vaults" (§III-D2).
+            vault_enabled: vec![true; n],
+            global_enabled: true,
+            prev_global_enabled: true,
+            global_effective_at: 0,
+            prev_avg_latency: None,
+            lead_always: LatencyRegisters::default(),
+            lead_never: LatencyRegisters::default(),
+            lead_stride,
+            last_on_avg: None,
+            last_off_avg: None,
+            epochs_since_flip: 0,
+            transient: false,
+            epoch_cycles: cfg.epoch_cycles,
+            next_epoch_end: cfg.epoch_cycles,
+            epoch_index: 0,
+            threshold_pct: cfg.latency_threshold_pct,
+            broadcast_lat: cfg.global_broadcast_lat as Cycle,
+            decisions: Vec::new(),
+        }
+    }
+
+    pub fn kind(&self) -> PolicyKind {
+        self.kind
+    }
+
+    /// Leading-set classification for a table set index.
+    #[inline]
+    pub fn group(&self, set: u32) -> SetGroup {
+        if self.lead_stride == 0 {
+            return SetGroup::Follower;
+        }
+        match set % self.lead_stride {
+            0 => SetGroup::LeadAlways,
+            1 => SetGroup::LeadNever,
+            _ => SetGroup::Follower,
+        }
+    }
+
+    #[inline]
+    fn global_at(&self, now: Cycle) -> bool {
+        if now >= self.global_effective_at {
+            self.global_enabled
+        } else {
+            self.prev_global_enabled
+        }
+    }
+
+    /// Should vault `v` subscribe a block living in table set `set` at
+    /// `now`?
+    #[inline]
+    pub fn enabled(&self, v: VaultId, set: u32, now: Cycle) -> bool {
+        match self.kind {
+            PolicyKind::Never => false,
+            PolicyKind::Always => true,
+            PolicyKind::AdaptiveHops => self.vault_enabled[v as usize],
+            PolicyKind::AdaptiveLatency => self.global_at(now),
+            PolicyKind::Adaptive => match self.group(set) {
+                SetGroup::LeadAlways => true,
+                SetGroup::LeadNever => false,
+                SetGroup::Follower => self.global_at(now),
+            },
+        }
+    }
+
+    /// Feed one completed demand request into the epoch registers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_request(
+        &mut self,
+        requester: VaultId,
+        served_by: VaultId,
+        subscribed_path: bool,
+        actual_hops: u32,
+        baseline_hops: u32,
+        latency: u64,
+        set: u32,
+        _now: Cycle,
+    ) {
+        self.vault_latency[requester as usize].record(latency);
+        if self.kind == PolicyKind::Adaptive {
+            match self.group(set) {
+                SetGroup::LeadAlways => self.lead_always.record(latency),
+                SetGroup::LeadNever => self.lead_never.record(latency),
+                SetGroup::Follower => {}
+            }
+        }
+        if subscribed_path {
+            // Hops estimate without subscription: request + data straight
+            // between requester and home, i.e. 2 x baseline one-way hops.
+            let est = 2 * baseline_hops;
+            if est > actual_hops {
+                self.feedback[requester as usize].benefit();
+            } else if actual_hops > est {
+                self.feedback[requester as usize].cost();
+                if served_by != requester {
+                    // Subscription-away fix (§III-D4): the vault holding the
+                    // block also pays.
+                    self.feedback[served_by as usize].cost();
+                }
+            }
+        }
+    }
+
+    /// Advance the epoch clock to `now`; returns decisions for every epoch
+    /// boundary crossed (normally 0 or 1).
+    pub fn tick(&mut self, now: Cycle) -> Vec<EpochDecision> {
+        let mut out = Vec::new();
+        while now >= self.next_epoch_end {
+            let at = self.next_epoch_end;
+            out.push(self.decide(at));
+            self.next_epoch_end += self.epoch_cycles;
+        }
+        out
+    }
+
+    fn global_avg(&self) -> Option<f64> {
+        let (sum, count) = self
+            .vault_latency
+            .iter()
+            .fold((0u64, 0u64), |(s, c), r| (s + r.latency_sum, c + r.requests));
+        if count == 0 {
+            None
+        } else {
+            Some(sum as f64 / count as f64)
+        }
+    }
+
+    fn decide(&mut self, at: Cycle) -> EpochDecision {
+        self.epoch_index += 1;
+        let avg = self.global_avg();
+
+        match self.kind {
+            PolicyKind::Never | PolicyKind::Always => {}
+            PolicyKind::AdaptiveHops => {
+                for v in 0..self.n_vaults {
+                    self.vault_enabled[v] = self.feedback[v].is_positive();
+                }
+            }
+            PolicyKind::AdaptiveLatency => {
+                let next = match (self.prev_avg_latency, avg) {
+                    (Some(prev), Some(cur)) => {
+                        // Reverse the decision when latency regressed by
+                        // more than the threshold (§III-D3).
+                        if cur > prev * (1.0 + self.threshold_pct / 100.0) {
+                            !self.global_enabled
+                        } else {
+                            self.global_enabled
+                        }
+                    }
+                    // Initial epochs: fall back to the hops feedback sign.
+                    _ => {
+                        let total: i64 =
+                            self.feedback.iter().map(|f| f.value()).sum();
+                        total >= 0
+                    }
+                };
+                self.apply_global(next, at);
+                if avg.is_some() {
+                    self.prev_avg_latency = avg;
+                }
+            }
+            PolicyKind::Adaptive => {
+                let thr = self.threshold_pct / 100.0;
+                let setting = self.global_at(at);
+                // Remember the epoch's global latency under its setting —
+                // steady-state epochs only (the first epoch after a flip is
+                // a transient: e.g. the unsubscription drain right after
+                // turning off).
+                if let (Some(cur), false) = (avg, self.transient) {
+                    if setting {
+                        self.last_on_avg = Some(cur);
+                    } else {
+                        self.last_off_avg = Some(cur);
+                    }
+                }
+                // Global on-vs-off comparison (central vault memory across
+                // epochs), exploring the untried setting first.
+                let mut next = match (self.last_on_avg, self.last_off_avg) {
+                    (Some(on), Some(off)) => on <= off * (1.0 + thr),
+                    (Some(_), None) => false, // try off once
+                    (None, Some(_)) => true,  // try on once
+                    (None, None) => self.global_enabled,
+                };
+                // Strong per-set evidence from the leading sets overrides:
+                // they see the *locality* benefit directly (§III-D5).
+                if let (Some(a), Some(n)) = (self.lead_always.avg(), self.lead_never.avg())
+                {
+                    if a < n * (1.0 - thr) {
+                        next = true;
+                    } else if n < a * (1.0 - thr) {
+                        next = false;
+                    }
+                }
+                // Periodic re-exploration of the losing setting so phase
+                // changes are detected.
+                self.epochs_since_flip += 1;
+                if next == self.global_enabled && self.epochs_since_flip >= 24 {
+                    next = !next;
+                    // Forget the stale sample so the refreshed measurement
+                    // (after its transient) decides.
+                    if next {
+                        self.last_on_avg = None;
+                    } else {
+                        self.last_off_avg = None;
+                    }
+                }
+                if next != self.global_enabled {
+                    self.epochs_since_flip = 0;
+                }
+                self.transient = next != setting;
+                self.apply_global(next, at);
+            }
+        }
+
+        let decision = EpochDecision {
+            epoch: self.epoch_index,
+            at,
+            enabled: self.global_enabled,
+            vaults_enabled: self.vault_enabled.iter().filter(|&&e| e).count() as u32,
+            avg_latency: avg,
+        };
+        self.decisions.push(decision);
+
+        // Epoch registers restart (§III-D1).
+        for f in &mut self.feedback {
+            f.clear();
+        }
+        for r in &mut self.vault_latency {
+            r.clear();
+        }
+        self.lead_always.clear();
+        self.lead_never.clear();
+        decision
+    }
+
+    fn apply_global(&mut self, next: bool, at: Cycle) {
+        self.prev_global_enabled = self.global_at(at);
+        self.global_enabled = next;
+        // Central-vault computation + broadcast (§III-D4).
+        self.global_effective_at = at + self.broadcast_lat;
+    }
+
+    /// Number of epochs completed so far.
+    pub fn epochs(&self) -> u64 {
+        self.epoch_index
+    }
+}
+
+impl SimConfig {
+    /// Internal helper: does the configured policy use leading sets?
+    pub(crate) fn kind_uses_sampling(&self) -> bool {
+        self.policy == PolicyKind::Adaptive
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(kind: PolicyKind) -> SimConfig {
+        let mut c = SimConfig::hmc();
+        c.policy = kind;
+        c.epoch_cycles = 1000;
+        c
+    }
+
+    #[test]
+    fn never_and_always_are_constant() {
+        let never = PolicyRuntime::new(&cfg(PolicyKind::Never));
+        let always = PolicyRuntime::new(&cfg(PolicyKind::Always));
+        for set in [0u32, 1, 7, 2047] {
+            assert!(!never.enabled(0, set, 0));
+            assert!(always.enabled(0, set, 0));
+        }
+    }
+
+    #[test]
+    fn hops_policy_disables_negative_vault() {
+        let mut p = PolicyRuntime::new(&cfg(PolicyKind::AdaptiveHops));
+        assert!(p.enabled(3, 0, 0), "first epoch all-on");
+        // Vault 3 sees pure cost this epoch.
+        for _ in 0..10 {
+            p.on_request(3, 5, true, 10, 2, 100, 0, 0);
+        }
+        p.tick(1000);
+        assert!(!p.enabled(3, 0, 1001));
+        assert!(p.enabled(2, 0, 1001), "other vaults unaffected");
+    }
+
+    #[test]
+    fn subscription_away_charges_holder_vault() {
+        let mut p = PolicyRuntime::new(&cfg(PolicyKind::AdaptiveHops));
+        // Requester 1 pays extra hops; holder 9 must also be charged.
+        for _ in 0..5 {
+            p.on_request(1, 9, true, 12, 2, 100, 0, 0);
+        }
+        p.tick(1000);
+        assert!(!p.enabled(1, 0, 1001));
+        assert!(!p.enabled(9, 0, 1001));
+    }
+
+    #[test]
+    fn latency_policy_reverses_on_regression() {
+        let mut p = PolicyRuntime::new(&cfg(PolicyKind::AdaptiveLatency));
+        // Epoch 1: avg 100 (first epoch decided by feedback sign = on).
+        for _ in 0..10 {
+            p.on_request(0, 0, false, 0, 0, 100, 0, 0);
+        }
+        p.tick(1000);
+        assert!(p.enabled(0, 0, 3000));
+        // Epoch 2: avg 100 -> within threshold, keep.
+        for _ in 0..10 {
+            p.on_request(0, 0, false, 0, 0, 100, 0, 1500);
+        }
+        p.tick(2000);
+        assert!(p.enabled(0, 0, 4000));
+        // Epoch 3: avg 200 -> regression beyond 2%, reverse to off.
+        for _ in 0..10 {
+            p.on_request(0, 0, false, 0, 0, 200, 0, 2500);
+        }
+        p.tick(3000);
+        assert!(!p.enabled(0, 0, 5000));
+    }
+
+    #[test]
+    fn broadcast_latency_delays_effect() {
+        let mut p = PolicyRuntime::new(&cfg(PolicyKind::AdaptiveLatency));
+        for _ in 0..10 {
+            p.on_request(0, 0, false, 0, 0, 100, 0, 0);
+        }
+        p.tick(1000);
+        for _ in 0..10 {
+            p.on_request(0, 0, false, 0, 0, 500, 0, 1500);
+        }
+        p.tick(2000); // decision: off, effective at 3000
+        assert!(p.enabled(0, 0, 2500), "old policy until broadcast lands");
+        assert!(!p.enabled(0, 0, 3000));
+    }
+
+    #[test]
+    fn sampling_leaders_are_fixed() {
+        let p = PolicyRuntime::new(&cfg(PolicyKind::Adaptive));
+        // stride = 2048/32 = 64.
+        assert_eq!(p.group(0), SetGroup::LeadAlways);
+        assert_eq!(p.group(1), SetGroup::LeadNever);
+        assert_eq!(p.group(2), SetGroup::Follower);
+        assert_eq!(p.group(64), SetGroup::LeadAlways);
+        assert_eq!(p.group(65), SetGroup::LeadNever);
+        assert!(p.enabled(0, 0, 0));
+        assert!(!p.enabled(0, 1, 0));
+    }
+
+    #[test]
+    fn sampling_followers_adopt_cheaper_leader() {
+        let mut p = PolicyRuntime::new(&cfg(PolicyKind::Adaptive));
+        // Always-leader sets see low latency, never-leader sets high.
+        for _ in 0..10 {
+            p.on_request(0, 0, false, 0, 0, 50, 0, 0); // set 0: LeadAlways
+            p.on_request(0, 0, false, 0, 0, 500, 1, 0); // set 1: LeadNever
+        }
+        p.tick(1000);
+        assert!(p.enabled(0, 2, 3000), "followers go always");
+        // Next epoch the tables turn.
+        for _ in 0..10 {
+            p.on_request(0, 0, false, 0, 0, 900, 0, 1500);
+            p.on_request(0, 0, false, 0, 0, 90, 1, 1500);
+        }
+        p.tick(2000);
+        assert!(!p.enabled(0, 2, 4000), "followers go never");
+        // Leaders never move.
+        assert!(p.enabled(0, 0, 4000));
+        assert!(!p.enabled(0, 1, 4000));
+    }
+
+    #[test]
+    fn tick_crosses_multiple_epochs() {
+        let mut p = PolicyRuntime::new(&cfg(PolicyKind::Adaptive));
+        let ds = p.tick(3500);
+        assert_eq!(ds.len(), 3);
+        assert_eq!(p.epochs(), 3);
+    }
+
+    #[test]
+    fn decisions_are_logged() {
+        let mut p = PolicyRuntime::new(&cfg(PolicyKind::AdaptiveHops));
+        p.tick(1000);
+        p.tick(2000);
+        assert_eq!(p.decisions.len(), 2);
+        assert_eq!(p.decisions[0].epoch, 1);
+        assert_eq!(p.decisions[1].at, 2000);
+    }
+}

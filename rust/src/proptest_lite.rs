@@ -1,0 +1,115 @@
+//! Property-testing harness (proptest is unavailable offline).
+//!
+//! A seeded generator + predicate runner: properties are checked over
+//! thousands of pseudo-random scenarios; on failure the harness reports
+//! the failing case number and seed so the exact scenario replays
+//! deterministically (`Runner::new(seed).case(n)`).
+
+use crate::rng::Rng;
+
+/// Configuration of one property run.
+pub struct Runner {
+    seed: u64,
+    cases: usize,
+}
+
+impl Runner {
+    pub fn new(seed: u64) -> Self {
+        Runner { seed, cases: 256 }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// The RNG for case `i` (replays a failure in isolation).
+    pub fn case(&self, i: usize) -> Rng {
+        Rng::new(self.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Check `prop` over all cases; panics with the case index and seed on
+    /// the first failure.
+    pub fn run<F>(&self, name: &str, mut prop: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        for i in 0..self.cases {
+            let mut rng = self.case(i);
+            if let Err(msg) = prop(&mut rng) {
+                panic!(
+                    "property {name:?} failed at case {i} (seed {:#x}): {msg}",
+                    self.seed
+                );
+            }
+        }
+    }
+}
+
+/// Generator helpers over [`Rng`].
+pub mod gen {
+    use crate::rng::Rng;
+
+    pub fn usize_in(r: &mut Rng, lo: usize, hi: usize) -> usize {
+        r.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn u64_in(r: &mut Rng, lo: u64, hi: u64) -> u64 {
+        r.range(lo, hi)
+    }
+
+    pub fn pick<'a, T>(r: &mut Rng, xs: &'a [T]) -> &'a T {
+        &xs[r.below(xs.len() as u64) as usize]
+    }
+
+    pub fn bool_p(r: &mut Rng, p: f64) -> bool {
+        r.chance(p)
+    }
+
+    /// A vector of `n` draws.
+    pub fn vec_of<T>(r: &mut Rng, n: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        (0..n).map(|_| f(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Runner::new(1).cases(100).run("x<=x", |r| {
+            let x = r.next_u64();
+            if x <= x {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn reports_failing_case() {
+        Runner::new(2).cases(50).run("always-false", |_r| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let r = Runner::new(3);
+        let a = r.case(7).next_u64();
+        let b = r.case(7).next_u64();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gen_helpers_in_range() {
+        let mut rng = Runner::new(4).case(0);
+        for _ in 0..100 {
+            let v = gen::usize_in(&mut rng, 3, 9);
+            assert!((3..9).contains(&v));
+        }
+        let xs = [1, 2, 3];
+        assert!(xs.contains(gen::pick(&mut rng, &xs)));
+    }
+}

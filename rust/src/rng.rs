@@ -1,0 +1,134 @@
+//! Deterministic PRNG shared by the workload generators and the
+//! property-test harness (the `rand` crate is unavailable offline).
+//!
+//! SplitMix64: tiny, fast, well-distributed, and — critically for the
+//! paper's 5-run methodology — fully reproducible from a seed.
+
+/// SplitMix64 PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be non-zero.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Multiply-shift range reduction (Lemire); bias negligible for
+        // simulation purposes.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform float in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Power-law-ish (Zipf by repeated range quartering): returns a value
+    /// in `[0, n)` where small indices are exponentially more likely. Used
+    /// by the graph workloads to model hub vertices.
+    pub fn zipfish(&mut self, n: u64) -> u64 {
+        let mut hi = n;
+        while hi > 1 && self.chance(0.75) {
+            hi = (hi + 3) / 4;
+        }
+        self.below(hi.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn below_covers_support() {
+        let mut r = Rng::new(4);
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            seen[r.below(8) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(5);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zipfish_skews_low() {
+        let mut r = Rng::new(6);
+        let mut low = 0;
+        let n = 1024;
+        let trials = 10_000;
+        for _ in 0..trials {
+            if r.zipfish(n) < n / 8 {
+                low += 1;
+            }
+        }
+        // Uniform would put 12.5% below n/8; zipfish must far exceed that.
+        assert!(low as f64 / trials as f64 > 0.4, "low share {low}/{trials}");
+    }
+
+    #[test]
+    fn mean_is_centered() {
+        let mut r = Rng::new(8);
+        let mean: f64 = (0..100_000).map(|_| r.f64()).sum::<f64>() / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01);
+    }
+}

@@ -1,0 +1,71 @@
+//! Artifact store: discovers, compiles, and caches the AOT HLO artifacts.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::client::{Executable, PjrtRuntime};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_DIR: &str = "artifacts";
+
+/// Compile-once cache of every `*.hlo.txt` under the artifact directory.
+pub struct ArtifactStore {
+    runtime: PjrtRuntime,
+    dir: PathBuf,
+    cache: HashMap<String, Executable>,
+}
+
+impl ArtifactStore {
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        if !dir.is_dir() {
+            bail!(
+                "artifact directory {} missing — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        Ok(ArtifactStore { runtime: PjrtRuntime::cpu()?, dir, cache: HashMap::new() })
+    }
+
+    /// Locate the artifact dir from the current working directory or the
+    /// repo root (so examples work from either).
+    pub fn discover() -> Result<Self> {
+        for base in [".", "..", "../.."] {
+            let p = Path::new(base).join(DEFAULT_DIR);
+            if p.is_dir() {
+                return Self::open(p);
+            }
+        }
+        bail!("no artifacts/ directory found — run `make artifacts`")
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Names of available artifacts (without `.hlo.txt`).
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(&self.dir).context("read artifacts dir")? {
+            let path = entry?.path();
+            if let Some(name) = path.file_name().and_then(|n| n.to_str()) {
+                if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    pub fn get(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let exe = self.runtime.load_hlo_text(&path)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+}

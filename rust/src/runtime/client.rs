@@ -1,0 +1,77 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO text,
+//! compile once, execute many times.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled executable plus its human name.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with `f32` input buffers of the given shapes; returns the
+    /// flattened `f32` outputs (the AOT pipeline lowers with
+    /// `return_tuple=True`, so outputs arrive as one tuple).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            literals.push(lit.reshape(&dims_i64).context("reshape input")?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("execute")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let tuple = result.to_tuple().context("untuple result")?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>().context("read output")?);
+        }
+        Ok(out)
+    }
+}
+
+/// The process-wide PJRT CPU runtime.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client (the only backend in this environment; real
+    /// deployments swap in the TPU plugin here).
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtRuntime { client: xla::PjRtClient::cpu().context("create PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        let name = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default()
+            .trim_end_matches(".hlo.txt")
+            .to_string();
+        Ok(Executable { name, exe })
+    }
+}
+
+// No unit tests here: exercising PJRT requires the artifacts, which are
+// produced by `make artifacts`; see rust/tests/runtime_integration.rs.

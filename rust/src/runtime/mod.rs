@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//!
+//! Python is build-time only: `make artifacts` lowers the JAX/Pallas
+//! compute graphs to HLO *text* (the interchange format that round-trips
+//! through xla_extension 0.5.1 — serialized protos from jax ≥ 0.5 carry
+//! 64-bit instruction ids it rejects), and this module compiles them once
+//! on the PJRT CPU client and executes them with concrete buffers.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::ArtifactStore;
+pub use client::{Executable, PjrtRuntime};

@@ -1,0 +1,134 @@
+//! Physical address map: block granularity and vault interleaving.
+//!
+//! DAMOV's HMC default interleaving distributes consecutive memory blocks
+//! round-robin across vaults (Table I), which is what spreads a streaming
+//! access pattern evenly over the mesh — and what concentrates a hot
+//! shared structure onto a few *home* vaults, producing the per-vault
+//! demand imbalance (CoV) the paper measures in Figs 3/4.
+
+use crate::config::SimConfig;
+use crate::{Addr, VaultId};
+
+/// Address decomposition helper, cheap to copy around.
+#[derive(Clone, Copy, Debug)]
+pub struct AddressMap {
+    block_shift: u32,
+    n_vaults: u64,
+    /// Set mask of the per-vault subscription table (sets are a power of 2).
+    set_mask: u64,
+}
+
+impl AddressMap {
+    pub fn new(cfg: &SimConfig) -> Self {
+        debug_assert!(cfg.block_bytes.is_power_of_two());
+        debug_assert!(cfg.sub_table_sets.is_power_of_two());
+        AddressMap {
+            block_shift: cfg.block_bytes.trailing_zeros(),
+            n_vaults: cfg.n_vaults as u64,
+            set_mask: (cfg.sub_table_sets - 1) as u64,
+        }
+    }
+
+    /// Global block index of a byte address.
+    #[inline]
+    pub fn block_of(&self, addr: Addr) -> u64 {
+        addr >> self.block_shift
+    }
+
+    /// Home vault of a block (round-robin interleave).
+    #[inline]
+    pub fn home_of_block(&self, block: u64) -> VaultId {
+        (block % self.n_vaults) as VaultId
+    }
+
+    /// Home vault of a byte address.
+    #[inline]
+    pub fn home_of(&self, addr: Addr) -> VaultId {
+        self.home_of_block(self.block_of(addr))
+    }
+
+    /// Subscription-table set index for a block: XOR-folded hash.
+    ///
+    /// Neither plain `block % sets` nor `block / n_vaults % sets` works:
+    /// the former leaves a home vault's own blocks (which share their low
+    /// interleave bits) crowded into 1/n_vaults of the sets; the latter
+    /// collapses *contiguous* runs — a holder parking a 1024-block private
+    /// tile would get only `tile/n_vaults` distinct sets. Folding the high
+    /// bits over the low bits spreads both patterns (the same trick real
+    /// cache indexing uses against power-of-two strides).
+    #[inline]
+    pub fn set_of_block(&self, block: u64) -> u32 {
+        ((block ^ (block >> 11) ^ (block >> 22)) & self.set_mask) as u32
+    }
+
+    #[inline]
+    pub fn n_vaults(&self) -> u16 {
+        self.n_vaults as u16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map() -> AddressMap {
+        AddressMap::new(&SimConfig::hmc())
+    }
+
+    #[test]
+    fn consecutive_blocks_interleave_round_robin() {
+        let m = map();
+        for b in 0..64u64 {
+            assert_eq!(m.home_of_block(b), (b % 32) as u16);
+        }
+    }
+
+    #[test]
+    fn addresses_within_a_block_share_a_home() {
+        let m = map();
+        let base = 4096u64;
+        let home = m.home_of(base);
+        for off in 0..64 {
+            assert_eq!(m.home_of(base + off), home);
+        }
+    }
+
+    #[test]
+    fn set_index_spreads_same_home_blocks() {
+        let m = map();
+        // Blocks homed at vault 3: 3, 35, 67, ... must spread over many
+        // distinct sets, not crowd into 1/n_vaults of them.
+        let sets: std::collections::HashSet<u32> =
+            (0..256).map(|i| m.set_of_block(3 + 32 * i)).collect();
+        assert!(sets.len() > 200, "only {} distinct sets", sets.len());
+    }
+
+    #[test]
+    fn set_index_spreads_contiguous_runs() {
+        let m = map();
+        // A contiguous 1024-block tile (a holder's private working set)
+        // must hash across ~1024 sets so a 4-way table can park it.
+        let sets: std::collections::HashSet<u32> =
+            (0..1024).map(|b| m.set_of_block(900_000 + b)).collect();
+        assert!(sets.len() > 900, "only {} distinct sets", sets.len());
+    }
+
+    #[test]
+    fn set_index_is_in_range() {
+        let m = map();
+        let mask = SimConfig::hmc().sub_table_sets - 1;
+        for b in (0..100_000u64).step_by(97) {
+            assert!(m.set_of_block(b) <= mask);
+        }
+    }
+
+    #[test]
+    fn streaming_sweep_covers_all_vaults_evenly() {
+        let m = map();
+        let mut counts = [0u32; 32];
+        for addr in (0..32 * 64 * 100).step_by(64) {
+            counts[m.home_of(addr) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100));
+    }
+}

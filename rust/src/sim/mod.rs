@@ -1,0 +1,36 @@
+//! The memory-system substrate: FLIT packets, the vault mesh, DRAM bank
+//! timing, and the physical address map.
+//!
+//! ## Simulation model
+//!
+//! This is a *resource-reservation* discrete-event model (in the LogGOPSim
+//! family): every contended resource — a directed mesh link, a vault
+//! controller port, a DRAM bank — carries a `next_free` cycle counter.
+//! A memory request is simulated as a chain of resource acquisitions; each
+//! acquisition starts at `max(now, resource.next_free)` and bumps the
+//! counter by the resource's occupancy (FLIT serialization for links,
+//! one cycle for the single-ported vault controller, the array access time
+//! for banks). The driver processes core events in global time order, so
+//! reservations are causally consistent.
+//!
+//! The model reproduces exactly the three latency components the paper
+//! decomposes (Fig 1 / Fig 2):
+//! * **data-transfer (network) latency** — FLIT serialization x hops,
+//! * **queuing delay** — waits on busy links / controllers / banks,
+//! * **array access latency** — row-hit or row-miss bank time.
+//!
+//! Finite router input buffers (16 entries, §II-C) appear as the growing
+//! `next_free` horizon of a congested link: senders queue behind it, which
+//! is the same first-order effect as credit-based backpressure. The paper's
+//! per-hop cost model — a k-FLIT packet costs k cycles per hop, so a read
+//! costs `(k+1)·h_ro` uncontended (§III-C) — is matched exactly.
+
+pub mod dram;
+pub mod memmap;
+pub mod network;
+pub mod packet;
+
+pub use dram::VaultMem;
+pub use memmap::AddressMap;
+pub use network::{Mesh, Transfer};
+pub use packet::PacketKind;

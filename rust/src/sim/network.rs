@@ -1,0 +1,366 @@
+//! The inter-vault mesh: XY (dimension-ordered) routing over directed
+//! links with FLIT serialization and contention.
+//!
+//! Fig 8 of the paper fixes the two topologies: a 6x6 mesh hosting HMC's 32
+//! vaults (the four corner routers are host-interface nodes, matching the
+//! figure's 32-on-36 layout) and a 4x2 mesh hosting HBM's 8 channels.
+//!
+//! Cost model (§III-C): a k-FLIT packet occupies each link on its path for
+//! k cycles, so an uncontended transfer from `a` to `b` costs
+//! `k * manhattan(a, b)` cycles — the paper's `(k+1)h_ro` read round trip
+//! falls out as `1*h` for the request plus `k*h` for the response.
+//! Contention appears as waits on the per-link `next_free` horizon and is
+//! reported separately so the latency breakdown of Fig 1/2 can attribute it
+//! to queuing rather than transfer.
+
+use crate::config::SimConfig;
+use crate::{Cycle, VaultId};
+
+/// Result of pushing one packet through the mesh.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Transfer {
+    /// Cycle at which the last FLIT arrives at the destination router.
+    pub arrive: Cycle,
+    /// Pure serialization cycles (flits x hops) — "data transfer latency".
+    pub network: u64,
+    /// Cycles spent waiting for busy links — part of "queuing delay".
+    pub queued: u64,
+    /// Hops traversed (Manhattan distance between the endpoints).
+    pub hops: u32,
+}
+
+const DIR_E: usize = 0;
+const DIR_W: usize = 1;
+const DIR_N: usize = 2;
+const DIR_S: usize = 3;
+
+/// Busy-interval calendar for one directed link.
+///
+/// Reservations are made at arbitrary (often future) cycles — a response
+/// leg books its links at the cycle the bank access completes. A single
+/// `next_free` horizon would let one far-future reservation block every
+/// earlier packet from an *idle* link, so each link keeps its pending busy
+/// intervals and packets backfill the gaps, exactly like FLIT slots in
+/// real wormhole arbitration. Intervals are pruned once they fall behind
+/// the reservation front.
+#[derive(Clone, Debug, Default)]
+struct LinkCal {
+    /// Sorted, non-overlapping (start, end) busy windows.
+    iv: Vec<(Cycle, Cycle)>,
+}
+
+/// How far behind the newest reservation an interval must fall before it
+/// can be pruned. Out-of-order arrivals come only from the driver heap's
+/// bounded disorder (one op-chain extends at most a few hundred cycles
+/// past "now"), so a small window suffices — and it bounds the calendar
+/// length, keeping `reserve` effectively O(1) (§Perf: a 100k-cycle lag
+/// made this O(n²) and dominated whole-figure runtimes).
+const PRUNE_LAG: Cycle = 2_000;
+
+impl LinkCal {
+    /// Reserve `f` cycles at or after `t`; returns the start cycle.
+    fn reserve(&mut self, t: Cycle, f: Cycle) -> Cycle {
+        // Fast path: reservation at/after the calendar tail (the common
+        // case, since the driver processes events in near-time-order).
+        if let Some(last) = self.iv.last_mut() {
+            if t >= last.1 {
+                let start = t;
+                if start == last.1 {
+                    last.1 += f; // contiguous: extend instead of insert
+                } else {
+                    self.prune(start);
+                    self.iv.push((start, start + f));
+                }
+                return start;
+            }
+        } else {
+            self.iv.push((t, t + f));
+            return t;
+        }
+        // Slow path: first-fit gap search from `t` (backfill).
+        let mut cur = t;
+        let mut pos = self.iv.len();
+        for (i, &(s, e)) in self.iv.iter().enumerate() {
+            if e <= cur {
+                continue;
+            }
+            if s >= cur + f {
+                pos = i;
+                break;
+            }
+            cur = e;
+            pos = i + 1;
+        }
+        // Merge with the predecessor when contiguous; insert otherwise.
+        if pos > 0 && self.iv[pos - 1].1 == cur {
+            self.iv[pos - 1].1 += f;
+        } else {
+            self.iv.insert(pos, (cur, cur + f));
+        }
+        cur
+    }
+
+    /// Drop intervals too old to interact with future reservations.
+    fn prune(&mut self, front: Cycle) {
+        if front > PRUNE_LAG {
+            let min = front - PRUNE_LAG;
+            if self.iv.first().is_some_and(|&(_, e)| e <= min) {
+                self.iv.retain(|&(_, e)| e > min);
+            }
+        }
+    }
+
+    fn clear(&mut self) {
+        self.iv.clear();
+    }
+}
+
+/// The vault mesh. One instance per simulation; `reset` reuses allocations
+/// across runs.
+pub struct Mesh {
+    w: u16,
+    h: u16,
+    /// vault id -> router node index.
+    vault_node: Vec<u16>,
+    /// node index -> (x, y), precomputed (a div/mod per hop is measurable
+    /// on the transfer hot path — §Perf).
+    node_xy: Vec<(u16, u16)>,
+    /// Busy calendar per directed link, indexed `node * 4 + dir`.
+    links: Vec<LinkCal>,
+}
+
+impl Mesh {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let (w, h) = (cfg.net_w, cfg.net_h);
+        let nodes = w as usize * h as usize;
+        let vault_node = place_vaults(w, h, cfg.n_vaults);
+        assert_eq!(vault_node.len(), cfg.n_vaults as usize);
+        let node_xy = (0..nodes as u16).map(|n| (n % w, n / w)).collect();
+        Mesh { w, h, vault_node, node_xy, links: vec![LinkCal::default(); nodes * 4] }
+    }
+
+    /// Clear all link reservations (between runs).
+    pub fn reset(&mut self) {
+        for l in &mut self.links {
+            l.clear();
+        }
+    }
+
+    #[inline]
+    pub fn node_of(&self, v: VaultId) -> u16 {
+        self.vault_node[v as usize]
+    }
+
+    #[inline]
+    fn xy(&self, node: u16) -> (u16, u16) {
+        self.node_xy[node as usize]
+    }
+
+    /// Manhattan distance between two vaults (the paper's `h` terms).
+    #[inline]
+    pub fn hops(&self, a: VaultId, b: VaultId) -> u32 {
+        let (ax, ay) = self.xy(self.node_of(a));
+        let (bx, by) = self.xy(self.node_of(b));
+        (ax.abs_diff(bx) + ay.abs_diff(by)) as u32
+    }
+
+    /// The vault nearest the geometric mesh center — the "central vault" of
+    /// the global adaptive policy (§III-D4).
+    pub fn central_vault(&self) -> VaultId {
+        let cx = (self.w - 1) as f64 / 2.0;
+        let cy = (self.h - 1) as f64 / 2.0;
+        let mut best = 0u16;
+        let mut best_d = f64::MAX;
+        for (v, &node) in self.vault_node.iter().enumerate() {
+            let (x, y) = self.xy(node);
+            let d = (x as f64 - cx).abs() + (y as f64 - cy).abs();
+            if d < best_d {
+                best_d = d;
+                best = v as u16;
+            }
+        }
+        best
+    }
+
+    /// Send a `flits`-sized packet from `from` to `to`, departing no earlier
+    /// than `depart`. Reserves every link on the XY path and returns the
+    /// timing decomposition. A self-transfer is free and instantaneous.
+    pub fn transfer(
+        &mut self,
+        from: VaultId,
+        to: VaultId,
+        flits: u32,
+        depart: Cycle,
+    ) -> Transfer {
+        if from == to {
+            return Transfer { arrive: depart, ..Transfer::default() };
+        }
+        let dst = self.node_of(to);
+        let (dx, dy) = self.xy(dst);
+        let mut cur = self.node_of(from);
+        let mut t = depart;
+        let mut network = 0u64;
+        let mut queued = 0u64;
+        let mut hops = 0u32;
+        let f = flits as u64;
+        while cur != dst {
+            let (cx, cy) = self.xy(cur);
+            let (dir, next) = if cx != dx {
+                if cx < dx {
+                    (DIR_E, cur + 1)
+                } else {
+                    (DIR_W, cur - 1)
+                }
+            } else if cy < dy {
+                (DIR_S, cur + self.w)
+            } else {
+                (DIR_N, cur - self.w)
+            };
+            let link = cur as usize * 4 + dir;
+            let start = self.links[link].reserve(t, f);
+            queued += start - t;
+            t = start + f;
+            network += f;
+            hops += 1;
+            cur = next;
+        }
+        Transfer { arrive: t, network, queued, hops }
+    }
+
+    pub fn n_vaults(&self) -> u16 {
+        self.vault_node.len() as u16
+    }
+
+    pub fn dims(&self) -> (u16, u16) {
+        (self.w, self.h)
+    }
+}
+
+/// Place `n` vaults on a `w x h` grid. When the grid has exactly four spare
+/// nodes (HMC: 36 nodes, 32 vaults) the corners are reserved for the host
+/// links per Fig 8a; otherwise vaults fill the grid row-major.
+fn place_vaults(w: u16, h: u16, n: u16) -> Vec<u16> {
+    let nodes = w * h;
+    assert!(n <= nodes, "mesh too small");
+    let spare = nodes - n;
+    let corners = [0, w - 1, (h - 1) * w, h * w - 1];
+    let skip_corners = spare == 4 && w >= 2 && h >= 2;
+    let mut placed = Vec::with_capacity(n as usize);
+    for node in 0..nodes {
+        if skip_corners && corners.contains(&node) {
+            continue;
+        }
+        if placed.len() < n as usize {
+            placed.push(node);
+        }
+    }
+    placed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hmc_mesh() -> Mesh {
+        Mesh::new(&SimConfig::hmc())
+    }
+
+    #[test]
+    fn hmc_places_32_vaults_skipping_corners() {
+        let m = hmc_mesh();
+        assert_eq!(m.n_vaults(), 32);
+        let nodes: Vec<u16> = (0..32).map(|v| m.node_of(v)).collect();
+        for corner in [0u16, 5, 30, 35] {
+            assert!(!nodes.contains(&corner), "corner {corner} must be host node");
+        }
+    }
+
+    #[test]
+    fn hbm_fills_grid() {
+        let m = Mesh::new(&SimConfig::hbm());
+        assert_eq!(m.n_vaults(), 8);
+        let nodes: Vec<u16> = (0..8).map(|v| m.node_of(v)).collect();
+        assert_eq!(nodes, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn hops_is_manhattan_and_symmetric() {
+        let m = hmc_mesh();
+        for a in 0..32u16 {
+            for b in 0..32u16 {
+                assert_eq!(m.hops(a, b), m.hops(b, a));
+                if a == b {
+                    assert_eq!(m.hops(a, b), 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uncontended_transfer_costs_flits_times_hops() {
+        let mut m = hmc_mesh();
+        let h = m.hops(0, 31);
+        let tr = m.transfer(0, 31, 5, 100);
+        assert_eq!(tr.hops, h);
+        assert_eq!(tr.network, 5 * h as u64);
+        assert_eq!(tr.queued, 0);
+        assert_eq!(tr.arrive, 100 + 5 * h as u64);
+    }
+
+    #[test]
+    fn self_transfer_is_free() {
+        let mut m = hmc_mesh();
+        let tr = m.transfer(7, 7, 5, 42);
+        assert_eq!(tr, Transfer { arrive: 42, network: 0, queued: 0, hops: 0 });
+    }
+
+    #[test]
+    fn contention_queues_second_packet() {
+        let mut m = hmc_mesh();
+        // Two packets over the same first link at the same cycle.
+        let a = m.transfer(0, 1, 5, 0);
+        let b = m.transfer(0, 1, 5, 0);
+        assert_eq!(a.queued, 0);
+        assert_eq!(b.queued, 5);
+        assert_eq!(b.arrive, a.arrive + 5);
+    }
+
+    #[test]
+    fn opposite_directions_do_not_contend() {
+        let mut m = hmc_mesh();
+        let a = m.transfer(0, 1, 5, 0);
+        let b = m.transfer(1, 0, 5, 0);
+        assert_eq!(a.queued, 0);
+        assert_eq!(b.queued, 0);
+    }
+
+    #[test]
+    fn reset_clears_reservations() {
+        let mut m = hmc_mesh();
+        m.transfer(0, 31, 9, 0);
+        m.reset();
+        let tr = m.transfer(0, 31, 9, 0);
+        assert_eq!(tr.queued, 0);
+    }
+
+    #[test]
+    fn central_vault_is_interior_hmc() {
+        let m = hmc_mesh();
+        let c = m.central_vault();
+        // Must be one of the four center nodes of the 6x6 grid.
+        let node = m.node_of(c);
+        let (x, y) = (node % 6, node / 6);
+        assert!((2..=3).contains(&x) && (2..=3).contains(&y), "({x},{y})");
+    }
+
+    #[test]
+    fn read_round_trip_matches_paper_cost_model() {
+        // (k+1) * h_ro: 1-FLIT request one way, k-FLIT response back.
+        let mut m = hmc_mesh();
+        let (r, o) = (0u16, 31u16);
+        let h = m.hops(r, o) as u64;
+        let req = m.transfer(r, o, 1, 0);
+        let resp = m.transfer(o, r, 5, req.arrive);
+        assert_eq!(resp.arrive, (5 + 1) * h);
+    }
+}

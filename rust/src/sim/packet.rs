@@ -1,0 +1,161 @@
+//! Packet taxonomy and FLIT sizing.
+//!
+//! HMC is packet-based: every transfer is a sequence of 128-bit (16 B)
+//! FLITs. A data-bearing packet carries `ceil(block/flit)` payload FLITs
+//! plus one header/tail FLIT; a control packet is a single FLIT. With the
+//! 64 B blocks used throughout the evaluation, data packets are k = 5
+//! FLITs, inside the spec's 2..9 FLIT envelope.
+//!
+//! §III-B defines the subscription request types; we add the two memory
+//! demand types and the epoch-control broadcasts of §III-D.
+
+use crate::config::SimConfig;
+
+/// Every packet kind that crosses the vault mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PacketKind {
+    /// Demand read request (no payload).
+    MemReadReq,
+    /// Demand read response (carries one block).
+    MemReadResp,
+    /// Demand write (carries one block).
+    MemWrite,
+    /// Write forwarded from original to subscribed vault (carries block).
+    MemWriteFwd,
+    /// Request to subscribe a block (control).
+    SubscriptionRequest,
+    /// Negative acknowledgement: subscription cannot complete (control).
+    SubscriptionNack,
+    /// The subscribed block moving to the requester vault (data).
+    SubscriptionDataTransfer,
+    /// Ack that subscription data arrived (control).
+    SubscriptionTransferAck,
+    /// Request to return a block to its original vault (control).
+    UnsubscriptionRequest,
+    /// Block (if dirty) or bare ack (if clean) returning home. Sized by
+    /// [`PacketKind::flits`] according to the dirty flag at send time.
+    UnsubscriptionData { dirty: bool },
+    /// Ack that an unsubscription completed (control).
+    UnsubscriptionTransferAck,
+    /// Epoch broadcast: enable subscriptions (control).
+    TurnOnSubscription,
+    /// Epoch broadcast: disable subscriptions (control).
+    TurnOffSubscription,
+    /// Per-vault statistics report to the central vault (control).
+    StatsReport,
+}
+
+impl PacketKind {
+    /// FLITs this packet occupies on every link it crosses.
+    pub fn flits(self, cfg: &SimConfig) -> u32 {
+        let k = cfg.data_packet_flits();
+        match self {
+            PacketKind::MemReadReq => 1,
+            PacketKind::MemReadResp => k,
+            PacketKind::MemWrite => k,
+            PacketKind::MemWriteFwd => k,
+            PacketKind::SubscriptionRequest => 1,
+            PacketKind::SubscriptionNack => 1,
+            PacketKind::SubscriptionDataTransfer => k,
+            PacketKind::SubscriptionTransferAck => 1,
+            PacketKind::UnsubscriptionRequest => 1,
+            // Dirty-bit optimization (§III-B5): clean blocks return as a
+            // bare 1-FLIT ack because the original vault still has the data.
+            PacketKind::UnsubscriptionData { dirty } => if dirty { k } else { 1 },
+            PacketKind::UnsubscriptionTransferAck => 1,
+            PacketKind::TurnOnSubscription
+            | PacketKind::TurnOffSubscription
+            | PacketKind::StatsReport => 1,
+        }
+    }
+
+    /// True for packets created by the subscription machinery rather than
+    /// by demand accesses — Fig 14 splits traffic along this line.
+    pub fn is_subscription_traffic(self) -> bool {
+        !matches!(
+            self,
+            PacketKind::MemReadReq
+                | PacketKind::MemReadResp
+                | PacketKind::MemWrite
+                | PacketKind::MemWriteFwd
+        )
+    }
+
+    /// True for data-bearing packets (used in tests and traffic accounting).
+    pub fn carries_block(self, cfg: &SimConfig) -> bool {
+        self.flits(cfg) > 1
+    }
+}
+
+/// All kinds, for exhaustive tests/sweeps.
+pub const ALL_KINDS: [PacketKind; 15] = [
+    PacketKind::MemReadReq,
+    PacketKind::MemReadResp,
+    PacketKind::MemWrite,
+    PacketKind::MemWriteFwd,
+    PacketKind::SubscriptionRequest,
+    PacketKind::SubscriptionNack,
+    PacketKind::SubscriptionDataTransfer,
+    PacketKind::SubscriptionTransferAck,
+    PacketKind::UnsubscriptionRequest,
+    PacketKind::UnsubscriptionData { dirty: true },
+    PacketKind::UnsubscriptionData { dirty: false },
+    PacketKind::UnsubscriptionTransferAck,
+    PacketKind::TurnOnSubscription,
+    PacketKind::TurnOffSubscription,
+    PacketKind::StatsReport,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_packets_are_one_flit() {
+        let cfg = SimConfig::hmc();
+        for k in [
+            PacketKind::MemReadReq,
+            PacketKind::SubscriptionRequest,
+            PacketKind::SubscriptionNack,
+            PacketKind::SubscriptionTransferAck,
+            PacketKind::UnsubscriptionRequest,
+            PacketKind::UnsubscriptionTransferAck,
+            PacketKind::TurnOnSubscription,
+            PacketKind::TurnOffSubscription,
+            PacketKind::StatsReport,
+        ] {
+            assert_eq!(k.flits(&cfg), 1, "{k:?}");
+        }
+    }
+
+    #[test]
+    fn data_packets_are_k_flits() {
+        let cfg = SimConfig::hmc();
+        assert_eq!(PacketKind::MemReadResp.flits(&cfg), 5);
+        assert_eq!(PacketKind::SubscriptionDataTransfer.flits(&cfg), 5);
+        assert_eq!(PacketKind::MemWrite.flits(&cfg), 5);
+    }
+
+    #[test]
+    fn dirty_bit_suppresses_unsub_payload() {
+        let cfg = SimConfig::hmc();
+        assert_eq!(PacketKind::UnsubscriptionData { dirty: true }.flits(&cfg), 5);
+        assert_eq!(PacketKind::UnsubscriptionData { dirty: false }.flits(&cfg), 1);
+    }
+
+    #[test]
+    fn traffic_classification_split() {
+        let demand = ALL_KINDS.iter().filter(|k| !k.is_subscription_traffic());
+        assert_eq!(demand.count(), 4);
+    }
+
+    #[test]
+    fn flit_envelope_matches_hmc_spec() {
+        // 16..128 B blocks -> 2..9 FLITs per data packet (§II-C).
+        for (block, expect) in [(16u32, 2u32), (32, 3), (64, 5), (128, 9)] {
+            let mut cfg = SimConfig::hmc();
+            cfg.block_bytes = block;
+            assert_eq!(PacketKind::MemReadResp.flits(&cfg), expect);
+        }
+    }
+}

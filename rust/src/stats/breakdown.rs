@@ -1,0 +1,111 @@
+//! Per-request latency decomposition into the three components of
+//! Figs 1 and 2: data-transfer (network), queuing, and array access.
+
+/// Accumulated latency components over all measured demand requests.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyBreakdown {
+    pub network: u64,
+    pub queue: u64,
+    pub array: u64,
+    pub requests: u64,
+}
+
+impl LatencyBreakdown {
+    pub fn record(&mut self, network: u64, queue: u64, array: u64) {
+        self.network += network;
+        self.queue += queue;
+        self.array += array;
+        self.requests += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.network + self.queue + self.array
+    }
+
+    /// Average end-to-end memory latency per request (cycles).
+    pub fn avg(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.total() as f64 / self.requests as f64
+        }
+    }
+
+    /// Fractions (network, queue, array) of total latency — the stacked
+    /// bars of Fig 1/2. Sums to 1 when any latency was recorded.
+    pub fn fractions(&self) -> (f64, f64, f64) {
+        let t = self.total();
+        if t == 0 {
+            return (0.0, 0.0, 0.0);
+        }
+        let t = t as f64;
+        (
+            self.network as f64 / t,
+            self.queue as f64 / t,
+            self.array as f64 / t,
+        )
+    }
+
+    /// The paper's "remote overhead": share of latency that is *not* array
+    /// access (53% HMC / 43% HBM on average in Figs 1/2).
+    pub fn remote_overhead_fraction(&self) -> f64 {
+        let (n, q, _) = self.fractions();
+        n + q
+    }
+
+    pub fn merge(&mut self, other: &LatencyBreakdown) {
+        self.network += other.network;
+        self.queue += other.queue;
+        self.array += other.array;
+        self.requests += other.requests;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let mut b = LatencyBreakdown::default();
+        b.record(10, 30, 60);
+        let (n, q, a) = b.fractions();
+        assert!((n + q + a - 1.0).abs() < 1e-12);
+        assert!((n - 0.1).abs() < 1e-12);
+        assert!((q - 0.3).abs() < 1e-12);
+        assert!((a - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn avg_counts_requests() {
+        let mut b = LatencyBreakdown::default();
+        b.record(5, 5, 10);
+        b.record(0, 0, 20);
+        assert!((b.avg() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_breakdown_is_zero() {
+        let b = LatencyBreakdown::default();
+        assert_eq!(b.avg(), 0.0);
+        assert_eq!(b.fractions(), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn remote_overhead_excludes_array() {
+        let mut b = LatencyBreakdown::default();
+        b.record(25, 28, 47);
+        assert!((b.remote_overhead_fraction() - 0.53).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_componentwise() {
+        let mut a = LatencyBreakdown::default();
+        a.record(1, 2, 3);
+        let mut b = LatencyBreakdown::default();
+        b.record(10, 20, 30);
+        a.merge(&b);
+        assert_eq!(a.requests, 2);
+        assert_eq!(a.total(), 66);
+    }
+}

@@ -1,0 +1,123 @@
+//! Coefficient of variation of per-vault demand (Figs 3/4/12/13).
+//!
+//! Each demand access is attributed to the vault that *served* it (the
+//! home vault in the baseline; the subscribed vault when a block has
+//! moved). High CoV = a few vaults carry most of the demand = deep queues
+//! at those vaults — the imbalance DL-PIM's subscriptions flatten.
+
+/// Per-vault served-request counters.
+#[derive(Clone, Debug, Default)]
+pub struct VaultDemand {
+    counts: Vec<u64>,
+}
+
+impl VaultDemand {
+    pub fn new(n_vaults: u16) -> Self {
+        VaultDemand { counts: vec![0; n_vaults as usize] }
+    }
+
+    #[inline]
+    pub fn record(&mut self, vault: u16) {
+        self.counts[vault as usize] += 1;
+    }
+
+    pub fn n_vaults(&self) -> u16 {
+        self.counts.len() as u16
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Population coefficient of variation: sigma / mu. Zero when no
+    /// accesses were recorded (or a single vault).
+    pub fn cov(&self) -> f64 {
+        let n = self.counts.len() as f64;
+        if n < 2.0 {
+            return 0.0;
+        }
+        let total: u64 = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let mean = total as f64 / n;
+        let var = self
+            .counts
+            .iter()
+            .map(|&c| {
+                let d = c as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / n;
+        var.sqrt() / mean
+    }
+
+    pub fn merge(&mut self, other: &VaultDemand) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_demand_has_zero_cov() {
+        let mut d = VaultDemand::new(8);
+        for v in 0..8 {
+            for _ in 0..100 {
+                d.record(v);
+            }
+        }
+        assert!(d.cov() < 1e-12);
+    }
+
+    #[test]
+    fn single_hot_vault_has_high_cov() {
+        let mut d = VaultDemand::new(32);
+        for _ in 0..1000 {
+            d.record(0);
+        }
+        // All mass on one of 32 vaults: CoV = sqrt(n-1) ~ 5.57.
+        assert!((d.cov() - (31f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_demand_is_zero() {
+        assert_eq!(VaultDemand::new(32).cov(), 0.0);
+    }
+
+    #[test]
+    fn cov_is_scale_invariant() {
+        let mut a = VaultDemand::new(4);
+        let mut b = VaultDemand::new(4);
+        for (v, n) in [(0u16, 1u32), (1, 2), (2, 3), (3, 4)] {
+            for _ in 0..n {
+                a.record(v);
+            }
+            for _ in 0..n * 10 {
+                b.record(v);
+            }
+        }
+        assert!((a.cov() - b.cov()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = VaultDemand::new(2);
+        a.record(0);
+        let mut b = VaultDemand::new(2);
+        b.record(1);
+        a.merge(&b);
+        assert_eq!(a.counts(), &[1, 1]);
+        assert!(a.cov() < 1e-12);
+    }
+}

@@ -1,0 +1,65 @@
+//! Measurement machinery for everything the paper's figures plot:
+//! latency breakdowns (Figs 1/2/11/15), per-vault demand CoV (Figs 3/4/12/
+//! 13), network traffic (Fig 14), and reuse-per-subscription (Fig 10).
+
+pub mod breakdown;
+pub mod cov;
+pub mod reuse;
+pub mod traffic;
+
+pub use breakdown::LatencyBreakdown;
+pub use cov::VaultDemand;
+pub use reuse::ReuseStats;
+pub use traffic::TrafficStats;
+
+/// All per-run statistics, reset together after warmup.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    pub latency: LatencyBreakdown,
+    pub demand: VaultDemand,
+    pub traffic: TrafficStats,
+    pub reuse: ReuseStats,
+    /// Demand requests completed since last reset.
+    pub requests: u64,
+    /// Queue cycles spent on busy mesh links (subset of latency.queue).
+    pub queue_net: u64,
+    /// Queue cycles spent at vault controllers / banks (subset).
+    pub queue_mem: u64,
+    /// L1 hits (served without entering the memory system).
+    pub l1_hits: u64,
+    /// Requests served entirely within the requester's local vault.
+    pub local_requests: u64,
+    /// Subscriptions successfully initiated / nacked / unsubscribed.
+    pub subscriptions: u64,
+    pub sub_nacks: u64,
+    pub unsubscriptions: u64,
+    pub resubscriptions: u64,
+}
+
+impl SimStats {
+    pub fn new(n_vaults: u16) -> Self {
+        SimStats { demand: VaultDemand::new(n_vaults), ..Default::default() }
+    }
+
+    /// Reset all counters (end of warmup) while keeping vault count.
+    pub fn reset(&mut self) {
+        let n = self.demand.n_vaults();
+        *self = SimStats::new(n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_preserves_vault_count() {
+        let mut s = SimStats::new(32);
+        s.requests = 10;
+        s.demand.record(3);
+        s.reset();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.demand.n_vaults(), 32);
+        assert_eq!(s.demand.total(), 0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Reuse-per-subscription accounting (Fig 10).
+//!
+//! For every subscription, count how many times the moved block is accessed
+//! afterwards: *locally* by the PIM core of the subscribed vault (the
+//! accesses the move made cheap) and *remotely* by other vaults (the
+//! accesses the move made more expensive). A workload with near-zero reuse
+//! gains nothing from always-subscribe — the crossover the paper highlights
+//! between Fig 9 winners and the flat middle of the plot.
+
+/// Aggregate reuse counters over all completed subscriptions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReuseStats {
+    /// Completed subscriptions (denominator of Fig 10).
+    pub subscriptions: u64,
+    /// Post-subscription accesses from the subscribed (local) vault.
+    pub local_hits: u64,
+    /// Post-subscription accesses from any other vault.
+    pub remote_hits: u64,
+}
+
+impl ReuseStats {
+    pub fn on_subscribe(&mut self) {
+        self.subscriptions += 1;
+    }
+
+    pub fn on_local_hit(&mut self) {
+        self.local_hits += 1;
+    }
+
+    pub fn on_remote_hit(&mut self) {
+        self.remote_hits += 1;
+    }
+
+    /// Average local reuses per subscription (dark-blue bars of Fig 10).
+    pub fn avg_local(&self) -> f64 {
+        if self.subscriptions == 0 {
+            0.0
+        } else {
+            self.local_hits as f64 / self.subscriptions as f64
+        }
+    }
+
+    /// Average remote accesses per subscription (light-blue bars).
+    pub fn avg_remote(&self) -> f64 {
+        if self.subscriptions == 0 {
+            0.0
+        } else {
+            self.remote_hits as f64 / self.subscriptions as f64
+        }
+    }
+
+    /// Total average reuse; the paper's "non-negligible reuse" selector for
+    /// the Fig 11 workload subset.
+    pub fn avg_total(&self) -> f64 {
+        self.avg_local() + self.avg_remote()
+    }
+
+    pub fn merge(&mut self, other: &ReuseStats) {
+        self.subscriptions += other.subscriptions;
+        self.local_hits += other.local_hits;
+        self.remote_hits += other.remote_hits;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averages_divide_by_subscriptions() {
+        let mut r = ReuseStats::default();
+        r.on_subscribe();
+        r.on_subscribe();
+        for _ in 0..6 {
+            r.on_local_hit();
+        }
+        r.on_remote_hit();
+        assert!((r.avg_local() - 3.0).abs() < 1e-12);
+        assert!((r.avg_remote() - 0.5).abs() < 1e-12);
+        assert!((r.avg_total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_subscriptions_zero_reuse() {
+        let r = ReuseStats::default();
+        assert_eq!(r.avg_total(), 0.0);
+    }
+}

@@ -1,0 +1,77 @@
+//! Network traffic accounting (Fig 14): bytes crossing mesh links per
+//! cycle, split into demand traffic and subscription-protocol traffic.
+//!
+//! A packet of `f` FLITs crossing `h` hops moves `f * 16 B` over `h`
+//! links, so it contributes `f * h * flit_bytes` link-bytes — the same
+//! quantity a per-link hardware counter would sum.
+
+/// Byte counters by traffic class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TrafficStats {
+    pub demand_bytes: u64,
+    pub subscription_bytes: u64,
+}
+
+impl TrafficStats {
+    #[inline]
+    pub fn record(&mut self, flits: u32, hops: u32, flit_bytes: u32, subscription: bool) {
+        let bytes = flits as u64 * hops as u64 * flit_bytes as u64;
+        if subscription {
+            self.subscription_bytes += bytes;
+        } else {
+            self.demand_bytes += bytes;
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.demand_bytes + self.subscription_bytes
+    }
+
+    /// Bytes per cycle over an execution window — Fig 14's y-axis.
+    pub fn bytes_per_cycle(&self, cycles: u64) -> f64 {
+        if cycles == 0 {
+            0.0
+        } else {
+            self.total_bytes() as f64 / cycles as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &TrafficStats) {
+        self.demand_bytes += other.demand_bytes;
+        self.subscription_bytes += other.subscription_bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_split_by_class() {
+        let mut t = TrafficStats::default();
+        t.record(5, 3, 16, false); // demand: 5*3*16 = 240
+        t.record(1, 3, 16, true); // subscription: 48
+        assert_eq!(t.demand_bytes, 240);
+        assert_eq!(t.subscription_bytes, 48);
+        assert_eq!(t.total_bytes(), 288);
+    }
+
+    #[test]
+    fn bytes_per_cycle_normalizes() {
+        let mut t = TrafficStats::default();
+        t.record(5, 4, 16, false);
+        assert!((t.bytes_per_cycle(160) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_hops_is_free() {
+        let mut t = TrafficStats::default();
+        t.record(5, 0, 16, false);
+        assert_eq!(t.total_bytes(), 0);
+    }
+
+    #[test]
+    fn zero_cycles_guard() {
+        assert_eq!(TrafficStats::default().bytes_per_cycle(0), 0.0);
+    }
+}

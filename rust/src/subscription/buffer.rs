@@ -1,0 +1,101 @@
+//! The subscription buffer: a 32-entry fully-associative staging cache
+//! (§III-A).
+//!
+//! When a subscription needs a table way that is still being freed by an
+//! in-flight unsubscription, the request parks here until the way opens.
+//! If the buffer itself is full the subscription is negatively acknowledged
+//! (§III-B3). In the resource-reservation model an entry is simply the
+//! completion time of the eviction it waits on; entries whose wait has
+//! elapsed are garbage-collected lazily.
+
+use crate::Cycle;
+
+/// Per-vault subscription buffer.
+#[derive(Clone, Debug)]
+pub struct SubBuffer {
+    cap: usize,
+    /// Completion times of the unsubscriptions being waited on.
+    waiting: Vec<Cycle>,
+    /// High-water mark, for reports.
+    pub peak: usize,
+    /// Total NACKs caused by buffer exhaustion.
+    pub nacks: u64,
+}
+
+impl SubBuffer {
+    pub fn new(cap: u32) -> Self {
+        SubBuffer { cap: cap as usize, waiting: Vec::new(), peak: 0, nacks: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.waiting.clear();
+        self.peak = 0;
+        self.nacks = 0;
+    }
+
+    fn gc(&mut self, now: Cycle) {
+        self.waiting.retain(|&t| t > now);
+    }
+
+    /// Try to park a subscription waiting until `ready_at`. Returns `false`
+    /// (and counts a NACK) if the buffer is full.
+    pub fn try_push(&mut self, now: Cycle, ready_at: Cycle) -> bool {
+        self.gc(now);
+        if self.waiting.len() >= self.cap {
+            self.nacks += 1;
+            return false;
+        }
+        self.waiting.push(ready_at);
+        self.peak = self.peak.max(self.waiting.len());
+        true
+    }
+
+    pub fn occupancy(&mut self, now: Cycle) -> usize {
+        self.gc(now);
+        self.waiting.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_until_capacity() {
+        let mut b = SubBuffer::new(2);
+        assert!(b.try_push(0, 100));
+        assert!(b.try_push(0, 100));
+        assert!(!b.try_push(0, 100), "third must NACK");
+        assert_eq!(b.nacks, 1);
+    }
+
+    #[test]
+    fn frees_after_wait_elapses() {
+        let mut b = SubBuffer::new(1);
+        assert!(b.try_push(0, 50));
+        assert!(!b.try_push(10, 60));
+        assert!(b.try_push(50, 90), "entry expired at 50");
+    }
+
+    #[test]
+    fn occupancy_reflects_gc() {
+        let mut b = SubBuffer::new(4);
+        b.try_push(0, 10);
+        b.try_push(0, 20);
+        assert_eq!(b.occupancy(15), 1);
+        assert_eq!(b.occupancy(25), 0);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut b = SubBuffer::new(8);
+        for _ in 0..5 {
+            b.try_push(0, 100);
+        }
+        assert_eq!(b.peak, 5);
+    }
+}

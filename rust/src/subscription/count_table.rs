@@ -1,0 +1,89 @@
+//! The abandoned count-threshold filter (§III-A), kept for the ablation.
+//!
+//! A direct-mapped table of 8192 entries, 32 bits each: an 8-bit access
+//! counter and a 24-bit tag. On tag mismatch the entry is reset to the new
+//! tag with count zero. The paper found that a 0-count threshold (subscribe
+//! on first access) matches or beats any positive threshold for
+//! subscription-friendly workloads — fig17_ablation_threshold reproduces
+//! that finding, which is why DL-PIM proper has no count table.
+
+/// Direct-mapped access-count table.
+pub struct CountTable {
+    entries: Vec<(u32, u8)>, // (24-bit tag, 8-bit count)
+    mask: u64,
+}
+
+impl CountTable {
+    /// `entries` must be a power of two (8192 in the paper).
+    pub fn new(entries: u32) -> Self {
+        assert!(entries.is_power_of_two());
+        CountTable { entries: vec![(u32::MAX, 0); entries as usize], mask: (entries - 1) as u64 }
+    }
+
+    pub fn reset(&mut self) {
+        self.entries.fill((u32::MAX, 0));
+    }
+
+    /// Record an access to `block`; returns the access count *after* this
+    /// access for the (possibly just-reset) entry.
+    pub fn bump(&mut self, block: u64) -> u8 {
+        let idx = (block & self.mask) as usize;
+        let tag = ((block >> self.mask.count_ones()) & 0x00ff_ffff) as u32;
+        let e = &mut self.entries[idx];
+        if e.0 != tag {
+            // Evict-and-replace on mismatch, counter restarts.
+            *e = (tag, 1);
+        } else {
+            e.1 = e.1.saturating_add(1);
+        }
+        e.1
+    }
+
+    /// Whether `block` has crossed `threshold` accesses (call after bump).
+    pub fn over_threshold(&self, block: u64, threshold: u32) -> bool {
+        let idx = (block & self.mask) as usize;
+        let tag = ((block >> self.mask.count_ones()) & 0x00ff_ffff) as u32;
+        let e = self.entries[idx];
+        e.0 == tag && e.1 as u32 > threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_repeat_accesses() {
+        let mut t = CountTable::new(8192);
+        assert_eq!(t.bump(42), 1);
+        assert_eq!(t.bump(42), 2);
+        assert_eq!(t.bump(42), 3);
+        assert!(t.over_threshold(42, 2));
+        assert!(!t.over_threshold(42, 3));
+    }
+
+    #[test]
+    fn conflicting_tag_resets_counter() {
+        let mut t = CountTable::new(8);
+        t.bump(0);
+        t.bump(0);
+        // Same index (block % 8 == 0), different tag.
+        assert_eq!(t.bump(8), 1, "conflict resets to the incoming entry");
+        assert!(!t.over_threshold(0, 0), "old entry evicted");
+    }
+
+    #[test]
+    fn counter_saturates() {
+        let mut t = CountTable::new(8);
+        for _ in 0..300 {
+            t.bump(1);
+        }
+        assert_eq!(t.bump(1), 255);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_rejected() {
+        CountTable::new(100);
+    }
+}

@@ -1,0 +1,29 @@
+//! DL-PIM's contribution: the distributed subscription machinery that
+//! "attracts" memory blocks to the vault that accesses them (§III).
+//!
+//! Per vault (Fig 7):
+//! * a **subscription table** ([`table::SubTable`]) — 4-way x 2048-set
+//!   cache-style lookup table mapping a block's original address to its
+//!   current location, with the five protocol states;
+//! * a **subscription buffer** ([`buffer::SubBuffer`]) — 32-entry fully
+//!   associative staging area for subscriptions waiting on an eviction;
+//! * **reserved space** ([`reserved`]) in vault memory holding subscribed
+//!   blocks (one block per table entry, 0.125% of a 4 GB vault at the
+//!   default 8192 entries);
+//! * the **protocol engine** ([`protocol::SubSystem`]) implementing the
+//!   packet flows of §III-B: subscription, resubscription, negative
+//!   acknowledgement, unsubscription, and the dirty-bit optimization.
+//!
+//! The abandoned count-threshold design (§III-A) is kept as
+//! [`count_table::CountTable`] for the ablation bench (fig17).
+
+pub mod buffer;
+pub mod count_table;
+pub mod protocol;
+pub mod reserved;
+pub mod table;
+
+pub use buffer::SubBuffer;
+pub use count_table::CountTable;
+pub use protocol::{RequestResult, SubSystem};
+pub use table::{Role, SubState, SubTable};

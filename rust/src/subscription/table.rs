@@ -1,0 +1,415 @@
+//! The subscription table (ST): a 4-way set-associative hardware lookup
+//! table with 2048 sets per vault (8192 entries), §III-A.
+//!
+//! Each vault's table plays two roles at once:
+//! * **Home role** — "local blocks that moved to remote vaults": the entry
+//!   maps a block homed here to the vault currently holding it, redirecting
+//!   incoming demand.
+//! * **Holder role** — "remote blocks that moved to the current vault": the
+//!   entry marks a block parked in this vault's reserved space (and carries
+//!   its dirty bit).
+//!
+//! Victim selection is least-frequently-used, ties broken by
+//! least-recently-used (§III-A). Pending entries are never victimized —
+//! their protocol exchange is in flight.
+
+use crate::{Cycle, VaultId};
+
+/// Protocol state of a table entry (§III-A lists exactly these five).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubState {
+    /// Unsubscribed / empty way.
+    Invalid,
+    /// Subscription handshake in flight.
+    PendingSub,
+    /// Block is parked at (holder role) / redirected to (home role) `peer`.
+    Subscribed,
+    /// Resubscription to a new vault in flight.
+    PendingResub,
+    /// Block returning to its home vault.
+    PendingUnsub,
+}
+
+/// Which side of a subscription this entry represents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// This vault is the block's home; `peer` holds it.
+    Home,
+    /// This vault holds the block; `peer` is its home.
+    Holder,
+}
+
+/// One table way.
+#[derive(Clone, Copy, Debug)]
+pub struct Entry {
+    pub block: u64,
+    pub state: SubState,
+    pub role: Role,
+    pub peer: VaultId,
+    /// During `PendingResub` at the home vault: the incoming holder. The
+    /// current `peer` (old holder) still owns the data until `ready_at`.
+    pub peer_next: VaultId,
+    pub dirty: bool,
+    /// LFU counter (saturating).
+    pub freq: u32,
+    /// LRU timestamp.
+    pub last_use: Cycle,
+    /// Cycle at which the pending protocol exchange completes.
+    pub ready_at: Cycle,
+}
+
+impl Entry {
+    fn empty() -> Self {
+        Entry {
+            block: u64::MAX,
+            state: SubState::Invalid,
+            role: Role::Home,
+            peer: 0,
+            peer_next: 0,
+            dirty: false,
+            freq: 0,
+            last_use: 0,
+            ready_at: 0,
+        }
+    }
+
+    /// Commit a pending transition whose exchange has completed by `now`.
+    /// Returns `true` if the entry became Invalid (way freed).
+    pub fn commit(&mut self, now: Cycle) -> bool {
+        if now < self.ready_at {
+            return false;
+        }
+        match self.state {
+            SubState::PendingSub => {
+                self.state = SubState::Subscribed;
+                false
+            }
+            SubState::PendingResub => match self.role {
+                // Home side: redirect target switches to the new holder.
+                Role::Home => {
+                    self.peer = self.peer_next;
+                    self.state = SubState::Subscribed;
+                    false
+                }
+                // Old holder side: entry is evicted once the move finishes.
+                Role::Holder => {
+                    *self = Entry::empty();
+                    true
+                }
+            },
+            SubState::PendingUnsub => {
+                *self = Entry::empty();
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub fn is_invalid(&self) -> bool {
+        self.state == SubState::Invalid
+    }
+
+    pub fn is_pending(&self, now: Cycle) -> bool {
+        !self.is_invalid() && self.state != SubState::Subscribed && now < self.ready_at
+    }
+}
+
+/// A per-vault subscription table.
+pub struct SubTable {
+    ways: usize,
+    entries: Vec<Entry>,
+    /// Holder-role entries currently valid (reserved-space occupancy).
+    holder_count: u32,
+}
+
+impl SubTable {
+    pub fn new(sets: u32, ways: u16) -> Self {
+        SubTable {
+            ways: ways as usize,
+            entries: vec![Entry::empty(); sets as usize * ways as usize],
+            holder_count: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.entries.fill(Entry::empty());
+        self.holder_count = 0;
+    }
+
+    #[inline]
+    fn set_range(&self, set: u32) -> std::ops::Range<usize> {
+        let base = set as usize * self.ways;
+        base..base + self.ways
+    }
+
+    /// Commit any completed pending transitions in `set`, then look up
+    /// `block`. Returns the way index.
+    pub fn lookup(&mut self, set: u32, block: u64, now: Cycle) -> Option<usize> {
+        let r = self.set_range(set);
+        for i in r {
+            let e = &mut self.entries[i];
+            if !e.is_invalid() && e.ready_at <= now && e.state != SubState::Subscribed
+            {
+                let was_holder = e.role == Role::Holder
+                    && matches!(e.state, SubState::PendingResub | SubState::PendingUnsub);
+                if e.commit(now) && was_holder {
+                    self.holder_count -= 1;
+                }
+            }
+            let e = &self.entries[i];
+            if !e.is_invalid() && e.block == block {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    pub fn entry(&self, idx: usize) -> &Entry {
+        &self.entries[idx]
+    }
+
+    pub fn entry_mut(&mut self, idx: usize) -> &mut Entry {
+        &mut self.entries[idx]
+    }
+
+    /// Record a use for LFU/LRU bookkeeping.
+    pub fn touch(&mut self, idx: usize, now: Cycle) {
+        let e = &mut self.entries[idx];
+        e.freq = e.freq.saturating_add(1);
+        e.last_use = now;
+    }
+
+    /// Find a free way in `set`, if any.
+    pub fn free_way(&self, set: u32) -> Option<usize> {
+        self.set_range(set).find(|&i| self.entries[i].is_invalid())
+    }
+
+    /// LFU-then-LRU victim among *Subscribed* (non-pending) entries in
+    /// `set`. Pending entries are protected.
+    pub fn victim(&self, set: u32) -> Option<usize> {
+        self.set_range(set)
+            .filter(|&i| self.entries[i].state == SubState::Subscribed)
+            .min_by_key(|&i| (self.entries[i].freq, self.entries[i].last_use))
+    }
+
+    /// Install an entry into a known-free way.
+    #[allow(clippy::too_many_arguments)]
+    pub fn install(
+        &mut self,
+        idx: usize,
+        block: u64,
+        role: Role,
+        peer: VaultId,
+        state: SubState,
+        ready_at: Cycle,
+        now: Cycle,
+    ) {
+        debug_assert!(self.entries[idx].is_invalid());
+        if role == Role::Holder {
+            self.holder_count += 1;
+        }
+        self.entries[idx] = Entry {
+            block,
+            state,
+            role,
+            peer,
+            peer_next: peer,
+            dirty: false,
+            freq: 1,
+            last_use: now,
+            ready_at,
+        };
+    }
+
+    /// Invalidate a way immediately (rollback on NACK).
+    pub fn invalidate(&mut self, idx: usize) {
+        if self.entries[idx].role == Role::Holder && !self.entries[idx].is_invalid() {
+            self.holder_count -= 1;
+        }
+        self.entries[idx] = Entry::empty();
+    }
+
+    /// Mark a way pending-unsubscription; the way frees at `ready_at` via
+    /// `commit` (lazily, on the next lookup of its set).
+    pub fn begin_unsub(&mut self, idx: usize, ready_at: Cycle) {
+        let e = &mut self.entries[idx];
+        debug_assert_eq!(e.state, SubState::Subscribed);
+        e.state = SubState::PendingUnsub;
+        e.ready_at = ready_at;
+    }
+
+    /// Age the LFU counters (halve). Without decay, long-dead entries keep
+    /// their historical frequency and pin the table while every *new*
+    /// subscription (freq 1) victimizes the next new subscription — the
+    /// classic LFU staleness pathology. The epoch boundary (§III-D1), which
+    /// already clears the policy registers, is the natural aging point.
+    pub fn decay(&mut self) {
+        for e in &mut self.entries {
+            e.freq >>= 1;
+        }
+    }
+
+    /// Valid (non-Invalid) entries, for tests and reports.
+    pub fn occupancy(&self) -> usize {
+        self.entries.iter().filter(|e| !e.is_invalid()).count()
+    }
+
+    /// Holder-role occupancy = blocks in this vault's reserved space.
+    pub fn holder_occupancy(&self) -> u32 {
+        self.holder_count
+    }
+
+    pub fn num_sets(&self) -> u32 {
+        (self.entries.len() / self.ways) as u32
+    }
+
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+
+    /// Count entries in every state — protocol invariants are asserted over
+    /// this in tests.
+    pub fn state_census(&self) -> [usize; 5] {
+        let mut c = [0usize; 5];
+        for e in &self.entries {
+            let i = match e.state {
+                SubState::Invalid => 0,
+                SubState::PendingSub => 1,
+                SubState::Subscribed => 2,
+                SubState::PendingResub => 3,
+                SubState::PendingUnsub => 4,
+            };
+            c[i] += 1;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> SubTable {
+        SubTable::new(8, 4)
+    }
+
+    #[test]
+    fn install_and_lookup() {
+        let mut t = table();
+        let w = t.free_way(3).unwrap();
+        t.install(w, 99, Role::Holder, 5, SubState::Subscribed, 0, 0);
+        assert_eq!(t.lookup(3, 99, 10), Some(w));
+        assert_eq!(t.lookup(4, 99, 10), None, "wrong set");
+        assert_eq!(t.holder_occupancy(), 1);
+    }
+
+    #[test]
+    fn pending_sub_commits_after_ready() {
+        let mut t = table();
+        let w = t.free_way(0).unwrap();
+        t.install(w, 7, Role::Holder, 2, SubState::PendingSub, 100, 0);
+        let i = t.lookup(0, 7, 50).unwrap();
+        assert_eq!(t.entry(i).state, SubState::PendingSub);
+        let i = t.lookup(0, 7, 100).unwrap();
+        assert_eq!(t.entry(i).state, SubState::Subscribed);
+    }
+
+    #[test]
+    fn pending_unsub_frees_way_after_ready() {
+        let mut t = table();
+        let w = t.free_way(0).unwrap();
+        t.install(w, 7, Role::Holder, 2, SubState::Subscribed, 0, 0);
+        t.begin_unsub(w, 200);
+        assert!(t.lookup(0, 7, 199).is_some(), "still present while pending");
+        assert!(t.lookup(0, 7, 200).is_none(), "freed at ready");
+        assert_eq!(t.holder_occupancy(), 0);
+        assert_eq!(t.occupancy(), 0);
+    }
+
+    #[test]
+    fn victim_prefers_lfu_then_lru() {
+        let mut t = table();
+        for (block, freq_touches, last) in [(1u64, 3u32, 10u64), (2, 1, 20), (3, 1, 5)] {
+            let w = t.free_way(0).unwrap();
+            t.install(w, block, Role::Holder, 0, SubState::Subscribed, 0, 0);
+            for k in 0..freq_touches {
+                t.touch(w, last - k as u64);
+            }
+            t.entry_mut(w).last_use = last;
+        }
+        // blocks 2 and 3 tie on freq (1 install + 1 touch), 3 is older.
+        let v = t.victim(0).unwrap();
+        assert_eq!(t.entry(v).block, 3);
+    }
+
+    #[test]
+    fn pending_entries_are_not_victims() {
+        let mut t = table();
+        let w = t.free_way(0).unwrap();
+        t.install(w, 1, Role::Holder, 0, SubState::PendingSub, 1000, 0);
+        assert!(t.victim(0).is_none());
+    }
+
+    #[test]
+    fn resub_commit_home_switches_peer() {
+        let mut t = table();
+        let w = t.free_way(0).unwrap();
+        t.install(w, 1, Role::Home, 4, SubState::Subscribed, 0, 0);
+        {
+            let e = t.entry_mut(w);
+            e.state = SubState::PendingResub;
+            e.peer_next = 9;
+            e.ready_at = 50;
+        }
+        let i = t.lookup(0, 1, 49).unwrap();
+        assert_eq!(t.entry(i).peer, 4, "old holder until ready");
+        let i = t.lookup(0, 1, 50).unwrap();
+        assert_eq!(t.entry(i).peer, 9);
+        assert_eq!(t.entry(i).state, SubState::Subscribed);
+    }
+
+    #[test]
+    fn resub_commit_holder_evicts() {
+        let mut t = table();
+        let w = t.free_way(0).unwrap();
+        t.install(w, 1, Role::Holder, 4, SubState::Subscribed, 0, 0);
+        {
+            let e = t.entry_mut(w);
+            e.state = SubState::PendingResub;
+            e.ready_at = 50;
+        }
+        assert!(t.lookup(0, 1, 50).is_none());
+        assert_eq!(t.holder_occupancy(), 0);
+    }
+
+    #[test]
+    fn invalidate_rolls_back_holder_count() {
+        let mut t = table();
+        let w = t.free_way(0).unwrap();
+        t.install(w, 1, Role::Holder, 4, SubState::PendingSub, 100, 0);
+        t.invalidate(w);
+        assert_eq!(t.holder_occupancy(), 0);
+        assert_eq!(t.occupancy(), 0);
+    }
+
+    #[test]
+    fn set_fills_to_associativity() {
+        let mut t = table();
+        for b in 0..4u64 {
+            let w = t.free_way(1).unwrap();
+            t.install(w, b, Role::Home, 0, SubState::Subscribed, 0, 0);
+        }
+        assert!(t.free_way(1).is_none());
+        assert!(t.free_way(2).is_some(), "other sets unaffected");
+    }
+
+    #[test]
+    fn census_counts_states() {
+        let mut t = table();
+        let w = t.free_way(0).unwrap();
+        t.install(w, 1, Role::Home, 0, SubState::PendingSub, 100, 0);
+        let c = t.state_census();
+        assert_eq!(c[1], 1);
+        assert_eq!(c[0], 8 * 4 - 1);
+    }
+}

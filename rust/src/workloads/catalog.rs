@@ -1,0 +1,157 @@
+//! The workload catalog: Table III of the paper, name → generator.
+
+use super::{chai, darknet, hashjoin, ligra, phoenix, polybench, rodinia, splash, stream};
+use super::Workload;
+use crate::config::SimConfig;
+
+/// One Table III row.
+#[derive(Clone, Copy, Debug)]
+pub struct CatalogEntry {
+    pub suite: &'static str,
+    pub benchmark: &'static str,
+    pub function: &'static str,
+    pub short: &'static str,
+}
+
+/// All 31 representative workloads, in Table III order.
+pub const TABLE3: [CatalogEntry; 31] = [
+    CatalogEntry { suite: "Chai", benchmark: "Bezier Surface", function: "Bezier", short: "CHABsBez" },
+    CatalogEntry { suite: "Chai", benchmark: "Padding", function: "Padding", short: "CHAOpad" },
+    CatalogEntry { suite: "Darknet", benchmark: "Yolo", function: "gemm_nn", short: "DRKYolo" },
+    CatalogEntry { suite: "Hashjoin", benchmark: "NPO", function: "ProbeHashTable", short: "HSJNPO" },
+    CatalogEntry { suite: "Hashjoin", benchmark: "PRH", function: "HistogramJoin", short: "HSJPRH" },
+    CatalogEntry { suite: "Ligra", benchmark: "Betweenness Centrality", function: "EdgeMapSparse (USA)", short: "LIGBcEms" },
+    CatalogEntry { suite: "Ligra", benchmark: "Breadth-First Search", function: "EdgeMapSparse (USA)", short: "LIGBfsEms" },
+    CatalogEntry { suite: "Ligra", benchmark: "BFS Connected Components", function: "EdgeMapSparse (USA)", short: "LIGConCEms" },
+    CatalogEntry { suite: "Ligra", benchmark: "PageRank", function: "EdgeMapDense (USA)", short: "LIGPrkEmd" },
+    CatalogEntry { suite: "Ligra", benchmark: "Triangle", function: "EdgeMapDense (Rmat)", short: "LIGTriEmd" },
+    CatalogEntry { suite: "Phoenix", benchmark: "Linear Regression", function: "linear_regression_map", short: "PHELinReg" },
+    CatalogEntry { suite: "PolyBench", benchmark: "Linear Algebra", function: "3 Matrix Multiplications", short: "PLY3mm" },
+    CatalogEntry { suite: "PolyBench", benchmark: "Linear Algebra", function: "Multi-resolution analysis kernel", short: "PLYDoitgen" },
+    CatalogEntry { suite: "PolyBench", benchmark: "Linear Algebra", function: "C=alpha.A.B+beta.C", short: "PLYgemm" },
+    CatalogEntry { suite: "PolyBench", benchmark: "Linear Algebra", function: "Vector Mult. and Matrix Addition", short: "PLYgemver" },
+    CatalogEntry { suite: "PolyBench", benchmark: "Linear Algebra", function: "Gram-Schmidt decomposition", short: "PLYGramSch" },
+    CatalogEntry { suite: "PolyBench", benchmark: "Linear Algebra", function: "Symmetric matrix-multiply", short: "PLYSymm" },
+    CatalogEntry { suite: "PolyBench", benchmark: "Stencil", function: "2D Convolution", short: "PLYcon2d" },
+    CatalogEntry { suite: "PolyBench", benchmark: "Stencil", function: "2-D Finite Different Time Domain", short: "PLYdtd" },
+    CatalogEntry { suite: "Rodinia", benchmark: "BFS", function: "BFSGraph", short: "RODBfs" },
+    CatalogEntry { suite: "Rodinia", benchmark: "Needleman-Wunsch", function: "runTest", short: "RODNw" },
+    CatalogEntry { suite: "SPLASH2", benchmark: "FFT", function: "Reverse", short: "SPLFftRev" },
+    CatalogEntry { suite: "SPLASH2", benchmark: "FFT", function: "Transpose", short: "SPLFftTra" },
+    CatalogEntry { suite: "SPLASH2", benchmark: "Oceanncp", function: "jacobcalc", short: "SPLOcnpJac" },
+    CatalogEntry { suite: "SPLASH2", benchmark: "Oceanncp", function: "laplaccalc", short: "SPLOcnpLap" },
+    CatalogEntry { suite: "SPLASH2", benchmark: "Oceancp", function: "slave2", short: "SPLOcpSlave" },
+    CatalogEntry { suite: "SPLASH2", benchmark: "Radix", function: "slave_sort", short: "SPLRad" },
+    CatalogEntry { suite: "STREAM", benchmark: "Add", function: "Add", short: "STRAdd" },
+    CatalogEntry { suite: "STREAM", benchmark: "Copy", function: "Copy", short: "STRCpy" },
+    CatalogEntry { suite: "STREAM", benchmark: "Scale", function: "Scale", short: "STRSca" },
+    CatalogEntry { suite: "STREAM", benchmark: "Triad", function: "Triad", short: "STRTriad" },
+];
+
+/// Short names only, in Table III order.
+pub const ALL_NAMES: [&str; 31] = [
+    "CHABsBez", "CHAOpad", "DRKYolo", "HSJNPO", "HSJPRH", "LIGBcEms", "LIGBfsEms",
+    "LIGConCEms", "LIGPrkEmd", "LIGTriEmd", "PHELinReg", "PLY3mm", "PLYDoitgen",
+    "PLYgemm", "PLYgemver", "PLYGramSch", "PLYSymm", "PLYcon2d", "PLYdtd", "RODBfs",
+    "RODNw", "SPLFftRev", "SPLFftTra", "SPLOcnpJac", "SPLOcnpLap", "SPLOcpSlave",
+    "SPLRad", "STRAdd", "STRCpy", "STRSca", "STRTriad",
+];
+
+/// The workloads the paper's Fig 11/12/14 focus on: "non-negligible data
+/// reuse" (§IV-B1). Derived from our Fig 10 reuse measurements; kept in
+/// sync by the `selected_have_reuse` integration test.
+pub const SELECTED: [&str; 14] = [
+    "CHABsBez", "DRKYolo", "LIGTriEmd", "PHELinReg", "PLY3mm", "PLYDoitgen",
+    "PLYgemm", "PLYgemver", "PLYGramSch", "PLYSymm", "PLYcon2d", "PLYdtd", "RODNw",
+    "SPLRad",
+];
+
+/// Build a workload generator by Table III short name.
+pub fn build(short: &str, cfg: &SimConfig) -> Option<Box<dyn Workload>> {
+    let n = cfg.n_vaults;
+    Some(match short {
+        "CHABsBez" => chai::bezier(n),
+        "CHAOpad" => chai::padding(n),
+        "DRKYolo" => darknet::yolo(n),
+        "HSJNPO" => hashjoin::npo(n),
+        "HSJPRH" => hashjoin::prh(n),
+        "LIGBcEms" => ligra::bc_ems(n),
+        "LIGBfsEms" => ligra::bfs_ems(n),
+        "LIGConCEms" => ligra::components_ems(n),
+        "LIGPrkEmd" => ligra::pagerank_emd(n),
+        "LIGTriEmd" => ligra::triangle_emd(n),
+        "PHELinReg" => phoenix::linreg(n),
+        "PLY3mm" => polybench::mm3(n),
+        "PLYDoitgen" => polybench::doitgen(n),
+        "PLYgemm" => polybench::gemm(n),
+        "PLYgemver" => polybench::gemver(n),
+        "PLYGramSch" => polybench::gramschmidt(n),
+        "PLYSymm" => polybench::symm(n),
+        "PLYcon2d" => polybench::conv2d(n),
+        "PLYdtd" => polybench::fdtd2d(n),
+        "RODBfs" => rodinia::bfs(n),
+        "RODNw" => rodinia::nw(n),
+        "SPLFftRev" => splash::fft_reverse(n),
+        "SPLFftTra" => splash::fft_transpose(n),
+        "SPLOcnpJac" => splash::ocean_jacob(n),
+        "SPLOcnpLap" => splash::ocean_laplace(n),
+        "SPLOcpSlave" => splash::ocean_slave(n),
+        "SPLRad" => splash::radix(n),
+        "STRAdd" => stream::add(n),
+        "STRCpy" => stream::copy(n),
+        "STRSca" => stream::scale(n),
+        "STRTriad" => stream::triad(n),
+        _ => return None,
+    })
+}
+
+/// Table III entry for a short name.
+pub fn entry(short: &str) -> Option<&'static CatalogEntry> {
+    TABLE3.iter().find(|e| e.short == short)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_table3_row_builds() {
+        let cfg = SimConfig::hmc();
+        for e in &TABLE3 {
+            let w = build(e.short, &cfg);
+            assert!(w.is_some(), "{} missing", e.short);
+            assert_eq!(w.unwrap().name(), e.short);
+        }
+    }
+
+    #[test]
+    fn names_match_table() {
+        assert_eq!(TABLE3.len(), 31);
+        assert_eq!(ALL_NAMES.len(), 31);
+        for (e, n) in TABLE3.iter().zip(ALL_NAMES.iter()) {
+            assert_eq!(e.short, *n);
+        }
+    }
+
+    #[test]
+    fn selected_is_subset() {
+        for s in SELECTED {
+            assert!(ALL_NAMES.contains(&s), "{s} not in catalog");
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(build("NOPE", &SimConfig::hmc()).is_none());
+    }
+
+    #[test]
+    fn builds_for_hbm_core_count() {
+        let cfg = SimConfig::hbm();
+        let mut w = build("SPLRad", &cfg).unwrap();
+        w.reset(0);
+        for c in 0..8u16 {
+            assert!(w.next_op(c).is_some());
+        }
+    }
+}

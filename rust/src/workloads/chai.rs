@@ -1,0 +1,67 @@
+//! Chai heterogeneous kernels (Table III).
+//!
+//! * **Bezier Surface (CHABsBez)** — output tiles are computed from a
+//!   block of control points re-read for every tile point; the control
+//!   grid's row stride aliases onto a four-vault cluster. High CoV in
+//!   Fig 3 and one of the workloads the paper calls out as benefiting from
+//!   evenly-distributed demand (§III-D5).
+//! * **Padding (CHAOpad)** — pure data relocation: read the source row,
+//!   write the padded destination row. Streaming, no reuse, speedup ≈ 1.
+
+use super::engines::{StreamArray, Streams, TiledReuse};
+use super::Workload;
+
+/// Bezier: 320-block control tiles revisited 6x (16 surface points per
+/// control point at our block granularity) with a 384-block output-tile
+/// stream between passes, aliased onto a 4-vault cluster (8 cores x 320 =
+/// 2560 active entries per hot vault).
+pub fn bezier(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(TiledReuse::new("CHABsBez", 320, 6, 32, 4, 0.15, 6, 8, 384, n_cores))
+}
+
+/// Padding: two disjoint streams, slightly different strides (the
+/// destination rows are longer — that is the padding).
+pub fn padding(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(Streams::new(
+        "CHAOpad",
+        vec![
+            StreamArray { region: 4, stride: 64, write: false },
+            StreamArray { region: 5, stride: 128, write: true },
+        ],
+        1 << 18,
+        8,
+        n_cores,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::AddressMap;
+
+    #[test]
+    fn bezier_concentrates_on_four_vaults() {
+        let cfg = SimConfig::hmc();
+        let map = AddressMap::new(&cfg);
+        let mut w = bezier(8);
+        w.reset(0);
+        let mut homes = std::collections::HashSet::new();
+        for core in 0..8u16 {
+            for _ in 0..200 {
+                homes.insert(map.home_of(w.next_op(core).unwrap().addr));
+            }
+        }
+        assert_eq!(homes.len(), 4);
+    }
+
+    #[test]
+    fn padding_never_repeats_blocks() {
+        let mut w = padding(2);
+        w.reset(0);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..2000 {
+            assert!(seen.insert(w.next_op(0).unwrap().addr));
+        }
+    }
+}

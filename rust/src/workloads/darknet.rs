@@ -1,0 +1,27 @@
+//! Darknet YOLO (Table III): the `gemm_nn` inner loop of the conv layers.
+//!
+//! Same shared-B-panel shape as PLYgemm but with the smaller panel of a
+//! conv-as-GEMM (kernel-patch matrix) and a higher compute gap (the FMA
+//! chain per output element) — YOLO is more compute-bound, so its queuing
+//! exposure is milder than PLYgemm's.
+
+use super::engines::SharedPanel;
+use super::Workload;
+
+/// gemm_nn: 2048-block shared panel (128 KiB), 3 panel reads per stream
+/// element, 20% writes (output feature maps), gap 12 (FMA chain).
+pub fn yolo(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(SharedPanel::new("DRKYolo", 2048, 3, 0.2, 12, 1 << 18, n_cores))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yolo_has_compute_gap() {
+        let mut w = yolo(1);
+        w.reset(0);
+        assert_eq!(w.next_op(0).unwrap().gap, 12);
+    }
+}

@@ -1,0 +1,644 @@
+//! Traffic-pattern engines: the five archetypes the 31 Table III workloads
+//! instantiate.
+//!
+//! Every DAMOV-representative kernel reduces, for the purposes of this
+//! paper's evaluation, to a combination of:
+//!
+//! * [`Streams`] — partitioned sequential sweeps (STREAM, padding, FFT
+//!   permutations). Zero post-L1 reuse: subscription can neither help nor
+//!   hurt much (the flat middle of Fig 9).
+//! * [`TiledReuse`] — per-core working sets revisited several times, with
+//!   a configurable *alias stride* and *vault spread* controlling how the
+//!   tiles map onto home vaults. This is the archetype of the big DL-PIM
+//!   winners (SPLRad, CHABsBez, PHELinReg): private reuse homed on a few
+//!   overloaded vaults.
+//! * [`SharedPanel`] — every core repeatedly walks one shared panel (GEMM's
+//!   B matrix, PageRank's rank vector). Post-L1 reuse is *shared*, so
+//!   always-subscribe bounces blocks between cores (resubscription thrash)
+//!   — the Fig 9 losers (PLYgemm, PLY3mm).
+//! * [`RandomTable`] — uniform or hub-skewed probes over a large table
+//!   (hash joins, sparse graph traversals). Low reuse, balanced demand.
+//! * [`StencilSweep`] — neighbour sweeps over a private slab (stencils,
+//!   ocean, Needleman-Wunsch wavefronts). Post-L1 reuse between adjacent
+//!   row sweeps.
+
+use crate::rng::Rng;
+use crate::workloads::{layout, Op, Workload};
+use crate::CoreId;
+
+const BLOCK: u64 = 64;
+
+// ---------------------------------------------------------------------
+// Streams
+// ---------------------------------------------------------------------
+
+/// One array of a streaming kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamArray {
+    /// Region index (see [`layout::region`]).
+    pub region: u64,
+    /// Byte stride between consecutive elements (64 = one block per step;
+    /// larger multiples of `n_vaults * 64` alias onto a single vault — the
+    /// FFT-transpose pathology).
+    pub stride: u64,
+    pub write: bool,
+}
+
+/// Partitioned streaming: each core sweeps its own slice of each array,
+/// touching the arrays round-robin at every position.
+pub struct Streams {
+    name: &'static str,
+    arrays: Vec<StreamArray>,
+    /// Positions per core before the sweep wraps.
+    elems: u64,
+    gap: u32,
+    n_cores: u16,
+    pos: Vec<u64>,
+    arr: Vec<usize>,
+}
+
+impl Streams {
+    pub fn new(
+        name: &'static str,
+        arrays: Vec<StreamArray>,
+        elems: u64,
+        gap: u32,
+        n_cores: u16,
+    ) -> Self {
+        let n = n_cores as usize;
+        Streams { name, arrays, elems, gap, n_cores, pos: vec![0; n], arr: vec![0; n] }
+    }
+}
+
+impl Workload for Streams {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn next_op(&mut self, core: CoreId) -> Option<Op> {
+        let c = core as usize;
+        let a = self.arrays[self.arr[c]];
+        let slice = self.elems * a.stride;
+        // Wrap within the region: big-stride sweeps (FFT transpose columns)
+        // legitimately revisit the same matrix, but must never walk into a
+        // *different* array's region.
+        let off = (core as u64 * slice + self.pos[c] * a.stride) % layout::REGION;
+        let addr = layout::region(a.region) + off;
+        self.arr[c] += 1;
+        if self.arr[c] == self.arrays.len() {
+            self.arr[c] = 0;
+            self.pos[c] = (self.pos[c] + 1) % self.elems;
+        }
+        Some(Op { addr, write: a.write, gap: self.gap })
+    }
+
+    fn reset(&mut self, seed: u64) {
+        // Desynchronize cores so lockstep vault convoys don't depend on the
+        // seed being zero.
+        let mut r = Rng::new(seed);
+        for c in 0..self.n_cores as usize {
+            self.pos[c] = r.below(self.elems);
+            self.arr[c] = 0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// TiledReuse
+// ---------------------------------------------------------------------
+
+/// Per-core tiles revisited several times before moving on, optionally
+/// interleaved with a private input stream between passes.
+///
+/// The pollution stream serves two purposes straight out of the real
+/// kernels: it *is* the input scan (radix-sort keys, linear-regression
+/// points), and it evicts the hot tile from the 32 KB L1 between passes so
+/// the tile's reuse is post-L1 — visible to the subscription machinery —
+/// without inflating the tile beyond the home vault's 8192-entry table
+/// budget (tiles from all cores homed on one hot vault must fit it, or the
+/// protocol thrashes on capacity unsubscriptions).
+pub struct TiledReuse {
+    name: &'static str,
+    /// Blocks per tile.
+    tile_blocks: u32,
+    /// Sweeps over the tile before advancing to the next tile.
+    revisits: u32,
+    /// Spacing (in blocks) between consecutive blocks of a tile. A multiple
+    /// of `n_vaults` homes the whole tile on a single vault.
+    alias_stride: u64,
+    /// How many distinct home vaults the per-core lanes spread across
+    /// (1 = one global hot vault, `n_vaults` = balanced).
+    vault_spread: u64,
+    write_frac: f64,
+    gap: u32,
+    tiles_per_core: u64,
+    /// Private streaming reads emitted after each tile pass (input scan /
+    /// L1 pollution). `tile_blocks + pollute_blocks` > L1 blocks keeps the
+    /// tile's inter-pass reuse in memory.
+    pollute_blocks: u32,
+    n_cores: u16,
+    st: Vec<TrState>,
+    rng: Vec<Rng>,
+}
+
+#[derive(Clone, Copy, Default)]
+struct TrState {
+    tile: u64,
+    visit: u32,
+    blk: u32,
+    /// Remaining pollution ops in the current inter-pass stream burst.
+    pollute_left: u32,
+    /// Monotone cursor of the private input stream.
+    stream_pos: u64,
+}
+
+impl TiledReuse {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &'static str,
+        tile_blocks: u32,
+        revisits: u32,
+        alias_stride: u64,
+        vault_spread: u64,
+        write_frac: f64,
+        gap: u32,
+        tiles_per_core: u64,
+        pollute_blocks: u32,
+        n_cores: u16,
+    ) -> Self {
+        let n = n_cores as usize;
+        TiledReuse {
+            name,
+            tile_blocks,
+            revisits,
+            alias_stride,
+            vault_spread: vault_spread.max(1),
+            write_frac,
+            gap,
+            tiles_per_core: tiles_per_core.max(1),
+            pollute_blocks,
+            n_cores,
+            st: vec![TrState::default(); n],
+            rng: (0..n).map(|i| Rng::new(i as u64)).collect(),
+        }
+    }
+}
+
+impl Workload for TiledReuse {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn next_op(&mut self, core: CoreId) -> Option<Op> {
+        let c = core as usize;
+        // Inter-pass input stream (private, monotone: zero reuse).
+        if self.st[c].pollute_left > 0 {
+            let st = &mut self.st[c];
+            st.pollute_left -= 1;
+            let addr = layout::core_region(core, 3) + (st.stream_pos % (1 << 21)) * BLOCK;
+            st.stream_pos += 1;
+            return Some(Op::read(addr, self.gap));
+        }
+        let s = self.st[c];
+        // Lane offset picks which home vault this core's tiles alias to.
+        let lane = core as u64 % self.vault_spread;
+        let logical = (core as u64 * self.tiles_per_core + s.tile) * self.tile_blocks as u64
+            + s.blk as u64;
+        let block = logical * self.alias_stride + lane;
+        let addr = layout::region(8) + block * BLOCK;
+        let write = self.rng[c].chance(self.write_frac);
+
+        // Advance tile cursor.
+        let st = &mut self.st[c];
+        st.blk += 1;
+        if st.blk == self.tile_blocks {
+            st.blk = 0;
+            st.visit += 1;
+            st.pollute_left = self.pollute_blocks;
+            if st.visit == self.revisits {
+                st.visit = 0;
+                st.tile = (st.tile + 1) % self.tiles_per_core;
+            }
+        }
+        Some(Op { addr, write, gap: self.gap })
+    }
+
+    fn reset(&mut self, seed: u64) {
+        let mut r = Rng::new(seed);
+        for c in 0..self.n_cores as usize {
+            self.st[c] = TrState {
+                tile: r.below(self.tiles_per_core),
+                visit: 0,
+                blk: 0,
+                pollute_left: 0,
+                stream_pos: r.below(1 << 20),
+            };
+            self.rng[c] = Rng::new(seed ^ (c as u64) << 32);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SharedPanel
+// ---------------------------------------------------------------------
+
+/// GEMM-style traffic: stream private rows while repeatedly walking a
+/// shared panel (matrix B / rank vector / coefficient table).
+pub struct SharedPanel {
+    name: &'static str,
+    /// Shared panel size in blocks (must exceed L1 for post-L1 reuse).
+    panel_blocks: u64,
+    /// Panel reads between consecutive private-stream reads.
+    panel_per_stream: u32,
+    /// Fraction of private-stream accesses that are writes (matrix C).
+    write_frac: f64,
+    gap: u32,
+    stream_elems: u64,
+    n_cores: u16,
+    stream_pos: Vec<u64>,
+    panel_pos: Vec<u64>,
+    phase: Vec<u32>,
+    rng: Vec<Rng>,
+}
+
+impl SharedPanel {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &'static str,
+        panel_blocks: u64,
+        panel_per_stream: u32,
+        write_frac: f64,
+        gap: u32,
+        stream_elems: u64,
+        n_cores: u16,
+    ) -> Self {
+        let n = n_cores as usize;
+        SharedPanel {
+            name,
+            panel_blocks,
+            panel_per_stream,
+            write_frac,
+            gap,
+            stream_elems,
+            n_cores,
+            stream_pos: vec![0; n],
+            panel_pos: vec![0; n],
+            phase: vec![0; n],
+            rng: (0..n).map(|i| Rng::new(i as u64)).collect(),
+        }
+    }
+}
+
+impl Workload for SharedPanel {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn next_op(&mut self, core: CoreId) -> Option<Op> {
+        let c = core as usize;
+        if self.phase[c] < self.panel_per_stream {
+            // Shared panel walk (all cores touch the same region).
+            let addr = layout::region(16) + (self.panel_pos[c] % self.panel_blocks) * BLOCK;
+            self.panel_pos[c] += 1;
+            self.phase[c] += 1;
+            Some(Op::read(addr, self.gap))
+        } else {
+            // Private stream step (rows of A / C).
+            self.phase[c] = 0;
+            let addr = layout::core_region(core, 0) + (self.stream_pos[c] % self.stream_elems) * BLOCK;
+            self.stream_pos[c] += 1;
+            let write = self.rng[c].chance(self.write_frac);
+            Some(Op { addr, write, gap: self.gap })
+        }
+    }
+
+    fn reset(&mut self, seed: u64) {
+        let mut r = Rng::new(seed);
+        for c in 0..self.n_cores as usize {
+            self.stream_pos[c] = r.below(self.stream_elems);
+            self.panel_pos[c] = r.below(self.panel_blocks);
+            self.phase[c] = 0;
+            self.rng[c] = Rng::new(seed ^ 0xABCD ^ ((c as u64) << 24));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// RandomTable
+// ---------------------------------------------------------------------
+
+/// Probe traffic over a large table, optionally hub-skewed (zipf-like),
+/// mixed with a private input stream.
+pub struct RandomTable {
+    name: &'static str,
+    table_blocks: u64,
+    zipf: bool,
+    write_frac: f64,
+    /// Private streaming reads between probes (tuple fetches).
+    stream_mix: u32,
+    gap: u32,
+    n_cores: u16,
+    rng: Vec<Rng>,
+    phase: Vec<u32>,
+    stream_pos: Vec<u64>,
+}
+
+impl RandomTable {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &'static str,
+        table_blocks: u64,
+        zipf: bool,
+        write_frac: f64,
+        stream_mix: u32,
+        gap: u32,
+        n_cores: u16,
+    ) -> Self {
+        let n = n_cores as usize;
+        RandomTable {
+            name,
+            table_blocks,
+            zipf,
+            write_frac,
+            stream_mix,
+            gap,
+            n_cores,
+            rng: (0..n).map(|i| Rng::new(i as u64)).collect(),
+            phase: vec![0; n],
+            stream_pos: vec![0; n],
+        }
+    }
+}
+
+impl Workload for RandomTable {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn next_op(&mut self, core: CoreId) -> Option<Op> {
+        let c = core as usize;
+        if self.phase[c] < self.stream_mix {
+            self.phase[c] += 1;
+            let addr = layout::core_region(core, 1) + (self.stream_pos[c] % (1 << 20)) * BLOCK;
+            self.stream_pos[c] += 1;
+            return Some(Op::read(addr, self.gap));
+        }
+        self.phase[c] = 0;
+        let r = &mut self.rng[c];
+        let b = if self.zipf { r.zipfish(self.table_blocks) } else { r.below(self.table_blocks) };
+        let write = r.chance(self.write_frac);
+        Some(Op { addr: layout::region(32) + b * BLOCK, write, gap: self.gap })
+    }
+
+    fn reset(&mut self, seed: u64) {
+        for c in 0..self.n_cores as usize {
+            self.rng[c] = Rng::new(seed.wrapping_mul(0x9E37).wrapping_add(c as u64));
+            self.phase[c] = 0;
+            self.stream_pos[c] = self.rng[c].below(1 << 20);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// StencilSweep
+// ---------------------------------------------------------------------
+
+/// Row sweeps over a private 2-D slab reading neighbour rows.
+pub struct StencilSweep {
+    name: &'static str,
+    /// Blocks per row (≥ L1 blocks ⇒ vertical reuse reaches memory).
+    row_blocks: u64,
+    rows: u64,
+    /// Row offsets read per cell-block (e.g. [-1, 0, 1] for a 5-point
+    /// stencil collapsed to block granularity).
+    deltas: Vec<i64>,
+    /// Write the centre block after the reads.
+    write_center: bool,
+    gap: u32,
+    n_cores: u16,
+    st: Vec<StencilState>,
+}
+
+#[derive(Clone, Copy, Default)]
+struct StencilState {
+    row: u64,
+    blk: u64,
+    d: usize,
+    wrote: bool,
+}
+
+impl StencilSweep {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &'static str,
+        row_blocks: u64,
+        rows: u64,
+        deltas: Vec<i64>,
+        write_center: bool,
+        gap: u32,
+        n_cores: u16,
+    ) -> Self {
+        let n = n_cores as usize;
+        StencilSweep {
+            name,
+            row_blocks,
+            rows,
+            deltas,
+            write_center,
+            gap,
+            n_cores,
+            st: vec![StencilState::default(); n],
+        }
+    }
+
+    fn addr(&self, core: CoreId, row: i64, blk: u64) -> u64 {
+        let row = row.rem_euclid(self.rows as i64) as u64;
+        layout::core_region(core, 2) + (row * self.row_blocks + blk) * BLOCK
+    }
+}
+
+impl Workload for StencilSweep {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn next_op(&mut self, core: CoreId) -> Option<Op> {
+        let c = core as usize;
+        let s = self.st[c];
+        if s.d < self.deltas.len() {
+            let addr = self.addr(core, s.row as i64 + self.deltas[s.d], s.blk);
+            self.st[c].d += 1;
+            return Some(Op::read(addr, self.gap));
+        }
+        if self.write_center && !s.wrote {
+            let addr = self.addr(core, s.row as i64, s.blk);
+            self.st[c].wrote = true;
+            return Some(Op::store(addr, self.gap));
+        }
+        // Advance to the next block / row.
+        let st = &mut self.st[c];
+        st.d = 0;
+        st.wrote = false;
+        st.blk += 1;
+        if st.blk == self.row_blocks {
+            st.blk = 0;
+            st.row = (st.row + 1) % self.rows;
+        }
+        self.next_op(core)
+    }
+
+    fn reset(&mut self, seed: u64) {
+        let mut r = Rng::new(seed);
+        for c in 0..self.n_cores as usize {
+            self.st[c] =
+                StencilState { row: r.below(self.rows), blk: 0, d: 0, wrote: false };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_round_robin_arrays() {
+        let mut w = Streams::new(
+            "t",
+            vec![
+                StreamArray { region: 0, stride: 64, write: false },
+                StreamArray { region: 1, stride: 64, write: true },
+            ],
+            1024,
+            1,
+            2,
+        );
+        w.reset(0);
+        let a = w.next_op(0).unwrap();
+        let b = w.next_op(0).unwrap();
+        assert!(!a.write);
+        assert!(b.write);
+        assert_ne!(a.addr, b.addr);
+    }
+
+    #[test]
+    fn streams_never_revisit_within_wrap() {
+        let mut w = Streams::new(
+            "t",
+            vec![StreamArray { region: 0, stride: 64, write: false }],
+            4096,
+            1,
+            1,
+        );
+        w.reset(0);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4096 {
+            assert!(seen.insert(w.next_op(0).unwrap().addr), "stream revisited");
+        }
+    }
+
+    #[test]
+    fn tiled_reuse_revisits_tile() {
+        let mut w = TiledReuse::new("t", 16, 3, 1, 32, 0.0, 1, 4, 0, 2);
+        w.reset(0);
+        let first: Vec<u64> = (0..16).map(|_| w.next_op(0).unwrap().addr).collect();
+        let second: Vec<u64> = (0..16).map(|_| w.next_op(0).unwrap().addr).collect();
+        assert_eq!(first, second, "revisit must re-read the same blocks");
+    }
+
+    #[test]
+    fn tiled_reuse_alias_stride_homes_one_vault() {
+        // alias_stride = 32 = n_vaults, spread 1: every block ≡ lane mod 32.
+        let mut w = TiledReuse::new("t", 8, 2, 32, 1, 0.0, 1, 4, 0, 4);
+        w.reset(0);
+        for core in 0..4u16 {
+            for _ in 0..32 {
+                let op = w.next_op(core).unwrap();
+                assert_eq!((op.addr / 64) % 32, (layout::region(8) / 64) % 32);
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_reuse_spread_uses_n_lanes() {
+        let mut w = TiledReuse::new("t", 8, 1, 32, 4, 0.0, 1, 4, 0, 8);
+        w.reset(0);
+        let mut lanes = std::collections::HashSet::new();
+        for core in 0..8u16 {
+            let op = w.next_op(core).unwrap();
+            lanes.insert((op.addr / 64) % 32);
+        }
+        assert_eq!(lanes.len(), 4);
+    }
+
+    #[test]
+    fn shared_panel_interleaves_shared_and_private() {
+        let mut w = SharedPanel::new("t", 1024, 2, 0.5, 1, 4096, 2);
+        w.reset(1);
+        let ops: Vec<Op> = (0..6).map(|_| w.next_op(0).unwrap()).collect();
+        // Pattern: panel, panel, stream, panel, panel, stream.
+        let panel_base = layout::region(16);
+        assert!(ops[0].addr >= panel_base && ops[0].addr < panel_base + 1024 * 64);
+        assert!(ops[1].addr >= panel_base && ops[1].addr < panel_base + 1024 * 64);
+        assert!(ops[2].addr >= layout::core_region(0, 0));
+        assert!(!ops[0].write && !ops[1].write, "panel reads only");
+    }
+
+    #[test]
+    fn shared_panel_is_shared_across_cores() {
+        let mut w = SharedPanel::new("t", 64, 1, 0.0, 1, 4096, 2);
+        w.reset(0);
+        let a: std::collections::HashSet<u64> =
+            (0..64).filter_map(|_| w.next_op(0)).map(|o| o.addr / 64).collect();
+        let b: std::collections::HashSet<u64> =
+            (0..64).filter_map(|_| w.next_op(1)).map(|o| o.addr / 64).collect();
+        assert!(a.intersection(&b).count() > 0, "cores must share panel blocks");
+    }
+
+    #[test]
+    fn random_table_stays_in_table() {
+        let mut w = RandomTable::new("t", 1000, false, 0.2, 0, 1, 1);
+        w.reset(0);
+        let base = layout::region(32);
+        for _ in 0..1000 {
+            let op = w.next_op(0).unwrap();
+            assert!(op.addr >= base && op.addr < base + 1000 * 64);
+        }
+    }
+
+    #[test]
+    fn zipf_table_skews_hot() {
+        let mut w = RandomTable::new("t", 4096, true, 0.0, 0, 1, 1);
+        w.reset(0);
+        let mut low = 0;
+        for _ in 0..2000 {
+            let op = w.next_op(0).unwrap();
+            if (op.addr - layout::region(32)) / 64 < 512 {
+                low += 1;
+            }
+        }
+        assert!(low > 700, "hubs must be hot, got {low}");
+    }
+
+    #[test]
+    fn stencil_reads_neighbours_then_writes() {
+        let mut w = StencilSweep::new("t", 8, 16, vec![-1, 0, 1], true, 1, 1);
+        w.reset(0);
+        let ops: Vec<Op> = (0..4).map(|_| w.next_op(0).unwrap()).collect();
+        assert!(!ops[0].write && !ops[1].write && !ops[2].write);
+        assert!(ops[3].write);
+        // Centre read and write hit the same block.
+        assert_eq!(ops[1].addr, ops[3].addr);
+    }
+
+    #[test]
+    fn stencil_revisits_rows_across_sweeps() {
+        let mut w = StencilSweep::new("t", 4, 4, vec![0, 1], false, 1, 1);
+        w.reset(0);
+        let mut addrs = Vec::new();
+        for _ in 0..100 {
+            addrs.push(w.next_op(0).unwrap().addr);
+        }
+        let unique: std::collections::HashSet<_> = addrs.iter().collect();
+        assert!(unique.len() < addrs.len(), "rows must be revisited");
+    }
+}

@@ -1,0 +1,53 @@
+//! Hashjoin kernels (Balkesen et al., Table III).
+//!
+//! * **NPO / ProbeHashTable** — no-partitioning join probe: every tuple
+//!   hashes to a uniformly random bucket of a table far larger than L1.
+//!   No reuse, perfectly balanced: subscription is pure overhead and the
+//!   count-table ablation (fig17) uses this workload as its control.
+//! * **PRH / HistogramJoin** — partitioned radix histogram build: tuples
+//!   scatter into per-partition histograms whose pages alias onto a small
+//!   group of vaults (power-of-two partition strides), giving the burst
+//!   imbalance the paper observes.
+
+use super::engines::{RandomTable, TiledReuse};
+use super::Workload;
+
+/// Probe table: 2^21 blocks = 128 MiB.
+const TABLE_BLOCKS: u64 = 1 << 21;
+
+/// NPO probe: uniform random bucket reads mixed with a streaming tuple
+/// fetch per probe.
+pub fn npo(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(RandomTable::new("HSJNPO", TABLE_BLOCKS, false, 0.05, 1, 8, n_cores))
+}
+
+/// PRH histogram build: per-core partitions of 512 blocks revisited as
+/// tuples accumulate, with a 512-block tuple stream between passes,
+/// strided so partition headers share home vaults (vault_spread = 8:
+/// 4 cores x 512 = 2048 active entries per hot vault).
+pub fn prh(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(TiledReuse::new("HSJPRH", 512, 3, 32, 8, 0.6, 6, 8, 512, n_cores))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npo_probes_are_read_mostly() {
+        let mut w = npo(2);
+        w.reset(0);
+        let writes = (0..1000).filter(|_| w.next_op(0).unwrap().write).count();
+        assert!(writes < 100, "NPO probes mostly read, got {writes} writes");
+    }
+
+    #[test]
+    fn prh_is_write_heavy() {
+        let mut w = prh(2);
+        w.reset(0);
+        // Tile passes are 60% writes; the interleaved tuple stream is
+        // read-only, so ~30% of all ops write — far above NPO's 5%.
+        let writes = (0..1000).filter(|_| w.next_op(0).unwrap().write).count();
+        assert!(writes > 200, "histogram build writes, got {writes}");
+    }
+}

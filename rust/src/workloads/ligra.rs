@@ -1,0 +1,83 @@
+//! Ligra graph kernels (Table III): sparse edge-map traversals on a
+//! USA-road-shaped graph and dense iterations on an R-MAT graph.
+//!
+//! Road networks have near-uniform low degree — frontier expansion is
+//! uniform random pointer chasing with almost no post-L1 reuse (the flat
+//! Fig 9 middle). R-MAT graphs have hub vertices: triangle counting
+//! re-reads hub adjacency lists constantly, concentrating demand on the
+//! hubs' home vaults.
+
+use super::engines::RandomTable;
+use super::Workload;
+
+/// USA-road vertex data: 2^22 blocks = 256 MiB spread over all vaults.
+const ROAD_BLOCKS: u64 = 1 << 22;
+/// R-MAT adjacency: smaller, hub-skewed.
+const RMAT_BLOCKS: u64 = 1 << 18;
+
+/// Betweenness centrality, EdgeMapSparse (USA): random vertex visits with
+/// score writes.
+pub fn bc_ems(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(RandomTable::new("LIGBcEms", ROAD_BLOCKS, false, 0.25, 1, 8, n_cores))
+}
+
+/// Breadth-first search, EdgeMapSparse (USA): visited-flag updates on a
+/// uniform frontier.
+pub fn bfs_ems(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(RandomTable::new("LIGBfsEms", ROAD_BLOCKS, false, 0.3, 1, 8, n_cores))
+}
+
+/// BFS-based connected components (USA): like BFS with heavier label
+/// writes.
+pub fn components_ems(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(RandomTable::new("LIGConCEms", ROAD_BLOCKS, false, 0.4, 1, 8, n_cores))
+}
+
+/// PageRank, EdgeMapDense (USA): every core streams its edge partition
+/// while gathering from the shared rank vector — modelled as a zipf-less
+/// random gather over a *smaller* vector with stream mix (the rank vector
+/// is re-read every iteration: real, if scattered, reuse).
+pub fn pagerank_emd(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(RandomTable::new("LIGPrkEmd", 1 << 14, false, 0.1, 2, 8, n_cores))
+}
+
+/// Triangle counting, EdgeMapDense (R-MAT): hub adjacency lists are
+/// re-read from every core — zipf-hot blocks with real reuse.
+pub fn triangle_emd(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(RandomTable::new("LIGTriEmd", RMAT_BLOCKS, true, 0.05, 1, 8, n_cores))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn road_kernels_have_negligible_block_reuse() {
+        let mut w = bfs_ems(2);
+        w.reset(7);
+        let mut seen = std::collections::HashSet::new();
+        let mut repeats = 0;
+        for _ in 0..2000 {
+            let op = w.next_op(0).unwrap();
+            if !seen.insert(op.addr / 64) {
+                repeats += 1;
+            }
+        }
+        assert!(repeats < 20, "road graph should almost never repeat, got {repeats}");
+    }
+
+    #[test]
+    fn triangle_reuses_hub_blocks() {
+        let mut w = triangle_emd(2);
+        w.reset(7);
+        let mut seen = std::collections::HashSet::new();
+        let mut repeats = 0;
+        for _ in 0..4000 {
+            let op = w.next_op(0).unwrap();
+            if !seen.insert(op.addr / 64) {
+                repeats += 1;
+            }
+        }
+        assert!(repeats > 100, "hubs must repeat, got {repeats}");
+    }
+}

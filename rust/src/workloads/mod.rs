@@ -1,0 +1,128 @@
+//! The 31 DAMOV-representative workloads (Table III) as deterministic,
+//! seeded memory-traffic generators.
+//!
+//! Each generator reproduces the *traffic properties* of its kernel's loop
+//! nest — the properties the paper's results hinge on:
+//!
+//! * **stream vs. reuse** — how often a block returns after leaving the
+//!   L1 (drives Fig 10 and who benefits in Fig 9);
+//! * **sharing** — whether post-L1 reuse comes from one core (subscription
+//!   wins) or many cores (resubscription thrash, the Fig 9 losers);
+//! * **home-vault imbalance** — strided layouts that alias onto few vaults
+//!   (drives the CoV of Figs 3/4 and the big winners SPLRad / CHABsBez /
+//!   PHELinReg).
+//!
+//! Generators are infinite streams (the driver stops at the configured
+//! request budget); `reset(seed)` restarts them for the 5-run methodology.
+
+pub mod catalog;
+pub mod engines;
+
+pub mod chai;
+pub mod darknet;
+pub mod hashjoin;
+pub mod ligra;
+pub mod phoenix;
+pub mod polybench;
+pub mod rodinia;
+pub mod splash;
+pub mod stream;
+
+use crate::CoreId;
+
+/// One operation emitted by a workload for one core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Op {
+    /// Byte address touched.
+    pub addr: u64,
+    /// Store (true) or load (false).
+    pub write: bool,
+    /// Compute cycles the core spends *before* this access (models the
+    /// kernel's arithmetic between memory operations).
+    pub gap: u32,
+}
+
+impl Op {
+    pub fn read(addr: u64, gap: u32) -> Self {
+        Op { addr, write: false, gap }
+    }
+
+    pub fn store(addr: u64, gap: u32) -> Self {
+        Op { addr, write: true, gap }
+    }
+}
+
+/// A multi-core memory-traffic generator.
+pub trait Workload: Send {
+    /// Table III short name (e.g. "SPLRad").
+    fn name(&self) -> &'static str;
+    /// Next operation for `core`, or `None` if this core's stream ended.
+    fn next_op(&mut self, core: CoreId) -> Option<Op>;
+    /// Restart the stream for a new run with a new seed.
+    fn reset(&mut self, seed: u64);
+}
+
+/// Shared layout constants: per-structure base addresses spaced far apart
+/// so structures never collide (the address space is virtual anyway — only
+/// block→vault mapping matters).
+pub mod layout {
+    /// 1 GiB regions per logical array — large enough that an array
+    /// partitioned across 32 cores (e.g. 32 x 16 MiB STREAM slices) never
+    /// bleeds into the next region. The address space is virtual; only the
+    /// block -> vault mapping matters.
+    pub const REGION: u64 = 1 << 30;
+
+    /// Region bases are staggered by one block per region index so that
+    /// co-indexed elements of different arrays (a[i], b[i], c[i]) land on
+    /// *different* home vaults — as real allocators' page offsets do —
+    /// instead of conveying onto one vault per loop iteration.
+    pub const fn region(i: u64) -> u64 {
+        1 + i * (REGION + 64) // +1 keeps address 0 unused
+    }
+
+    /// Per-core private region `i` for core `c`.
+    pub const fn core_region(c: u16, i: u64) -> u64 {
+        region(64 + c as u64 * 8 + i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    /// Every catalog workload must be deterministic under reset and emit
+    /// sane ops.
+    #[test]
+    fn all_workloads_deterministic_and_sane() {
+        let cfg = SimConfig::hmc();
+        for name in catalog::ALL_NAMES {
+            let mut w1 = catalog::build(name, &cfg).unwrap();
+            let mut w2 = catalog::build(name, &cfg).unwrap();
+            w1.reset(42);
+            w2.reset(42);
+            for i in 0..2000 {
+                let c = (i % cfg.n_vaults as u64) as u16;
+                let a = w1.next_op(c);
+                let b = w2.next_op(c);
+                assert_eq!(a, b, "{name} nondeterministic at op {i}");
+                if let Some(op) = a {
+                    assert!(op.addr > 0, "{name} touched address 0");
+                    assert!(op.gap < 100_000, "{name} absurd gap");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reset_with_new_seed_changes_random_workloads() {
+        let cfg = SimConfig::hmc();
+        let mut w1 = catalog::build("HSJNPO", &cfg).unwrap();
+        let mut w2 = catalog::build("HSJNPO", &cfg).unwrap();
+        w1.reset(1);
+        w2.reset(2);
+        let a: Vec<_> = (0..100).map(|_| w1.next_op(0)).collect();
+        let b: Vec<_> = (0..100).map(|_| w2.next_op(0)).collect();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,45 @@
+//! Phoenix linear regression (Table III): `linear_regression_map`.
+//!
+//! The paper's highest-CoV workload (Fig 3) and one of DL-PIM's biggest
+//! winners. The map phase processes point chunks whose struct layout
+//! strides align with the vault interleave, so each core's working chunk
+//! homes onto a *single* vault — and all cores' chunks alias onto the same
+//! few vaults. The hot vaults drown in queuing (70–80% of latency, Fig 1);
+//! subscribing each core's chunk to its own vault both localizes the reuse
+//! and flattens the CoV (Figs 12/13), which is why PHELinReg's traffic
+//! actually *drops* below baseline under DL-PIM (Fig 14).
+
+use super::engines::TiledReuse;
+use super::Workload;
+
+/// Map over point chunks: 224-block hot chunks revisited 5x (x, y, xx,
+/// yy, xy accumulations) with a 448-block point-stream between passes
+/// (the input scan, which also flushes the L1 so chunk reuse is post-L1).
+/// Struct-stride aliasing homes every chunk on ONE vault (spread = 1):
+/// 32 cores x 224 blocks = 7168 active entries — inside the hot vault's
+/// 8192-entry table, as the real working set must be for DL-PIM to win.
+pub fn linreg(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(TiledReuse::new("PHELinReg", 224, 5, 32, 1, 0.1, 6, 12, 448, n_cores))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::AddressMap;
+
+    #[test]
+    fn all_accesses_alias_one_vault() {
+        let cfg = SimConfig::hmc();
+        let map = AddressMap::new(&cfg);
+        let mut w = linreg(8);
+        w.reset(0);
+        let mut homes = std::collections::HashSet::new();
+        for core in 0..8u16 {
+            for _ in 0..100 {
+                homes.insert(map.home_of(w.next_op(core).unwrap().addr));
+            }
+        }
+        assert_eq!(homes.len(), 1, "PHELinReg must hammer one vault");
+    }
+}

@@ -1,0 +1,102 @@
+//! PolyBench: the dense linear-algebra and stencil kernels of Table III.
+//!
+//! The linear-algebra group is the paper's cautionary tale: GEMM-shaped
+//! kernels re-read a *shared* B panel from every core, so always-subscribe
+//! turns each panel block into a resubscription ping-pong ball — Fig 9
+//! reports up to −17% for PLYgemm / PLY3mm. The adaptive policy's whole
+//! job is to detect that and disable subscription (Fig 11). The stencils
+//! are private-slab sweeps with modest neighbour reuse.
+
+use super::engines::{SharedPanel, StencilSweep, TiledReuse};
+use super::Workload;
+
+/// Panel of 4096 blocks = 256 KiB: 8x the 32 KiB L1, so panel reuse is
+/// post-L1 and visible to the subscription machinery.
+const PANEL: u64 = 4096;
+
+/// `C = alpha*A*B + beta*C` — shared B panel, streamed A/C rows, 2 FLOPs
+/// per element between accesses.
+pub fn gemm(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(SharedPanel::new("PLYgemm", PANEL, 4, 0.25, 10, 1 << 18, n_cores))
+}
+
+/// Three chained multiplies: E=A·B, F=C·D, G=E·F. Same shared-panel shape
+/// as gemm with a bigger combined panel and more of the stream written
+/// back (intermediates E, F).
+pub fn mm3(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(SharedPanel::new("PLY3mm", PANEL * 2, 4, 0.4, 10, 1 << 18, n_cores))
+}
+
+/// Multi-resolution analysis kernel: `sum(r,q,p) += A[r][q][s]*C4[s][p]`.
+/// Each core's r-slice re-reads its working block of the coefficient
+/// tensor many times — per-core blocked reuse over evenly-interleaved
+/// homes. The 640-block working set is why Fig 16 shows doitgen gaining
+/// with larger subscription tables: it thrashes a 1024-entry table and
+/// fits larger ones.
+pub fn doitgen(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(TiledReuse::new("PLYDoitgen", 640, 6, 1, 32, 0.15, 8, 2, 0, n_cores))
+}
+
+/// gemver: `B = A + u1*v1' + u2*v2'; x = B'*y; w = B*x` — streaming matrix
+/// sweeps plus re-read vectors. Vectors (per-core tiles, contiguous so
+/// homes are balanced) carry the reuse.
+pub fn gemver(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(TiledReuse::new("PLYgemver", 640, 3, 1, 32, 0.3, 8, 2, 0, n_cores))
+}
+
+/// Gram-Schmidt: repeated passes over the growing basis — per-core tiles
+/// revisited many times, contiguous (balanced homes).
+pub fn gramschmidt(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(TiledReuse::new("PLYGramSch", 768, 6, 1, 32, 0.2, 8, 2, 0, n_cores))
+}
+
+/// Symmetric multiply: triangular access re-reads both operand panels;
+/// moderate shared reuse.
+pub fn symm(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(SharedPanel::new("PLYSymm", PANEL, 3, 0.3, 10, 1 << 18, n_cores))
+}
+
+/// 2-D convolution: 3x3 stencil over a private slab. Row length of 768
+/// blocks (48 KiB) exceeds L1, so the north/south neighbour rows are
+/// re-fetched from memory on every sweep.
+pub fn conv2d(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(StencilSweep::new("PLYcon2d", 768, 64, vec![-1, 0, 1], true, 8, n_cores))
+}
+
+/// 2-D FDTD: three field arrays swept with neighbour access — same slab
+/// shape as conv2d with an extra row-delta and heavier writes.
+pub fn fdtd2d(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(StencilSweep::new("PLYdtd", 768, 64, vec![-1, 0, 0, 1], true, 8, n_cores))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_reads_shared_panel_from_all_cores() {
+        let mut w = gemm(4);
+        w.reset(0);
+        let mut shared = 0;
+        for core in 0..4u16 {
+            for _ in 0..50 {
+                let op = w.next_op(core).unwrap();
+                if op.addr < super::super::layout::core_region(0, 0) {
+                    shared += 1;
+                }
+            }
+        }
+        assert!(shared > 100, "panel reads must dominate, got {shared}");
+    }
+
+    #[test]
+    fn conv2d_touches_three_rows_per_block() {
+        let mut w = conv2d(1);
+        w.reset(0);
+        let ops: Vec<_> = (0..4).map(|_| w.next_op(0).unwrap()).collect();
+        let rows: std::collections::HashSet<u64> =
+            ops.iter().take(3).map(|o| o.addr / (768 * 64)).collect();
+        assert!(rows.len() >= 2, "stencil must span rows");
+        assert!(ops[3].write);
+    }
+}

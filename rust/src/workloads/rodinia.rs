@@ -1,0 +1,38 @@
+//! Rodinia kernels (Table III).
+//!
+//! * **BFS (RODBfs)** — level-synchronous BFS over a uniform graph:
+//!   random neighbour reads, frontier/cost writes, negligible reuse.
+//! * **Needleman-Wunsch (RODNw)** — wavefront dynamic programming: each
+//!   anti-diagonal cell reads its west/north/north-west neighbours. At
+//!   block granularity that is a two-row stencil with real inter-sweep
+//!   reuse on long rows.
+
+use super::engines::{RandomTable, StencilSweep};
+use super::Workload;
+
+/// BFS over 2^21 graph blocks, 35% writes (cost + frontier updates).
+pub fn bfs(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(RandomTable::new("RODBfs", 1 << 21, false, 0.35, 1, 8, n_cores))
+}
+
+/// NW wavefront: 640-block rows (40 KiB > L1), reads previous and current
+/// row, writes the current cell block.
+pub fn nw(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(StencilSweep::new("RODNw", 640, 48, vec![-1, 0], true, 8, n_cores))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nw_reads_two_rows() {
+        let mut w = nw(1);
+        w.reset(0);
+        let a = w.next_op(0).unwrap();
+        let b = w.next_op(0).unwrap();
+        let c = w.next_op(0).unwrap();
+        assert!(!a.write && !b.write && c.write);
+        assert_ne!(a.addr / (640 * 64), b.addr / (640 * 64), "different rows");
+    }
+}

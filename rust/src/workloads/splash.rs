@@ -1,0 +1,126 @@
+//! SPLASH2 kernels (Table III).
+//!
+//! * **FFT Reverse (SPLFftRev)** — bit-reverse reorder: reads at
+//!   bit-reversed indices (statistically uniform over the array), writes
+//!   sequential. One touch per element: no reuse, balanced.
+//! * **FFT Transpose (SPLFftTra)** — blocked transpose of a 2^k-square
+//!   matrix: the column walk strides by a power-of-two row length, which
+//!   aliases the entire column onto one vault — classic interleave
+//!   pathology, high CoV with *zero* reuse (subscription cannot help;
+//!   adaptive must bail).
+//! * **Ocean ncp jacobcalc / laplacalc, Ocean cp slave2 (SPLOcnpJac /
+//!   SPLOcnpLap / SPLOcpSlave)** — grid relaxations: 5-point stencils over
+//!   private slabs with neighbour-row reuse.
+//! * **Radix (SPLRad)** — `slave_sort`: per-core digit histograms + bucket
+//!   scatter. The per-digit bucket arrays are page-strided so each core's
+//!   buckets alias onto a two-vault cluster; counts are revisited for every
+//!   key. The paper's single biggest winner (+105%, Fig 9).
+
+use super::engines::{RandomTable, StencilSweep, StreamArray, Streams, TiledReuse};
+use super::Workload;
+
+/// FFT bit-reverse: statistically uniform reads over 2^20 blocks with
+/// sequential writes — modelled as a uniform random read + streamed write
+/// mix (one write per read via write_frac 0.5 on the probe stream).
+pub fn fft_reverse(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(RandomTable::new("SPLFftRev", 1 << 20, false, 0.5, 1, 8, n_cores))
+}
+
+/// FFT transpose: column reads stride by the row length (2048 blocks ≡ 0
+/// mod 32 ⇒ one vault per column walk), row writes sequential.
+pub fn fft_transpose(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(Streams::new(
+        "SPLFftTra",
+        vec![
+            // Column read: stride = one 2048-double row = 16 KiB = 256
+            // blocks, a multiple of n_vaults: the column aliases one vault.
+            StreamArray { region: 6, stride: 2048 * 8, write: false },
+            // Row write: sequential.
+            StreamArray { region: 7, stride: 64, write: true },
+        ],
+        1 << 16,
+        8,
+        n_cores,
+    ))
+}
+
+/// Ocean jacobcalc: 5-point relaxation, long rows, read-heavy.
+pub fn ocean_jacob(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(StencilSweep::new("SPLOcnpJac", 768, 64, vec![-1, 0, 1], true, 8, n_cores))
+}
+
+/// Ocean laplacalc: like jacobcalc with an extra in-row read pass.
+pub fn ocean_laplace(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(StencilSweep::new("SPLOcnpLap", 768, 64, vec![-1, 0, 0, 1], true, 8, n_cores))
+}
+
+/// Ocean cp slave2: multi-grid worker — deeper stencil (two rows each
+/// side), fewer writes.
+pub fn ocean_slave(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(StencilSweep::new(
+        "SPLOcpSlave",
+        768,
+        64,
+        vec![-2, -1, 0, 1, 2],
+        true,
+        8,
+        n_cores,
+    ))
+}
+
+/// Radix slave_sort: per-core 320-block bucket tiles revisited 8x (digit
+/// counting + scatter) with a 384-block key stream between passes,
+/// page-strided onto a 2-vault cluster (16 cores x 320 = 5120 active
+/// entries per hot vault — fits the 8192-entry table), write-heavy.
+pub fn radix(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(TiledReuse::new("SPLRad", 320, 8, 32, 2, 0.5, 6, 4, 384, n_cores))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::AddressMap;
+
+    #[test]
+    fn transpose_column_reads_alias_one_vault() {
+        let cfg = SimConfig::hmc();
+        let map = AddressMap::new(&cfg);
+        let mut w = fft_transpose(2);
+        w.reset(0);
+        let mut read_homes = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let op = w.next_op(0).unwrap();
+            if !op.write {
+                read_homes.insert(map.home_of(op.addr));
+            }
+        }
+        assert_eq!(read_homes.len(), 1, "column walk must alias one vault");
+    }
+
+    #[test]
+    fn radix_concentrates_on_two_vaults() {
+        let cfg = SimConfig::hmc();
+        let map = AddressMap::new(&cfg);
+        let mut w = radix(8);
+        w.reset(0);
+        let mut homes = std::collections::HashSet::new();
+        for core in 0..8u16 {
+            for _ in 0..200 {
+                homes.insert(map.home_of(w.next_op(core).unwrap().addr));
+            }
+        }
+        assert_eq!(homes.len(), 2);
+    }
+
+    #[test]
+    fn ocean_kernels_have_distinct_depths() {
+        let mut j = ocean_jacob(1);
+        let mut s = ocean_slave(1);
+        j.reset(0);
+        s.reset(0);
+        let jr = (0..10).filter(|_| !j.next_op(0).unwrap().write).count();
+        let sr = (0..10).filter(|_| !s.next_op(0).unwrap().write).count();
+        assert!(sr > jr, "slave2 reads more neighbour rows");
+    }
+}

@@ -1,0 +1,95 @@
+//! STREAM (McCalpin): Add / Copy / Scale / Triad.
+//!
+//! Pure partitioned streaming — every block is touched exactly once per
+//! sweep, so post-L1 reuse is zero and the interleaved layout spreads
+//! demand perfectly. The paper's Fig 9 shows speedups ≈ 1.00 for all four:
+//! subscription has nothing to exploit, and the adaptive policy must learn
+//! to stay out of the way.
+
+use super::engines::{StreamArray, Streams};
+use super::Workload;
+
+/// Elements per core per sweep (x 64 B ≈ 16 MiB/core: far beyond L1).
+const ELEMS: u64 = 1 << 18;
+/// Loads/stores plus index arithmetic between accesses (DAMOV in-order core).
+const GAP: u32 = 8;
+
+/// `c[i] = a[i] + b[i]`
+pub fn add(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(Streams::new(
+        "STRAdd",
+        vec![
+            StreamArray { region: 0, stride: 64, write: false },
+            StreamArray { region: 1, stride: 64, write: false },
+            StreamArray { region: 2, stride: 64, write: true },
+        ],
+        ELEMS,
+        GAP,
+        n_cores,
+    ))
+}
+
+/// `c[i] = a[i]`
+pub fn copy(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(Streams::new(
+        "STRCpy",
+        vec![
+            StreamArray { region: 0, stride: 64, write: false },
+            StreamArray { region: 2, stride: 64, write: true },
+        ],
+        ELEMS,
+        GAP,
+        n_cores,
+    ))
+}
+
+/// `b[i] = s * c[i]`
+pub fn scale(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(Streams::new(
+        "STRSca",
+        vec![
+            StreamArray { region: 2, stride: 64, write: false },
+            StreamArray { region: 1, stride: 64, write: true },
+        ],
+        ELEMS,
+        GAP,
+        n_cores,
+    ))
+}
+
+/// `a[i] = b[i] + s * c[i]`
+pub fn triad(n_cores: u16) -> Box<dyn Workload> {
+    Box::new(Streams::new(
+        "STRTriad",
+        vec![
+            StreamArray { region: 1, stride: 64, write: false },
+            StreamArray { region: 2, stride: 64, write: false },
+            StreamArray { region: 0, stride: 64, write: true },
+        ],
+        ELEMS,
+        GAP,
+        n_cores,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triad_pattern_is_read_read_write() {
+        let mut w = triad(2);
+        w.reset(0);
+        let ops: Vec<_> = (0..3).map(|_| w.next_op(0).unwrap()).collect();
+        assert!(!ops[0].write && !ops[1].write && ops[2].write);
+    }
+
+    #[test]
+    fn cores_are_partitioned() {
+        let mut w = add(4);
+        w.reset(0);
+        let a = w.next_op(0).unwrap().addr;
+        let b = w.next_op(1).unwrap().addr;
+        assert!(a.abs_diff(b) >= ELEMS * 64 / 2, "slices must not overlap");
+    }
+}

@@ -1,0 +1,264 @@
+//! Integration tests: the paper's headline *shapes* must hold on quick-
+//! scale runs — who wins, who loses, who is indifferent, and how the two
+//! memory technologies compare.
+
+use dlpim::config::{MemKind, SimConfig};
+use dlpim::coordinator::driver::simulate;
+use dlpim::coordinator::report::SimReport;
+use dlpim::policy::PolicyKind;
+use dlpim::workloads::catalog;
+
+fn run(mem: MemKind, policy: PolicyKind, workload: &str) -> SimReport {
+    let mut cfg = match mem {
+        MemKind::Hmc => SimConfig::hmc(),
+        MemKind::Hbm => SimConfig::hbm(),
+    }
+    .quick();
+    cfg.policy = policy;
+    simulate(&cfg, catalog::build(workload, &cfg).unwrap())
+}
+
+fn speedup(mem: MemKind, policy: PolicyKind, workload: &str) -> f64 {
+    let base = run(mem, PolicyKind::Never, workload);
+    run(mem, policy, workload).speedup_vs(&base)
+}
+
+// ---- Fig 9: always-subscribe winners and losers ----
+
+#[test]
+fn splrad_wins_big_under_always_subscribe() {
+    // Paper: +105% (2.05x). Shape: a large win.
+    let s = speedup(MemKind::Hmc, PolicyKind::Always, "SPLRad");
+    // Quick scale (cold tables) understates the win; default scale ~1.55.
+    assert!(s > 1.3, "SPLRad always-subscribe speedup {s:.3} should be >> 1");
+}
+
+#[test]
+fn phelinreg_wins_under_always_subscribe() {
+    let s = speedup(MemKind::Hmc, PolicyKind::Always, "PHELinReg");
+    assert!(s > 1.3, "PHELinReg speedup {s:.3}");
+}
+
+#[test]
+fn gemm_family_is_hurt_by_always_subscribe() {
+    // Paper: up to -17% for PLYgemm / PLY3mm.
+    for w in ["PLYgemm", "PLY3mm"] {
+        let s = speedup(MemKind::Hmc, PolicyKind::Always, w);
+        assert!(s < 0.97, "{w} must lose under always-subscribe, got {s:.3}");
+        assert!(s > 0.6, "{w} loss should be bounded, got {s:.3}");
+    }
+}
+
+#[test]
+fn streams_are_roughly_indifferent() {
+    // Paper: speedup ~= 1.00 for STREAM.
+    for w in ["STRAdd", "STRTriad"] {
+        let s = speedup(MemKind::Hmc, PolicyKind::Always, w);
+        assert!((0.85..1.25).contains(&s), "{w} always speedup {s:.3} should be ~1");
+    }
+}
+
+#[test]
+fn fft_transpose_has_no_reuse_to_exploit() {
+    let rep = run(MemKind::Hmc, PolicyKind::Always, "SPLFftTra");
+    let (l, r) = rep.reuse();
+    // The residual ~0.2 is the L1 writeback of the row-write stream landing
+    // on its own fill; no *demand* reuse exists.
+    assert!(l + r < 0.4, "transpose reuse must be ~0, got {:.2}", l + r);
+}
+
+// ---- Fig 11: adaptive recovers the losers, keeps the winners ----
+
+#[test]
+fn adaptive_recovers_always_subscribe_losses() {
+    for w in ["PLYgemm", "DRKYolo"] {
+        let base = run(MemKind::Hmc, PolicyKind::Never, w);
+        let always = run(MemKind::Hmc, PolicyKind::Always, w);
+        let adaptive = run(MemKind::Hmc, PolicyKind::Adaptive, w);
+        let s_al = always.speedup_vs(&base);
+        let s_ad = adaptive.speedup_vs(&base);
+        assert!(
+            s_ad > s_al,
+            "{w}: adaptive ({s_ad:.3}) must beat always ({s_al:.3})"
+        );
+    }
+}
+
+#[test]
+fn adaptive_keeps_most_of_the_win_on_winners() {
+    let base = run(MemKind::Hmc, PolicyKind::Never, "SPLRad");
+    let always = run(MemKind::Hmc, PolicyKind::Always, "SPLRad");
+    let adaptive = run(MemKind::Hmc, PolicyKind::Adaptive, "SPLRad");
+    let s_al = always.speedup_vs(&base);
+    let s_ad = adaptive.speedup_vs(&base);
+    assert!(s_ad > 0.8 * s_al, "adaptive {s_ad:.3} vs always {s_al:.3}");
+    assert!(s_ad > 1.25);
+}
+
+#[test]
+fn adaptive_reduces_memory_latency_on_winners() {
+    // Paper headline: -54% average latency per request on HMC.
+    let base = run(MemKind::Hmc, PolicyKind::Never, "SPLRad");
+    let adaptive = run(MemKind::Hmc, PolicyKind::Adaptive, "SPLRad");
+    let impr = adaptive.latency_improvement_vs(&base);
+    assert!(impr > 0.3, "latency improvement {:.1}% too small", impr * 100.0);
+}
+
+// ---- Fig 12: CoV flattening ----
+
+#[test]
+fn subscription_flattens_hot_vault_cov() {
+    for w in ["PHELinReg", "SPLRad", "CHABsBez"] {
+        let base = run(MemKind::Hmc, PolicyKind::Never, w);
+        let adaptive = run(MemKind::Hmc, PolicyKind::Adaptive, w);
+        assert!(base.cov() > 1.0, "{w} baseline CoV {:.2} should be high", base.cov());
+        assert!(
+            adaptive.cov() < base.cov(),
+            "{w}: adaptive CoV {:.2} must drop below baseline {:.2}",
+            adaptive.cov(),
+            base.cov()
+        );
+    }
+}
+
+#[test]
+fn balanced_workloads_have_low_cov() {
+    for w in ["STRAdd", "HSJNPO"] {
+        let rep = run(MemKind::Hmc, PolicyKind::Never, w);
+        assert!(rep.cov() < 0.3, "{w} CoV {:.3} should be ~0", rep.cov());
+    }
+}
+
+// ---- Fig 10 / selected set ----
+
+#[test]
+fn selected_workloads_have_reuse_and_streams_do_not() {
+    let with = run(MemKind::Hmc, PolicyKind::Always, "PLYDoitgen");
+    let (l, r) = with.reuse();
+    assert!(l + r > 0.5, "doitgen reuse {:.2}", l + r);
+    // Streams: the only "reuse" of a subscription is the single L1
+    // writeback landing on the just-parked fill — bounded well below 1.
+    let without = run(MemKind::Hmc, PolicyKind::Always, "STRCpy");
+    let (l, r) = without.reuse();
+    assert!(l + r < 0.7, "stream reuse {:.2}", l + r);
+}
+
+// ---- Figs 1/2: latency breakdown & HMC vs HBM ----
+
+#[test]
+fn baseline_has_substantial_remote_overhead() {
+    // Paper: 53% HMC / 43% HBM average across workloads; per-workload
+    // values vary, but a remote-heavy workload must show a large share.
+    let rep = run(MemKind::Hmc, PolicyKind::Never, "HSJNPO");
+    let (n, q, a) = rep.latency_fractions();
+    assert!(n + q > 0.35, "remote overhead {:.2} too small", n + q);
+    assert!(a > 0.15, "array share {a:.2} implausibly small");
+}
+
+#[test]
+fn hot_vault_workloads_are_queue_dominated() {
+    // Paper: high-CoV workloads attribute 70-80% of latency to queuing.
+    let rep = run(MemKind::Hmc, PolicyKind::Never, "PHELinReg");
+    let (_, q, _) = rep.latency_fractions();
+    assert!(q > 0.5, "queue share {q:.2} should dominate");
+}
+
+#[test]
+fn hbm_adaptive_also_improves_winners() {
+    // Paper Fig 15: HBM gains are smaller than HMC's (8 uncongested
+    // channels leave less queuing to recover); the winner must still gain
+    // and its memory latency must drop.
+    let base = run(MemKind::Hbm, PolicyKind::Never, "SPLRad");
+    let adaptive = run(MemKind::Hbm, PolicyKind::Adaptive, "SPLRad");
+    assert!(adaptive.speedup_vs(&base) > 1.0);
+    assert!(adaptive.latency_improvement_vs(&base) > 0.05);
+}
+
+#[test]
+fn hbm_network_share_is_smaller_than_hmc() {
+    // 4x2 mesh vs 6x6 mesh: fewer hops, lower transfer share.
+    let hmc = run(MemKind::Hmc, PolicyKind::Never, "HSJNPO");
+    let hbm = run(MemKind::Hbm, PolicyKind::Never, "HSJNPO");
+    let (n_hmc, _, _) = hmc.latency_fractions();
+    let (n_hbm, _, _) = hbm.latency_fractions();
+    assert!(
+        n_hbm < n_hmc,
+        "HBM network share {n_hbm:.3} must be below HMC {n_hmc:.3}"
+    );
+}
+
+// ---- Fig 14: traffic ----
+
+#[test]
+fn always_subscribe_raises_traffic_adaptive_less() {
+    let base = run(MemKind::Hmc, PolicyKind::Never, "PLYgemm");
+    let always = run(MemKind::Hmc, PolicyKind::Always, "PLYgemm");
+    let adaptive = run(MemKind::Hmc, PolicyKind::Adaptive, "PLYgemm");
+    let (b, al, ad) =
+        (base.bytes_per_cycle(), always.bytes_per_cycle(), adaptive.bytes_per_cycle());
+    assert!(al > b * 0.95, "always traffic {al:.1} vs base {b:.1}");
+    assert!(ad <= al, "adaptive traffic {ad:.1} must not exceed always {al:.1}");
+}
+
+#[test]
+fn hot_vault_winner_moves_fewer_bytes_per_request() {
+    // Paper: PHELinReg's bandwidth demand drops under DL-PIM (Fig 14).
+    // Bytes *per cycle* can rise simply because execution got ~2x faster,
+    // so compare bytes moved per demand request.
+    let base = run(MemKind::Hmc, PolicyKind::Never, "PHELinReg");
+    let adaptive = run(MemKind::Hmc, PolicyKind::Adaptive, "PHELinReg");
+    let per_req = |r: &SimReport| {
+        r.runs[0].stats.traffic.total_bytes() as f64 / r.runs[0].stats.requests as f64
+    };
+    // Our substrate keeps PHELinReg's per-request bytes ~flat (the win is
+    // queuing/CoV); the paper reports a drop. Assert it does not *grow*.
+    assert!(
+        per_req(&adaptive) < per_req(&base) * 1.05,
+        "adaptive must not move more bytes/request: {:.1} vs {:.1}",
+        per_req(&adaptive),
+        per_req(&base)
+    );
+}
+
+// ---- Fig 16: table-size sensitivity ----
+
+#[test]
+fn bigger_tables_help_table_hungry_workloads() {
+    let base = run(MemKind::Hmc, PolicyKind::Never, "PHELinReg");
+    let mut small = dlpim::config::presets::hmc_adaptive_with_table_entries(1024).quick();
+    small.policy = PolicyKind::Adaptive;
+    let mut big = dlpim::config::presets::hmc_adaptive_with_table_entries(8192).quick();
+    big.policy = PolicyKind::Adaptive;
+    let s_small = simulate(&small, catalog::build("PHELinReg", &small).unwrap())
+        .speedup_vs(&base);
+    let s_big =
+        simulate(&big, catalog::build("PHELinReg", &big).unwrap()).speedup_vs(&base);
+    assert!(
+        s_big > s_small,
+        "8192-entry table ({s_big:.3}) must beat 1024 ({s_small:.3})"
+    );
+}
+
+// ---- determinism across the whole stack ----
+
+#[test]
+fn full_simulation_is_deterministic() {
+    let a = run(MemKind::Hmc, PolicyKind::Adaptive, "SPLRad");
+    let b = run(MemKind::Hmc, PolicyKind::Adaptive, "SPLRad");
+    assert_eq!(a.runs[0].cycles, b.runs[0].cycles);
+    assert_eq!(a.runs[0].stats.subscriptions, b.runs[0].stats.subscriptions);
+    assert_eq!(a.runs[0].stats.traffic, b.runs[0].stats.traffic);
+}
+
+#[test]
+fn different_seeds_differ_but_agree_qualitatively() {
+    let mut cfg = SimConfig::hmc().quick();
+    cfg.policy = PolicyKind::Always;
+    cfg.seed = 1;
+    let a = simulate(&cfg, catalog::build("SPLRad", &cfg).unwrap());
+    cfg.seed = 2;
+    let b = simulate(&cfg, catalog::build("SPLRad", &cfg).unwrap());
+    assert_ne!(a.runs[0].cycles, b.runs[0].cycles, "seeds must matter");
+    let ratio = a.cycles() / b.cycles();
+    assert!((0.7..1.4).contains(&ratio), "seed noise too large: {ratio:.2}");
+}

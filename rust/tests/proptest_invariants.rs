@@ -1,0 +1,278 @@
+//! Property tests (proptest-lite): protocol, routing and bookkeeping
+//! invariants over thousands of randomized scenarios.
+
+use dlpim::config::SimConfig;
+use dlpim::policy::{PolicyKind, PolicyRuntime};
+use dlpim::proptest_lite::{gen, Runner};
+use dlpim::sim::{AddressMap, Mesh, VaultMem};
+use dlpim::stats::SimStats;
+use dlpim::subscription::protocol::{Access, SubSystem};
+
+struct Rig {
+    cfg: SimConfig,
+    sys: SubSystem,
+    mesh: Mesh,
+    vaults: Vec<VaultMem>,
+    stats: SimStats,
+    policy: PolicyRuntime,
+}
+
+fn rig(kind: PolicyKind, sets: u32) -> Rig {
+    let mut cfg = SimConfig::hmc();
+    cfg.policy = kind;
+    cfg.sub_table_sets = sets;
+    Rig {
+        sys: SubSystem::new(&cfg),
+        mesh: Mesh::new(&cfg),
+        vaults: (0..cfg.n_vaults).map(|_| VaultMem::new(&cfg)).collect(),
+        stats: SimStats::new(cfg.n_vaults),
+        policy: PolicyRuntime::new(&cfg),
+        cfg,
+    }
+}
+
+/// Random protocol churn must never corrupt the distributed directory:
+/// every committed subscription has exactly matching entries on both sides.
+#[test]
+fn prop_directory_consistency_under_churn() {
+    Runner::new(0xD1EC).cases(40).run("directory-consistency", |r| {
+        let mut rg = rig(PolicyKind::Always, 64); // small table = heavy churn
+        let ops = gen::usize_in(r, 200, 800);
+        let mut t = 0u64;
+        for _ in 0..ops {
+            let requester = gen::u64_in(r, 0, 32) as u16;
+            let block = gen::u64_in(r, 0, 4096);
+            let write = gen::bool_p(r, 0.3);
+            rg.sys.serve(
+                Access { requester, block, write },
+                t,
+                &mut rg.mesh,
+                &mut rg.vaults,
+                &mut rg.stats,
+                &rg.policy,
+            );
+            t += gen::u64_in(r, 1, 300);
+        }
+        let settle_at = t + 10_000_000;
+        rg.sys.settle(settle_at);
+        rg.sys.directory_consistent(settle_at)
+    });
+}
+
+/// A block is parked in at most one reserved space at any time (DL-PIM
+/// invalidates the original on subscription — no COMA-style multiplication).
+#[test]
+fn prop_single_copy_invariant() {
+    Runner::new(0x51C0).cases(30).run("single-copy", |r| {
+        let mut rg = rig(PolicyKind::Always, 128);
+        let mut t = 0u64;
+        // Hammer a small block set from many vaults to force resubscription.
+        for _ in 0..600 {
+            let requester = gen::u64_in(r, 0, 32) as u16;
+            let block = gen::u64_in(r, 0, 64);
+            rg.sys.serve(
+                Access { requester, block, write: gen::bool_p(r, 0.2) },
+                t,
+                &mut rg.mesh,
+                &mut rg.vaults,
+                &mut rg.stats,
+                &rg.policy,
+            );
+            t += gen::u64_in(r, 50, 500);
+        }
+        let settle_at = t + 10_000_000;
+        rg.sys.settle(settle_at);
+        // Count holder entries per block across all vaults.
+        let mut holders = std::collections::HashMap::new();
+        let map = AddressMap::new(&rg.cfg);
+        for v in 0..32u16 {
+            let table = rg.sys.table(v);
+            for idx in 0..(table.num_sets() as usize * table.ways()) {
+                let e = table.entry(idx);
+                if !e.is_invalid()
+                    && e.role == dlpim::subscription::Role::Holder
+                    && e.state == dlpim::subscription::SubState::Subscribed
+                {
+                    *holders.entry(e.block).or_insert(0u32) += 1;
+                    // And the holder must not be the home vault.
+                    if map.home_of_block(e.block) == v {
+                        return Err(format!("block {} parked at its own home", e.block));
+                    }
+                }
+            }
+        }
+        for (b, n) in holders {
+            if n > 1 {
+                return Err(format!("block {b} has {n} holders"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Latency component arithmetic: done == now + network + queued + array for
+/// every read (the decomposition must be exact, not approximate).
+#[test]
+fn prop_latency_decomposition_is_exact() {
+    Runner::new(0x1A7E).cases(30).run("latency-decomposition", |r| {
+        let mut rg = rig(PolicyKind::Always, 2048);
+        let mut t = 0u64;
+        for _ in 0..400 {
+            let requester = gen::u64_in(r, 0, 32) as u16;
+            let block = gen::u64_in(r, 0, 100_000);
+            let now = t;
+            let res = rg.sys.serve(
+                Access { requester, block, write: false },
+                now,
+                &mut rg.mesh,
+                &mut rg.vaults,
+                &mut rg.stats,
+                &rg.policy,
+            );
+            let reconstructed = now + res.network + res.queued + res.array;
+            if res.done != reconstructed {
+                return Err(format!(
+                    "done {} != now {} + net {} + queue {} + array {}",
+                    res.done, now, res.network, res.queued, res.array
+                ));
+            }
+            t += gen::u64_in(r, 1, 200);
+        }
+        Ok(())
+    });
+}
+
+/// Mesh link calendars never double-book: replaying any random transfer
+/// sequence twice gives identical timings (pure function of history), and
+/// backfilled reservations never start before their request time.
+#[test]
+fn prop_mesh_reservations_sane() {
+    Runner::new(0x3E5B).cases(50).run("mesh-reservations", |r| {
+        let cfg = SimConfig::hmc();
+        let mut mesh = Mesh::new(&cfg);
+        let mut t = 0u64;
+        for _ in 0..300 {
+            let a = gen::u64_in(r, 0, 32) as u16;
+            let b = gen::u64_in(r, 0, 32) as u16;
+            let flits = gen::u64_in(r, 1, 10) as u32;
+            let depart = t + gen::u64_in(r, 0, 1000);
+            let tr = mesh.transfer(a, b, flits, depart);
+            if tr.arrive < depart {
+                return Err("arrival before departure".into());
+            }
+            let ideal = depart + (flits as u64) * mesh.hops(a, b) as u64;
+            if tr.queued == 0 && tr.arrive != ideal {
+                return Err(format!(
+                    "uncontended transfer arrive {} != ideal {ideal}",
+                    tr.arrive
+                ));
+            }
+            t += gen::u64_in(r, 0, 50);
+        }
+        Ok(())
+    });
+}
+
+/// The LFU/LRU victim choice is always a committed, evictable entry.
+#[test]
+fn prop_victims_are_always_evictable() {
+    Runner::new(0xF1C7).cases(30).run("victim-evictable", |r| {
+        use dlpim::subscription::{Role, SubState, SubTable};
+        let mut t = SubTable::new(16, 4);
+        let mut now = 0u64;
+        for _ in 0..300 {
+            let set = gen::u64_in(r, 0, 16) as u32;
+            match gen::usize_in(r, 0, 3) {
+                0 => {
+                    if let Some(w) = t.free_way(set) {
+                        let state = if gen::bool_p(r, 0.7) {
+                            SubState::Subscribed
+                        } else {
+                            SubState::PendingSub
+                        };
+                        t.install(
+                            w,
+                            gen::u64_in(r, 0, 1 << 20),
+                            if gen::bool_p(r, 0.5) { Role::Home } else { Role::Holder },
+                            gen::u64_in(r, 0, 32) as u16,
+                            state,
+                            now + gen::u64_in(r, 0, 500),
+                            now,
+                        );
+                    }
+                }
+                1 => {
+                    if let Some(v) = t.victim(set) {
+                        if t.entry(v).state != SubState::Subscribed {
+                            return Err("victimized a pending entry".into());
+                        }
+                        t.begin_unsub(v, now + gen::u64_in(r, 1, 300));
+                    }
+                }
+                _ => {
+                    // Random lookups drive lazy commits.
+                    t.lookup(set, gen::u64_in(r, 0, 1 << 20), now);
+                }
+            }
+            now += gen::u64_in(r, 1, 100);
+        }
+        Ok(())
+    });
+}
+
+/// Policy runtime: whatever the request history, the leading sets never
+/// change groups, and epoch decisions fire exactly once per boundary.
+#[test]
+fn prop_policy_epochs_and_leaders_stable() {
+    Runner::new(0xE90C).cases(30).run("policy-epochs", |r| {
+        let mut cfg = SimConfig::hmc();
+        cfg.policy = PolicyKind::Adaptive;
+        cfg.epoch_cycles = 1000;
+        let mut p = PolicyRuntime::new(&cfg);
+        let g0: Vec<_> = (0..64).map(|s| p.group(s)).collect();
+        let mut t = 0u64;
+        for _ in 0..200 {
+            p.on_request(
+                gen::u64_in(r, 0, 32) as u16,
+                gen::u64_in(r, 0, 32) as u16,
+                gen::bool_p(r, 0.5),
+                gen::u64_in(r, 0, 40) as u32,
+                gen::u64_in(r, 0, 10) as u32,
+                gen::u64_in(r, 10, 4000),
+                gen::u64_in(r, 0, 2048) as u32,
+                t,
+            );
+            t += gen::u64_in(r, 1, 200);
+            p.tick(t);
+        }
+        let expected_epochs = t / 1000;
+        if p.epochs() != expected_epochs {
+            return Err(format!("epochs {} != {expected_epochs}", p.epochs()));
+        }
+        let g1: Vec<_> = (0..64).map(|s| p.group(s)).collect();
+        if g0 != g1 {
+            return Err("leading-set groups drifted".into());
+        }
+        Ok(())
+    });
+}
+
+/// Config files render->parse->render to a fixed point for random configs.
+#[test]
+fn prop_config_roundtrip() {
+    Runner::new(0xC0F6).cases(100).run("config-roundtrip", |r| {
+        let mut cfg = if gen::bool_p(r, 0.5) { SimConfig::hmc() } else { SimConfig::hbm() };
+        cfg.sub_table_sets = 1 << gen::usize_in(r, 6, 13);
+        cfg.epoch_cycles = gen::u64_in(r, 1000, 2_000_000);
+        cfg.measure_requests = gen::u64_in(r, 1000, 1_000_000);
+        cfg.mlp = gen::u64_in(r, 1, 16) as u16;
+        let text = dlpim::config::presets::render(&cfg);
+        let back = dlpim::config::parse::config_from_text(&text)
+            .map_err(|e| format!("parse failed: {e}"))?;
+        let text2 = dlpim::config::presets::render(&back);
+        if text != text2 {
+            return Err("render/parse not a fixed point".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,104 @@
+//! Runtime integration: the AOT artifacts (built by `make artifacts`) must
+//! load, compile and produce numerics matching Rust-side references.
+//!
+//! These tests are skipped (with a notice) when `artifacts/` is absent so
+//! `cargo test` works from a fresh checkout; `make test` always builds the
+//! artifacts first.
+
+use dlpim::rng::Rng;
+use dlpim::runtime::ArtifactStore;
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::discover() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn all_expected_artifacts_compile() {
+    let Some(mut s) = store() else { return };
+    let names = s.list().unwrap();
+    for expect in ["gemm", "gemm_tile", "stencil2d", "stream_triad", "linreg"] {
+        assert!(names.iter().any(|n| n == expect), "missing artifact {expect}");
+        s.get(expect).unwrap_or_else(|e| panic!("compile {expect}: {e:#}"));
+    }
+}
+
+#[test]
+fn gemm_tile_matches_rust_reference() {
+    let Some(mut s) = store() else { return };
+    let exe = s.get("gemm_tile").unwrap();
+    let mut rng = Rng::new(42);
+    let a: Vec<f32> = (0..64 * 64).map(|_| rng.f64() as f32 - 0.5).collect();
+    let b: Vec<f32> = (0..64 * 64).map(|_| rng.f64() as f32 - 0.5).collect();
+    let out = exe.run_f32(&[(&a, &[64, 64]), (&b, &[64, 64])]).unwrap();
+    assert_eq!(out.len(), 1);
+    let c = &out[0];
+    // Spot-check a handful of entries against the naive product.
+    for &(i, j) in &[(0usize, 0usize), (7, 3), (31, 63), (63, 0), (40, 40)] {
+        let expect: f32 = (0..64).map(|k| a[i * 64 + k] * b[k * 64 + j]).sum();
+        let got = c[i * 64 + j];
+        assert!(
+            (got - expect).abs() < 1e-3,
+            "C[{i},{j}] = {got}, expected {expect}"
+        );
+    }
+}
+
+#[test]
+fn stream_triad_matches_reference() {
+    let Some(mut s) = store() else { return };
+    let exe = s.get("stream_triad").unwrap();
+    let n = 1 << 16;
+    let mut rng = Rng::new(7);
+    let b: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+    let c: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+    let out = exe.run_f32(&[(&b, &[n]), (&c, &[n])]).unwrap();
+    for i in (0..n).step_by(4097) {
+        let expect = b[i] + 3.0 * c[i];
+        assert!((out[0][i] - expect).abs() < 1e-4, "a[{i}]");
+    }
+}
+
+#[test]
+fn linreg_recovers_known_line() {
+    let Some(mut s) = store() else { return };
+    let exe = s.get("linreg").unwrap();
+    let n = 1 << 16;
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> = (0..n).map(|_| rng.f64() as f32 - 0.5).collect();
+    let y: Vec<f32> = x.iter().map(|&v| 2.5 * v + 1.25).collect();
+    let out = exe.run_f32(&[(&x, &[n]), (&y, &[n])]).unwrap();
+    assert_eq!(out.len(), 2, "slope + intercept");
+    assert!((out[0][0] - 2.5).abs() < 1e-2, "slope {}", out[0][0]);
+    assert!((out[1][0] - 1.25).abs() < 1e-2, "intercept {}", out[1][0]);
+}
+
+#[test]
+fn stencil_interior_of_constant_field_is_identity() {
+    let Some(mut s) = store() else { return };
+    let exe = s.get("stencil2d").unwrap();
+    let x = vec![2.0f32; 256 * 256];
+    let out = exe.run_f32(&[(&x, &[256, 256])]).unwrap();
+    // Interior: 0.5*2 + 4*0.125*2 = 2.0.
+    let y = &out[0];
+    assert!((y[128 * 256 + 128] - 2.0).abs() < 1e-5);
+    // Corner (two zero neighbours): 0.5*2 + 2*0.125*2 = 1.5.
+    assert!((y[0] - 1.5).abs() < 1e-5);
+}
+
+#[test]
+fn executables_are_reusable_across_calls() {
+    let Some(mut s) = store() else { return };
+    let exe = s.get("gemm_tile").unwrap();
+    let a = vec![1.0f32; 64 * 64];
+    let b = vec![1.0f32; 64 * 64];
+    let first = exe.run_f32(&[(&a, &[64, 64]), (&b, &[64, 64])]).unwrap();
+    let second = exe.run_f32(&[(&a, &[64, 64]), (&b, &[64, 64])]).unwrap();
+    assert_eq!(first[0], second[0]);
+    assert!((first[0][0] - 64.0).abs() < 1e-4);
+}
