@@ -77,7 +77,7 @@ fn trace_tile(ops: &mut Vec<Op>, ti: usize, tj: usize, tk: usize) {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dlpim::error::Result<()> {
     println!("== L1/L2: AOT Pallas GEMM tile kernel via PJRT ==");
     let mut store = ArtifactStore::discover()?;
     println!("platform: {}", store.platform());

@@ -33,4 +33,6 @@ fn main() {
         t0.elapsed().as_secs_f64()
     );
     csv.write("target/figures/fig01.csv").expect("write csv");
+    let artifact = figures::emit_artifact("1").expect("known figure");
+    println!("fig01 | artifact: {}", artifact.display());
 }

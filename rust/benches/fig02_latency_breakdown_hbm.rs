@@ -31,4 +31,6 @@ fn main() {
         t0.elapsed().as_secs_f64()
     );
     csv.write("target/figures/fig02.csv").expect("write csv");
+    let artifact = figures::emit_artifact("2").expect("known figure");
+    println!("fig02 | artifact: {}", artifact.display());
 }

@@ -24,4 +24,6 @@ fn main() {
         t0.elapsed().as_secs_f64()
     );
     csv.write("target/figures/fig03.csv").expect("write csv");
+    let artifact = figures::emit_artifact("3").expect("known figure");
+    println!("fig03 | artifact: {}", artifact.display());
 }

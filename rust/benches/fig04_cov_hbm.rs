@@ -20,4 +20,6 @@ fn main() {
         t0.elapsed().as_secs_f64()
     );
     csv.write("target/figures/fig04.csv").expect("write csv");
+    let artifact = figures::emit_artifact("4").expect("known figure");
+    println!("fig04 | artifact: {}", artifact.display());
 }

@@ -36,4 +36,6 @@ fn main() {
         t0.elapsed().as_secs_f64()
     );
     csv.write("target/figures/fig09.csv").expect("write csv");
+    let artifact = figures::emit_artifact("9").expect("known figure");
+    println!("fig09 | artifact: {}", artifact.display());
 }

@@ -23,4 +23,6 @@ fn main() {
         t0.elapsed().as_secs_f64()
     );
     csv.write("target/figures/fig10.csv").expect("write csv");
+    let artifact = figures::emit_artifact("10").expect("known figure");
+    println!("fig10 | artifact: {}", artifact.display());
 }

@@ -34,4 +34,6 @@ fn main() {
         t0.elapsed().as_secs_f64()
     );
     csv.write("target/figures/fig11.csv").expect("write csv");
+    let artifact = figures::emit_artifact("11").expect("known figure");
+    println!("fig11 | artifact: {}", artifact.display());
 }

@@ -24,4 +24,6 @@ fn main() {
     }
     println!("fig12 | wallclock {:.1}s", t0.elapsed().as_secs_f64());
     csv.write("target/figures/fig12.csv").expect("write csv");
+    let artifact = figures::emit_artifact("12").expect("known figure");
+    println!("fig12 | artifact: {}", artifact.display());
 }

@@ -14,4 +14,6 @@ fn main() {
     }
     println!("fig13 | wallclock {:.1}s", t0.elapsed().as_secs_f64());
     csv.write("target/figures/fig13.csv").expect("write csv");
+    let artifact = figures::emit_artifact("13").expect("known figure");
+    println!("fig13 | artifact: {}", artifact.display());
 }

@@ -26,4 +26,6 @@ fn main() {
         t0.elapsed().as_secs_f64()
     );
     csv.write("target/figures/fig14.csv").expect("write csv");
+    let artifact = figures::emit_artifact("14").expect("known figure");
+    println!("fig14 | artifact: {}", artifact.display());
 }

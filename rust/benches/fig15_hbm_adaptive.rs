@@ -39,4 +39,6 @@ fn main() {
         t0.elapsed().as_secs_f64()
     );
     csv.write("target/figures/fig15.csv").expect("write csv");
+    let artifact = figures::emit_artifact("15").expect("known figure");
+    println!("fig15 | artifact: {}", artifact.display());
 }

@@ -28,4 +28,6 @@ fn main() {
     }
     println!("fig16 | wallclock {:.1}s", t0.elapsed().as_secs_f64());
     csv.write("target/figures/fig16.csv").expect("write csv");
+    let artifact = figures::emit_artifact("16").expect("known figure");
+    println!("fig16 | artifact: {}", artifact.display());
 }

@@ -19,4 +19,6 @@ fn main() {
     }
     println!("fig17 | wallclock {:.1}s", t0.elapsed().as_secs_f64());
     csv.write("target/figures/fig17.csv").expect("write csv");
+    let artifact = figures::emit_artifact("17").expect("known figure");
+    println!("fig17 | artifact: {}", artifact.display());
 }

@@ -19,4 +19,6 @@ fn main() {
     }
     println!("fig18 | wallclock {:.1}s", t0.elapsed().as_secs_f64());
     csv.write("target/figures/fig18.csv").expect("write csv");
+    let artifact = figures::emit_artifact("18").expect("known figure");
+    println!("fig18 | artifact: {}", artifact.display());
 }

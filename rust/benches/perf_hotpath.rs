@@ -95,6 +95,39 @@ fn main() {
         report("perf_hotpath", "serve_remote_x100", &timing);
     }
 
+    // Sweep-engine scaling: the same 4x2 point matrix at 1 worker vs all
+    // cores (cache disabled so both runs really compute).
+    {
+        use dlpim::sweep::{Sweep, SweepPoint};
+        let points = || -> Vec<SweepPoint> {
+            let mut base = cfg.clone();
+            base.warmup_requests = 2_000;
+            base.measure_requests = 20_000;
+            let mut always = base.clone();
+            always.policy = PolicyKind::Always;
+            ["STRTriad", "SPLRad", "PLYgemm", "HSJNPO"]
+                .iter()
+                .flat_map(|w| {
+                    [base.clone(), always.clone()]
+                        .into_iter()
+                        .map(move |c| SweepPoint::new(*w, c))
+                })
+                .collect()
+        };
+        let all_cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        for threads in [1usize, all_cores] {
+            let t0 = std::time::Instant::now();
+            let out = Sweep::new(points()).use_cache(false).threads(threads).run();
+            let dt = t0.elapsed().as_secs_f64();
+            assert!(out.iter().all(|o| o.result.is_ok()));
+            println!(
+                "bench | perf_hotpath               | sweep_4x2_t{threads:<9} | {:.2}s wall | {} jobs",
+                dt,
+                out.len()
+            );
+        }
+    }
+
     // End-to-end throughput: simulated requests / wall-second.
     for (wl, policy) in
         [("STRTriad", PolicyKind::Never), ("SPLRad", PolicyKind::Adaptive), ("PLYgemm", PolicyKind::Always)]

@@ -76,15 +76,21 @@ COMMANDS:
                   [--policy never|always|adaptive|adaptive-hops|adaptive-latency]
                   [--measure N] [--warmup N] [--runs N] [--seed N] [--config FILE]
     figure        Regenerate one figure: figure <1|2|3|4|9|10|11|12|13|14|15|16|17|18>
-    all-figures   Regenerate every figure (writes target/figures/*.csv)
+                  (runs on the parallel sweep engine; writes target/repro/figNN.json)
+    all-figures   Regenerate every figure (writes target/repro/*.json; repeated
+                  figure targets reuse the sweep engine's report cache)
     workloads     Print Table III (the 31 representative workloads)
     config        Print the resolved config: --memory hmc|hbm [--policy P]
-    artifacts     List and smoke-run the AOT artifacts via PJRT
+    artifacts     List figure JSON artifacts and the AOT artifacts (PJRT)
     help          This text
 
 SCALE FLAGS (also env REPRO_WARMUP / REPRO_MEASURE / REPRO_RUNS / REPRO_EPOCH):
     --quick        small run (CI scale)
     --paper-scale  the paper's 1e6-cycle epochs / 1e6-request warmup (slow)
+
+ENVIRONMENT:
+    REPRO_THREADS       sweep worker threads (default: all cores)
+    REPRO_ARTIFACT_DIR  where figure JSON artifacts land (default: target/repro)
 ";
 
 #[cfg(test)]

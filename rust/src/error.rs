@@ -1,0 +1,155 @@
+//! Minimal error handling (`anyhow` is unavailable offline): a boxed-free
+//! message chain with `context`/`with_context` adapters and the `err!` /
+//! `bail!` macros, mirroring the subset of the `anyhow` API this crate
+//! uses.
+
+use std::fmt;
+
+/// An error: the outermost context first, the root cause last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Self {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`: that keeps
+// this blanket conversion coherent (the same trick `anyhow` uses), so `?`
+// works on `io::Result` and friends inside functions returning our
+// `Result`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context adapters for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a fixed context message to the error case.
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+
+    /// Attach a lazily-built context message to the error case.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string or any displayable expression.
+macro_rules! err {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {{
+        #[allow(clippy::useless_format)]
+        let msg = format!($fmt $(, $arg)*);
+        $crate::error::Error::msg(msg)
+    }};
+    ($e:expr) => {
+        $crate::error::Error::msg($e)
+    };
+}
+
+/// Return early with an [`Error`] built like [`err!`].
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::error::err!($($t)*))
+    };
+}
+
+pub use bail;
+pub use err;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = Error::msg("root").context("middle").context("outer");
+        assert_eq!(e.to_string(), "outer: middle: root");
+        assert_eq!(e.chain().len(), 3);
+    }
+
+    #[test]
+    fn result_and_option_context() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.context("opening").unwrap_err();
+        assert!(e.to_string().starts_with("opening: "));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = err!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        let msg = String::from("plain");
+        let e = err!(msg);
+        assert_eq!(e.to_string(), "plain");
+
+        fn bails() -> Result<()> {
+            bail!("nope: {}", 1);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope: 1");
+    }
+}

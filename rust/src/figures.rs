@@ -7,12 +7,14 @@
 //! roughly what factor, where the crossovers fall — is the reproduction
 //! target (see EXPERIMENTS.md for paper-vs-measured).
 
-use std::sync::Mutex;
+use std::path::PathBuf;
 
 use crate::config::{MemKind, SimConfig};
 use crate::coordinator::driver::simulate;
 use crate::coordinator::report::SimReport;
 use crate::policy::PolicyKind;
+use crate::sweep;
+use crate::sweep::json::JsonValue;
 use crate::workloads::catalog;
 
 /// Scale knobs, overridable from the environment:
@@ -53,37 +55,13 @@ pub fn run(cfg: &SimConfig, workload: &str) -> SimReport {
     simulate(cfg, w)
 }
 
-/// Run `names x configs` in parallel across OS threads; returns results in
-/// `[workload][config]` order.
+/// Run `names x configs` on the parallel sweep engine ([`crate::sweep`]):
+/// work-stealing across all cores, per-point result caching, deterministic
+/// per-job seeding. Returns results in `[workload][config]` order; panics
+/// if any job failed (a figure with a silently missing bar is worse than a
+/// loud failure).
 pub fn run_matrix(names: &[&str], cfgs: &[SimConfig]) -> Vec<Vec<SimReport>> {
-    let jobs: Vec<(usize, usize)> = (0..names.len())
-        .flat_map(|w| (0..cfgs.len()).map(move |c| (w, c)))
-        .collect();
-    let results: Mutex<Vec<Option<SimReport>>> =
-        Mutex::new((0..jobs.len()).map(|_| None).collect());
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    std::thread::scope(|scope| {
-        for _ in 0..threads.min(jobs.len()) {
-            scope.spawn(|| loop {
-                let j = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if j >= jobs.len() {
-                    break;
-                }
-                let (w, c) = jobs[j];
-                let rep = run(&cfgs[c], names[w]);
-                results.lock().unwrap()[j] = Some(rep);
-            });
-        }
-    });
-    let flat = results.into_inner().unwrap();
-    let mut out: Vec<Vec<Option<SimReport>>> =
-        (0..names.len()).map(|_| (0..cfgs.len()).map(|_| None).collect()).collect();
-    for (j, rep) in flat.into_iter().enumerate() {
-        let (w, c) = jobs[j];
-        out[w][c] = rep;
-    }
-    out.into_iter().map(|row| row.into_iter().map(Option::unwrap).collect()).collect()
+    sweep::run_matrix(names, cfgs)
 }
 
 // ---------------------------------------------------------------------
@@ -334,6 +312,172 @@ pub fn fig18_policy_ablation() -> Vec<(&'static str, Vec<(&'static str, f64)>)> 
             (*name, series)
         })
         .collect()
+}
+
+// ---------------------------------------------------------------------
+// JSON artifacts
+// ---------------------------------------------------------------------
+
+fn row_obj(workload: &str, cols: &[(&str, f64)]) -> JsonValue {
+    let mut pairs = vec![("workload", JsonValue::str(workload))];
+    pairs.extend(cols.iter().map(|(k, v)| (*k, JsonValue::num(*v))));
+    JsonValue::obj(pairs)
+}
+
+fn series_obj(workload: &str, key: &str, series: &[(String, f64)]) -> JsonValue {
+    JsonValue::obj(vec![
+        ("workload", JsonValue::str(workload)),
+        (
+            "series",
+            JsonValue::Arr(
+                series
+                    .iter()
+                    .map(|(x, s)| {
+                        JsonValue::obj(vec![
+                            (key, JsonValue::str(x.clone())),
+                            ("speedup", JsonValue::num(*s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// The canonical artifact name of a figure id ("9" -> "fig09").
+pub fn artifact_name(which: &str) -> String {
+    format!("fig{which:0>2}")
+}
+
+/// Build the JSON artifact body for one figure. Thanks to the sweep
+/// engine's report cache this is nearly free when the figure was already
+/// computed in this process (e.g. right after printing it).
+pub fn figure_json(which: &str) -> Option<JsonValue> {
+    let rows: Vec<JsonValue> = match which {
+        "1" | "2" => {
+            let mem = if which == "1" { MemKind::Hmc } else { MemKind::Hbm };
+            fig_latency_breakdown(mem)
+                .iter()
+                .map(|r| {
+                    row_obj(
+                        r.workload,
+                        &[
+                            ("network", r.network),
+                            ("queue", r.queue),
+                            ("array", r.array),
+                            ("avg_latency", r.avg_latency),
+                        ],
+                    )
+                })
+                .collect()
+        }
+        "3" | "4" => {
+            let mem = if which == "3" { MemKind::Hmc } else { MemKind::Hbm };
+            fig_cov(mem).iter().map(|(w, cov)| row_obj(w, &[("cov", *cov)])).collect()
+        }
+        "9" => fig9_always_subscribe()
+            .iter()
+            .map(|r| {
+                row_obj(
+                    r.workload,
+                    &[
+                        ("speedup", r.speedup),
+                        ("latency_improvement", r.latency_improvement),
+                    ],
+                )
+            })
+            .collect(),
+        "10" => fig10_reuse()
+            .iter()
+            .map(|(w, l, r)| row_obj(w, &[("local", *l), ("remote", *r)]))
+            .collect(),
+        "11" => fig11_adaptive()
+            .iter()
+            .map(|r| {
+                row_obj(
+                    r.workload,
+                    &[
+                        ("always", r.always_speedup),
+                        ("adaptive", r.adaptive_speedup),
+                        ("latency_improvement", r.latency_improvement),
+                    ],
+                )
+            })
+            .collect(),
+        "12" => fig_cov_policies(MemKind::Hmc, true)
+            .iter()
+            .map(|(w, covs)| {
+                row_obj(
+                    w,
+                    &[("baseline", covs[0]), ("always", covs[1]), ("adaptive", covs[2])],
+                )
+            })
+            .collect(),
+        "13" => fig_cov_policies(MemKind::Hbm, false)
+            .iter()
+            .map(|(w, covs)| row_obj(w, &[("baseline", covs[0]), ("adaptive", covs[1])]))
+            .collect(),
+        "14" => fig14_traffic()
+            .iter()
+            .map(|(w, b, a, d)| {
+                row_obj(w, &[("baseline", *b), ("always", *a), ("adaptive", *d)])
+            })
+            .collect(),
+        "15" => fig15_hbm_adaptive()
+            .iter()
+            .map(|r| {
+                row_obj(
+                    r.workload,
+                    &[
+                        ("base_latency", r.base_latency),
+                        ("adaptive_latency", r.adaptive_latency),
+                        ("speedup", r.speedup),
+                    ],
+                )
+            })
+            .collect(),
+        "16" => fig16_table_size()
+            .iter()
+            .map(|(w, series)| {
+                let s: Vec<(String, f64)> =
+                    series.iter().map(|(e, sp)| (e.to_string(), *sp)).collect();
+                series_obj(w, "entries", &s)
+            })
+            .collect(),
+        "17" => fig17_threshold_ablation()
+            .iter()
+            .map(|(w, series)| {
+                let s: Vec<(String, f64)> =
+                    series.iter().map(|(t, sp)| (t.to_string(), *sp)).collect();
+                series_obj(w, "threshold", &s)
+            })
+            .collect(),
+        "18" => fig18_policy_ablation()
+            .iter()
+            .map(|(w, series)| {
+                let s: Vec<(String, f64)> =
+                    series.iter().map(|(p, sp)| (p.to_string(), *sp)).collect();
+                series_obj(w, "policy", &s)
+            })
+            .collect(),
+        _ => return None,
+    };
+    Some(JsonValue::obj(vec![
+        ("figure", JsonValue::str(artifact_name(which))),
+        ("rows", JsonValue::Arr(rows)),
+    ]))
+}
+
+/// Compute figure `which` (cache-cheap when already computed) and write
+/// its JSON artifact to the sweep artifact directory. Returns `None` for
+/// an unknown figure id; panics on I/O failure (CI must see it).
+pub fn emit_artifact(which: &str) -> Option<PathBuf> {
+    let value = figure_json(which)?;
+    let name = artifact_name(which);
+    Some(
+        sweep::artifact::write_figure_json(&name, &value)
+            .unwrap_or_else(|e| panic!("write figure artifact {name}: {e}")),
+    )
 }
 
 /// Geometric mean (the paper's averages over workloads).

@@ -21,19 +21,31 @@
 //! use dlpim::config::SimConfig;
 //! use dlpim::coordinator::driver::simulate;
 //! use dlpim::policy::PolicyKind;
+//! use dlpim::sweep::{Sweep, SweepPoint};
 //! use dlpim::workloads::catalog;
 //!
+//! // One simulation, driven by hand:
 //! let mut cfg = SimConfig::hmc();
 //! cfg.policy = PolicyKind::Adaptive;
 //! let wl = catalog::build("SPLRad", &cfg).unwrap();
 //! let report = simulate(&cfg, wl);
 //! println!("avg latency = {:.1} cycles", report.avg_latency());
+//!
+//! // Many points on the parallel sweep engine (what every figure runs on):
+//! let points = vec![
+//!     SweepPoint::new("SPLRad", SimConfig::hmc()),
+//!     SweepPoint::new("PLYgemm", SimConfig::hmc()),
+//! ];
+//! for outcome in Sweep::new(points).run() {
+//!     println!("{}: {:.0} cycles", outcome.workload, outcome.report().cycles());
+//! }
 //! ```
 
 pub mod benchkit;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod figures;
 pub mod policy;
 pub mod proptest_lite;
@@ -42,6 +54,7 @@ pub mod runtime;
 pub mod sim;
 pub mod stats;
 pub mod subscription;
+pub mod sweep;
 pub mod workloads;
 
 /// Simulation clock, in PIM-core cycles (2.4 GHz in the paper's testbed).

@@ -1,14 +1,14 @@
 //! `repro` — the DL-PIM launcher: run simulations, regenerate paper
 //! figures, inspect configs and artifacts.
 
-use anyhow::{anyhow, bail, Result};
-
 use dlpim::cli::{Cli, HELP};
 use dlpim::config::{presets, MemKind, SimConfig};
 use dlpim::coordinator::driver::simulate;
+use dlpim::error::{bail, err, Result};
 use dlpim::figures;
 use dlpim::policy::PolicyKind;
 use dlpim::runtime::ArtifactStore;
+use dlpim::sweep;
 use dlpim::workloads::catalog;
 
 fn main() {
@@ -20,7 +20,7 @@ fn main() {
 }
 
 fn run(args: &[String]) -> Result<()> {
-    let cli = Cli::parse(args).map_err(|e| anyhow!(e))?;
+    let cli = Cli::parse(args).map_err(|e| err!(e))?;
     match cli.command.as_str() {
         "" | "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -39,13 +39,13 @@ fn run(args: &[String]) -> Result<()> {
 fn config_from_cli(cli: &Cli) -> Result<SimConfig> {
     let mut cfg = if let Some(path) = cli.flag("config") {
         let text = std::fs::read_to_string(path)?;
-        dlpim::config::parse::config_from_text(&text).map_err(|e| anyhow!(e))?
+        dlpim::config::parse::config_from_text(&text).map_err(|e| err!(e))?
     } else {
         let mem = cli.flag_or("memory", "hmc");
-        SimConfig::preset(mem).ok_or_else(|| anyhow!("unknown memory {mem:?}"))?
+        SimConfig::preset(mem).ok_or_else(|| err!("unknown memory {mem:?}"))?
     };
     if let Some(p) = cli.flag("policy") {
-        cfg.policy = PolicyKind::parse(p).ok_or_else(|| anyhow!("unknown policy {p:?}"))?;
+        cfg.policy = PolicyKind::parse(p).ok_or_else(|| err!("unknown policy {p:?}"))?;
     }
     if cli.has("quick") {
         cfg = cfg.quick();
@@ -53,29 +53,29 @@ fn config_from_cli(cli: &Cli) -> Result<SimConfig> {
     if cli.has("paper-scale") {
         cfg = cfg.paper_scale();
     }
-    if let Some(v) = cli.flag_u64("warmup").map_err(|e| anyhow!(e))? {
+    if let Some(v) = cli.flag_u64("warmup").map_err(|e| err!(e))? {
         cfg.warmup_requests = v;
     }
-    if let Some(v) = cli.flag_u64("measure").map_err(|e| anyhow!(e))? {
+    if let Some(v) = cli.flag_u64("measure").map_err(|e| err!(e))? {
         cfg.measure_requests = v;
     }
-    if let Some(v) = cli.flag_u64("runs").map_err(|e| anyhow!(e))? {
+    if let Some(v) = cli.flag_u64("runs").map_err(|e| err!(e))? {
         cfg.runs = v as u32;
     }
-    if let Some(v) = cli.flag_u64("seed").map_err(|e| anyhow!(e))? {
+    if let Some(v) = cli.flag_u64("seed").map_err(|e| err!(e))? {
         cfg.seed = v;
     }
-    if let Some(v) = cli.flag_u64("epoch").map_err(|e| anyhow!(e))? {
+    if let Some(v) = cli.flag_u64("epoch").map_err(|e| err!(e))? {
         cfg.epoch_cycles = v;
     }
-    cfg.validate().map_err(|e| anyhow!("invalid config: {}", e.join("; ")))?;
+    cfg.validate().map_err(|e| err!("invalid config: {}", e.join("; ")))?;
     Ok(cfg)
 }
 
 fn cmd_run(cli: &Cli) -> Result<()> {
     let cfg = config_from_cli(cli)?;
-    let name = cli.flag("workload").ok_or_else(|| anyhow!("--workload required"))?;
-    let w = catalog::build(name, &cfg).ok_or_else(|| anyhow!("unknown workload {name:?}"))?;
+    let name = cli.flag("workload").ok_or_else(|| err!("--workload required"))?;
+    let w = catalog::build(name, &cfg).ok_or_else(|| err!("unknown workload {name:?}"))?;
     let t0 = std::time::Instant::now();
     let rep = simulate(&cfg, w);
     let dt = t0.elapsed();
@@ -133,11 +133,28 @@ fn cmd_config(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_artifacts() -> Result<()> {
-    let mut store = ArtifactStore::discover()?;
-    println!("platform: {}", store.platform());
-    for name in store.list()? {
-        let exe = store.get(&name)?;
-        println!("compiled: {}", exe.name);
+    // Figure JSON artifacts written by the sweep engine.
+    let dir = sweep::artifact::artifact_dir();
+    println!("figure artifacts ({}):", dir.display());
+    let figure_artifacts = sweep::artifact::list()?;
+    if figure_artifacts.is_empty() {
+        println!("  (none — run `repro all-figures` or `repro figure <N>`)");
+    }
+    for path in figure_artifacts {
+        let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        println!("  {} ({bytes} bytes)", path.display());
+    }
+
+    // AOT-compiled HLO artifacts (PJRT runtime).
+    match ArtifactStore::discover() {
+        Ok(mut store) => {
+            println!("platform: {}", store.platform());
+            for name in store.list()? {
+                let exe = store.get(&name)?;
+                println!("compiled: {}", exe.name);
+            }
+        }
+        Err(e) => println!("AOT artifacts unavailable: {e}"),
     }
     Ok(())
 }
@@ -146,7 +163,7 @@ fn cmd_figure(cli: &Cli) -> Result<()> {
     let which = cli
         .positional
         .first()
-        .ok_or_else(|| anyhow!("usage: repro figure <N>"))?
+        .ok_or_else(|| err!("usage: repro figure <N>"))?
         .as_str();
     print_figure(which)
 }
@@ -302,6 +319,11 @@ fn print_figure(which: &str) -> Result<()> {
             }
         }
         other => bail!("unknown figure {other:?} (1-4, 9-18)"),
+    }
+    // Every simulate call above went through the sweep engine's report
+    // cache, so assembling the JSON artifact re-runs nothing.
+    if let Some(path) = figures::emit_artifact(which) {
+        println!("fig{which:0>2} | artifact: {}", path.display());
     }
     Ok(())
 }

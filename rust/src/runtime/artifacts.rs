@@ -1,8 +1,9 @@
 //! Artifact store: discovers, compiles, and caches the AOT HLO artifacts.
 
-use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+
+use crate::error::{bail, Context, Result};
 
 use super::client::{Executable, PjrtRuntime};
 

@@ -1,12 +1,35 @@
-//! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO text,
-//! compile once, execute many times.
+//! PJRT client: load HLO text, compile once, execute many times.
+//!
+//! Two builds:
+//! * **default** — a stub backend. The `xla` crate cannot be vendored in
+//!   this offline environment, so [`PjrtRuntime::cpu`] reports the backend
+//!   unavailable; [`super::ArtifactStore`] then fails open-time and every
+//!   consumer (the `repro artifacts` command, `tests/runtime_integration.rs`,
+//!   the e2e example) degrades gracefully.
+//! * **`--features pjrt`** — the real implementation over the `xla`
+//!   crate's PJRT CPU client. Enabling the feature requires adding the
+//!   `xla` dependency to `rust/Cargo.toml` on a networked machine.
 
-use anyhow::{Context, Result};
 use std::path::Path;
+
+use crate::error::Result;
+#[cfg(not(feature = "pjrt"))]
+use crate::error::{err, Error};
+#[cfg(feature = "pjrt")]
+use crate::error::Context;
+
+#[cfg(not(feature = "pjrt"))]
+fn unavailable() -> Error {
+    err!(
+        "PJRT backend unavailable: this build uses the stub runtime; \
+         rebuild with `--features pjrt` after adding the `xla` dependency"
+    )
+}
 
 /// A compiled executable plus its human name.
 pub struct Executable {
     pub name: String,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -14,6 +37,7 @@ impl Executable {
     /// Execute with `f32` input buffers of the given shapes; returns the
     /// flattened `f32` outputs (the AOT pipeline lowers with
     /// `return_tuple=True`, so outputs arrive as one tuple).
+    #[cfg(feature = "pjrt")]
     pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
         let mut literals = Vec::with_capacity(inputs.len());
         for (data, dims) in inputs {
@@ -34,25 +58,47 @@ impl Executable {
         }
         Ok(out)
     }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        Err(unavailable())
+    }
 }
 
-/// The process-wide PJRT CPU runtime.
+/// The process-wide PJRT runtime.
 pub struct PjrtRuntime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(not(feature = "pjrt"))]
+    _priv: (),
 }
 
 impl PjrtRuntime {
     /// Create the CPU client (the only backend in this environment; real
-    /// deployments swap in the TPU plugin here).
+    /// deployments swap in the TPU plugin here). The stub build errors
+    /// here so artifact consumers skip cleanly.
+    #[cfg(feature = "pjrt")]
     pub fn cpu() -> Result<Self> {
         Ok(PjrtRuntime { client: xla::PjRtClient::cpu().context("create PJRT CPU client")? })
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "unavailable (stub build)".to_string()
+    }
+
     /// Load and compile an HLO-text artifact.
+    #[cfg(feature = "pjrt")]
     pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 path")?,
@@ -70,6 +116,11 @@ impl PjrtRuntime {
             .trim_end_matches(".hlo.txt")
             .to_string();
         Ok(Executable { name, exe })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load_hlo_text(&self, _path: &Path) -> Result<Executable> {
+        Err(unavailable())
     }
 }
 

@@ -1,0 +1,105 @@
+//! JSON artifact emission: every figure target writes a machine-readable
+//! report to `target/repro/<name>.json` (override the directory with
+//! `REPRO_ARTIFACT_DIR`).
+//!
+//! The artifacts are the contract between the sweep engine and everything
+//! downstream: the CI figure-smoke job asserts each one is non-empty,
+//! `repro artifacts` lists them, and plotting scripts consume them without
+//! re-running simulations.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::json::JsonValue;
+
+/// Directory artifacts are written to: `REPRO_ARTIFACT_DIR` or the
+/// default `target/repro`.
+pub fn artifact_dir() -> PathBuf {
+    std::env::var("REPRO_ARTIFACT_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("target/repro"))
+}
+
+/// Path of the artifact named `name` (no extension) under `dir`.
+pub fn path_in(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.json"))
+}
+
+/// Write `value` as `<dir>/<name>.json`, creating the directory.
+pub fn write_json_to(dir: &Path, name: &str, value: &JsonValue) -> io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = path_in(dir, name);
+    std::fs::write(&path, value.render() + "\n")?;
+    Ok(path)
+}
+
+/// Write `value` as `<artifact_dir>/<name>.json`.
+pub fn write_figure_json(name: &str, value: &JsonValue) -> io::Result<PathBuf> {
+    write_json_to(&artifact_dir(), name, value)
+}
+
+/// Sorted `*.json` artifacts under `dir`; empty when the directory does
+/// not exist yet.
+pub fn list_in(dir: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(e),
+    };
+    for entry in entries {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Sorted artifacts under the default artifact directory.
+pub fn list() -> io::Result<Vec<PathBuf>> {
+    list_in(&artifact_dir())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dlpim-artifact-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn write_then_list_round_trips() {
+        let dir = tmp_dir("roundtrip");
+        let doc = JsonValue::obj(vec![("figure", JsonValue::str("fig99"))]);
+        let path = write_json_to(&dir, "fig99", &doc).unwrap();
+        assert_eq!(path, path_in(&dir, "fig99"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "{\"figure\":\"fig99\"}\n");
+        let listed = list_in(&dir).unwrap();
+        assert_eq!(listed, vec![path]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn listing_a_missing_dir_is_empty_not_an_error() {
+        let dir = tmp_dir("missing");
+        assert_eq!(list_in(&dir).unwrap(), Vec::<PathBuf>::new());
+    }
+
+    #[test]
+    fn listing_ignores_non_json() {
+        let dir = tmp_dir("mixed");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("notes.txt"), "x").unwrap();
+        write_json_to(&dir, "a", &JsonValue::Null).unwrap();
+        let listed = list_in(&dir).unwrap();
+        assert_eq!(listed.len(), 1);
+        assert!(listed[0].ends_with("a.json"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,143 @@
+//! Minimal JSON document builder (`serde_json` is unavailable offline).
+//!
+//! Only what the figure artifacts need: objects with ordered keys, arrays,
+//! strings, numbers, booleans, null. Rendering is compact (no whitespace)
+//! so the CI smoke job can grep artifacts with fixed patterns.
+
+/// A JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    pub fn str(s: impl Into<String>) -> Self {
+        JsonValue::Str(s.into())
+    }
+
+    pub fn num(x: impl Into<f64>) -> Self {
+        JsonValue::Num(x.into())
+    }
+
+    /// Object from (key, value) pairs, preserving order.
+    pub fn obj(pairs: Vec<(&str, JsonValue)>) -> Self {
+        JsonValue::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Render to a compact JSON string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Num(x) => {
+                // JSON has no NaN/Inf; emit null like serde_json's lossy mode.
+                if x.is_finite() {
+                    out.push_str(&format!("{x}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            JsonValue::Str(s) => {
+                out.push('"');
+                escape_into(s, out);
+                out.push('"');
+            }
+            JsonValue::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(kvs) => {
+                out.push('{');
+                for (i, (k, v)) in kvs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    escape_into(k, out);
+                    out.push_str("\":");
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn escape_into(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested_document() {
+        let doc = JsonValue::obj(vec![
+            ("figure", JsonValue::str("fig09")),
+            (
+                "rows",
+                JsonValue::Arr(vec![JsonValue::obj(vec![
+                    ("workload", JsonValue::str("SPLRad")),
+                    ("speedup", JsonValue::num(2.05)),
+                ])]),
+            ),
+        ]);
+        assert_eq!(
+            doc.render(),
+            r#"{"figure":"fig09","rows":[{"workload":"SPLRad","speedup":2.05}]}"#
+        );
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let v = JsonValue::str("a\"b\\c\nd");
+        assert_eq!(v.render(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn whole_numbers_render_without_fraction() {
+        assert_eq!(JsonValue::num(15.0).render(), "15");
+        assert_eq!(JsonValue::num(0.5).render(), "0.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_become_null() {
+        assert_eq!(JsonValue::Num(f64::NAN).render(), "null");
+        assert_eq!(JsonValue::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(JsonValue::Null.render(), "null");
+        assert_eq!(JsonValue::Bool(true).render(), "true");
+        assert_eq!(JsonValue::Arr(vec![]).render(), "[]");
+    }
+}

@@ -1,0 +1,293 @@
+//! The parallel sweep-execution engine behind the whole figure suite.
+//!
+//! Every figure of the paper is a sweep over `workload x config x policy`
+//! points; DL-PIM's own evaluation is 31 DAMOV workloads crossed with
+//! policies and two memory kinds. This module turns that matrix into one
+//! engine:
+//!
+//! * a **work-stealing scheduler** ([`scheduler`]) that saturates all
+//!   cores regardless of how unevenly the points' simulation costs are
+//!   distributed;
+//! * **deterministic per-job seeding** — each point's PRNG seed is a pure
+//!   function of the point, never of scheduling, so a sweep's reports are
+//!   bit-identical at 1 thread and N threads;
+//! * **panic isolation** — a poisoned workload takes down its own job
+//!   ([`JobOutcome::result`] carries the panic message) and nothing else;
+//! * a **report cache** ([`cache`]) keyed by config hash, so the many
+//!   figure targets that share points (every HMC figure reuses the
+//!   baseline runs) compute each point once per process;
+//! * **JSON artifact emission** ([`artifact`]) to `target/repro/*.json`,
+//!   consumed by the CLI, the benches and the CI figure-smoke job.
+
+pub mod artifact;
+pub mod cache;
+pub mod json;
+pub mod scheduler;
+
+use std::panic::{AssertUnwindSafe, catch_unwind};
+
+use crate::config::SimConfig;
+use crate::coordinator::driver::simulate;
+use crate::coordinator::report::SimReport;
+use crate::workloads::catalog;
+
+/// One (workload, config) point of a sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub workload: String,
+    pub cfg: SimConfig,
+}
+
+impl SweepPoint {
+    pub fn new(workload: impl Into<String>, cfg: SimConfig) -> Self {
+        SweepPoint { workload: workload.into(), cfg }
+    }
+
+    /// The config this job actually simulates: the seed is re-derived
+    /// deterministically from the base seed and the workload name, so
+    /// every workload of a sweep draws an independent stream regardless
+    /// of scheduling, while policy-vs-baseline comparisons of the same
+    /// workload keep identical seeds (the paper's paired methodology).
+    pub fn job_cfg(&self) -> SimConfig {
+        let mut cfg = self.cfg.clone();
+        cfg.seed = derive_seed(self.cfg.seed, &self.workload);
+        cfg
+    }
+
+    /// Report-cache key of this point.
+    pub fn key(&self) -> u64 {
+        cache::config_key(&self.workload, &self.job_cfg())
+    }
+}
+
+/// Mix the base seed with an FNV-1a hash of the workload name, finished
+/// with a SplitMix64 avalanche. Stable across runs, platforms and thread
+/// counts.
+fn derive_seed(base: u64, workload: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in workload.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut z = base ^ h;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Result of one sweep job, in submission order.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub workload: String,
+    /// The report, or the panic/build error message of a poisoned job.
+    pub result: Result<SimReport, String>,
+    /// True when the report came from the process-wide cache.
+    pub from_cache: bool,
+}
+
+impl JobOutcome {
+    /// The report; panics with the job's error for poisoned jobs (the
+    /// strict accessor the figure harness uses — a figure with a missing
+    /// bar is worse than a loud failure).
+    pub fn report(&self) -> &SimReport {
+        match &self.result {
+            Ok(r) => r,
+            Err(e) => panic!("sweep job {:?} failed: {e}", self.workload),
+        }
+    }
+
+    /// Consume the outcome, yielding the report; panics like [`Self::report`]
+    /// for poisoned jobs.
+    pub fn into_report(self) -> SimReport {
+        match self.result {
+            Ok(r) => r,
+            Err(e) => panic!("sweep job {:?} failed: {e}", self.workload),
+        }
+    }
+}
+
+/// Builder for a parallel sweep.
+pub struct Sweep {
+    points: Vec<SweepPoint>,
+    threads: Option<usize>,
+    use_cache: bool,
+}
+
+impl Sweep {
+    pub fn new(points: Vec<SweepPoint>) -> Self {
+        Sweep { points, threads: None, use_cache: true }
+    }
+
+    /// The full cross product `names x cfgs`, in `[workload][config]`
+    /// order.
+    pub fn over(names: &[&str], cfgs: &[SimConfig]) -> Self {
+        let points = names
+            .iter()
+            .flat_map(|n| cfgs.iter().map(move |c| SweepPoint::new(*n, c.clone())))
+            .collect();
+        Sweep::new(points)
+    }
+
+    /// Worker-thread count. Defaults to `REPRO_THREADS` or the machine's
+    /// available parallelism.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
+        self
+    }
+
+    /// Enable/disable the report cache for this sweep (on by default;
+    /// determinism tests turn it off to force recomputation).
+    pub fn use_cache(mut self, yes: bool) -> Self {
+        self.use_cache = yes;
+        self
+    }
+
+    /// Run every point; outcomes come back in submission order.
+    pub fn run(self) -> Vec<JobOutcome> {
+        let n = self.points.len();
+        let mut outcomes: Vec<Option<JobOutcome>> = (0..n).map(|_| None).collect();
+
+        // Cache pass: satisfy what we can without scheduling a job.
+        let mut live: Vec<usize> = Vec::with_capacity(n);
+        for (i, p) in self.points.iter().enumerate() {
+            if self.use_cache {
+                if let Some(rep) = cache::lookup(p.key()) {
+                    outcomes[i] = Some(JobOutcome {
+                        workload: p.workload.clone(),
+                        result: Ok(rep),
+                        from_cache: true,
+                    });
+                    continue;
+                }
+            }
+            live.push(i);
+        }
+
+        let threads = self.threads.unwrap_or_else(scheduler::default_threads);
+        let points = &self.points;
+        let use_cache = self.use_cache;
+        let computed = scheduler::run_jobs(live.len(), threads, |k| {
+            run_point(&points[live[k]], use_cache)
+        });
+        for (slot, outcome) in live.iter().zip(computed) {
+            outcomes[*slot] = Some(outcome);
+        }
+        outcomes.into_iter().map(|o| o.expect("outcome per point")).collect()
+    }
+}
+
+/// Execute one point with panic isolation: a workload that panics (or that
+/// does not exist) poisons only its own job.
+fn run_point(point: &SweepPoint, use_cache: bool) -> JobOutcome {
+    let cfg = point.job_cfg();
+    let name = point.workload.clone();
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let w = catalog::build(&name, &cfg)
+            .unwrap_or_else(|| panic!("unknown workload {name:?}"));
+        simulate(&cfg, w)
+    }));
+    match result {
+        Ok(report) => {
+            if use_cache {
+                cache::store(point.key(), &report);
+            }
+            JobOutcome { workload: name, result: Ok(report), from_cache: false }
+        }
+        Err(payload) => JobOutcome {
+            workload: name,
+            result: Err(panic_message(payload.as_ref())),
+            from_cache: false,
+        },
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "job panicked".to_string()
+    }
+}
+
+/// Run `names x cfgs` and return reports in `[workload][config]` order,
+/// panicking if any job failed — the strict entry point the figure
+/// harness and benches use.
+pub fn run_matrix(names: &[&str], cfgs: &[SimConfig]) -> Vec<Vec<SimReport>> {
+    let mut outcomes = Sweep::over(names, cfgs).run().into_iter();
+    names
+        .iter()
+        .map(|_| {
+            cfgs.iter()
+                .map(|_| outcomes.next().expect("one outcome per point").into_report())
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::PolicyKind;
+
+    fn tiny(policy: PolicyKind) -> SimConfig {
+        let mut cfg = SimConfig::hmc();
+        cfg.policy = policy;
+        cfg.warmup_requests = 100;
+        cfg.measure_requests = 800;
+        cfg.epoch_cycles = 5_000;
+        cfg
+    }
+
+    #[test]
+    fn over_orders_workload_major() {
+        let cfgs = [tiny(PolicyKind::Never), tiny(PolicyKind::Always)];
+        let s = Sweep::over(&["STRAdd", "STRCpy"], &cfgs);
+        let order: Vec<(&str, PolicyKind)> =
+            s.points.iter().map(|p| (p.workload.as_str(), p.cfg.policy)).collect();
+        assert_eq!(
+            order,
+            vec![
+                ("STRAdd", PolicyKind::Never),
+                ("STRAdd", PolicyKind::Always),
+                ("STRCpy", PolicyKind::Never),
+                ("STRCpy", PolicyKind::Always),
+            ]
+        );
+    }
+
+    #[test]
+    fn job_seed_is_per_workload_not_per_policy() {
+        let a = SweepPoint::new("STRAdd", tiny(PolicyKind::Never));
+        let b = SweepPoint::new("STRCpy", tiny(PolicyKind::Never));
+        let c = SweepPoint::new("STRAdd", tiny(PolicyKind::Always));
+        assert_ne!(a.job_cfg().seed, b.job_cfg().seed, "workloads decorrelate");
+        assert_eq!(a.job_cfg().seed, c.job_cfg().seed, "paired comparisons share seeds");
+    }
+
+    #[test]
+    fn run_matrix_shape_and_names() {
+        let cfgs = [tiny(PolicyKind::Never), tiny(PolicyKind::Never)];
+        let out = run_matrix(&["STRAdd", "STRCpy"], &cfgs);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), 2);
+        assert_eq!(out[0][0].workload, "STRAdd");
+        assert_eq!(out[1][1].workload, "STRCpy");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown workload")]
+    fn run_matrix_panics_on_unknown_workload() {
+        run_matrix(&["NOPE"], &[tiny(PolicyKind::Never)]);
+    }
+
+    #[test]
+    fn unknown_workload_is_an_err_outcome_not_a_crash() {
+        let out = Sweep::new(vec![SweepPoint::new("NOPE", tiny(PolicyKind::Never))])
+            .use_cache(false)
+            .run();
+        assert_eq!(out.len(), 1);
+        let err = out[0].result.as_ref().unwrap_err();
+        assert!(err.contains("unknown workload"), "got {err:?}");
+    }
+}

@@ -1,0 +1,139 @@
+//! Work-stealing job scheduler for sweep points.
+//!
+//! Jobs are dealt round-robin onto per-worker deques; a worker drains its
+//! own deque from the front and, when empty, steals from the back of its
+//! siblings' deques (classic Chase-Lev shape, implemented with mutexed
+//! deques — at sweep granularity a job is a whole simulation, thousands of
+//! times longer than a lock, so contention is irrelevant while the
+//! imbalance between a 31-workload figure's fast and slow jobs is not).
+//! Results come back in submission order regardless of which worker ran
+//! which job, and no job output depends on scheduling, so sweeps are
+//! deterministic for any thread count.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Worker-thread count: `REPRO_THREADS` overrides the machine's available
+/// parallelism (useful for CI determinism checks and sizing experiments).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("REPRO_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+}
+
+/// Run `f(0..n_jobs)` across `threads` workers with work stealing; returns
+/// the results in job order. `f` must be safe to call from any worker (the
+/// sweep layer wraps each job in `catch_unwind`, so `f` itself never
+/// unwinds).
+pub fn run_jobs<T, F>(n_jobs: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n_jobs == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n_jobs);
+    if threads == 1 {
+        return (0..n_jobs).map(f).collect();
+    }
+
+    let queues: Vec<Mutex<VecDeque<usize>>> = (0..threads)
+        .map(|w| Mutex::new((0..n_jobs).filter(|j| j % threads == w).collect()))
+        .collect();
+    let results: Vec<Mutex<Option<T>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            let queues = &queues;
+            let results = &results;
+            let f = &f;
+            scope.spawn(move || {
+                // No job enqueues further jobs, so once every deque is
+                // empty all work has been claimed and this worker is done.
+                while let Some(j) = pop_own(&queues[w]).or_else(|| steal(queues, w)) {
+                    let out = f(j);
+                    *results[j].lock().unwrap() = Some(out);
+                }
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every job ran"))
+        .collect()
+}
+
+fn pop_own(q: &Mutex<VecDeque<usize>>) -> Option<usize> {
+    q.lock().unwrap().pop_front()
+}
+
+fn steal(queues: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
+    let n = queues.len();
+    for off in 1..n {
+        if let Some(j) = queues[(me + off) % n].lock().unwrap().pop_back() {
+            return Some(j);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        let out = run_jobs(17, 4, |j| j * 10);
+        assert_eq!(out, (0..17).map(|j| j * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let out = run_jobs(100, 8, |j| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            j
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn more_threads_than_jobs_is_fine() {
+        assert_eq!(run_jobs(2, 64, |j| j + 1), vec![1, 2]);
+        assert_eq!(run_jobs(0, 4, |j| j), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn skewed_job_durations_still_complete() {
+        // Worker 0's local queue holds all the slow jobs; the others must
+        // steal them for the run to finish promptly — either way, every
+        // result must land.
+        let out = run_jobs(24, 4, |j| {
+            if j % 4 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            j
+        });
+        assert_eq!(out, (0..24).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let out = run_jobs(5, 1, |j| j * j);
+        assert_eq!(out, vec![0, 1, 4, 9, 16]);
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

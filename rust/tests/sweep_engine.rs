@@ -1,0 +1,122 @@
+//! Sweep-engine integration tests: thread-count determinism, cache hits on
+//! identical configs, and panic isolation — the contracts every figure
+//! target and every future scaling PR builds on.
+
+use dlpim::config::SimConfig;
+use dlpim::coordinator::report::SimReport;
+use dlpim::policy::PolicyKind;
+use dlpim::sweep::{Sweep, SweepPoint};
+
+fn tiny(policy: PolicyKind) -> SimConfig {
+    let mut cfg = SimConfig::hmc();
+    cfg.policy = policy;
+    cfg.warmup_requests = 200;
+    cfg.measure_requests = 1_500;
+    cfg.epoch_cycles = 5_000;
+    cfg
+}
+
+/// 4 workloads x 2 configs — the acceptance-criteria matrix.
+fn matrix_points() -> Vec<SweepPoint> {
+    let cfgs = [tiny(PolicyKind::Never), tiny(PolicyKind::Always)];
+    ["STRAdd", "STRCpy", "SPLRad", "HSJNPO"]
+        .iter()
+        .flat_map(|w| cfgs.iter().map(move |c| SweepPoint::new(*w, c.clone())))
+        .collect()
+}
+
+/// Everything a report disagrees on when two runs diverge.
+fn fingerprint(r: &SimReport) -> (u64, u64, u64, u64, u64) {
+    let run = &r.runs[0];
+    (
+        run.cycles,
+        run.stats.requests,
+        run.stats.subscriptions,
+        run.stats.traffic.total_bytes(),
+        run.stats.latency.total(),
+    )
+}
+
+#[test]
+fn reports_identical_at_one_thread_and_many() {
+    let serial = Sweep::new(matrix_points()).use_cache(false).threads(1).run();
+    let parallel = Sweep::new(matrix_points()).use_cache(false).threads(8).run();
+    assert_eq!(serial.len(), 8);
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.workload, b.workload, "submission order must be preserved");
+        assert_eq!(
+            fingerprint(a.report()),
+            fingerprint(b.report()),
+            "{} must not depend on thread count",
+            a.workload
+        );
+    }
+}
+
+#[test]
+fn identical_configs_hit_the_cache() {
+    // A (workload, config) pair no other test in this binary uses, so the
+    // first sweep is guaranteed to compute it.
+    let mut cfg = tiny(PolicyKind::Never);
+    cfg.seed = 0xCAFE_0001;
+    let point = SweepPoint::new("STRSca", cfg);
+
+    let first = Sweep::new(vec![point.clone()]).run();
+    assert!(!first[0].from_cache, "first run must compute");
+
+    let second = Sweep::new(vec![point.clone()]).run();
+    assert!(second[0].from_cache, "identical config must reuse the cached report");
+    assert_eq!(fingerprint(first[0].report()), fingerprint(second[0].report()));
+
+    // Any config difference must miss.
+    let mut other_cfg = point.cfg.clone();
+    other_cfg.seed ^= 1;
+    let third = Sweep::new(vec![SweepPoint::new("STRSca", other_cfg)]).run();
+    assert!(!third[0].from_cache, "a different seed is a different point");
+}
+
+#[test]
+fn panicking_job_leaves_other_reports_intact() {
+    let mut points = matrix_points();
+    points.insert(1, SweepPoint::new("NOPE", tiny(PolicyKind::Never)));
+    let out = Sweep::new(points).use_cache(false).threads(4).run();
+    assert_eq!(out.len(), 9);
+
+    let poisoned = out[1].result.as_ref().unwrap_err();
+    assert!(poisoned.contains("unknown workload"), "got {poisoned:?}");
+
+    for (i, outcome) in out.iter().enumerate() {
+        if i == 1 {
+            continue;
+        }
+        let report = outcome.report();
+        assert!(
+            report.runs[0].stats.requests >= 1_500,
+            "job {i} ({}) must have completed its measured window",
+            outcome.workload
+        );
+    }
+}
+
+#[test]
+fn paired_configs_share_seeds_across_policies() {
+    // The paired methodology behind every speedup figure: the baseline and
+    // the policy run of one workload must simulate the same stream.
+    let base = SweepPoint::new("SPLRad", tiny(PolicyKind::Never));
+    let always = SweepPoint::new("SPLRad", tiny(PolicyKind::Always));
+    let other = SweepPoint::new("HSJNPO", tiny(PolicyKind::Never));
+    assert_eq!(base.job_cfg().seed, always.job_cfg().seed);
+    assert_ne!(base.job_cfg().seed, other.job_cfg().seed);
+}
+
+#[test]
+fn run_matrix_routes_through_the_engine() {
+    let cfgs = [tiny(PolicyKind::Never), tiny(PolicyKind::Always)];
+    let out = dlpim::figures::run_matrix(&["STRAdd", "SPLRad"], &cfgs);
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].len(), 2);
+    assert_eq!(out[0][0].workload, "STRAdd");
+    assert_eq!(out[1][1].workload, "SPLRad");
+    assert_eq!(out[1][1].policy, "always");
+}
