@@ -1,24 +1,28 @@
 //! Microbenchmarks over the simulator's hot paths, used by the §Perf
 //! optimization loop (EXPERIMENTS.md §Perf records before/after).
 //!
-//! Targets: mesh transfer (link walk), DRAM access, subscription-table
-//! lookup, full request service, and end-to-end simulation throughput
-//! (simulated requests per wall-second).
+//! Targets: interconnect transfer (legacy coordinate walk vs the memsys
+//! precomputed route tables, plus the crossbar and ring topologies), DRAM
+//! access, subscription-table lookup, full request service through the
+//! `MemorySystem` facade, and end-to-end simulation throughput (simulated
+//! requests per wall-second).
 
 use dlpim::benchkit::{report, time};
 use dlpim::config::SimConfig;
 use dlpim::coordinator::driver::simulate_once;
+use dlpim::memsys::{
+    Access, CrossbarInterconnect, Interconnect, MemorySystem, MeshInterconnect,
+    RingInterconnect,
+};
 use dlpim::policy::{PolicyKind, PolicyRuntime};
 use dlpim::sim::{Mesh, VaultMem};
-use dlpim::stats::SimStats;
-use dlpim::subscription::protocol::{Access, SubSystem};
 use dlpim::subscription::table::{Role, SubState, SubTable};
 use dlpim::workloads::catalog;
 
 fn main() {
     let cfg = SimConfig::hmc();
 
-    // Mesh transfer: worst-case corner-to-corner.
+    // Mesh transfer, legacy on-the-fly XY walk: worst-case corner-to-corner.
     {
         let mut mesh = Mesh::new(&cfg);
         let mut t = 0u64;
@@ -29,6 +33,45 @@ fn main() {
             }
         });
         report("perf_hotpath", "mesh_transfer_x100", &timing);
+    }
+
+    // The same transfer stream over the memsys mesh interconnect: routes
+    // and hop counts precomputed at construction. This is the §Perf
+    // comparison the route-table refactor is verified against.
+    {
+        let mut net = MeshInterconnect::new(&cfg);
+        let mut t = 0u64;
+        let timing = time(100, 1000, || {
+            for _ in 0..100 {
+                std::hint::black_box(net.transfer(0, 31, 5, t));
+                t += 1;
+            }
+        });
+        report("perf_hotpath", "mesh_route_transfer_x100", &timing);
+    }
+
+    // The two new topologies' transfer paths, same traffic shape.
+    {
+        let mut net = CrossbarInterconnect::new(&SimConfig::hbm());
+        let mut t = 0u64;
+        let timing = time(100, 1000, || {
+            for _ in 0..100 {
+                std::hint::black_box(net.transfer(0, 7, 5, t));
+                t += 1;
+            }
+        });
+        report("perf_hotpath", "crossbar_transfer_x100", &timing);
+    }
+    {
+        let mut net = RingInterconnect::new(&cfg);
+        let mut t = 0u64;
+        let timing = time(100, 1000, || {
+            for _ in 0..100 {
+                std::hint::black_box(net.transfer(0, 16, 5, t));
+                t += 1;
+            }
+        });
+        report("perf_hotpath", "ring_transfer_x100", &timing);
     }
 
     // DRAM bank access.
@@ -66,26 +109,20 @@ fn main() {
         report("perf_hotpath", "subtable_lookup_x100", &timing);
     }
 
-    // Full request service (remote read, no subscription).
+    // Full request service through the MemorySystem facade (remote read,
+    // no subscription).
     {
         let mut cfgn = cfg.clone();
         cfgn.policy = PolicyKind::Never;
-        let mut sys = SubSystem::new(&cfgn);
-        let mut mesh = Mesh::new(&cfgn);
-        let mut vaults: Vec<VaultMem> =
-            (0..cfgn.n_vaults).map(|_| VaultMem::new(&cfgn)).collect();
-        let mut stats = SimStats::new(cfgn.n_vaults);
+        let mut mem = MemorySystem::new(&cfgn);
         let policy = PolicyRuntime::new(&cfgn);
         let mut t = 0u64;
         let mut b = 0u64;
         let timing = time(100, 1000, || {
             for _ in 0..100 {
-                std::hint::black_box(sys.serve(
+                std::hint::black_box(mem.serve(
                     Access { requester: (b % 32) as u16, block: b * 7 + 31, write: false },
                     t,
-                    &mut mesh,
-                    &mut vaults,
-                    &mut stats,
                     &policy,
                 ));
                 b += 1;

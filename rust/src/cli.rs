@@ -73,6 +73,7 @@ USAGE:
 
 COMMANDS:
     run           Simulate one workload: --workload NAME [--memory hmc|hbm]
+                  [--topology mesh|crossbar|ring]
                   [--policy never|always|adaptive|adaptive-hops|adaptive-latency]
                   [--measure N] [--warmup N] [--runs N] [--seed N] [--config FILE]
     figure        Regenerate one figure: figure <1|2|3|4|9|10|11|12|13|14|15|16|17|18>
@@ -81,6 +82,7 @@ COMMANDS:
                   figure targets reuse the sweep engine's report cache)
     workloads     Print Table III (the 31 representative workloads)
     config        Print the resolved config: --memory hmc|hbm [--policy P]
+                  [--topology mesh|crossbar|ring]
     artifacts     List figure JSON artifacts and the AOT artifacts (PJRT)
     help          This text
 
@@ -91,6 +93,8 @@ SCALE FLAGS (also env REPRO_WARMUP / REPRO_MEASURE / REPRO_RUNS / REPRO_EPOCH):
 ENVIRONMENT:
     REPRO_THREADS       sweep worker threads (default: all cores)
     REPRO_ARTIFACT_DIR  where figure JSON artifacts land (default: target/repro)
+    REPRO_TOPOLOGY      override the interconnect for every figure run
+                        (mesh|crossbar|ring; default: the preset's topology)
 ";
 
 #[cfg(test)]

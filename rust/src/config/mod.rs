@@ -26,6 +26,39 @@ impl MemKind {
     }
 }
 
+/// Which inter-vault interconnect the memory system routes over (the
+/// [`crate::memsys::Interconnect`] implementation built for a run).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// 2-D mesh with XY routing — HMC's vault network (Fig 8a).
+    Mesh,
+    /// Non-blocking crossbar with per-channel ports and a uniform 1-hop
+    /// switch latency — HBM's pseudo-channel switch (§V).
+    Crossbar,
+    /// Bidirectional ring, shortest-direction routing — the extra
+    /// sensitivity-study topology.
+    Ring,
+}
+
+impl Topology {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Topology::Mesh => "mesh",
+            Topology::Crossbar => "crossbar",
+            Topology::Ring => "ring",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "mesh" => Some(Topology::Mesh),
+            "crossbar" | "xbar" => Some(Topology::Crossbar),
+            "ring" => Some(Topology::Ring),
+            _ => None,
+        }
+    }
+}
+
 /// Complete configuration of one simulation run.
 ///
 /// Defaults come from the paper's Table I / Table II and §III; anything the
@@ -34,9 +67,12 @@ impl MemKind {
 #[derive(Clone, Debug)]
 pub struct SimConfig {
     pub mem: MemKind,
-    /// Mesh width (6 for HMC, 4 for HBM).
+    /// Interconnect topology (mesh for HMC, crossbar for HBM's
+    /// pseudo-channels, ring for sensitivity studies).
+    pub topology: Topology,
+    /// Mesh width (6 for HMC, 4 for HBM). Ignored by non-mesh topologies.
     pub net_w: u16,
-    /// Mesh height (6 for HMC, 2 for HBM).
+    /// Mesh height (6 for HMC, 2 for HBM). Ignored by non-mesh topologies.
     pub net_h: u16,
     /// Number of active vaults/channels (32 for HMC on the 6x6 grid with the
     /// four corner routers acting as host-interface nodes; 8 for HBM).
@@ -114,6 +150,7 @@ impl SimConfig {
     pub fn hmc() -> Self {
         SimConfig {
             mem: MemKind::Hmc,
+            topology: Topology::Mesh,
             net_w: 6,
             net_h: 6,
             n_vaults: 32,
@@ -145,10 +182,12 @@ impl SimConfig {
         }
     }
 
-    /// Table II baseline: HBM2, 8 channels on a 4x2 mesh.
+    /// Table II baseline: HBM2, 8 pseudo-channels behind a crossbar switch
+    /// (the 4x2 grid remains the fallback when `--topology mesh` is forced).
     pub fn hbm() -> Self {
         SimConfig {
             mem: MemKind::Hbm,
+            topology: Topology::Crossbar,
             net_w: 4,
             net_h: 2,
             n_vaults: 8,
@@ -199,11 +238,36 @@ impl SimConfig {
     /// Validate internal consistency; returns a human-readable error list.
     pub fn validate(&self) -> Result<(), Vec<String>> {
         let mut errs = Vec::new();
-        if (self.net_w as u32) * (self.net_h as u32) < self.n_vaults as u32 {
-            errs.push(format!(
-                "mesh {}x{} cannot host {} vaults",
-                self.net_w, self.net_h, self.n_vaults
-            ));
+        if self.n_vaults == 0 {
+            errs.push("n_vaults must be >= 1".into());
+        }
+        match self.topology {
+            Topology::Mesh => {
+                if (self.net_w as u32) * (self.net_h as u32) < self.n_vaults as u32 {
+                    errs.push(format!(
+                        "mesh {}x{} cannot host {} vaults",
+                        self.net_w, self.net_h, self.n_vaults
+                    ));
+                }
+            }
+            Topology::Crossbar => {
+                if !self.n_vaults.is_power_of_two() {
+                    errs.push(format!(
+                        "crossbar topology needs a power-of-two vault count \
+                         (pseudo-channel ports pair into a square switch), got {}; \
+                         adjust n_vaults or pick --topology mesh/ring",
+                        self.n_vaults
+                    ));
+                }
+            }
+            Topology::Ring => {
+                if self.n_vaults < 2 {
+                    errs.push(format!(
+                        "ring topology needs at least 2 vaults, got {}",
+                        self.n_vaults
+                    ));
+                }
+            }
         }
         if !self.block_bytes.is_power_of_two() {
             errs.push("block_bytes must be a power of two".into());
@@ -248,7 +312,42 @@ mod tests {
         assert_eq!(c.n_vaults, 8);
         assert_eq!((c.net_w, c.net_h), (4, 2));
         assert_eq!(c.banks_per_vault, 16);
+        assert_eq!(c.topology, Topology::Crossbar, "HBM routes over its switch");
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn topology_parse_roundtrips() {
+        for t in [Topology::Mesh, Topology::Crossbar, Topology::Ring] {
+            assert_eq!(Topology::parse(t.as_str()), Some(t));
+        }
+        assert_eq!(Topology::parse("torus"), None);
+    }
+
+    #[test]
+    fn validate_rejects_non_pow2_crossbar() {
+        let mut c = SimConfig::hmc();
+        c.topology = Topology::Crossbar;
+        c.n_vaults = 24; // fits the 6x6 grid but is not a power of two
+        let errs = c.validate().unwrap_err();
+        assert!(errs.iter().any(|e| e.contains("crossbar")), "{errs:?}");
+    }
+
+    #[test]
+    fn validate_accepts_ring_and_crossbar_presets() {
+        let mut c = SimConfig::hmc();
+        c.topology = Topology::Ring;
+        assert!(c.validate().is_ok());
+        c.topology = Topology::Crossbar; // 32 vaults: power of two
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_tiny_ring() {
+        let mut c = SimConfig::hmc();
+        c.topology = Topology::Ring;
+        c.n_vaults = 1;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! measure_requests = 500000
 //! ```
 
-use super::{MemKind, SimConfig};
+use super::{MemKind, SimConfig, Topology};
 use crate::policy::PolicyKind;
 
 /// A parsed `key = value` file.
@@ -102,6 +102,10 @@ pub fn apply(cfg: &mut SimConfig, kv: &KvFile) -> Result<(), String> {
                 cfg.policy =
                     PolicyKind::parse(v).ok_or(format!("unknown policy {v:?}"))?
             }
+            "topology" => {
+                cfg.topology = Topology::parse(v)
+                    .ok_or(format!("unknown topology {v:?} (mesh|crossbar|ring)"))?
+            }
             "net_w" => cfg.net_w = parse_num(key, v)?,
             "net_h" => cfg.net_h = parse_num(key, v)?,
             "n_vaults" => cfg.n_vaults = parse_num(key, v)?,
@@ -165,6 +169,21 @@ mod tests {
     #[test]
     fn rejects_unknown_key() {
         assert!(config_from_text("bogus_key = 3\n").is_err());
+    }
+
+    #[test]
+    fn parses_topology_key() {
+        let cfg = config_from_text("topology = ring\n").unwrap();
+        assert_eq!(cfg.topology, Topology::Ring);
+        assert!(config_from_text("topology = torus\n").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_topology_combination() {
+        // 24 vaults fit the 6x6 mesh but cannot form a crossbar switch.
+        let err =
+            config_from_text("topology = crossbar\nn_vaults = 24\n").unwrap_err();
+        assert!(err.contains("crossbar"), "{err}");
     }
 
     #[test]

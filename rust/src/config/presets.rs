@@ -62,6 +62,7 @@ pub fn render(cfg: &SimConfig) -> String {
         s.push('\n');
     };
     kv("mem", cfg.mem.as_str().to_string());
+    kv("topology", cfg.topology.as_str().to_string());
     kv("policy", cfg.policy.as_str().to_string());
     kv("net_w", cfg.net_w.to_string());
     kv("net_h", cfg.net_h.to_string());
@@ -104,6 +105,7 @@ mod tests {
             let text = render(&cfg);
             let back = config_from_text(&text).unwrap();
             assert_eq!(back.mem, cfg.mem);
+            assert_eq!(back.topology, cfg.topology);
             assert_eq!(back.policy, cfg.policy);
             assert_eq!(back.n_vaults, cfg.n_vaults);
             assert_eq!(back.sub_table_sets, cfg.sub_table_sets);

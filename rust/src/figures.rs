@@ -18,7 +18,9 @@ use crate::sweep::json::JsonValue;
 use crate::workloads::catalog;
 
 /// Scale knobs, overridable from the environment:
-/// `REPRO_WARMUP` / `REPRO_MEASURE` / `REPRO_RUNS` / `REPRO_EPOCH`.
+/// `REPRO_WARMUP` / `REPRO_MEASURE` / `REPRO_RUNS` / `REPRO_EPOCH`, plus
+/// `REPRO_TOPOLOGY` to force one interconnect across the whole suite
+/// (the CI smoke job's topology axis).
 pub fn scaled(mut cfg: SimConfig) -> SimConfig {
     fn env_u64(key: &str) -> Option<u64> {
         std::env::var(key).ok()?.parse().ok()
@@ -34,6 +36,10 @@ pub fn scaled(mut cfg: SimConfig) -> SimConfig {
     }
     if let Some(v) = env_u64("REPRO_EPOCH") {
         cfg.epoch_cycles = v;
+    }
+    if let Ok(t) = std::env::var("REPRO_TOPOLOGY") {
+        cfg.topology = crate::config::Topology::parse(&t)
+            .unwrap_or_else(|| panic!("unknown REPRO_TOPOLOGY {t:?} (mesh|crossbar|ring)"));
     }
     cfg
 }

@@ -47,6 +47,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod figures;
+pub mod memsys;
 pub mod policy;
 pub mod proptest_lite;
 pub mod rng;

@@ -2,7 +2,7 @@
 //! figures, inspect configs and artifacts.
 
 use dlpim::cli::{Cli, HELP};
-use dlpim::config::{presets, MemKind, SimConfig};
+use dlpim::config::{presets, MemKind, SimConfig, Topology};
 use dlpim::coordinator::driver::simulate;
 use dlpim::error::{bail, err, Result};
 use dlpim::figures;
@@ -47,6 +47,10 @@ fn config_from_cli(cli: &Cli) -> Result<SimConfig> {
     if let Some(p) = cli.flag("policy") {
         cfg.policy = PolicyKind::parse(p).ok_or_else(|| err!("unknown policy {p:?}"))?;
     }
+    if let Some(t) = cli.flag("topology") {
+        cfg.topology = Topology::parse(t)
+            .ok_or_else(|| err!("unknown topology {t:?} (mesh|crossbar|ring)"))?;
+    }
     if cli.has("quick") {
         cfg = cfg.quick();
     }
@@ -82,6 +86,7 @@ fn cmd_run(cli: &Cli) -> Result<()> {
     let (n, q, a) = rep.latency_fractions();
     println!("workload        {name}");
     println!("memory/policy   {}/{}", cfg.mem.as_str(), cfg.policy.as_str());
+    println!("topology        {}", cfg.topology.as_str());
     println!("runs            {}", rep.runs.len());
     println!("cycles          {:.0}", rep.cycles());
     println!("avg latency     {:.1} cycles/request", rep.avg_latency());

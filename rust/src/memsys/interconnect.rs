@@ -1,0 +1,116 @@
+//! The [`Interconnect`] abstraction: every topology the memory system can
+//! route over, behind one trait.
+//!
+//! Implementations precompute their per-pair hop counts and routes at
+//! construction ([`MeshInterconnect`](super::MeshInterconnect) and
+//! [`RingInterconnect`](super::RingInterconnect) store explicit link-index
+//! routes; [`CrossbarInterconnect`](super::CrossbarInterconnect) is
+//! uniformly one hop), so the transfer hot path never recomputes routing —
+//! it walks a precomputed slice and reserves link calendars.
+
+use crate::config::{SimConfig, Topology};
+use crate::sim::network::LinkCal;
+use crate::sim::Transfer;
+use crate::{Cycle, VaultId};
+
+/// One inter-vault network topology.
+///
+/// The contract every implementation upholds (checked by the
+/// `interconnect_props` property tests):
+/// * `hops(a, b) == hops(b, a)` and `hops(a, a) == 0`;
+/// * a self-transfer is free: `transfer(a, a, f, t)` arrives at `t` with
+///   zero hops, network and queueing;
+/// * `transfer(..).arrive >= depart`, and the decomposition is exact:
+///   `arrive == depart + network + queued`;
+/// * uncontended transfers cost `flits * hops(a, b)` cycles (the paper's
+///   §III-C cost model).
+pub trait Interconnect: Send {
+    /// Short name for reports ("mesh" | "crossbar" | "ring").
+    fn name(&self) -> &'static str;
+
+    /// Number of vaults/channels attached to this network.
+    fn n_vaults(&self) -> u16;
+
+    /// Topological distance between two vaults (the paper's `h` terms).
+    fn hops(&self, a: VaultId, b: VaultId) -> u32;
+
+    /// Send a `flits`-sized packet from `from` to `to`, departing no
+    /// earlier than `depart`; reserves every contended resource on the
+    /// path and returns the timing decomposition.
+    fn transfer(&mut self, from: VaultId, to: VaultId, flits: u32, depart: Cycle)
+        -> Transfer;
+
+    /// The vault hosting the global adaptive policy's decision logic
+    /// (§III-D4) — the topological center of the network.
+    fn central_vault(&self) -> VaultId;
+
+    /// Clear all link/port reservations (between runs).
+    fn reset(&mut self);
+}
+
+/// Walk a precomputed route, reserving each directed link/port calendar in
+/// order — the shared transfer hot path of the route-table topologies
+/// (mesh, ring, and any future one). An empty route (self-transfer) yields
+/// a free, instantaneous [`Transfer`], so implementations need no separate
+/// same-vault guard.
+pub(crate) fn walk_route(
+    links: &mut [LinkCal],
+    route: &[u32],
+    flits: u32,
+    depart: Cycle,
+) -> Transfer {
+    let f = flits as u64;
+    let mut t = depart;
+    let mut queued = 0u64;
+    for &link in route {
+        let start = links[link as usize].reserve(t, f);
+        queued += start - t;
+        t = start + f;
+    }
+    let hops = route.len() as u32;
+    Transfer { arrive: t, network: f * hops as u64, queued, hops }
+}
+
+/// Build the interconnect selected by `cfg.topology`.
+pub fn build_interconnect(cfg: &SimConfig) -> Box<dyn Interconnect> {
+    match cfg.topology {
+        Topology::Mesh => Box::new(super::MeshInterconnect::new(cfg)),
+        Topology::Crossbar => Box::new(super::CrossbarInterconnect::new(cfg)),
+        Topology::Ring => Box::new(super::RingInterconnect::new(cfg)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_matches_config_topology() {
+        for (t, name) in [
+            (Topology::Mesh, "mesh"),
+            (Topology::Crossbar, "crossbar"),
+            (Topology::Ring, "ring"),
+        ] {
+            let mut cfg = SimConfig::hmc();
+            cfg.topology = t;
+            let net = build_interconnect(&cfg);
+            assert_eq!(net.name(), name);
+            assert_eq!(net.n_vaults(), cfg.n_vaults);
+        }
+    }
+
+    #[test]
+    fn all_topologies_honor_the_paper_cost_model_uncontended() {
+        // (k+1) * h_ro: 1-FLIT request one way, k-FLIT response back.
+        for t in [Topology::Mesh, Topology::Crossbar, Topology::Ring] {
+            let mut cfg = SimConfig::hmc();
+            cfg.topology = t;
+            let mut net = build_interconnect(&cfg);
+            let (r, o) = (0u16, 31u16);
+            let h = net.hops(r, o) as u64;
+            let req = net.transfer(r, o, 1, 0);
+            let resp = net.transfer(o, r, 5, req.arrive);
+            assert_eq!(resp.arrive, (5 + 1) * h, "{t:?}");
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! The memory-system facade: one object that owns everything a memory
+//! request touches — the interconnect, the per-vault DRAM, the distributed
+//! subscription directory and the run statistics — behind a narrow
+//! `serve(Access, now) -> ServedRequest` API.
+//!
+//! ## Why a facade
+//!
+//! Before this layer existed, every protocol handler threaded
+//! `&mut Mesh, &mut Vec<VaultMem>, &mut SimStats` through its signature and
+//! the driver pattern-matched four nearly identical request paths. The
+//! facade collapses that: the driver (and any test or bench) issues
+//! [`Access`]es and reads [`ServedRequest`] decompositions; *which*
+//! interconnect carries the packets is a [`SimConfig::topology`] decision
+//! made once in [`MemorySystem::new`].
+//!
+//! ## Layout
+//!
+//! * [`interconnect`] — the [`Interconnect`] trait and
+//!   [`build_interconnect`], the topology selector;
+//! * [`mesh`] / [`crossbar`] / [`ring`] — the three implementations
+//!   (HMC's vault mesh, HBM's pseudo-channel switch, and the ring used by
+//!   sensitivity studies), each with per-pair hop/route tables precomputed
+//!   at construction;
+//! * the protocol handlers themselves live in
+//!   [`crate::subscription`]'s `serve` / `forward` / `subscribe` / `evict`
+//!   submodules as `impl MemorySystem` blocks — they are the only code
+//!   that reaches through the facade's crate-private fields.
+//!
+//! ## Adding a fourth topology
+//!
+//! 1. Create `memsys/<name>.rs` implementing [`Interconnect`]; model each
+//!    contended port or link with a [`crate::sim::network::LinkCal`] and
+//!    precompute hop/route tables in `new` (the transfer path should only
+//!    walk slices and reserve calendars).
+//! 2. Add a variant to [`crate::config::Topology`] (`as_str` + `parse`),
+//!    wire it into [`build_interconnect`], and teach
+//!    `SimConfig::validate` its structural constraints.
+//! 3. Extend the `interconnect_props` property tests' topology list — hop
+//!    symmetry, free self-transfer, no-early-completion and determinism
+//!    come for free.
+
+pub mod crossbar;
+pub mod interconnect;
+pub mod mesh;
+pub mod ring;
+
+pub use crossbar::CrossbarInterconnect;
+pub use interconnect::{build_interconnect, Interconnect};
+pub use mesh::MeshInterconnect;
+pub use ring::RingInterconnect;
+
+pub use crate::subscription::protocol::Access;
+
+use crate::config::SimConfig;
+use crate::policy::EpochDecision;
+use crate::sim::{PacketKind, Transfer, VaultMem};
+use crate::stats::SimStats;
+use crate::subscription::protocol::SubSystem;
+use crate::{Cycle, VaultId};
+
+/// Timing/result decomposition of one served demand access.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServedRequest {
+    /// Completion cycle.
+    pub done: Cycle,
+    /// Pure transfer cycles (FLIT serialization x hops).
+    pub network: u64,
+    /// Waits: busy links, controller port, busy banks, pending states.
+    pub queued: u64,
+    /// Portion of `queued` spent waiting on busy interconnect links/ports.
+    pub queued_net: u64,
+    /// DRAM array cycles.
+    pub array: u64,
+    /// Vault whose memory served the data.
+    pub served_by: VaultId,
+    /// True if no packet left the requester vault.
+    pub local: bool,
+    /// Hops actually traversed by all legs of this request.
+    pub actual_hops: u32,
+    /// One-way requester→home distance (the unsubscribed estimate).
+    pub baseline_hops: u32,
+    /// True if a subscription-table redirect or holder hit was involved.
+    pub subscribed_path: bool,
+    /// Subscription-table set of the accessed block.
+    pub set: u32,
+}
+
+/// The complete memory system of one simulation run.
+///
+/// Owns the interconnect, the vault DRAM array, the subscription directory
+/// and the statistics; all demand traffic enters through
+/// [`MemorySystem::serve`] (defined with the protocol handlers in
+/// [`crate::subscription`]).
+pub struct MemorySystem {
+    pub(crate) cfg: SimConfig,
+    pub(crate) net: Box<dyn Interconnect>,
+    pub(crate) vaults: Vec<VaultMem>,
+    pub(crate) subs: SubSystem,
+    pub(crate) stats: SimStats,
+}
+
+impl MemorySystem {
+    pub fn new(cfg: &SimConfig) -> Self {
+        MemorySystem {
+            net: build_interconnect(cfg),
+            vaults: (0..cfg.n_vaults).map(|_| VaultMem::new(cfg)).collect(),
+            subs: SubSystem::new(cfg),
+            stats: SimStats::new(cfg.n_vaults),
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// The configuration this system was built from.
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// The interconnect carrying this system's packets.
+    pub fn interconnect(&self) -> &dyn Interconnect {
+        self.net.as_ref()
+    }
+
+    /// Vaults/channels attached to the system.
+    pub fn n_vaults(&self) -> u16 {
+        self.net.n_vaults()
+    }
+
+    /// Topological distance between two vaults on the active interconnect.
+    pub fn hops(&self, a: VaultId, b: VaultId) -> u32 {
+        self.net.hops(a, b)
+    }
+
+    /// The vault hosting the global policy's decision logic (§III-D4).
+    pub fn central_vault(&self) -> VaultId {
+        self.net.central_vault()
+    }
+
+    /// Run statistics accumulated since the last reset.
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    /// Mutable statistics access (the driver resets them after warmup and
+    /// counts L1 hits that never enter the memory system).
+    pub fn stats_mut(&mut self) -> &mut SimStats {
+        &mut self.stats
+    }
+
+    /// Consume the system, yielding its statistics (end of a run).
+    pub fn into_stats(self) -> SimStats {
+        self.stats
+    }
+
+    /// Read access to the subscription directory (tests, reports).
+    pub fn directory(&self) -> &SubSystem {
+        &self.subs
+    }
+
+    /// Check the distributed-directory invariant; see
+    /// [`SubSystem::directory_consistent`].
+    pub fn directory_consistent(&self, now: Cycle) -> Result<(), String> {
+        self.subs.directory_consistent(now)
+    }
+
+    /// The race-tolerant variant the driver's debug boundary check uses;
+    /// see [`SubSystem::directory_consistent_modeled`].
+    pub fn directory_consistent_modeled(&self, now: Cycle) -> Result<(), String> {
+        self.subs.directory_consistent_modeled(now)
+    }
+
+    /// Commit every pending directory transition completed by `now`.
+    pub fn settle(&mut self, now: Cycle) {
+        self.subs.settle(now);
+    }
+
+    /// Blocks currently parked in any vault's reserved space.
+    pub fn total_parked(&self) -> u64 {
+        self.subs.total_parked()
+    }
+
+    /// Age the subscription tables' LFU counters (epoch boundaries).
+    pub fn decay_tables(&mut self) {
+        self.subs.decay_all();
+    }
+
+    /// Clear all dynamic state (reservations, directory, stats) so the
+    /// system can be reused for another run.
+    pub fn reset(&mut self) {
+        self.net.reset();
+        for v in &mut self.vaults {
+            v.reset();
+        }
+        self.subs.reset();
+        self.stats.reset();
+    }
+
+    /// Broadcast one epoch decision from the central vault (§III-D4): the
+    /// per-vault stats reports travel in, the on/off packets travel out,
+    /// all contending with demand traffic like any other packets; the
+    /// tables' LFU counters age at the same boundary.
+    pub fn broadcast_decision(&mut self, d: &EpochDecision) {
+        self.subs.decay_all();
+        let central = self.net.central_vault();
+        let kind = if d.enabled {
+            PacketKind::TurnOnSubscription
+        } else {
+            PacketKind::TurnOffSubscription
+        };
+        let flits = kind.flits(&self.cfg);
+        for v in 0..self.net.n_vaults() {
+            if v == central {
+                continue;
+            }
+            self.send(PacketKind::StatsReport, 1, v, central, d.at);
+            self.send(kind, flits, central, v, d.at);
+        }
+    }
+
+    /// Ship one packet over the interconnect and record its traffic.
+    pub(crate) fn send(
+        &mut self,
+        kind: PacketKind,
+        flits: u32,
+        from: VaultId,
+        to: VaultId,
+        at: Cycle,
+    ) -> Transfer {
+        let tr = self.net.transfer(from, to, flits, at);
+        self.stats.traffic.record(
+            flits,
+            tr.hops,
+            self.subs.flit_bytes,
+            kind.is_subscription_traffic(),
+        );
+        tr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Topology;
+    use crate::policy::{PolicyKind, PolicyRuntime};
+
+    #[test]
+    fn facade_serves_over_every_topology() {
+        for t in [Topology::Mesh, Topology::Crossbar, Topology::Ring] {
+            let mut cfg = SimConfig::hmc();
+            cfg.topology = t;
+            cfg.policy = PolicyKind::Never;
+            let policy = PolicyRuntime::new(&cfg);
+            let mut mem = MemorySystem::new(&cfg);
+            let res = mem.serve(
+                Access { requester: 0, block: 31, write: false },
+                0,
+                &policy,
+            );
+            assert_eq!(res.served_by, 31);
+            let h = mem.hops(0, 31) as u64;
+            assert_eq!(res.network, (5 + 1) * h, "{t:?}");
+            assert_eq!(mem.stats().demand.total(), 1);
+        }
+    }
+
+    #[test]
+    fn broadcast_decision_records_traffic() {
+        let cfg = SimConfig::hmc();
+        let mut mem = MemorySystem::new(&cfg);
+        let before = mem.stats().traffic.total_bytes();
+        let d = EpochDecision {
+            epoch: 1,
+            at: 1000,
+            enabled: true,
+            vaults_enabled: 32,
+            avg_latency: None,
+        };
+        mem.broadcast_decision(&d);
+        assert!(mem.stats().traffic.total_bytes() > before);
+    }
+
+    #[test]
+    fn reset_restores_a_clean_system() {
+        let cfg = SimConfig::hmc();
+        let policy = PolicyRuntime::new(&cfg);
+        let mut mem = MemorySystem::new(&cfg);
+        mem.serve(Access { requester: 0, block: 31, write: false }, 0, &policy);
+        mem.reset();
+        assert_eq!(mem.stats().requests, 0);
+        assert_eq!(mem.total_parked(), 0);
+        let res =
+            mem.serve(Access { requester: 0, block: 31, write: false }, 0, &policy);
+        assert_eq!(res.queued_net, 0, "no stale link reservations");
+    }
+}

@@ -1,0 +1,176 @@
+//! A bidirectional ring as an [`Interconnect`] — the sensitivity-study
+//! topology: cheaper to lay out than a mesh (2 links per vault instead of
+//! 4) but with an average distance that grows linearly in the vault count,
+//! so it brackets the mesh from below on wiring cost and from above on
+//! hop count.
+//!
+//! Routing is shortest-direction (ties go clockwise, deterministically);
+//! per-pair routes are precomputed at construction like the mesh's.
+
+use crate::config::SimConfig;
+use crate::memsys::interconnect::{Interconnect, walk_route};
+use crate::sim::network::LinkCal;
+use crate::sim::Transfer;
+use crate::{Cycle, VaultId};
+
+const DIR_CW: usize = 0;
+const DIR_CCW: usize = 1;
+
+/// Bidirectional ring with precomputed shortest-direction routes.
+pub struct RingInterconnect {
+    n: u16,
+    /// `hops[a * n + b]` — ring distance (shorter arc).
+    hop_table: Vec<u32>,
+    /// `routes[a * n + b]` — directed-link indices (`node * 2 + dir`).
+    routes: Vec<Vec<u32>>,
+    links: Vec<LinkCal>,
+}
+
+impl RingInterconnect {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let n = cfg.n_vaults as usize;
+        assert!(n >= 2, "ring needs at least 2 vaults (cfg.validate enforces this)");
+        let mut hop_table = vec![0u32; n * n];
+        let mut routes = vec![Vec::new(); n * n];
+        for a in 0..n {
+            for b in 0..n {
+                if a == b {
+                    continue;
+                }
+                let d_cw = (b + n - a) % n;
+                let d_ccw = (a + n - b) % n;
+                let route = &mut routes[a * n + b];
+                if d_cw <= d_ccw {
+                    let mut cur = a;
+                    for _ in 0..d_cw {
+                        route.push(cur as u32 * 2 + DIR_CW as u32);
+                        cur = (cur + 1) % n;
+                    }
+                } else {
+                    let mut cur = a;
+                    for _ in 0..d_ccw {
+                        route.push(cur as u32 * 2 + DIR_CCW as u32);
+                        cur = (cur + n - 1) % n;
+                    }
+                }
+                hop_table[a * n + b] = d_cw.min(d_ccw) as u32;
+            }
+        }
+        RingInterconnect {
+            n: cfg.n_vaults,
+            hop_table,
+            routes,
+            links: vec![LinkCal::default(); n * 2],
+        }
+    }
+}
+
+impl Interconnect for RingInterconnect {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn n_vaults(&self) -> u16 {
+        self.n
+    }
+
+    #[inline]
+    fn hops(&self, a: VaultId, b: VaultId) -> u32 {
+        self.hop_table[a as usize * self.n as usize + b as usize]
+    }
+
+    fn transfer(
+        &mut self,
+        from: VaultId,
+        to: VaultId,
+        flits: u32,
+        depart: Cycle,
+    ) -> Transfer {
+        walk_route(
+            &mut self.links,
+            &self.routes[from as usize * self.n as usize + to as usize],
+            flits,
+            depart,
+        )
+    }
+
+    fn central_vault(&self) -> VaultId {
+        // A ring is vertex-transitive: every vault is a center. Vault 0
+        // hosts the policy's decision logic by convention.
+        0
+    }
+
+    fn reset(&mut self) {
+        for l in &mut self.links {
+            l.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring() -> RingInterconnect {
+        RingInterconnect::new(&SimConfig::hmc()) // 32 vaults
+    }
+
+    #[test]
+    fn hops_take_the_shorter_arc() {
+        let net = ring();
+        assert_eq!(net.hops(0, 1), 1);
+        assert_eq!(net.hops(0, 31), 1, "wraps around");
+        assert_eq!(net.hops(0, 16), 16, "antipode");
+        assert_eq!(net.hops(3, 10), 7);
+    }
+
+    #[test]
+    fn hops_symmetric_and_zero_on_self() {
+        let net = ring();
+        for a in 0..32u16 {
+            for b in 0..32u16 {
+                assert_eq!(net.hops(a, b), net.hops(b, a));
+            }
+            assert_eq!(net.hops(a, a), 0);
+        }
+    }
+
+    #[test]
+    fn uncontended_transfer_costs_flits_times_hops() {
+        let mut net = ring();
+        let h = net.hops(0, 5);
+        let tr = net.transfer(0, 5, 5, 100);
+        assert_eq!(tr.hops, h);
+        assert_eq!(tr.network, 5 * h as u64);
+        assert_eq!(tr.queued, 0);
+        assert_eq!(tr.arrive, 100 + 5 * h as u64);
+    }
+
+    #[test]
+    fn opposite_directions_do_not_contend() {
+        let mut net = ring();
+        let a = net.transfer(0, 4, 5, 0); // clockwise over links 0..4
+        let b = net.transfer(4, 0, 5, 0); // counter-clockwise back
+        assert_eq!(a.queued, 0);
+        assert_eq!(b.queued, 0);
+    }
+
+    #[test]
+    fn shared_direction_contends() {
+        let mut net = ring();
+        let a = net.transfer(0, 4, 5, 0);
+        let b = net.transfer(0, 4, 5, 0);
+        assert_eq!(a.queued, 0);
+        assert_eq!(b.queued, 5, "same first link, same direction");
+    }
+
+    #[test]
+    fn two_vault_ring_works() {
+        let mut cfg = SimConfig::hmc();
+        cfg.n_vaults = 2;
+        let mut net = RingInterconnect::new(&cfg);
+        assert_eq!(net.hops(0, 1), 1);
+        let tr = net.transfer(1, 0, 3, 10);
+        assert_eq!(tr.arrive, 13);
+    }
+}

@@ -1,5 +1,16 @@
-//! The memory-system substrate: FLIT packets, the vault mesh, DRAM bank
-//! timing, and the physical address map.
+//! The memory-system substrate: FLIT packets, DRAM bank timing, the
+//! physical address map, and the shared link-calendar primitive (plus the
+//! legacy standalone [`Mesh`]).
+//!
+//! Simulations do not use these pieces directly any more: they are owned
+//! and orchestrated by [`crate::memsys::MemorySystem`], and the network is
+//! abstracted behind [`crate::memsys::Interconnect`] (mesh, crossbar or
+//! ring, selected by `SimConfig::topology`). What remains here is the
+//! physics — [`network::LinkCal`]'s busy-interval reservation that all
+//! topologies share, [`VaultMem`]'s controller/bank model and the
+//! [`AddressMap`]. [`Mesh`] is kept as the reference implementation of the
+//! XY walk; `memsys::MeshInterconnect` precomputes its routes and is
+//! asserted bit-identical against it.
 //!
 //! ## Simulation model
 //!

@@ -29,10 +29,10 @@ pub struct Transfer {
     pub hops: u32,
 }
 
-const DIR_E: usize = 0;
-const DIR_W: usize = 1;
-const DIR_N: usize = 2;
-const DIR_S: usize = 3;
+pub(crate) const DIR_E: usize = 0;
+pub(crate) const DIR_W: usize = 1;
+pub(crate) const DIR_N: usize = 2;
+pub(crate) const DIR_S: usize = 3;
 
 /// Busy-interval calendar for one directed link.
 ///
@@ -43,8 +43,12 @@ const DIR_S: usize = 3;
 /// intervals and packets backfill the gaps, exactly like FLIT slots in
 /// real wormhole arbitration. Intervals are pruned once they fall behind
 /// the reservation front.
+///
+/// Shared crate-wide: every [`crate::memsys::Interconnect`] implementation
+/// (mesh, crossbar, ring) models its contended ports/links with the same
+/// calendar, so contention semantics are identical across topologies.
 #[derive(Clone, Debug, Default)]
-struct LinkCal {
+pub(crate) struct LinkCal {
     /// Sorted, non-overlapping (start, end) busy windows.
     iv: Vec<(Cycle, Cycle)>,
 }
@@ -59,7 +63,7 @@ const PRUNE_LAG: Cycle = 2_000;
 
 impl LinkCal {
     /// Reserve `f` cycles at or after `t`; returns the start cycle.
-    fn reserve(&mut self, t: Cycle, f: Cycle) -> Cycle {
+    pub(crate) fn reserve(&mut self, t: Cycle, f: Cycle) -> Cycle {
         // Fast path: reservation at/after the calendar tail (the common
         // case, since the driver processes events in near-time-order).
         if let Some(last) = self.iv.last_mut() {
@@ -110,7 +114,7 @@ impl LinkCal {
         }
     }
 
-    fn clear(&mut self) {
+    pub(crate) fn clear(&mut self) {
         self.iv.clear();
     }
 }
@@ -238,8 +242,9 @@ impl Mesh {
 
 /// Place `n` vaults on a `w x h` grid. When the grid has exactly four spare
 /// nodes (HMC: 36 nodes, 32 vaults) the corners are reserved for the host
-/// links per Fig 8a; otherwise vaults fill the grid row-major.
-fn place_vaults(w: u16, h: u16, n: u16) -> Vec<u16> {
+/// links per Fig 8a; otherwise vaults fill the grid row-major. Shared with
+/// [`crate::memsys`]'s mesh interconnect so both agree on the layout.
+pub(crate) fn place_vaults(w: u16, h: u16, n: u16) -> Vec<u16> {
     let nodes = w * h;
     assert!(n <= nodes, "mesh too small");
     let spare = nodes - n;

@@ -1,0 +1,145 @@
+//! Unsubscription flows (§III-B4 / §III-B5): capacity evictions returning
+//! parked blocks home, home-initiated recalls, and the dirty-bit
+//! optimization that lets clean blocks return as a bare acknowledgement.
+
+use crate::memsys::MemorySystem;
+use crate::sim::PacketKind;
+use crate::subscription::protocol::SubSystem;
+use crate::subscription::table::{Role, SubState};
+use crate::{Cycle, VaultId};
+
+impl MemorySystem {
+    /// Unsubscribe the victim entry `idx` of vault `v` (capacity eviction).
+    /// Returns the cycle at which `v`'s way is free again.
+    pub(crate) fn unsubscribe_victim(
+        &mut self,
+        v: VaultId,
+        idx: usize,
+        now: Cycle,
+    ) -> Cycle {
+        let e = *self.subs.tables[v as usize].entry(idx);
+        debug_assert_eq!(e.state, SubState::Subscribed);
+        let set = self.subs.map.set_of_block(e.block);
+        match e.role {
+            // Holder-initiated return (§III-B4, "subscribed vault wanting
+            // to return the data"): data (or clean ack) home, ack back.
+            Role::Holder => {
+                let home = e.peer;
+                // Read the parked block out of reserved space if dirty.
+                let depart = if e.dirty {
+                    self.vaults[v as usize]
+                        .access(SubSystem::reserved_slot_addr(idx), now)
+                        .done
+                } else {
+                    now
+                };
+                let kind = PacketKind::UnsubscriptionData { dirty: e.dirty };
+                let flits = if e.dirty { self.subs.k } else { 1 };
+                let data = self.send(kind, flits, v, home, depart);
+                if e.dirty {
+                    self.vaults[home as usize]
+                        .access(SubSystem::home_addr(e.block), data.arrive);
+                }
+                let ack = self.send(
+                    PacketKind::UnsubscriptionTransferAck,
+                    1,
+                    home,
+                    v,
+                    data.arrive,
+                );
+                self.subs.tables[v as usize].begin_unsub(idx, ack.arrive);
+                // Free the home's directory entry when the data lands,
+                // recording whether a dirty block is in flight (clean
+                // returns leave the home copy servable immediately).
+                if let Some(j) =
+                    self.subs.tables[home as usize].lookup(set, e.block, now)
+                {
+                    if self.subs.tables[home as usize].entry(j).state
+                        == SubState::Subscribed
+                    {
+                        self.subs.tables[home as usize].entry_mut(j).dirty = e.dirty;
+                        self.subs.tables[home as usize].begin_unsub(j, data.arrive);
+                    }
+                }
+                self.stats.unsubscriptions += 1;
+                ack.arrive
+            }
+            // Home-initiated recall (§III-B4, "original vault wanting the
+            // data back"): request to the holder, data returns.
+            Role::Home => {
+                let holder = e.peer;
+                let req = self.send(
+                    PacketKind::UnsubscriptionRequest,
+                    1,
+                    v,
+                    holder,
+                    now,
+                );
+                let mut dirty = false;
+                if let Some(j) =
+                    self.subs.tables[holder as usize].lookup(set, e.block, req.arrive)
+                {
+                    let eh = self.subs.tables[holder as usize].entry(j);
+                    if eh.state == SubState::Subscribed {
+                        dirty = eh.dirty;
+                    }
+                }
+                let depart = if dirty {
+                    let j = self.subs.tables[holder as usize]
+                        .lookup(set, e.block, req.arrive)
+                        .expect("dirty holder entry present");
+                    self.vaults[holder as usize]
+                        .access(SubSystem::reserved_slot_addr(j), req.arrive)
+                        .done
+                } else {
+                    req.arrive
+                };
+                let kind = PacketKind::UnsubscriptionData { dirty };
+                let flits = if dirty { self.subs.k } else { 1 };
+                let data = self.send(kind, flits, holder, v, depart);
+                if dirty {
+                    self.vaults[v as usize]
+                        .access(SubSystem::home_addr(e.block), data.arrive);
+                }
+                let ack = self.send(
+                    PacketKind::UnsubscriptionTransferAck,
+                    1,
+                    v,
+                    holder,
+                    data.arrive,
+                );
+                self.subs.tables[v as usize].entry_mut(idx).dirty = dirty;
+                self.subs.tables[v as usize].begin_unsub(idx, data.arrive);
+                if let Some(j) =
+                    self.subs.tables[holder as usize].lookup(set, e.block, req.arrive)
+                {
+                    if self.subs.tables[holder as usize].entry(j).state
+                        == SubState::Subscribed
+                    {
+                        self.subs.tables[holder as usize].begin_unsub(j, ack.arrive);
+                    }
+                }
+                self.stats.unsubscriptions += 1;
+                data.arrive
+            }
+        }
+    }
+
+    /// §III-B4 special case: the home vault needs its own block back — the
+    /// subscription request "converts into an unsubscription request".
+    pub(crate) fn unsubscribe_home_initiated(
+        &mut self,
+        home: VaultId,
+        block: u64,
+        set: u32,
+        now: Cycle,
+    ) {
+        if let Some(i) = self.subs.tables[home as usize].lookup(set, block, now) {
+            let e = *self.subs.tables[home as usize].entry(i);
+            if e.role == Role::Home && e.state == SubState::Subscribed && e.ready_at <= now
+            {
+                self.unsubscribe_victim(home, i, now);
+            }
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Holder forwarding (§III-B): the home vault redirects a demand request
+//! to the vault currently holding the block in its reserved space.
+
+use crate::memsys::{MemorySystem, ServedRequest};
+use crate::sim::PacketKind;
+use crate::subscription::protocol::{Access, SubSystem};
+use crate::{Cycle, VaultId};
+
+impl MemorySystem {
+    /// Home has redirected the request to the holder vault `s`.
+    pub(crate) fn forward_to_holder(
+        &mut self,
+        req: Access,
+        at: Cycle,
+        home: VaultId,
+        s: VaultId,
+        set: u32,
+        out: &mut ServedRequest,
+    ) -> ServedRequest {
+        let r = req.requester;
+        let block = req.block;
+        let (fwd_kind, fwd_flits) = if req.write {
+            (PacketKind::MemWriteFwd, self.subs.k)
+        } else {
+            (PacketKind::MemReadReq, 1)
+        };
+        let f = self.send(fwd_kind, fwd_flits, home, s, at);
+        out.network += f.network;
+        out.queued += f.queued;
+        out.queued_net += f.queued;
+        out.actual_hops += f.hops;
+
+        // Reuse bookkeeping on the holder's entry; its slot addresses the
+        // reserved-space access.
+        let slot = self.subs.tables[s as usize].lookup(set, block, f.arrive);
+        let addr = match slot {
+            Some(i) => SubSystem::reserved_slot_addr(i),
+            None => SubSystem::home_addr(block), // directory raced; charge a row
+        };
+        let acc = self.vaults[s as usize].access(addr, f.arrive);
+        out.queued += acc.queued;
+        out.array += acc.array;
+        out.served_by = s;
+        self.stats.demand.record(s);
+        if let Some(i) = slot {
+            self.subs.tables[s as usize].touch(i, f.arrive);
+            if req.write {
+                self.subs.tables[s as usize].entry_mut(i).dirty = true;
+            }
+        }
+        if s == r {
+            self.stats.reuse.on_local_hit();
+            self.stats.local_requests += 1;
+        } else {
+            self.stats.reuse.on_remote_hit();
+        }
+
+        if req.write {
+            out.done = acc.done;
+        } else {
+            let t2 = self.send(PacketKind::MemReadResp, self.subs.k, s, r, acc.done);
+            out.network += t2.network;
+            out.queued += t2.queued;
+            out.queued_net += t2.queued;
+            out.actual_hops += t2.hops;
+            out.done = t2.arrive;
+        }
+        *out
+    }
+
+    /// Home-vault access to its own block that is subscribed away.
+    pub(crate) fn serve_via_holder(
+        &mut self,
+        req: Access,
+        now: Cycle,
+        home: VaultId,
+        holder: VaultId,
+        set: u32,
+        out: &mut ServedRequest,
+    ) -> ServedRequest {
+        out.subscribed_path = true;
+        self.forward_to_holder(req, now, home, holder, set, out)
+    }
+}

@@ -9,21 +9,32 @@
 //!   associative staging area for subscriptions waiting on an eviction;
 //! * **reserved space** ([`reserved`]) in vault memory holding subscribed
 //!   blocks (one block per table entry, 0.125% of a 4 GB vault at the
-//!   default 8192 entries);
-//! * the **protocol engine** ([`protocol::SubSystem`]) implementing the
-//!   packet flows of §III-B: subscription, resubscription, negative
-//!   acknowledgement, unsubscription, and the dirty-bit optimization.
+//!   default 8192 entries).
+//!
+//! The protocol engine is split by flow, each handler an `impl` block on
+//! [`crate::memsys::MemorySystem`] — the facade that owns the directory
+//! state ([`protocol::SubSystem`]) together with the interconnect, the
+//! vault DRAM and the statistics, so no handler threads
+//! `&mut Mesh, &mut Vec<VaultMem>, &mut SimStats` through its signature:
+//! * [`serve`] — the demand path ([`crate::memsys::MemorySystem::serve`]),
+//! * [`forward`] — home→holder redirection of demand requests,
+//! * [`subscribe`] — subscription/resubscription handshakes and NACKs,
+//! * [`evict`] — unsubscription flows and the dirty-bit optimization.
 //!
 //! The abandoned count-threshold design (§III-A) is kept as
 //! [`count_table::CountTable`] for the ablation bench (fig17).
 
 pub mod buffer;
 pub mod count_table;
+pub mod evict;
+pub mod forward;
 pub mod protocol;
 pub mod reserved;
+pub mod serve;
+pub mod subscribe;
 pub mod table;
 
 pub use buffer::SubBuffer;
 pub use count_table::CountTable;
-pub use protocol::{RequestResult, SubSystem};
+pub use protocol::{Access, SubSystem};
 pub use table::{Role, SubState, SubTable};

@@ -1,0 +1,216 @@
+//! The demand-serve path (§III-B serve flows): every memory request enters
+//! the system through [`MemorySystem::serve`], which resolves it against
+//! the distributed subscription directory and dispatches to the local,
+//! home or remote path. The holder-forwarding leg lives in
+//! [`super::forward`], the subscription handshakes in [`super::subscribe`]
+//! and the eviction/return flows in [`super::evict`].
+
+use crate::memsys::{MemorySystem, ServedRequest};
+use crate::policy::PolicyRuntime;
+use crate::sim::PacketKind;
+use crate::subscription::protocol::{Access, SubSystem};
+use crate::subscription::table::{Role, SubState};
+use crate::{Cycle, VaultId};
+
+impl MemorySystem {
+    /// Serve one demand access end to end. The driver is responsible for
+    /// recording the returned breakdown and feeding the policy registers.
+    pub fn serve(
+        &mut self,
+        req: Access,
+        now: Cycle,
+        policy: &PolicyRuntime,
+    ) -> ServedRequest {
+        let block = req.block;
+        let r = req.requester;
+        let home = self.subs.map.home_of_block(block);
+        let set = self.subs.map.set_of_block(block);
+        let baseline_hops = self.net.hops(r, home);
+
+        let mut out = ServedRequest {
+            set,
+            baseline_hops,
+            served_by: home,
+            ..Default::default()
+        };
+
+        // ---- Fast path: block parked in this vault's reserved space. ----
+        if home != r {
+            if let Some(i) = self.subs.tables[r as usize].lookup(set, block, now) {
+                let e = *self.subs.tables[r as usize].entry(i);
+                if e.role == Role::Holder
+                    && e.state == SubState::Subscribed
+                    && e.ready_at <= now
+                {
+                    let acc = self.vaults[r as usize]
+                        .access(SubSystem::reserved_slot_addr(i), now);
+                    self.subs.tables[r as usize].touch(i, now);
+                    if req.write {
+                        self.subs.tables[r as usize].entry_mut(i).dirty = true;
+                    }
+                    self.stats.reuse.on_local_hit();
+                    self.stats.demand.record(r);
+                    self.stats.local_requests += 1;
+                    out.done = acc.done;
+                    out.queued = acc.queued;
+                    out.array = acc.array;
+                    out.served_by = r;
+                    out.local = true;
+                    out.subscribed_path = true;
+                    return out;
+                }
+                // Pending entry: the move is in flight. The request follows
+                // the normal remote path; no new subscription is started
+                // (the in-flight one will land).
+                return self.serve_remote(req, now, home, set, &mut out);
+            }
+        }
+
+        // ---- Home-local access (requester is the home vault). ----
+        if home == r {
+            if let Some(i) = self.subs.tables[r as usize].lookup(set, block, now) {
+                let e = *self.subs.tables[r as usize].entry(i);
+                if e.role == Role::Home && !e.is_invalid() {
+                    // Block subscribed away; §III-D4's special case — the
+                    // home vault itself needs it back. Serve via the holder
+                    // and (policy permitting) pull it home (unsubscribe).
+                    let holder = e.peer;
+                    let res =
+                        self.serve_via_holder(req, now, home, holder, set, &mut out);
+                    if e.state == SubState::Subscribed
+                        && e.ready_at <= now
+                        && policy.enabled(r, set, now)
+                    {
+                        self.unsubscribe_home_initiated(home, block, set, now);
+                    }
+                    return res;
+                }
+            }
+            // Plain local access at home.
+            let acc = self.vaults[r as usize].access(SubSystem::home_addr(block), now);
+            self.stats.demand.record(r);
+            self.stats.local_requests += 1;
+            out.done = acc.done;
+            out.queued = acc.queued;
+            out.array = acc.array;
+            out.served_by = r;
+            out.local = true;
+            return out;
+        }
+
+        // ---- Remote access through the home vault. ----
+        // Writes never subscribe from the writer side (§III-C: "the
+        // requester vault writes the data to the original vault", which
+        // forwards to the holder if any). Only reads subscribe — their
+        // data transfer is the one the baseline already pays, so the
+        // subscription piggybacks for free (§IV-B1). A block made hot by
+        // read-fills parks locally; later writebacks then hit the fast
+        // path above with zero network cost.
+        let res = self.serve_remote(req, now, home, set, &mut out);
+        let enabled = policy.enabled(r, set, now);
+        if !req.write && enabled && self.subs.count_filter(block) {
+            // Piggybacked subscription: the demand response already moved
+            // the block to the requester (§III-A's combined packet format);
+            // only the acknowledgements travel separately.
+            self.subscribe_piggyback(r, block, home, set, now, res.done);
+        } else if !enabled && res.subscribed_path && !res.local {
+            // Subscriptions are off for this set but the block is still
+            // parked remotely, taxing every access with the three-leg
+            // indirection. Drain it home — the home-initiated
+            // unsubscription of §III-B4, triggered by the epoch decision
+            // instead of a home access.
+            self.unsubscribe_home_initiated(home, block, set, res.done);
+        }
+        res
+    }
+
+    /// Remote demand path: requester → home (→ holder) → requester.
+    pub(crate) fn serve_remote(
+        &mut self,
+        req: Access,
+        now: Cycle,
+        home: VaultId,
+        set: u32,
+        out: &mut ServedRequest,
+    ) -> ServedRequest {
+        let r = req.requester;
+        let block = req.block;
+
+        // Leg 1: request (reads: 1 FLIT; writes carry the block: k FLITs).
+        let (req_kind, req_flits) = if req.write {
+            (PacketKind::MemWrite, self.subs.k)
+        } else {
+            (PacketKind::MemReadReq, 1)
+        };
+        let t1 = self.send(req_kind, req_flits, r, home, now);
+        out.network += t1.network;
+        out.queued += t1.queued;
+        out.queued_net += t1.queued;
+        out.actual_hops += t1.hops;
+
+        // Home-side directory lookup.
+        let holder = match self.subs.tables[home as usize].lookup(set, block, t1.arrive)
+        {
+            Some(i) => {
+                let e = *self.subs.tables[home as usize].entry(i);
+                match (e.role, e.state) {
+                    (Role::Home, SubState::Subscribed) if e.ready_at <= t1.arrive => {
+                        Some(e.peer)
+                    }
+                    // Pending resubscription: old holder still owns the
+                    // data (peer field) until the move commits.
+                    (Role::Home, SubState::PendingResub) => Some(e.peer),
+                    // Subscription data still in flight: home copy valid.
+                    (Role::Home, SubState::PendingSub) => None,
+                    // Returning home: the home copy is already valid for
+                    // clean blocks (the dirty hint is recorded when the
+                    // unsubscription starts); only dirty returns must be
+                    // waited for.
+                    (Role::Home, SubState::PendingUnsub) => {
+                        if e.dirty && t1.arrive < e.ready_at {
+                            out.queued += e.ready_at - t1.arrive;
+                        }
+                        None
+                    }
+                    _ => None,
+                }
+            }
+            None => None,
+        };
+
+        match holder {
+            None => {
+                // Serve at home (after any pending-unsubscription wait that
+                // was already added to out.queued above).
+                let wait_extra = out.queued - t1.queued;
+                let acc = self.vaults[home as usize]
+                    .access(SubSystem::home_addr(block), t1.arrive + wait_extra);
+                out.queued += acc.queued;
+                out.array += acc.array;
+                out.served_by = home;
+                self.stats.demand.record(home);
+                if req.write {
+                    out.done = acc.done;
+                } else {
+                    let t2 = self.send(
+                        PacketKind::MemReadResp,
+                        self.subs.k,
+                        home,
+                        r,
+                        acc.done,
+                    );
+                    out.network += t2.network;
+                    out.queued += t2.queued;
+                    out.queued_net += t2.queued;
+                    out.actual_hops += t2.hops;
+                    out.done = t2.arrive;
+                }
+                *out
+            }
+            Some(s) => {
+                out.subscribed_path = true;
+                self.forward_to_holder(req, t1.arrive, home, s, set, out)
+            }
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Subscription and resubscription handshakes (§III-B1 / §III-B2): table
+//! way allocation on both sides, the piggybacked data transfer, the
+//! acknowledgement packets and the NACK path (§III-B3).
+
+use crate::memsys::MemorySystem;
+use crate::sim::PacketKind;
+use crate::subscription::table::{Role, SubState};
+use crate::{Cycle, VaultId};
+
+impl MemorySystem {
+    /// Allocate a requester-side way for a new holder entry, evicting (and
+    /// unsubscribing) a victim if needed. Returns `(way, usable_at)` or
+    /// `None` on NACK.
+    pub(crate) fn alloc_requester_way(
+        &mut self,
+        r: VaultId,
+        set: u32,
+        now: Cycle,
+    ) -> Option<(usize, Cycle)> {
+        match self.subs.tables[r as usize].free_way(set) {
+            Some(w) => Some((w, now)),
+            None => {
+                let v = self.subs.tables[r as usize].victim(set)?;
+                let t_free = self.unsubscribe_victim(r, v, now);
+                if !self.subs.buffers[r as usize].try_push(now, t_free) {
+                    return None; // subscription buffer full (§III-B3)
+                }
+                // The way is architecturally free at t_free: materialize
+                // the eviction now (the flow's packets are in flight; the
+                // peer side commits lazily) and reuse the slot.
+                self.subs.tables[r as usize].invalidate(v);
+                Some((v, t_free))
+            }
+        }
+    }
+
+    /// Subscribe `block` to `r` piggybacked on a completed demand read:
+    /// the data already travelled home→requester (or holder→requester) in
+    /// the demand response, so only table updates and 1-FLIT acks move.
+    /// `data_at` is the demand response arrival (when the holder copy
+    /// becomes usable).
+    pub(crate) fn subscribe_piggyback(
+        &mut self,
+        r: VaultId,
+        block: u64,
+        home: VaultId,
+        set: u32,
+        now: Cycle,
+        data_at: Cycle,
+    ) {
+        // Already tracked (any state) at the requester? Nothing to do.
+        if self.subs.tables[r as usize].lookup(set, block, now).is_some() {
+            return;
+        }
+        let Some((way_r, usable)) = self.alloc_requester_way(r, set, now) else {
+            self.stats.sub_nacks += 1;
+            return;
+        };
+
+        // Home-side directory update (the request travelled inside the
+        // demand packet — §III-A's extended packet format).
+        match self.subs.tables[home as usize].lookup(set, block, now) {
+            None => {
+                let way_h = match self.home_way(home, set, now) {
+                    Some(w) => w,
+                    None => {
+                        self.nack(home, r, now);
+                        return;
+                    }
+                };
+                // Both sides acknowledge (§III-B1): one control packet each
+                // way, off the demand critical path.
+                let ack = self.send(
+                    PacketKind::SubscriptionTransferAck,
+                    1,
+                    r,
+                    home,
+                    data_at,
+                );
+                self.subs.tables[home as usize].install(
+                    way_h,
+                    block,
+                    Role::Home,
+                    r,
+                    SubState::PendingSub,
+                    ack.arrive,
+                    now,
+                );
+                self.subs.tables[r as usize].install(
+                    way_r,
+                    block,
+                    Role::Holder,
+                    home,
+                    SubState::PendingSub,
+                    usable.max(data_at),
+                    now,
+                );
+                self.stats.subscriptions += 1;
+                self.stats.reuse.on_subscribe();
+            }
+            Some(i) => {
+                let e = *self.subs.tables[home as usize].entry(i);
+                if e.state != SubState::Subscribed || e.ready_at > now {
+                    // Mid-handshake with another vault: NACK (§III-B3).
+                    self.nack(home, r, now);
+                    return;
+                }
+                let s = e.peer;
+                if s == r {
+                    return; // already ours (raced with the fast path)
+                }
+                self.resubscribe(r, block, home, s, i, set, now, data_at, false, way_r, usable);
+            }
+        }
+    }
+
+    /// Home-side way allocation (§III-B1's original-vault space check).
+    pub(crate) fn home_way(
+        &mut self,
+        home: VaultId,
+        set: u32,
+        at: Cycle,
+    ) -> Option<usize> {
+        match self.subs.tables[home as usize].free_way(set) {
+            Some(w) => Some(w),
+            None => {
+                let v = self.subs.tables[home as usize].victim(set)?;
+                let t_free = self.unsubscribe_victim(home, v, at);
+                if !self.subs.buffers[home as usize].try_push(at, t_free) {
+                    return None;
+                }
+                self.subs.tables[home as usize].invalidate(v);
+                Some(v)
+            }
+        }
+    }
+
+    /// Resubscription (§III-B2): the block moves from holder `s` to the
+    /// new requester `r`. On the read path the data travelled in the
+    /// demand response; on the write path (`write_in_place`) the requester
+    /// already has it — either way only control packets move here: the
+    /// forward notification home→old-holder and the two acknowledgements.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn resubscribe(
+        &mut self,
+        r: VaultId,
+        block: u64,
+        home: VaultId,
+        s: VaultId,
+        home_idx: usize,
+        set: u32,
+        at: Cycle,
+        data_at: Cycle,
+        write_in_place: bool,
+        way_r: usize,
+        usable: Cycle,
+    ) {
+        let fwd = self.send(PacketKind::SubscriptionRequest, 1, home, s, at);
+        // Holder-side entry moves to PendingResub.
+        let dirty = match self.subs.tables[s as usize].lookup(set, block, fwd.arrive) {
+            Some(j) => {
+                let es = self.subs.tables[s as usize].entry_mut(j);
+                if es.state != SubState::Subscribed {
+                    // Holder busy with another flow: NACK back to the
+                    // requester (its way was never installed; any victim
+                    // eviction already in flight simply completes).
+                    self.nack(s, r, fwd.arrive);
+                    return;
+                }
+                es.state = SubState::PendingResub;
+                es.dirty
+            }
+            None => false, // directory raced; treat as clean
+        };
+        // Two acks: to the home (directory update) and to the old holder
+        // (eviction) — §III-B2; the dirty bit rides the misc bits.
+        let ack_h = self.send(PacketKind::SubscriptionTransferAck, 1, r, home, data_at);
+        let ack_s = self.send(PacketKind::SubscriptionTransferAck, 1, r, s, data_at);
+        {
+            let eh = self.subs.tables[home as usize].entry_mut(home_idx);
+            eh.state = SubState::PendingResub;
+            eh.peer_next = r;
+            eh.ready_at = ack_h.arrive;
+        }
+        if let Some(j) = self.subs.tables[s as usize].lookup(set, block, fwd.arrive) {
+            let es = self.subs.tables[s as usize].entry_mut(j);
+            if es.state == SubState::PendingResub {
+                es.ready_at = ack_s.arrive;
+            }
+        }
+        self.subs.tables[r as usize].install(
+            way_r,
+            block,
+            Role::Holder,
+            home,
+            SubState::PendingSub,
+            usable.max(data_at),
+            data_at,
+        );
+        self.subs.tables[r as usize].entry_mut(way_r).dirty = dirty || write_in_place;
+        self.stats.resubscriptions += 1;
+        self.stats.subscriptions += 1;
+        self.stats.reuse.on_subscribe();
+    }
+
+    pub(crate) fn nack(&mut self, from: VaultId, to: VaultId, at: Cycle) {
+        self.send(PacketKind::SubscriptionNack, 1, from, to, at);
+        self.stats.sub_nacks += 1;
+    }
+}

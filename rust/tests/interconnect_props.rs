@@ -1,0 +1,172 @@
+//! Property tests (proptest-lite) for the `Interconnect` implementations:
+//! the trait contract every topology must uphold, plus cross-topology
+//! determinism of the full serve path.
+
+use dlpim::config::{SimConfig, Topology};
+use dlpim::memsys::{Access, build_interconnect, Interconnect, MemorySystem};
+use dlpim::policy::{PolicyKind, PolicyRuntime};
+use dlpim::proptest_lite::{gen, Runner};
+
+const TOPOLOGIES: [Topology; 3] = [Topology::Mesh, Topology::Crossbar, Topology::Ring];
+
+fn cfg_with(topology: Topology) -> SimConfig {
+    let mut cfg = SimConfig::hmc(); // 32 vaults: valid for all three
+    cfg.topology = topology;
+    cfg
+}
+
+/// `hops(a, b) == hops(b, a)` and `hops(a, a) == 0`, every topology.
+#[test]
+fn prop_hops_symmetric_and_self_zero() {
+    Runner::new(0x40B5).cases(60).run("hop-symmetry", |r| {
+        for t in TOPOLOGIES {
+            let net = build_interconnect(&cfg_with(t));
+            for _ in 0..50 {
+                let a = gen::u64_in(r, 0, 32) as u16;
+                let b = gen::u64_in(r, 0, 32) as u16;
+                if net.hops(a, b) != net.hops(b, a) {
+                    return Err(format!(
+                        "{t:?}: hops({a},{b}) = {} != hops({b},{a}) = {}",
+                        net.hops(a, b),
+                        net.hops(b, a)
+                    ));
+                }
+                if net.hops(a, a) != 0 {
+                    return Err(format!("{t:?}: hops({a},{a}) != 0"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Self-transfers are free and instantaneous on every topology.
+#[test]
+fn prop_self_transfer_is_zero_hop() {
+    Runner::new(0x5E1F).cases(40).run("self-transfer", |r| {
+        for t in TOPOLOGIES {
+            let mut net = build_interconnect(&cfg_with(t));
+            for _ in 0..30 {
+                let a = gen::u64_in(r, 0, 32) as u16;
+                let flits = gen::u64_in(r, 1, 10) as u32;
+                let depart = gen::u64_in(r, 0, 1 << 30);
+                let tr = net.transfer(a, a, flits, depart);
+                if tr.arrive != depart || tr.hops != 0 || tr.network != 0 || tr.queued != 0
+                {
+                    return Err(format!("{t:?}: self-transfer not free: {tr:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `transfer` never completes before `now`, the decomposition is exact
+/// (`arrive == depart + network + queued`), and uncontended transfers cost
+/// `flits * hops` — under arbitrary contention histories.
+#[test]
+fn prop_transfer_never_completes_early() {
+    Runner::new(0xEA12).cases(40).run("no-early-completion", |r| {
+        for t in TOPOLOGIES {
+            let mut net = build_interconnect(&cfg_with(t));
+            let mut now = 0u64;
+            for _ in 0..200 {
+                let a = gen::u64_in(r, 0, 32) as u16;
+                let b = gen::u64_in(r, 0, 32) as u16;
+                let flits = gen::u64_in(r, 1, 10) as u32;
+                let depart = now + gen::u64_in(r, 0, 500);
+                let tr = net.transfer(a, b, flits, depart);
+                if tr.arrive < depart {
+                    return Err(format!(
+                        "{t:?}: transfer {a}->{b} completed at {} before depart {depart}",
+                        tr.arrive
+                    ));
+                }
+                if tr.arrive != depart + tr.network + tr.queued {
+                    return Err(format!("{t:?}: decomposition inexact: {tr:?}"));
+                }
+                if tr.queued == 0
+                    && tr.arrive != depart + flits as u64 * net.hops(a, b) as u64
+                {
+                    return Err(format!(
+                        "{t:?}: uncontended cost model violated: {tr:?}"
+                    ));
+                }
+                now += gen::u64_in(r, 0, 60);
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Identical seeds produce identical `ServedRequest` streams on every
+/// topology: the full serve path (directory, DRAM, interconnect) is a pure
+/// function of the access history.
+#[test]
+fn prop_identical_seeds_give_identical_served_streams() {
+    Runner::new(0xDE7E).cases(15).run("serve-determinism", |r| {
+        for t in TOPOLOGIES {
+            let mut cfg = cfg_with(t);
+            cfg.policy = PolicyKind::Always;
+            cfg.sub_table_sets = 64; // churn the directory too
+            let policy = PolicyRuntime::new(&cfg);
+            let mut mem_a = MemorySystem::new(&cfg);
+            let mut mem_b = MemorySystem::new(&cfg);
+            // One pre-drawn access stream, replayed into both systems.
+            let mut now = 0u64;
+            let stream: Vec<(Access, u64)> = (0..300)
+                .map(|_| {
+                    let acc = Access {
+                        requester: gen::u64_in(r, 0, 32) as u16,
+                        block: gen::u64_in(r, 0, 2048),
+                        write: gen::bool_p(r, 0.3),
+                    };
+                    now += gen::u64_in(r, 1, 400);
+                    (acc, now)
+                })
+                .collect();
+            for (acc, at) in &stream {
+                let ra = mem_a.serve(*acc, *at, &policy);
+                let rb = mem_b.serve(*acc, *at, &policy);
+                if ra != rb {
+                    return Err(format!(
+                        "{t:?}: served streams diverged at t={at}: {ra:?} vs {rb:?}"
+                    ));
+                }
+            }
+            if mem_a.total_parked() != mem_b.total_parked() {
+                return Err(format!("{t:?}: directory state diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The serve path completes and decomposes exactly on the crossbar and
+/// ring, not just the mesh (the facade analogue of the mesh-only latency
+/// decomposition property).
+#[test]
+fn prop_serve_decomposition_exact_on_all_topologies() {
+    Runner::new(0xACC3).cases(15).run("serve-decomposition", |r| {
+        for t in TOPOLOGIES {
+            let mut cfg = cfg_with(t);
+            cfg.policy = PolicyKind::Always;
+            let policy = PolicyRuntime::new(&cfg);
+            let mut mem = MemorySystem::new(&cfg);
+            let mut now = 0u64;
+            for _ in 0..300 {
+                let acc = Access {
+                    requester: gen::u64_in(r, 0, 32) as u16,
+                    block: gen::u64_in(r, 0, 100_000),
+                    write: false,
+                };
+                let res = mem.serve(acc, now, &policy);
+                if res.done != now + res.network + res.queued + res.array {
+                    return Err(format!("{t:?}: decomposition inexact: {res:?}"));
+                }
+                now += gen::u64_in(r, 1, 200);
+            }
+        }
+        Ok(())
+    });
+}

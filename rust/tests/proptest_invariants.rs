@@ -1,19 +1,16 @@
 //! Property tests (proptest-lite): protocol, routing and bookkeeping
-//! invariants over thousands of randomized scenarios.
+//! invariants over thousands of randomized scenarios, driven through the
+//! `MemorySystem` facade.
 
 use dlpim::config::SimConfig;
+use dlpim::memsys::{Access, MemorySystem};
 use dlpim::policy::{PolicyKind, PolicyRuntime};
 use dlpim::proptest_lite::{gen, Runner};
-use dlpim::sim::{AddressMap, Mesh, VaultMem};
-use dlpim::stats::SimStats;
-use dlpim::subscription::protocol::{Access, SubSystem};
+use dlpim::sim::{AddressMap, Mesh};
 
 struct Rig {
     cfg: SimConfig,
-    sys: SubSystem,
-    mesh: Mesh,
-    vaults: Vec<VaultMem>,
-    stats: SimStats,
+    mem: MemorySystem,
     policy: PolicyRuntime,
 }
 
@@ -21,14 +18,7 @@ fn rig(kind: PolicyKind, sets: u32) -> Rig {
     let mut cfg = SimConfig::hmc();
     cfg.policy = kind;
     cfg.sub_table_sets = sets;
-    Rig {
-        sys: SubSystem::new(&cfg),
-        mesh: Mesh::new(&cfg),
-        vaults: (0..cfg.n_vaults).map(|_| VaultMem::new(&cfg)).collect(),
-        stats: SimStats::new(cfg.n_vaults),
-        policy: PolicyRuntime::new(&cfg),
-        cfg,
-    }
+    Rig { mem: MemorySystem::new(&cfg), policy: PolicyRuntime::new(&cfg), cfg }
 }
 
 /// Random protocol churn must never corrupt the distributed directory:
@@ -43,19 +33,12 @@ fn prop_directory_consistency_under_churn() {
             let requester = gen::u64_in(r, 0, 32) as u16;
             let block = gen::u64_in(r, 0, 4096);
             let write = gen::bool_p(r, 0.3);
-            rg.sys.serve(
-                Access { requester, block, write },
-                t,
-                &mut rg.mesh,
-                &mut rg.vaults,
-                &mut rg.stats,
-                &rg.policy,
-            );
+            rg.mem.serve(Access { requester, block, write }, t, &rg.policy);
             t += gen::u64_in(r, 1, 300);
         }
         let settle_at = t + 10_000_000;
-        rg.sys.settle(settle_at);
-        rg.sys.directory_consistent(settle_at)
+        rg.mem.settle(settle_at);
+        rg.mem.directory_consistent(settle_at)
     });
 }
 
@@ -70,23 +53,20 @@ fn prop_single_copy_invariant() {
         for _ in 0..600 {
             let requester = gen::u64_in(r, 0, 32) as u16;
             let block = gen::u64_in(r, 0, 64);
-            rg.sys.serve(
+            rg.mem.serve(
                 Access { requester, block, write: gen::bool_p(r, 0.2) },
                 t,
-                &mut rg.mesh,
-                &mut rg.vaults,
-                &mut rg.stats,
                 &rg.policy,
             );
             t += gen::u64_in(r, 50, 500);
         }
         let settle_at = t + 10_000_000;
-        rg.sys.settle(settle_at);
+        rg.mem.settle(settle_at);
         // Count holder entries per block across all vaults.
         let mut holders = std::collections::HashMap::new();
         let map = AddressMap::new(&rg.cfg);
         for v in 0..32u16 {
-            let table = rg.sys.table(v);
+            let table = rg.mem.directory().table(v);
             for idx in 0..(table.num_sets() as usize * table.ways()) {
                 let e = table.entry(idx);
                 if !e.is_invalid()
@@ -121,14 +101,8 @@ fn prop_latency_decomposition_is_exact() {
             let requester = gen::u64_in(r, 0, 32) as u16;
             let block = gen::u64_in(r, 0, 100_000);
             let now = t;
-            let res = rg.sys.serve(
-                Access { requester, block, write: false },
-                now,
-                &mut rg.mesh,
-                &mut rg.vaults,
-                &mut rg.stats,
-                &rg.policy,
-            );
+            let res =
+                rg.mem.serve(Access { requester, block, write: false }, now, &rg.policy);
             let reconstructed = now + res.network + res.queued + res.array;
             if res.done != reconstructed {
                 return Err(format!(
