@@ -62,6 +62,105 @@ impl Cli {
                 .map_err(|_| format!("--{key} expects a number, got {v:?}")),
         }
     }
+
+    /// Reject any flag not in `known`, with a did-you-mean suggestion —
+    /// `--workloed` must fail loudly instead of silently running the
+    /// default workload.
+    pub fn reject_unknown_flags(&self, known: &[&str]) -> Result<(), String> {
+        let mut bad: Vec<&str> =
+            self.flags.keys().map(|k| k.as_str()).filter(|k| !known.contains(k)).collect();
+        bad.sort_unstable(); // deterministic messages (HashMap order isn't)
+        match bad.first() {
+            None => Ok(()),
+            Some(flag) => {
+                let hint = match suggest(flag, known.iter().copied()) {
+                    Some(s) => format!("; did you mean --{s}?"),
+                    None => String::new(),
+                };
+                Err(format!("unknown flag --{flag} for `{}`{hint}", self.command))
+            }
+        }
+    }
+}
+
+/// Flags each subcommand accepts (`known_flags` below maps commands to
+/// these). Shared config flags first.
+pub mod flags {
+    /// Flags understood by `config_from_cli` (shared by run/config/trace).
+    pub const CONFIG: &[&str] = &[
+        "config", "memory", "policy", "topology", "quick", "paper-scale", "warmup",
+        "measure", "runs", "seed", "epoch", "trace",
+    ];
+    pub const RUN: &[&str] = &[
+        "config", "memory", "policy", "topology", "quick", "paper-scale", "warmup",
+        "measure", "runs", "seed", "epoch", "trace", "workload", "record", "no-loop",
+    ];
+    pub const TRACE_RECORD: &[&str] = &[
+        "config", "memory", "policy", "topology", "quick", "paper-scale", "warmup",
+        "measure", "runs", "seed", "epoch", "workload", "out",
+    ];
+    pub const TRACE_REPLAY: &[&str] = &[
+        "config", "memory", "policy", "topology", "quick", "paper-scale", "warmup",
+        "measure", "runs", "seed", "epoch", "no-loop",
+    ];
+    pub const TRACE_MIX: &[&str] = &["out", "weights", "cores"];
+    pub const TRACE_DILATE: &[&str] = &["factor"];
+    pub const TRACE_REMAP: &[&str] = &["vaults"];
+    pub const NONE: &[&str] = &[];
+}
+
+/// The known-flag list for a (sub)command, or `None` for commands the CLI
+/// does not recognize (the dispatcher reports those itself).
+pub fn known_flags(command: &str, sub: Option<&str>) -> Option<&'static [&'static str]> {
+    Some(match (command, sub) {
+        ("run", _) => flags::RUN,
+        ("config", _) => flags::CONFIG,
+        ("figure" | "all-figures" | "workloads" | "artifacts", _) => flags::NONE,
+        ("trace", Some("record")) => flags::TRACE_RECORD,
+        ("trace", Some("replay")) => flags::TRACE_REPLAY,
+        ("trace", Some("info")) => flags::NONE,
+        ("trace", Some("mix")) => flags::TRACE_MIX,
+        ("trace", Some("dilate")) => flags::TRACE_DILATE,
+        ("trace", Some("remap")) => flags::TRACE_REMAP,
+        _ => return None,
+    })
+}
+
+/// Nearest candidate by edit distance, if close enough to be a plausible
+/// typo (distance <= 2, or <= len/3 for long names). Shared by flag and
+/// workload-name suggestions.
+pub fn suggest<'a>(input: &str, candidates: impl IntoIterator<Item = &'a str>) -> Option<&'a str> {
+    let mut best: Option<(usize, &str)> = None;
+    for c in candidates {
+        let d = levenshtein(&input.to_lowercase(), &c.to_lowercase());
+        let better = match best {
+            None => true,
+            Some((bd, _)) => d < bd,
+        };
+        if better {
+            best = Some((d, c));
+        }
+    }
+    let (d, name) = best?;
+    let budget = (input.len().max(name.len()) / 3).max(2);
+    (d <= budget).then_some(name)
+}
+
+/// Classic two-row Levenshtein edit distance.
+pub fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 /// Top-level help text.
@@ -76,13 +175,23 @@ COMMANDS:
                   [--topology mesh|crossbar|ring]
                   [--policy never|always|adaptive|adaptive-hops|adaptive-latency]
                   [--measure N] [--warmup N] [--runs N] [--seed N] [--config FILE]
-    figure        Regenerate one figure: figure <1|2|3|4|9|10|11|12|13|14|15|16|17|18>
+                  [--trace FILE] replay a recorded trace instead of a generator
+                  [--record FILE] capture this run's traffic to a trace file
+                  [--no-loop] end when a replayed trace runs out instead of looping
+    figure        Regenerate one figure: figure <1|2|3|4|9|10|11|12|13|14|15|16|17|18|19>
                   (runs on the parallel sweep engine; writes target/repro/figNN.json)
     all-figures   Regenerate every figure (writes target/repro/*.json; repeated
                   figure targets reuse the sweep engine's report cache)
     workloads     Print Table III (the 31 representative workloads)
     config        Print the resolved config: --memory hmc|hbm [--policy P]
                   [--topology mesh|crossbar|ring]
+    trace         Record/replay/compose memory traces (DLPT v1 binary format):
+                    trace record --workload NAME --out FILE [config flags]
+                    trace replay FILE [config flags] [--no-loop]
+                    trace info FILE
+                    trace mix IN1 IN2 [IN...] --out FILE [--weights A,B,..] [--cores N]
+                    trace dilate IN OUT --factor F
+                    trace remap IN OUT --vaults N
     artifacts     List figure JSON artifacts and the AOT artifacts (PJRT)
     help          This text
 
@@ -140,5 +249,55 @@ mod tests {
     fn empty_is_ok() {
         let c = Cli::parse(&[]).unwrap();
         assert_eq!(c.command, "");
+    }
+
+    #[test]
+    fn unknown_flag_rejected_with_suggestion() {
+        let c = Cli::parse(&args(&["run", "--workloed", "SPLRad"])).unwrap();
+        let err = c.reject_unknown_flags(flags::RUN).unwrap_err();
+        assert!(err.contains("--workloed"), "{err}");
+        assert!(err.contains("did you mean --workload"), "{err}");
+    }
+
+    #[test]
+    fn known_flags_pass_validation() {
+        let c = Cli::parse(&args(&["run", "--workload", "SPLRad", "--quick"])).unwrap();
+        assert!(c.reject_unknown_flags(flags::RUN).is_ok());
+    }
+
+    #[test]
+    fn wildly_wrong_flag_gets_no_suggestion() {
+        let c = Cli::parse(&args(&["run", "--zzzzzzzzzz", "1"])).unwrap();
+        let err = c.reject_unknown_flags(flags::RUN).unwrap_err();
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn every_command_has_a_flag_list() {
+        for cmd in ["run", "figure", "all-figures", "workloads", "config", "artifacts"] {
+            assert!(known_flags(cmd, None).is_some(), "{cmd}");
+        }
+        for sub in ["record", "replay", "info", "mix", "dilate", "remap"] {
+            assert!(known_flags("trace", Some(sub)).is_some(), "trace {sub}");
+        }
+        assert!(known_flags("bogus", None).is_none());
+        assert!(known_flags("trace", Some("bogus")).is_none());
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("workloed", "workload"), 1);
+        assert_eq!(levenshtein("wrokload", "workload"), 2); // transposition
+        assert_eq!(levenshtein("SPLRod", "SPLRad"), 1);
+    }
+
+    #[test]
+    fn suggest_finds_nearest_workload_style_name() {
+        let names = ["SPLRad", "PHELinReg", "STRTriad"];
+        assert_eq!(suggest("SPLRod", names), Some("SPLRad"));
+        assert_eq!(suggest("phelinreg", names), Some("PHELinReg"));
+        assert_eq!(suggest("qqqqqq", names), None);
     }
 }

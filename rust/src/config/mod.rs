@@ -143,6 +143,15 @@ pub struct SimConfig {
     pub runs: u32,
     /// Base PRNG seed; run `i` uses `seed + i`.
     pub seed: u64,
+
+    /// Traffic source: `None` drives the named Table III generator;
+    /// `Some(path)` replays a recorded `.dlpt` trace file instead (the
+    /// trace axis — see [`crate::trace`]). Trace-backed sweep jobs hash
+    /// the file's *contents* into the report-cache key.
+    pub trace: Option<String>,
+    /// Whether a replayed trace restarts when a core's stream ends
+    /// (loop-around). Ignored when `trace` is `None`.
+    pub trace_loop: bool,
 }
 
 impl SimConfig {
@@ -179,6 +188,8 @@ impl SimConfig {
             measure_requests: 300_000,
             runs: 1,
             seed: 0x5eed_d1b1,
+            trace: None,
+            trace_loop: true,
         }
     }
 
@@ -283,6 +294,11 @@ impl SimConfig {
         }
         if self.epoch_cycles == 0 {
             errs.push("epoch_cycles must be >= 1".into());
+        }
+        if let Some(path) = &self.trace {
+            if path.trim().is_empty() {
+                errs.push("trace path must not be empty (unset it to use a generator)".into());
+            }
         }
         if errs.is_empty() {
             Ok(())

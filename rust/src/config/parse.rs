@@ -133,6 +133,14 @@ pub fn apply(cfg: &mut SimConfig, kv: &KvFile) -> Result<(), String> {
             "measure_requests" => cfg.measure_requests = parse_num(key, v)?,
             "runs" => cfg.runs = parse_num(key, v)?,
             "seed" => cfg.seed = parse_num(key, v)?,
+            "trace" => cfg.trace = Some(v.to_string()),
+            "trace_loop" => {
+                cfg.trace_loop = match v {
+                    "true" => true,
+                    "false" => false,
+                    _ => return Err(format!("trace_loop expects true|false, got {v:?}")),
+                }
+            }
             other => return Err(format!("unknown config key {other:?}")),
         }
     }
@@ -200,6 +208,15 @@ mod tests {
     fn rejects_invalid_final_config() {
         // 64 vaults cannot fit the default 6x6 mesh.
         assert!(config_from_text("n_vaults = 64\n").is_err());
+    }
+
+    #[test]
+    fn parses_trace_keys() {
+        let cfg =
+            config_from_text("trace = target/repro/a.dlpt\ntrace_loop = false\n").unwrap();
+        assert_eq!(cfg.trace.as_deref(), Some("target/repro/a.dlpt"));
+        assert!(!cfg.trace_loop);
+        assert!(config_from_text("trace_loop = maybe\n").is_err());
     }
 
     #[test]

@@ -91,6 +91,10 @@ pub fn render(cfg: &SimConfig) -> String {
     kv("measure_requests", cfg.measure_requests.to_string());
     kv("runs", cfg.runs.to_string());
     kv("seed", cfg.seed.to_string());
+    if let Some(trace) = &cfg.trace {
+        kv("trace", trace.clone());
+        kv("trace_loop", cfg.trace_loop.to_string());
+    }
     s
 }
 
@@ -111,6 +115,16 @@ mod tests {
             assert_eq!(back.sub_table_sets, cfg.sub_table_sets);
             assert_eq!(back.epoch_cycles, cfg.epoch_cycles);
         }
+    }
+
+    #[test]
+    fn render_roundtrips_the_trace_axis() {
+        let mut cfg = hmc_baseline();
+        cfg.trace = Some("target/repro/x.dlpt".into());
+        cfg.trace_loop = false;
+        let back = config_from_text(&render(&cfg)).unwrap();
+        assert_eq!(back.trace, cfg.trace);
+        assert_eq!(back.trace_loop, cfg.trace_loop);
     }
 
     #[test]

@@ -56,6 +56,7 @@ pub mod sim;
 pub mod stats;
 pub mod subscription;
 pub mod sweep;
+pub mod trace;
 pub mod workloads;
 
 /// Simulation clock, in PIM-core cycles (2.4 GHz in the paper's testbed).

@@ -1,15 +1,19 @@
 //! `repro` — the DL-PIM launcher: run simulations, regenerate paper
 //! figures, inspect configs and artifacts.
 
-use dlpim::cli::{Cli, HELP};
+use std::path::Path;
+
+use dlpim::cli::{self, Cli, HELP};
 use dlpim::config::{presets, MemKind, SimConfig, Topology};
 use dlpim::coordinator::driver::simulate;
+use dlpim::coordinator::report::SimReport;
 use dlpim::error::{bail, err, Result};
 use dlpim::figures;
 use dlpim::policy::PolicyKind;
 use dlpim::runtime::ArtifactStore;
 use dlpim::sweep;
-use dlpim::workloads::catalog;
+use dlpim::trace::{self, transform, TraceData};
+use dlpim::workloads::{self, catalog};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -21,16 +25,25 @@ fn main() {
 
 fn run(args: &[String]) -> Result<()> {
     let cli = Cli::parse(args).map_err(|e| err!(e))?;
+    if matches!(cli.command.as_str(), "" | "help" | "--help" | "-h") {
+        print!("{HELP}");
+        return Ok(());
+    }
+    // Every known (sub)command declares its flag set; a typo'd flag fails
+    // loudly with a did-you-mean instead of silently running defaults.
+    let sub = (cli.command == "trace")
+        .then(|| cli.positional.first().map(|s| s.as_str()))
+        .flatten();
+    if let Some(known) = cli::known_flags(&cli.command, sub) {
+        cli.reject_unknown_flags(known).map_err(|e| err!(e))?;
+    }
     match cli.command.as_str() {
-        "" | "help" | "--help" | "-h" => {
-            print!("{HELP}");
-            Ok(())
-        }
         "run" => cmd_run(&cli),
         "figure" => cmd_figure(&cli),
         "all-figures" => cmd_all_figures(),
         "workloads" => cmd_workloads(),
         "config" => cmd_config(&cli),
+        "trace" => cmd_trace(&cli),
         "artifacts" => cmd_artifacts(),
         other => bail!("unknown command {other:?}; try `repro help`"),
     }
@@ -72,17 +85,47 @@ fn config_from_cli(cli: &Cli) -> Result<SimConfig> {
     if let Some(v) = cli.flag_u64("epoch").map_err(|e| err!(e))? {
         cfg.epoch_cycles = v;
     }
+    if let Some(t) = cli.flag("trace") {
+        cfg.trace = Some(t.to_string());
+    }
+    if cli.has("no-loop") {
+        cfg.trace_loop = false;
+    }
     cfg.validate().map_err(|e| err!("invalid config: {}", e.join("; ")))?;
     Ok(cfg)
 }
 
 fn cmd_run(cli: &Cli) -> Result<()> {
     let cfg = config_from_cli(cli)?;
-    let name = cli.flag("workload").ok_or_else(|| err!("--workload required"))?;
-    let w = catalog::build(name, &cfg).ok_or_else(|| err!("unknown workload {name:?}"))?;
     let t0 = std::time::Instant::now();
-    let rep = simulate(&cfg, w);
+    let (name, rep) = if let Some(out) = cli.flag("record") {
+        if cfg.trace.is_some() {
+            bail!("--record captures a generator run; drop --trace (that file already is a recording)");
+        }
+        let name = cli
+            .flag("workload")
+            .ok_or_else(|| err!("--record requires --workload NAME"))?;
+        let rep = trace::record_run(&cfg, name, Path::new(out)).map_err(|e| err!(e))?;
+        println!("recorded        {out}");
+        (name.to_string(), rep)
+    } else {
+        if cfg.trace.is_some() && cli.flag("workload").is_some() {
+            bail!(
+                "--workload and --trace are conflicting traffic sources; drop one \
+                 (a trace file already names its recorded workload)"
+            );
+        }
+        let w = workloads::build_source(cli.flag("workload"), &cfg).map_err(|e| err!(e))?;
+        let name = w.name().to_string();
+        (name, simulate(&cfg, w))
+    };
     let dt = t0.elapsed();
+    print_report(&name, &cfg, &rep);
+    println!("wallclock       {:.2}s", dt.as_secs_f64());
+    Ok(())
+}
+
+fn print_report(name: &str, cfg: &SimConfig, rep: &SimReport) {
     let (n, q, a) = rep.latency_fractions();
     println!("workload        {name}");
     println!("memory/policy   {}/{}", cfg.mem.as_str(), cfg.policy.as_str());
@@ -118,8 +161,6 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         r0.stats.sub_nacks
     );
     println!("epochs          {}", r0.decisions.len());
-    println!("wallclock       {:.2}s", dt.as_secs_f64());
-    Ok(())
 }
 
 fn cmd_workloads() -> Result<()> {
@@ -135,6 +176,157 @@ fn cmd_config(cli: &Cli) -> Result<()> {
     let cfg = config_from_cli(cli)?;
     print!("{}", presets::render(&cfg));
     Ok(())
+}
+
+/// `repro trace <record|replay|info|mix|dilate|remap>` — the trace
+/// pipeline (see `dlpim::trace` for the format spec).
+fn cmd_trace(cli: &Cli) -> Result<()> {
+    let sub = cli.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match sub {
+        "record" => {
+            let mut cfg = config_from_cli(cli)?;
+            let name = cli
+                .flag("workload")
+                .ok_or_else(|| err!("usage: repro trace record --workload NAME --out FILE"))?;
+            let out = cli.flag("out").ok_or_else(|| err!("--out FILE required"))?;
+            cfg.runs = 1; // the format stores one seed, one stream set
+            let rep = trace::record_run(&cfg, name, Path::new(out)).map_err(|e| err!(e))?;
+            let data = TraceData::load(Path::new(out)).map_err(|e| err!(e))?;
+            println!("recorded        {name} -> {out}");
+            println!(
+                "captured        {} ops over {} cores ({} body bytes, {:.2} B/op)",
+                data.total_ops(),
+                data.n_cores(),
+                data.body_bytes(),
+                data.body_bytes() as f64 / data.total_ops().max(1) as f64
+            );
+            println!("served          {} memory requests", rep.runs[0].stats.requests);
+            Ok(())
+        }
+        "replay" => {
+            let file = cli
+                .positional
+                .get(1)
+                .ok_or_else(|| err!("usage: repro trace replay FILE [config flags]"))?;
+            let mut cfg = config_from_cli(cli)?;
+            cfg.trace = Some(file.clone());
+            let t0 = std::time::Instant::now();
+            let w = workloads::build_source(None, &cfg).map_err(|e| err!(e))?;
+            let name = w.name().to_string();
+            let rep = simulate(&cfg, w);
+            print_report(&name, &cfg, &rep);
+            println!("wallclock       {:.2}s", t0.elapsed().as_secs_f64());
+            Ok(())
+        }
+        "info" => {
+            let file = cli
+                .positional
+                .get(1)
+                .ok_or_else(|| err!("usage: repro trace info FILE"))?;
+            let data = TraceData::load(Path::new(file)).map_err(|e| err!(e))?;
+            let ops: Vec<u64> = (0..data.n_cores()).map(|c| data.core_ops(c)).collect();
+            println!("trace           {file}");
+            println!("format          DLPT v{}", dlpim::trace::VERSION);
+            println!("workload        {}", data.meta.workload);
+            println!(
+                "recorded on     {}/{} with {} cores",
+                data.meta.mem, data.meta.topology, data.meta.n_cores
+            );
+            println!("block bytes     {}", data.meta.block_bytes);
+            println!("seed            {:#x}", data.meta.seed);
+            println!("config hash     {:#018x}", data.meta.config_hash);
+            println!(
+                "ops             {} total | per core min {} max {}",
+                data.total_ops(),
+                ops.iter().min().unwrap(),
+                ops.iter().max().unwrap()
+            );
+            println!(
+                "encoded         {} body bytes ({:.2} B/op)",
+                data.body_bytes(),
+                data.body_bytes() as f64 / data.total_ops().max(1) as f64
+            );
+            Ok(())
+        }
+        "mix" => {
+            let inputs = &cli.positional[1..];
+            if inputs.len() < 2 {
+                bail!("usage: repro trace mix IN1 IN2 [IN...] --out FILE [--weights A,B,..] [--cores N]");
+            }
+            let out = cli.flag("out").ok_or_else(|| err!("--out FILE required"))?;
+            let weights: Vec<u64> = match cli.flag("weights") {
+                None => vec![1; inputs.len()],
+                Some(s) => s
+                    .split(',')
+                    .map(|x| {
+                        x.trim()
+                            .parse()
+                            .map_err(|_| err!("--weights expects comma-separated integers, got {x:?}"))
+                    })
+                    .collect::<Result<_>>()?,
+            };
+            let data: Vec<TraceData> = inputs
+                .iter()
+                .map(|p| TraceData::load(Path::new(p)))
+                .collect::<Result<_, String>>()
+                .map_err(|e| err!(e))?;
+            let cores = match cli.flag_u64("cores").map_err(|e| err!(e))? {
+                Some(n) => u16::try_from(n)
+                    .map_err(|_| err!("--cores {n} out of range (max {})", u16::MAX))?,
+                None => data.iter().map(|d| d.n_cores()).max().unwrap(),
+            };
+            let mixed = transform::mix(&data, &weights, cores).map_err(|e| err!(e))?;
+            mixed.save(Path::new(out)).map_err(|e| err!(e))?;
+            println!(
+                "mixed           {} tenants -> {out} ({} cores, {} ops)",
+                inputs.len(),
+                mixed.n_cores(),
+                mixed.total_ops()
+            );
+            Ok(())
+        }
+        "dilate" => {
+            let (input, out) = two_files(cli, "repro trace dilate IN OUT --factor F")?;
+            let factor: f64 = cli
+                .flag("factor")
+                .ok_or_else(|| err!("--factor F required (e.g. 2.0 doubles compute gaps)"))?
+                .parse()
+                .map_err(|_| err!("--factor expects a number"))?;
+            let data = TraceData::load(Path::new(input)).map_err(|e| err!(e))?;
+            let dilated = transform::dilate(&data, factor).map_err(|e| err!(e))?;
+            dilated.save(Path::new(out)).map_err(|e| err!(e))?;
+            println!("dilated         {input} x{factor} -> {out}");
+            Ok(())
+        }
+        "remap" => {
+            let (input, out) = two_files(cli, "repro trace remap IN OUT --vaults N")?;
+            let vaults = cli
+                .flag_u64("vaults")
+                .map_err(|e| err!(e))?
+                .ok_or_else(|| err!("--vaults N required"))?;
+            let vaults = u16::try_from(vaults)
+                .map_err(|_| err!("--vaults {vaults} out of range (max {})", u16::MAX))?;
+            let data = TraceData::load(Path::new(input)).map_err(|e| err!(e))?;
+            let remapped = transform::remap(&data, vaults).map_err(|e| err!(e))?;
+            remapped.save(Path::new(out)).map_err(|e| err!(e))?;
+            println!(
+                "remapped        {input} ({} cores) -> {out} ({} cores)",
+                data.n_cores(),
+                remapped.n_cores()
+            );
+            Ok(())
+        }
+        "" => bail!("usage: repro trace <record|replay|info|mix|dilate|remap>"),
+        other => bail!("unknown trace subcommand {other:?} (record|replay|info|mix|dilate|remap)"),
+    }
+}
+
+/// The `IN OUT` positional pair of a trace transform.
+fn two_files<'a>(cli: &'a Cli, usage: &str) -> Result<(&'a str, &'a str)> {
+    match (cli.positional.get(1), cli.positional.get(2)) {
+        (Some(a), Some(b)) => Ok((a, b)),
+        _ => bail!("usage: {usage}"),
+    }
 }
 
 fn cmd_artifacts() -> Result<()> {
@@ -174,7 +366,7 @@ fn cmd_figure(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_all_figures() -> Result<()> {
-    for f in ["1", "2", "3", "4", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18"] {
+    for f in ["1", "2", "3", "4", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "19"] {
         print_figure(f)?;
         println!();
     }
@@ -323,7 +515,23 @@ fn print_figure(which: &str) -> Result<()> {
                 println!("fig18 | {name:<12} | {}", cols.join(" | "));
             }
         }
-        other => bail!("unknown figure {other:?} (1-4, 9-18)"),
+        "19" => {
+            println!("Figure 19 (new): adaptive DL-PIM under multi-tenant trace mixes");
+            for r in figures::fig19_multi_tenant() {
+                println!(
+                    "fig19 | {:<10} | {} tenants | always {:.3} | adaptive {:.3} | \
+                     latency impr {:.1}% | cov base {:.3} -> adaptive {:.3}",
+                    r.scenario,
+                    r.tenants,
+                    r.always_speedup,
+                    r.adaptive_speedup,
+                    r.latency_improvement * 100.0,
+                    r.base_cov,
+                    r.adaptive_cov
+                );
+            }
+        }
+        other => bail!("unknown figure {other:?} (1-4, 9-19)"),
     }
     // Every simulate call above went through the sweep engine's report
     // cache, so assembling the JSON artifact re-runs nothing.

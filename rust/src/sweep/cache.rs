@@ -34,6 +34,9 @@ fn fnv_step(h: u64, b: u8) -> u64 {
 
 /// Cache key of one sweep point: FNV-1a over the workload name and the
 /// rendered `key = value` form of the config (which covers every tunable).
+/// Trace-backed points additionally hash the trace file's *contents*, so
+/// re-recording or transforming a trace in place invalidates cached
+/// reports even though the path is unchanged.
 pub fn config_key(workload: &str, cfg: &SimConfig) -> u64 {
     let mut h = FNV_OFFSET;
     for &b in workload.as_bytes() {
@@ -42,6 +45,15 @@ pub fn config_key(workload: &str, cfg: &SimConfig) -> u64 {
     h = fnv_step(h, 0);
     for &b in presets::render(cfg).as_bytes() {
         h = fnv_step(h, b);
+    }
+    if let Some(path) = &cfg.trace {
+        h = fnv_step(h, 1);
+        // An unreadable file still yields a deterministic key (the job
+        // itself will fail loudly when it tries to open the trace).
+        let payload = std::fs::read(path).unwrap_or_else(|e| e.to_string().into_bytes());
+        for &b in &payload {
+            h = fnv_step(h, b);
+        }
     }
     h
 }
@@ -114,6 +126,21 @@ mod tests {
         let mut seeded = cfg.clone();
         seeded.seed ^= 1;
         assert_ne!(a, config_key("STRAdd", &seeded), "seed must matter");
+    }
+
+    #[test]
+    fn trace_backed_key_hashes_file_contents() {
+        let dir = std::env::temp_dir().join(format!("dlpim-cache-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("k.dlpt");
+        let mut cfg = SimConfig::hmc();
+        cfg.trace = Some(path.to_string_lossy().into_owned());
+        std::fs::write(&path, b"v1").unwrap();
+        let k1 = config_key("MIX", &cfg);
+        assert_eq!(k1, config_key("MIX", &cfg), "stable for unchanged contents");
+        std::fs::write(&path, b"v2").unwrap();
+        assert_ne!(k1, config_key("MIX", &cfg), "contents must matter");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

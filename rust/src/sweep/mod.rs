@@ -29,7 +29,7 @@ use std::panic::{AssertUnwindSafe, catch_unwind};
 use crate::config::SimConfig;
 use crate::coordinator::driver::simulate;
 use crate::coordinator::report::SimReport;
-use crate::workloads::catalog;
+use crate::workloads::build_source;
 
 /// One (workload, config) point of a sweep.
 #[derive(Clone, Debug)]
@@ -181,8 +181,10 @@ fn run_point(point: &SweepPoint, use_cache: bool) -> JobOutcome {
     let cfg = point.job_cfg();
     let name = point.workload.clone();
     let result = catch_unwind(AssertUnwindSafe(|| {
-        let w = catalog::build(&name, &cfg)
-            .unwrap_or_else(|| panic!("unknown workload {name:?}"));
+        // Trace-backed configs replay their file; generator configs build
+        // the named Table III workload. Errors (unknown workload, corrupt
+        // trace) poison only this job.
+        let w = build_source(Some(name.as_str()), &cfg).unwrap_or_else(|e| panic!("{e}"));
         simulate(&cfg, w)
     }));
     match result {

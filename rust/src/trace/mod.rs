@@ -1,0 +1,212 @@
+//! Trace subsystem: record, replay and compose memory traces.
+//!
+//! The paper's results hinge on the *traffic properties* of its 31
+//! Table III workloads, but generators alone cannot capture a run, rerun
+//! it bit-identically across policies/topologies, or compose workloads
+//! into new scenarios (multi-tenant mixes, dilated compute, re-homed
+//! geometries). This module adds that trace-driven methodology:
+//!
+//! * **record** — [`Recording`] tees any [`Workload`] to a
+//!   [`TraceWriter`] during a normal [`simulate`] run;
+//! * **replay** — [`TraceWorkload`] implements [`Workload`] over a loaded
+//!   [`TraceData`], so every figure, policy and topology runs unchanged
+//!   on recorded traffic;
+//! * **transform** — [`transform::mix`] / [`transform::dilate`] /
+//!   [`transform::remap`] compose recorded traces into multi-tenant and
+//!   sensitivity scenarios (`repro trace mix|dilate|remap`).
+//!
+//! # File format (`DLPT` version 1)
+//!
+//! All integers little-endian; `varint` is LEB128; `str` is a `u16`
+//! length followed by UTF-8 bytes.
+//!
+//! ```text
+//! magic       4 B   "DLPT"
+//! version     u16   format version (this module reads exactly 1)
+//! n_cores     u16   per-core stream count (= vault count at record time)
+//! block_bytes u32   block size the recording config used
+//! config_hash u64   sweep-cache hash of the recording config + workload
+//! seed        u64   seed of the recorded run
+//! workload    str   Table III short name (or transform expression)
+//! mem         str   memory preset at record time ("hmc" | "hbm")
+//! topology    str   interconnect at record time
+//! then, for each core 0..n_cores:
+//!   op_count  varint
+//!   byte_len  varint   encoded stream length in bytes
+//!   stream    byte_len bytes: per op,
+//!               varint zigzag(addr - prev_addr)   (prev starts at 0)
+//!               varint (gap << 1) | write_bit
+//! ```
+//!
+//! **Versioning rules:** readers reject any version they were not built
+//! for (no silent best-effort decode of future traces); additive changes
+//! (new header fields, new op flags) bump the version; the magic never
+//! changes. Every stream is decode-validated at load, so a malformed or
+//! truncated file fails with a labelled error instead of a panic mid-run.
+//!
+//! [`Workload`]: crate::workloads::Workload
+//! [`simulate`]: crate::coordinator::driver::simulate
+
+pub mod reader;
+pub mod transform;
+pub mod varint;
+pub mod writer;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+
+pub use reader::{TraceData, TraceWorkload};
+pub use writer::{Recording, TraceWriter};
+
+use crate::config::SimConfig;
+use crate::coordinator::report::SimReport;
+use crate::workloads::catalog;
+
+/// File magic: "DL-PIM Trace".
+pub const MAGIC: &[u8; 4] = b"DLPT";
+/// Format version this build writes and reads.
+pub const VERSION: u16 = 1;
+
+/// Trace header metadata: enough to identify what was recorded and to
+/// validate a replay config against it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceMeta {
+    /// Table III short name, or a transform expression like
+    /// `mix(SPLRad+PHELinReg)`.
+    pub workload: String,
+    /// Memory preset at record time ("hmc" | "hbm").
+    pub mem: String,
+    /// Interconnect at record time ("mesh" | "crossbar" | "ring").
+    pub topology: String,
+    /// Sweep-cache hash of the recording config (provenance, not enforced
+    /// on replay: replaying under a different policy/topology is the whole
+    /// point).
+    pub config_hash: u64,
+    /// Seed of the recorded run.
+    pub seed: u64,
+    /// Block size of the recording config; replay configs must match.
+    pub block_bytes: u32,
+    /// Per-core stream count (= `n_vaults` of the recording config).
+    pub n_cores: u16,
+}
+
+impl TraceMeta {
+    /// Header for a recording of `workload` under `cfg`.
+    pub fn for_run(workload: &str, cfg: &SimConfig) -> Self {
+        TraceMeta {
+            workload: workload.to_string(),
+            mem: cfg.mem.as_str().to_string(),
+            topology: cfg.topology.as_str().to_string(),
+            config_hash: crate::sweep::cache::config_key(workload, cfg),
+            seed: cfg.seed,
+            block_bytes: cfg.block_bytes,
+            n_cores: cfg.n_vaults,
+        }
+    }
+}
+
+/// Serialize the fixed header + metadata strings (shared by the writer
+/// and [`TraceData::save`], so the two cannot drift).
+pub(crate) fn write_header(out: &mut Vec<u8>, meta: &TraceMeta) {
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&meta.n_cores.to_le_bytes());
+    out.extend_from_slice(&meta.block_bytes.to_le_bytes());
+    out.extend_from_slice(&meta.config_hash.to_le_bytes());
+    out.extend_from_slice(&meta.seed.to_le_bytes());
+    write_str(out, &meta.workload);
+    write_str(out, &meta.mem);
+    write_str(out, &meta.topology);
+}
+
+pub(crate) fn write_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let len = bytes.len().min(u16::MAX as usize);
+    out.extend_from_slice(&(len as u16).to_le_bytes());
+    out.extend_from_slice(&bytes[..len]);
+}
+
+/// Write `bytes` to `path`, creating parent directories.
+pub(crate) fn write_file(path: &Path, bytes: &[u8]) -> Result<(), String> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| format!("create {}: {e}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, bytes).map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+/// Intern a trace display name so [`TraceWorkload`] can satisfy
+/// `Workload::name(&self) -> &'static str` without leaking one allocation
+/// per sweep job that opens the same file.
+pub fn intern(name: &str) -> &'static str {
+    static NAMES: OnceLock<Mutex<HashMap<String, &'static str>>> = OnceLock::new();
+    let mut map = NAMES.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    if let Some(s) = map.get(name) {
+        return *s;
+    }
+    let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+    map.insert(name.to_string(), leaked);
+    leaked
+}
+
+/// Record `workload` under `cfg` to `path`: runs a normal [`simulate`]
+/// with a [`Recording`] tee and saves the captured streams. Forces
+/// `runs = 1` (the format stores one seed, one stream set). Returns the
+/// run's report so callers can print or reuse it.
+///
+/// [`simulate`]: crate::coordinator::driver::simulate
+pub fn record_run(cfg: &SimConfig, workload: &str, path: &Path) -> Result<SimReport, String> {
+    let mut cfg = cfg.clone();
+    cfg.runs = 1;
+    cfg.trace = None; // record from the generator, even if a replay is configured
+    let inner = catalog::build(workload, &cfg)
+        .ok_or_else(|| crate::workloads::unknown_workload_message(workload))?;
+    let writer = writer::shared(TraceMeta::for_run(workload, &cfg));
+    let rec = Recording::new(inner, writer.clone());
+    let report = crate::coordinator::driver::simulate(&cfg, Box::new(rec));
+    let guard = writer.lock().unwrap();
+    guard.save(path)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_returns_one_static_per_name() {
+        let a = intern("trace:unit-intern");
+        let b = intern("trace:unit-intern");
+        assert!(std::ptr::eq(a, b), "same interned pointer");
+        assert_eq!(a, "trace:unit-intern");
+    }
+
+    #[test]
+    fn record_run_writes_a_loadable_trace() {
+        let mut cfg = SimConfig::hmc();
+        cfg.warmup_requests = 100;
+        cfg.measure_requests = 500;
+        let dir = std::env::temp_dir()
+            .join(format!("dlpim-trace-mod-{}", std::process::id()));
+        let path = dir.join("stradd.dlpt");
+        let report = record_run(&cfg, "STRAdd", &path).unwrap();
+        assert!(report.runs[0].stats.requests >= 500);
+        let data = TraceData::load(&path).unwrap();
+        assert_eq!(data.meta.workload, "STRAdd");
+        assert_eq!(data.meta.n_cores, 32);
+        assert_eq!(data.meta.seed, cfg.seed);
+        assert!(data.total_ops() > 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn record_run_rejects_unknown_workload_with_suggestion() {
+        let cfg = SimConfig::hmc();
+        let err = record_run(&cfg, "SPLRod", Path::new("/tmp/never-written.dlpt"))
+            .unwrap_err();
+        assert!(err.contains("SPLRad"), "did-you-mean: {err}");
+    }
+}

@@ -1,0 +1,344 @@
+//! Trace loading and replay: [`TraceData`] (a parsed, validated trace
+//! file) and [`TraceWorkload`] (a [`Workload`] that replays it, so every
+//! existing figure, policy and topology runs unchanged on recorded
+//! traffic).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::varint;
+use super::{intern, TraceMeta, MAGIC, VERSION};
+use crate::workloads::{Op, Workload};
+use crate::CoreId;
+
+/// One core's encoded stream inside a loaded trace.
+#[derive(Clone, Debug, Default)]
+pub struct CoreTrace {
+    pub ops: u64,
+    bytes: Vec<u8>,
+}
+
+/// A parsed trace file: header metadata plus per-core encoded streams.
+/// Every stream is fully decoded once at load time, so a malformed or
+/// truncated file fails with a clear error here and replay-time decoding
+/// cannot fail.
+#[derive(Clone, Debug)]
+pub struct TraceData {
+    pub meta: TraceMeta,
+    cores: Vec<CoreTrace>,
+}
+
+impl TraceData {
+    /// Parse and validate a serialized trace.
+    pub fn parse(bytes: &[u8]) -> Result<Self, String> {
+        let mut pos = 0usize;
+        let magic = take(bytes, &mut pos, 4, "magic")?;
+        if magic != MAGIC {
+            return Err(format!(
+                "not a dlpim trace: bad magic {magic:02x?} (expected {MAGIC:02x?})"
+            ));
+        }
+        let version = u16::from_le_bytes(take(bytes, &mut pos, 2, "version")?.try_into().unwrap());
+        if version != VERSION {
+            return Err(format!(
+                "unsupported trace version {version} (this build reads version {VERSION})"
+            ));
+        }
+        let n_cores = u16::from_le_bytes(take(bytes, &mut pos, 2, "n_cores")?.try_into().unwrap());
+        let block_bytes =
+            u32::from_le_bytes(take(bytes, &mut pos, 4, "block_bytes")?.try_into().unwrap());
+        let config_hash =
+            u64::from_le_bytes(take(bytes, &mut pos, 8, "config_hash")?.try_into().unwrap());
+        let seed = u64::from_le_bytes(take(bytes, &mut pos, 8, "seed")?.try_into().unwrap());
+        let workload = read_str(bytes, &mut pos, "workload name")?;
+        let mem = read_str(bytes, &mut pos, "memory kind")?;
+        let topology = read_str(bytes, &mut pos, "topology")?;
+        if n_cores == 0 {
+            return Err("trace declares 0 cores".into());
+        }
+
+        let mut cores = Vec::with_capacity(n_cores as usize);
+        for c in 0..n_cores {
+            let ops = varint::read_u64(bytes, &mut pos)
+                .map_err(|e| format!("core {c} op count: {e}"))?;
+            let len = varint::read_u64(bytes, &mut pos)
+                .map_err(|e| format!("core {c} stream length: {e}"))? as usize;
+            let body = take(bytes, &mut pos, len, "core stream")
+                .map_err(|e| format!("core {c}: {e}"))?;
+            let core = CoreTrace { ops, bytes: body.to_vec() };
+            // Validation decode: every op must decode and consume the
+            // stream exactly, so replay never hits a codec error.
+            let mut cur = Cursor::default();
+            for i in 0..ops {
+                decode_one(&core.bytes, &mut cur)
+                    .map_err(|e| format!("core {c} op {i}: {e}"))?;
+            }
+            if cur.pos != core.bytes.len() {
+                return Err(format!(
+                    "core {c}: {} trailing bytes after {} ops",
+                    core.bytes.len() - cur.pos,
+                    ops
+                ));
+            }
+            cores.push(core);
+        }
+        if pos != bytes.len() {
+            return Err(format!("{} trailing bytes after last core section", bytes.len() - pos));
+        }
+        Ok(TraceData {
+            meta: TraceMeta {
+                workload,
+                mem,
+                topology,
+                config_hash,
+                seed,
+                block_bytes,
+                n_cores,
+            },
+            cores,
+        })
+    }
+
+    /// Load and validate a trace file.
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(&bytes).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn n_cores(&self) -> u16 {
+        self.meta.n_cores
+    }
+
+    /// Ops recorded for one core.
+    pub fn core_ops(&self, core: u16) -> u64 {
+        self.cores[core as usize].ops
+    }
+
+    /// Total ops across all cores.
+    pub fn total_ops(&self) -> u64 {
+        self.cores.iter().map(|c| c.ops).sum()
+    }
+
+    /// Decode one core's full stream (transforms and `trace info` use
+    /// this; replay decodes incrementally instead).
+    pub fn decode_core(&self, core: u16) -> Vec<Op> {
+        let c = &self.cores[core as usize];
+        let mut cur = Cursor::default();
+        (0..c.ops)
+            .map(|_| decode_one(&c.bytes, &mut cur).expect("validated at load"))
+            .collect()
+    }
+
+    /// Serialized byte size (header excluded), for `trace info`.
+    pub fn body_bytes(&self) -> usize {
+        self.cores.iter().map(|c| c.bytes.len()).sum()
+    }
+
+    /// Serialize back to the on-disk format (streams are stored encoded,
+    /// so this is a concatenation, not a re-encode).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.body_bytes() + self.cores.len() * 12);
+        super::write_header(&mut out, &self.meta);
+        for c in &self.cores {
+            varint::write_u64(&mut out, c.ops);
+            varint::write_u64(&mut out, c.bytes.len() as u64);
+            out.extend_from_slice(&c.bytes);
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        super::write_file(path, &self.to_bytes())
+    }
+}
+
+fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize, what: &str) -> Result<&'a [u8], String> {
+    let end = pos.checked_add(n).filter(|&e| e <= bytes.len()).ok_or_else(|| {
+        format!("truncated file: {what} needs {n} bytes at offset {pos}, file has {}", bytes.len())
+    })?;
+    let out = &bytes[*pos..end];
+    *pos = end;
+    Ok(out)
+}
+
+fn read_str(bytes: &[u8], pos: &mut usize, what: &str) -> Result<String, String> {
+    let len =
+        u16::from_le_bytes(take(bytes, pos, 2, what)?.try_into().unwrap()) as usize;
+    let raw = take(bytes, pos, len, what)?;
+    String::from_utf8(raw.to_vec()).map_err(|_| format!("{what} is not valid UTF-8"))
+}
+
+/// Incremental decode state of one core stream.
+#[derive(Clone, Copy, Debug, Default)]
+struct Cursor {
+    pos: usize,
+    last_addr: u64,
+    emitted: u64,
+}
+
+fn decode_one(bytes: &[u8], cur: &mut Cursor) -> Result<Op, String> {
+    let delta = varint::unzigzag(varint::read_u64(bytes, &mut cur.pos)?);
+    let word = varint::read_u64(bytes, &mut cur.pos)?;
+    let addr = cur.last_addr.wrapping_add(delta as u64);
+    cur.last_addr = addr;
+    cur.emitted += 1;
+    let gap = word >> 1;
+    if gap > u32::MAX as u64 {
+        return Err(format!("gap {gap} overflows u32"));
+    }
+    Ok(Op { addr, write: word & 1 == 1, gap: gap as u32 })
+}
+
+/// A [`Workload`] that replays a loaded trace. Each core's cursor walks
+/// its recorded stream; with `loop_around` the stream restarts when it
+/// ends (delta base included), so a short trace can feed an arbitrarily
+/// long measure window. `reset` rewinds to the beginning — the trace *is*
+/// the randomness, so the seed is ignored and every run replays the
+/// identical stream.
+pub struct TraceWorkload {
+    data: Arc<TraceData>,
+    name: &'static str,
+    cursors: Vec<Cursor>,
+    loop_around: bool,
+}
+
+impl TraceWorkload {
+    pub fn new(data: Arc<TraceData>, loop_around: bool) -> Self {
+        let n = data.n_cores() as usize;
+        TraceWorkload {
+            name: intern(&format!("trace:{}", data.meta.workload)),
+            data,
+            cursors: vec![Cursor::default(); n],
+            loop_around,
+        }
+    }
+
+    /// Load a trace file into a boxed workload.
+    pub fn open(path: &Path, loop_around: bool) -> Result<Box<dyn Workload>, String> {
+        let data = TraceData::load(path)?;
+        Ok(Box::new(TraceWorkload::new(Arc::new(data), loop_around)))
+    }
+}
+
+impl Workload for TraceWorkload {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn next_op(&mut self, core: CoreId) -> Option<Op> {
+        let c = core as usize;
+        let stream = &self.data.cores[c];
+        if self.cursors[c].emitted >= stream.ops {
+            if !self.loop_around || stream.ops == 0 {
+                return None;
+            }
+            self.cursors[c] = Cursor::default();
+        }
+        Some(decode_one(&stream.bytes, &mut self.cursors[c]).expect("validated at load"))
+    }
+
+    fn reset(&mut self, _seed: u64) {
+        for c in &mut self.cursors {
+            *c = Cursor::default();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::writer::TraceWriter;
+
+    fn sample_writer() -> TraceWriter {
+        let meta = TraceMeta {
+            workload: "unit".into(),
+            mem: "hmc".into(),
+            topology: "mesh".into(),
+            config_hash: 42,
+            seed: 9,
+            block_bytes: 64,
+            n_cores: 2,
+        };
+        let mut w = TraceWriter::new(meta);
+        for i in 0..100u64 {
+            w.append(0, Op::read(4096 + i * 64, 8));
+            w.append(1, Op { addr: 1 << 30, write: i % 3 == 0, gap: 2 });
+        }
+        w
+    }
+
+    #[test]
+    fn write_parse_round_trips_ops_and_meta() {
+        let w = sample_writer();
+        let data = TraceData::parse(&w.finish()).unwrap();
+        assert_eq!(data.meta.workload, "unit");
+        assert_eq!(data.meta.seed, 9);
+        assert_eq!(data.meta.config_hash, 42);
+        assert_eq!(data.n_cores(), 2);
+        assert_eq!(data.core_ops(0), 100);
+        let ops = data.decode_core(0);
+        assert_eq!(ops[0], Op::read(4096, 8));
+        assert_eq!(ops[99], Op::read(4096 + 99 * 64, 8));
+        let ops1 = data.decode_core(1);
+        assert!(ops1[0].write && !ops1[1].write);
+    }
+
+    #[test]
+    fn replay_matches_recorded_stream_and_ends() {
+        let w = sample_writer();
+        let data = Arc::new(TraceData::parse(&w.finish()).unwrap());
+        let mut replay = TraceWorkload::new(data.clone(), false);
+        for i in 0..100u64 {
+            assert_eq!(replay.next_op(0), Some(Op::read(4096 + i * 64, 8)));
+        }
+        assert_eq!(replay.next_op(0), None, "non-looping stream must end");
+        // Reset rewinds to the start, ignoring the seed.
+        replay.reset(12345);
+        assert_eq!(replay.next_op(0), Some(Op::read(4096, 8)));
+    }
+
+    #[test]
+    fn loop_around_restarts_the_stream() {
+        let w = sample_writer();
+        let data = Arc::new(TraceData::parse(&w.finish()).unwrap());
+        let mut replay = TraceWorkload::new(data, true);
+        for _ in 0..100 {
+            replay.next_op(0).unwrap();
+        }
+        assert_eq!(replay.next_op(0), Some(Op::read(4096, 8)), "wrap to op 0");
+    }
+
+    #[test]
+    fn bad_magic_is_a_clear_error() {
+        let err = TraceData::parse(b"NOPE....").unwrap_err();
+        assert!(err.contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn future_version_is_rejected() {
+        let mut bytes = sample_writer().finish();
+        bytes[4] = 0xff; // version low byte
+        let err = TraceData::parse(&bytes).unwrap_err();
+        assert!(err.contains("unsupported trace version"), "{err}");
+    }
+
+    #[test]
+    fn truncation_anywhere_is_an_error_not_a_panic() {
+        let bytes = sample_writer().finish();
+        for cut in [0, 3, 5, 10, 27, 30, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                TraceData::parse(&bytes[..cut]).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_an_error() {
+        let mut bytes = sample_writer().finish();
+        bytes.extend_from_slice(b"junk");
+        let err = TraceData::parse(&bytes).unwrap_err();
+        assert!(err.contains("trailing"), "{err}");
+    }
+}

@@ -1,0 +1,382 @@
+//! Trace transforms: compose recorded traces into new scenarios.
+//!
+//! * [`mix`] — interleave K traces as K tenants over one memory system:
+//!   each output core is assigned a tenant (round-robin over a weighted
+//!   pattern) and replays one of that tenant's recorded core streams, with
+//!   the tenant's whole address space offset by a multiple of
+//!   [`TENANT_OFFSET`] so tenants never share blocks while their home-vault
+//!   *distributions* overlap — per-tenant hot vaults collide on the same
+//!   physical vaults, which is exactly the contention a PIM serving many
+//!   users sees and no single generator produces.
+//! * [`dilate`] — scale compute gaps, modelling faster/slower cores over
+//!   identical access sequences.
+//! * [`remap`] — re-home blocks for a different vault count, folding or
+//!   replicating core streams so a trace recorded on one geometry can
+//!   drive another.
+
+use super::reader::TraceData;
+use super::writer::TraceWriter;
+use super::TraceMeta;
+use crate::workloads::Op;
+
+/// Per-tenant address-space stride, bytes. A power of two far above any
+/// generator's footprint: it keeps each tenant's block-index low bits —
+/// and therefore its home-vault distribution — intact for any
+/// power-of-two vault count.
+pub const TENANT_OFFSET: u64 = 1 << 44;
+
+/// Address salt for replicated streams in an upsizing [`remap`].
+const CLONE_OFFSET: u64 = 1 << 52;
+
+/// Encode per-core op streams under `meta` and re-parse: transforms build
+/// their output through the real codec, so every produced trace is
+/// guaranteed loadable.
+fn rebuild(meta: TraceMeta, streams: Vec<Vec<Op>>) -> TraceData {
+    debug_assert_eq!(meta.n_cores as usize, streams.len());
+    let mut w = TraceWriter::new(meta);
+    for (c, ops) in streams.iter().enumerate() {
+        for &op in ops {
+            w.append(c as u16, op);
+        }
+    }
+    TraceData::parse(&w.finish()).expect("transform output must round-trip")
+}
+
+fn fnv(h: u64, v: u64) -> u64 {
+    let mut h = h;
+    for b in v.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Interleave `inputs` as tenants. `weights[t]` is tenant `t`'s share of
+/// the output cores (e.g. `[2, 1]` gives tenant 0 two cores out of every
+/// three); `n_cores` is the output geometry's core/vault count. The `j`-th
+/// output core assigned to tenant `t` replays the tenant's core
+/// `j % tenant_cores` stream at offset `t * TENANT_OFFSET`.
+pub fn mix(inputs: &[TraceData], weights: &[u64], n_cores: u16) -> Result<TraceData, String> {
+    if inputs.len() < 2 {
+        return Err(format!("mix needs at least 2 traces, got {}", inputs.len()));
+    }
+    if weights.len() != inputs.len() {
+        return Err(format!(
+            "{} weights for {} traces (need one per tenant)",
+            weights.len(),
+            inputs.len()
+        ));
+    }
+    if weights.iter().any(|&w| w == 0) {
+        return Err("tenant weights must be >= 1".into());
+    }
+    if n_cores == 0 {
+        return Err("mix needs at least 1 output core".into());
+    }
+    let block_bytes = inputs[0].meta.block_bytes;
+    for (t, i) in inputs.iter().enumerate() {
+        if i.meta.block_bytes != block_bytes {
+            return Err(format!(
+                "tenant {t} has block_bytes {} but tenant 0 has {} — traces must share \
+                 a block size to mix",
+                i.meta.block_bytes, block_bytes
+            ));
+        }
+    }
+
+    // Weighted round-robin: conceptually the repeating pattern [0, 0, 1]
+    // for weights [2, 1]; computed arithmetically so a huge weight cannot
+    // allocate a huge pattern. u128 keeps the total overflow-proof.
+    let total_weight: u128 = weights.iter().map(|&w| w as u128).sum();
+    let tenant_of = |c: usize| -> usize {
+        let mut slot = c as u128 % total_weight;
+        for (t, &w) in weights.iter().enumerate() {
+            if slot < w as u128 {
+                return t;
+            }
+            slot -= w as u128;
+        }
+        unreachable!("slot < total_weight by construction")
+    };
+
+    let mut per_tenant_rank = vec![0u64; inputs.len()];
+    let mut streams = Vec::with_capacity(n_cores as usize);
+    for c in 0..n_cores as usize {
+        let t = tenant_of(c);
+        let j = per_tenant_rank[t];
+        per_tenant_rank[t] += 1;
+        let src = (j % inputs[t].n_cores() as u64) as u16;
+        let offset = t as u64 * TENANT_OFFSET;
+        let ops: Vec<Op> = inputs[t]
+            .decode_core(src)
+            .into_iter()
+            .map(|op| Op { addr: op.addr + offset, ..op })
+            .collect();
+        streams.push(ops);
+    }
+
+    let name = format!(
+        "mix({})",
+        inputs.iter().map(|i| i.meta.workload.as_str()).collect::<Vec<_>>().join("+")
+    );
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for (i, w) in inputs.iter().zip(weights) {
+        hash = fnv(fnv(hash, i.meta.config_hash), *w);
+    }
+    hash = fnv(hash, n_cores as u64);
+    let meta = TraceMeta {
+        workload: name,
+        mem: inputs[0].meta.mem.clone(),
+        topology: inputs[0].meta.topology.clone(),
+        config_hash: hash,
+        seed: inputs.iter().fold(0, |s, i| fnv(s, i.meta.seed)),
+        block_bytes,
+        n_cores,
+    };
+    Ok(rebuild(meta, streams))
+}
+
+/// Scale every compute gap by `factor` (rounded to the nearest cycle),
+/// leaving addresses and r/w untouched.
+pub fn dilate(input: &TraceData, factor: f64) -> Result<TraceData, String> {
+    if !(factor.is_finite() && factor >= 0.0) {
+        return Err(format!("dilate factor must be a finite number >= 0, got {factor}"));
+    }
+    let streams = (0..input.n_cores())
+        .map(|c| {
+            input
+                .decode_core(c)
+                .into_iter()
+                .map(|op| {
+                    let gap = (op.gap as f64 * factor).round();
+                    Op { gap: gap.min(u32::MAX as f64) as u32, ..op }
+                })
+                .collect()
+        })
+        .collect();
+    let mut meta = input.meta.clone();
+    meta.workload = format!("dilate{factor}({})", meta.workload);
+    meta.config_hash = fnv(meta.config_hash, factor.to_bits());
+    Ok(rebuild(meta, streams))
+}
+
+/// Re-home a trace for `new_cores` vaults. Block indices are rewritten so
+/// each block's home vault id scales onto the new geometry
+/// (`home' = home % new`), preserving which streams collide. The rewrite
+/// is a mixed-radix repack — injective, so distinct blocks never alias
+/// into false sharing; when `new` divides `old` it is the identity. Core
+/// streams fold round-robin when shrinking; when growing, the extra cores
+/// replay clones of the original streams at a [`CLONE_OFFSET`] address
+/// salt.
+pub fn remap(input: &TraceData, new_cores: u16) -> Result<TraceData, String> {
+    if new_cores == 0 {
+        return Err("remap needs at least 1 core".into());
+    }
+    let old = input.n_cores();
+    let old_n = old as u64;
+    let new_n = new_cores as u64;
+    let shift = input.meta.block_bytes.trailing_zeros();
+    // block = q*old + h  ->  block' = (q*ceil(old/new) + h/new)*new + h%new:
+    // home' = h % new, and (q, h) is recoverable from block', so the map
+    // cannot collapse two blocks onto one.
+    let homes_per_group = old_n.div_ceil(new_n);
+    let rehome = |addr: u64| -> u64 {
+        let block = addr >> shift;
+        let within = addr & ((1u64 << shift) - 1);
+        let (q, h) = (block / old_n, block % old_n);
+        let block = (q * homes_per_group + h / new_n) * new_n + h % new_n;
+        (block << shift) | within
+    };
+
+    let mut streams: Vec<Vec<Op>> = Vec::with_capacity(new_cores as usize);
+    for c in 0..new_cores {
+        if new_cores <= old {
+            // Fold: new core c round-robin-interleaves old cores
+            // c, c+new, c+2new, ... one op at a time.
+            let sources: Vec<Vec<Op>> = (c..old)
+                .step_by(new_cores as usize)
+                .map(|s| input.decode_core(s))
+                .collect();
+            let total: usize = sources.iter().map(|s| s.len()).sum();
+            let mut merged = Vec::with_capacity(total);
+            let mut idx = vec![0usize; sources.len()];
+            while merged.len() < total {
+                for (s, i) in sources.iter().zip(idx.iter_mut()) {
+                    if *i < s.len() {
+                        let op = s[*i];
+                        merged.push(Op { addr: rehome(op.addr), ..op });
+                        *i += 1;
+                    }
+                }
+            }
+            streams.push(merged);
+        } else {
+            let src = c % old;
+            let clone = (c / old) as u64;
+            streams.push(
+                input
+                    .decode_core(src)
+                    .into_iter()
+                    .map(|op| Op { addr: rehome(op.addr) + clone * CLONE_OFFSET, ..op })
+                    .collect(),
+            );
+        }
+    }
+
+    let mut meta = input.meta.clone();
+    meta.workload = format!("remap{new_cores}({})", meta.workload);
+    meta.config_hash = fnv(meta.config_hash, new_n);
+    meta.n_cores = new_cores;
+    Ok(rebuild(meta, streams))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::writer::TraceWriter;
+
+    fn trace(name: &str, n_cores: u16, ops_per_core: u64) -> TraceData {
+        let meta = TraceMeta {
+            workload: name.into(),
+            mem: "hmc".into(),
+            topology: "mesh".into(),
+            config_hash: name.len() as u64,
+            seed: 1,
+            block_bytes: 64,
+            n_cores,
+        };
+        let mut w = TraceWriter::new(meta);
+        for c in 0..n_cores {
+            for i in 0..ops_per_core {
+                w.append(c, Op::read(64 * (1 + c as u64 * 1000 + i), 4));
+            }
+        }
+        TraceData::parse(&w.finish()).unwrap()
+    }
+
+    #[test]
+    fn mix_offsets_tenant_address_spaces() {
+        let a = trace("A", 4, 50);
+        let b = trace("B", 4, 50);
+        let m = mix(&[a, b], &[1, 1], 8).unwrap();
+        assert_eq!(m.n_cores(), 8);
+        assert_eq!(m.meta.workload, "mix(A+B)");
+        // Even cores are tenant 0 (low addresses), odd cores tenant 1.
+        assert!(m.decode_core(0).iter().all(|op| op.addr < TENANT_OFFSET));
+        assert!(m.decode_core(1).iter().all(|op| op.addr >= TENANT_OFFSET));
+        // Offset preserves the home vault for power-of-two vault counts.
+        let base = trace("A", 4, 50).decode_core(0);
+        for (orig, mixed) in base.iter().zip(m.decode_core(0).iter()) {
+            assert_eq!(orig.addr, mixed.addr);
+        }
+        for (orig, mixed) in trace("B", 4, 50).decode_core(0).iter().zip(m.decode_core(1)) {
+            assert_eq!((orig.addr / 64) % 32, (mixed.addr / 64) % 32, "same home vault");
+        }
+    }
+
+    #[test]
+    fn mix_weights_shape_the_core_assignment() {
+        let a = trace("A", 2, 10);
+        let b = trace("B", 2, 10);
+        let m = mix(&[a, b], &[2, 1], 6).unwrap();
+        // Pattern [0, 0, 1]: cores 0,1,3,4 tenant 0; cores 2,5 tenant 1.
+        for c in [0u16, 1, 3, 4] {
+            assert!(m.decode_core(c)[0].addr < TENANT_OFFSET, "core {c}");
+        }
+        for c in [2u16, 5] {
+            assert!(m.decode_core(c)[0].addr >= TENANT_OFFSET, "core {c}");
+        }
+    }
+
+    #[test]
+    fn mix_handles_huge_weights_without_allocating() {
+        let a = trace("A", 2, 4);
+        let b = trace("B", 2, 4);
+        // The weighted assignment is arithmetic, not a materialized
+        // pattern — an absurd weight must neither OOM nor overflow.
+        let m = mix(&[a, b], &[u64::MAX / 2, 1], 4).unwrap();
+        for c in 0..4u16 {
+            assert!(m.decode_core(c)[0].addr < TENANT_OFFSET, "core {c} is tenant 0");
+        }
+    }
+
+    #[test]
+    fn mix_rejects_mismatched_blocks_and_bad_weights() {
+        let a = trace("A", 2, 4);
+        let mut b = trace("B", 2, 4);
+        b.meta.block_bytes = 128;
+        assert!(mix(&[a.clone(), b], &[1, 1], 4).unwrap_err().contains("block size"));
+        let b = trace("B", 2, 4);
+        assert!(mix(&[a.clone(), b.clone()], &[1], 4).is_err(), "weight arity");
+        assert!(mix(&[a.clone(), b.clone()], &[1, 0], 4).is_err(), "zero weight");
+        assert!(mix(&[a], &[1], 4).unwrap_err().contains("at least 2"));
+    }
+
+    #[test]
+    fn dilate_scales_gaps_only() {
+        let t = trace("A", 2, 20);
+        let d = dilate(&t, 2.5).unwrap();
+        for (orig, dil) in t.decode_core(1).iter().zip(d.decode_core(1)) {
+            assert_eq!(orig.addr, dil.addr);
+            assert_eq!(orig.write, dil.write);
+            assert_eq!(dil.gap, 10, "4 * 2.5");
+        }
+        assert!(dilate(&t, f64::NAN).is_err());
+        assert!(dilate(&t, -1.0).is_err());
+    }
+
+    #[test]
+    fn remap_shrink_folds_streams_and_rehomes() {
+        let t = trace("A", 4, 10);
+        let r = remap(&t, 2).unwrap();
+        assert_eq!(r.n_cores(), 2);
+        assert_eq!(r.total_ops(), t.total_ops(), "no op lost");
+        // 2 divides 4, so the block rewrite is the identity: the remap
+        // only folds streams, preserving the exact address multiset.
+        let mut orig: Vec<u64> =
+            (0..4u16).flat_map(|c| t.decode_core(c)).map(|op| op.addr).collect();
+        let mut got: Vec<u64> =
+            (0..2u16).flat_map(|c| r.decode_core(c)).map(|op| op.addr).collect();
+        orig.sort_unstable();
+        got.sort_unstable();
+        assert_eq!(orig, got, "divisible rehome must be the identity");
+    }
+
+    #[test]
+    fn remap_is_injective_and_scales_homes() {
+        // 4 -> 3 does not divide: the mixed-radix rewrite must stay
+        // injective (no false sharing) and set home' = home % 3. The
+        // rewrite is strictly monotonic in the block index, so sorted
+        // original and remapped addresses correspond pairwise.
+        let t = trace("A", 4, 10);
+        let r = remap(&t, 3).unwrap();
+        let mut orig: Vec<u64> =
+            (0..4u16).flat_map(|c| t.decode_core(c)).map(|op| op.addr).collect();
+        let mut got: Vec<u64> =
+            (0..3u16).flat_map(|c| r.decode_core(c)).map(|op| op.addr).collect();
+        orig.sort_unstable();
+        got.sort_unstable();
+        assert_eq!(orig.len(), got.len());
+        let distinct: std::collections::HashSet<u64> = got.iter().copied().collect();
+        assert_eq!(distinct.len(), got.len(), "remap must not alias blocks");
+        for (o, g) in orig.iter().zip(&got) {
+            assert_eq!((g / 64) % 3, ((o / 64) % 4) % 3, "home must scale");
+        }
+    }
+
+    #[test]
+    fn remap_grow_replicates_with_salt() {
+        let t = trace("A", 2, 10);
+        let r = remap(&t, 4).unwrap();
+        assert_eq!(r.n_cores(), 4);
+        // Clones replay the same pattern in a disjoint address range.
+        let orig = r.decode_core(0);
+        let clone = r.decode_core(2);
+        assert_eq!(orig.len(), clone.len());
+        assert!(clone[0].addr > orig[0].addr);
+        assert_eq!(
+            clone[1].addr - clone[0].addr,
+            orig[1].addr - orig[0].addr,
+            "same stride"
+        );
+    }
+}

@@ -1,0 +1,107 @@
+//! LEB128 varints + zigzag, the primitives of the trace body encoding.
+//!
+//! Addresses are stored as per-core deltas, and deltas of strided sweeps
+//! are small signed numbers — zigzag folds them into small unsigned
+//! numbers, and LEB128 stores those in one or two bytes instead of eight.
+
+/// Append `v` as an LEB128 varint (7 data bits per byte, MSB = more).
+#[inline]
+pub fn write_u64(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(b);
+            return;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+/// Decode an LEB128 varint at `*pos`, advancing it. Errors (rather than
+/// panicking) on truncation or a value overflowing 64 bits, so corrupt
+/// trace files surface as messages.
+pub fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64, String> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = buf.get(*pos) else {
+            return Err(format!("truncated varint at byte {}", *pos));
+        };
+        *pos += 1;
+        if shift == 63 && b > 1 {
+            return Err(format!("varint overflows u64 at byte {}", *pos - 1));
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(format!("varint longer than 10 bytes at byte {}", *pos - 1));
+        }
+    }
+}
+
+/// Zigzag-fold a signed delta so small negatives encode small.
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Invert [`zigzag`].
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_round_trips_edge_values() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX - 1, u64::MAX] {
+            let mut buf = Vec::new();
+            write_u64(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_u64(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len(), "no trailing bytes for {v}");
+        }
+    }
+
+    #[test]
+    fn small_values_are_one_byte() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, 100);
+        assert_eq!(buf.len(), 1);
+    }
+
+    #[test]
+    fn truncated_varint_is_an_error() {
+        let buf = [0x80u8, 0x80]; // continuation bits with no terminator
+        let mut pos = 0;
+        assert!(read_u64(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn overlong_varint_is_an_error() {
+        let buf = [0xffu8; 11];
+        let mut pos = 0;
+        assert!(read_u64(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn zigzag_round_trips() {
+        for v in [0i64, 1, -1, 64, -64, i64::MAX, i64::MIN, 12345, -98765] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn zigzag_keeps_small_deltas_small() {
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert_eq!(zigzag(-64), 127); // one varint byte
+    }
+}

@@ -62,6 +62,68 @@ pub trait Workload: Send {
     fn reset(&mut self, seed: u64);
 }
 
+/// Boxed workloads forward the trait, so wrappers like
+/// [`crate::trace::Recording`] can tee a `catalog::build` result without
+/// knowing the concrete generator type.
+impl Workload for Box<dyn Workload> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn next_op(&mut self, core: CoreId) -> Option<Op> {
+        (**self).next_op(core)
+    }
+
+    fn reset(&mut self, seed: u64) {
+        (**self).reset(seed)
+    }
+}
+
+/// Unknown-workload error with a nearest-name suggestion from the
+/// Table III catalog (so `--workload SPLRod` points at `SPLRad` instead
+/// of failing bare).
+pub fn unknown_workload_message(name: &str) -> String {
+    let hint = match crate::cli::suggest(name, catalog::ALL_NAMES.iter().copied()) {
+        Some(s) => format!("; did you mean {s:?}?"),
+        None => String::new(),
+    };
+    format!("unknown workload {name:?}{hint} (run `repro workloads` for the Table III list)")
+}
+
+/// Build the traffic source for one run: the replayed trace when the
+/// config names one (`cfg.trace`), otherwise the Table III generator
+/// `name`. This is the single dispatch point the CLI and the sweep engine
+/// share, so trace-backed jobs flow through every existing figure and
+/// policy unchanged.
+pub fn build_source(
+    name: Option<&str>,
+    cfg: &crate::config::SimConfig,
+) -> Result<Box<dyn Workload>, String> {
+    if let Some(path) = &cfg.trace {
+        let data = crate::trace::TraceData::load(std::path::Path::new(path))?;
+        if data.meta.n_cores != cfg.n_vaults {
+            return Err(format!(
+                "trace {path} was recorded for {} cores but the config has {} vaults; \
+                 re-home it with `repro trace remap {path} OUT --vaults {}`",
+                data.meta.n_cores, cfg.n_vaults, cfg.n_vaults
+            ));
+        }
+        if data.meta.block_bytes != cfg.block_bytes {
+            return Err(format!(
+                "trace {path} uses {}-byte blocks but the config uses {} — block \
+                 granularity must match for replay",
+                data.meta.block_bytes, cfg.block_bytes
+            ));
+        }
+        return Ok(Box::new(crate::trace::TraceWorkload::new(
+            std::sync::Arc::new(data),
+            cfg.trace_loop,
+        )));
+    }
+    let name = name.ok_or("no traffic source: pass --workload NAME or --trace FILE")?;
+    catalog::build(name, cfg).ok_or_else(|| unknown_workload_message(name))
+}
+
 /// Shared layout constants: per-structure base addresses spaced far apart
 /// so structures never collide (the address space is virtual anyway — only
 /// block→vault mapping matters).

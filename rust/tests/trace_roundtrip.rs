@@ -1,0 +1,226 @@
+//! Trace round-trip fidelity: recording a run and replaying the trace
+//! must reproduce the *identical* simulation — same `ServedRequest`
+//! stream, hence bit-identical report statistics — across all three
+//! topologies and both memory presets; transforms must run end-to-end;
+//! corrupt files must fail with errors, not panics.
+
+use std::path::PathBuf;
+
+use dlpim::config::{SimConfig, Topology};
+use dlpim::coordinator::driver::simulate;
+use dlpim::coordinator::report::RunReport;
+use dlpim::policy::PolicyKind;
+use dlpim::trace::{record_run, transform, TraceData};
+use dlpim::workloads::build_source;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dlpim-rt-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn quick(mut cfg: SimConfig, policy: PolicyKind) -> SimConfig {
+    cfg.policy = policy;
+    cfg.warmup_requests = 500;
+    cfg.measure_requests = 3000;
+    cfg.epoch_cycles = 5000;
+    cfg.runs = 1;
+    cfg
+}
+
+/// The full per-run evidence that two simulations served the identical
+/// request stream: cycles, every scalar counter, the exact latency
+/// decomposition, traffic, reuse, CoV, and the epoch-decision count.
+fn assert_runs_identical(a: &RunReport, b: &RunReport, what: &str) {
+    assert_eq!(a.cycles, b.cycles, "{what}: cycles");
+    assert_eq!(a.stats.requests, b.stats.requests, "{what}: requests");
+    assert_eq!(a.stats.latency, b.stats.latency, "{what}: latency breakdown");
+    assert_eq!(a.stats.queue_net, b.stats.queue_net, "{what}: queue_net");
+    assert_eq!(a.stats.queue_mem, b.stats.queue_mem, "{what}: queue_mem");
+    assert_eq!(a.stats.l1_hits, b.stats.l1_hits, "{what}: l1_hits");
+    assert_eq!(a.stats.local_requests, b.stats.local_requests, "{what}: local");
+    assert_eq!(a.stats.subscriptions, b.stats.subscriptions, "{what}: subs");
+    assert_eq!(a.stats.resubscriptions, b.stats.resubscriptions, "{what}: resubs");
+    assert_eq!(a.stats.unsubscriptions, b.stats.unsubscriptions, "{what}: unsubs");
+    assert_eq!(a.stats.sub_nacks, b.stats.sub_nacks, "{what}: nacks");
+    assert_eq!(a.stats.traffic, b.stats.traffic, "{what}: traffic");
+    assert_eq!(a.stats.reuse, b.stats.reuse, "{what}: reuse");
+    assert_eq!(a.stats.demand.cov(), b.stats.demand.cov(), "{what}: cov");
+    assert_eq!(a.decisions.len(), b.decisions.len(), "{what}: epoch decisions");
+}
+
+/// Record SPLRad, replay the file, and compare the full report — for
+/// every topology on both memory presets (the acceptance grid).
+#[test]
+fn record_replay_is_bit_identical_across_topologies_and_presets() {
+    let dir = tmp_dir("grid");
+    for preset in ["hmc", "hbm"] {
+        for topo in [Topology::Mesh, Topology::Crossbar, Topology::Ring] {
+            let mut cfg = quick(SimConfig::preset(preset).unwrap(), PolicyKind::Adaptive);
+            cfg.topology = topo;
+            cfg.validate().unwrap();
+            let path = dir.join(format!("splrad-{preset}-{}.dlpt", topo.as_str()));
+
+            let direct = record_run(&cfg, "SPLRad", &path).unwrap();
+
+            let mut replay_cfg = cfg.clone();
+            replay_cfg.trace = Some(path.to_string_lossy().into_owned());
+            let w = build_source(None, &replay_cfg).unwrap();
+            let replayed = simulate(&replay_cfg, w);
+
+            assert_runs_identical(
+                &direct.runs[0],
+                &replayed.runs[0],
+                &format!("{preset}/{}", topo.as_str()),
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Replay must be independent of the replay config's seed (the trace is
+/// the randomness), while the generator run is not.
+#[test]
+fn replay_ignores_seed() {
+    let dir = tmp_dir("seed");
+    let cfg = quick(SimConfig::hmc(), PolicyKind::Never);
+    let path = dir.join("seed.dlpt");
+    record_run(&cfg, "HSJNPO", &path).unwrap();
+
+    let mut a_cfg = cfg.clone();
+    a_cfg.trace = Some(path.to_string_lossy().into_owned());
+    let mut b_cfg = a_cfg.clone();
+    b_cfg.seed = cfg.seed.wrapping_add(999);
+
+    let a = simulate(&a_cfg, build_source(None, &a_cfg).unwrap());
+    let b = simulate(&b_cfg, build_source(None, &b_cfg).unwrap());
+    assert_runs_identical(&a.runs[0], &b.runs[0], "replay seeds");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A 2-tenant mix runs end-to-end through the ordinary driver under
+/// every policy, with loop-around sustaining the measure window.
+#[test]
+fn mixed_trace_runs_end_to_end() {
+    let dir = tmp_dir("mix");
+    let cfg = quick(SimConfig::hmc(), PolicyKind::Never);
+    let mut tenants = Vec::new();
+    for name in ["SPLRad", "PHELinReg"] {
+        let path = dir.join(format!("{name}.dlpt"));
+        record_run(&cfg, name, &path).unwrap();
+        tenants.push(TraceData::load(&path).unwrap());
+    }
+    let mixed = transform::mix(&tenants, &[1, 1], cfg.n_vaults).unwrap();
+    let path = dir.join("mix2.dlpt");
+    mixed.save(&path).unwrap();
+
+    for policy in [PolicyKind::Never, PolicyKind::Adaptive] {
+        let mut run_cfg = quick(SimConfig::hmc(), policy);
+        run_cfg.trace = Some(path.to_string_lossy().into_owned());
+        let rep = simulate(&run_cfg, build_source(None, &run_cfg).unwrap());
+        assert!(
+            rep.runs[0].stats.requests >= run_cfg.measure_requests,
+            "{policy:?}: loop-around must sustain the measure window"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Geometry mismatches are caught with actionable errors, not panics —
+/// and `remap` actually fixes them.
+#[test]
+fn replaying_on_wrong_geometry_is_a_clear_error() {
+    let dir = tmp_dir("geom");
+    let cfg = quick(SimConfig::hmc(), PolicyKind::Never); // 32 cores
+    let path = dir.join("hmc.dlpt");
+    record_run(&cfg, "STRAdd", &path).unwrap();
+
+    let mut hbm = quick(SimConfig::hbm(), PolicyKind::Never); // 8 vaults
+    hbm.trace = Some(path.to_string_lossy().into_owned());
+    let err = build_source(None, &hbm).unwrap_err();
+    assert!(err.contains("32 cores"), "{err}");
+    assert!(err.contains("remap"), "should point at the fix: {err}");
+
+    let remapped = transform::remap(&TraceData::load(&path).unwrap(), 8).unwrap();
+    let rpath = dir.join("hbm8.dlpt");
+    remapped.save(&rpath).unwrap();
+    hbm.trace = Some(rpath.to_string_lossy().into_owned());
+    let rep = simulate(&hbm, build_source(None, &hbm).unwrap());
+    assert!(rep.runs[0].stats.requests >= hbm.measure_requests);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Malformed and truncated files fail with labelled errors, never panics.
+#[test]
+fn corrupt_trace_files_fail_cleanly() {
+    let dir = tmp_dir("corrupt");
+
+    let garbage = dir.join("garbage.dlpt");
+    std::fs::write(&garbage, b"this is not a trace at all").unwrap();
+    let err = TraceData::load(&garbage).unwrap_err();
+    assert!(err.contains("bad magic"), "{err}");
+
+    let cfg = quick(SimConfig::hmc(), PolicyKind::Never);
+    let path = dir.join("ok.dlpt");
+    record_run(&cfg, "STRCpy", &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let truncated = dir.join("truncated.dlpt");
+    std::fs::write(&truncated, &bytes[..bytes.len() / 3]).unwrap();
+    let err = TraceData::load(&truncated).unwrap_err();
+    assert!(
+        err.contains("truncated") || err.contains("trailing") || err.contains("core"),
+        "unhelpful error: {err}"
+    );
+
+    // The same errors surface through the workload dispatch path.
+    let mut run_cfg = cfg.clone();
+    run_cfg.trace = Some(truncated.to_string_lossy().into_owned());
+    assert!(build_source(None, &run_cfg).is_err());
+
+    let missing = dir.join("nope.dlpt");
+    run_cfg.trace = Some(missing.to_string_lossy().into_owned());
+    let err = build_source(None, &run_cfg).unwrap_err();
+    assert!(err.contains("nope.dlpt"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `TraceData::to_bytes` is canonical: loading and re-serializing a
+/// recorded file reproduces it byte for byte (transform outputs are
+/// saved through this path).
+#[test]
+fn save_load_round_trips_bytes() {
+    let dir = tmp_dir("bytes");
+    let cfg = quick(SimConfig::hmc(), PolicyKind::Never);
+    let path = dir.join("a.dlpt");
+    record_run(&cfg, "STRSca", &path).unwrap();
+    let original = std::fs::read(&path).unwrap();
+    let data = TraceData::load(&path).unwrap();
+    assert_eq!(data.to_bytes(), original, "serialization must be canonical");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The sweep engine runs trace-backed points, caches them by file
+/// content, and reports generator typos with a suggestion.
+#[test]
+fn sweep_runs_trace_backed_points() {
+    use dlpim::sweep::{Sweep, SweepPoint};
+    let dir = tmp_dir("sweep");
+    let cfg = quick(SimConfig::hmc(), PolicyKind::Never);
+    let path = dir.join("s.dlpt");
+    record_run(&cfg, "STRTriad", &path).unwrap();
+
+    let mut tcfg = cfg.clone();
+    tcfg.trace = Some(path.to_string_lossy().into_owned());
+    let first = Sweep::new(vec![SweepPoint::new("trace-point", tcfg.clone())]).run();
+    assert!(first[0].result.is_ok(), "{:?}", first[0].result);
+    assert!(!first[0].from_cache, "unique trace file must miss the cache");
+    let second = Sweep::new(vec![SweepPoint::new("trace-point", tcfg.clone())]).run();
+    assert!(second[0].from_cache, "identical trace point must hit the cache");
+
+    let bad = Sweep::new(vec![SweepPoint::new("SPLRod", cfg.clone())])
+        .use_cache(false)
+        .run();
+    let err = bad[0].result.as_ref().unwrap_err();
+    assert!(err.contains("SPLRad"), "did-you-mean through sweep: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
