@@ -1,38 +1,8 @@
-//! Fig 1: breakdown of memory latency into data-transfer, queuing and
-//! array access — HMC, baseline, all 31 workloads.
-//!
-//! Paper headline: data transfer + queuing ≈ 53% of latency on average,
-//! with high-CoV workloads attributing 70–80% to queuing.
-
-use dlpim::benchkit::Csv;
-use dlpim::config::MemKind;
-use dlpim::figures;
+//! Fig 1: baseline latency breakdown, HMC — a thin shim: the
+//! experiment itself is the "fig01" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig_latency_breakdown(MemKind::Hmc);
-    let mut csv = Csv::new("workload,network,queue,array,avg_latency");
-    let mut overhead = 0.0;
-    for r in &rows {
-        println!(
-            "fig01 | {:<12} | network {:.3} | queue {:.3} | array {:.3} | avg {:.1}",
-            r.workload, r.network, r.queue, r.array, r.avg_latency
-        );
-        csv.push(&[
-            r.workload.to_string(),
-            format!("{:.4}", r.network),
-            format!("{:.4}", r.queue),
-            format!("{:.4}", r.array),
-            format!("{:.2}", r.avg_latency),
-        ]);
-        overhead += r.network + r.queue;
-    }
-    println!(
-        "fig01 | AVG remote overhead = {:.1}% (paper: ~53%) | wallclock {:.1}s",
-        overhead / rows.len() as f64 * 100.0,
-        t0.elapsed().as_secs_f64()
-    );
-    csv.write("target/figures/fig01.csv").expect("write csv");
-    let artifact = figures::emit_artifact("1").expect("known figure");
-    println!("fig01 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig01");
 }

@@ -1,36 +1,8 @@
-//! Fig 2: latency breakdown — HBM, baseline, all 31 workloads.
-//! Paper headline: remote overhead ≈ 43% (lower than HMC's 53% thanks to
-//! the smaller 4x2 mesh).
-
-use dlpim::benchkit::Csv;
-use dlpim::config::MemKind;
-use dlpim::figures;
+//! Fig 2: baseline latency breakdown, HBM — a thin shim: the
+//! experiment itself is the "fig02" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig_latency_breakdown(MemKind::Hbm);
-    let mut csv = Csv::new("workload,network,queue,array,avg_latency");
-    let mut overhead = 0.0;
-    for r in &rows {
-        println!(
-            "fig02 | {:<12} | network {:.3} | queue {:.3} | array {:.3} | avg {:.1}",
-            r.workload, r.network, r.queue, r.array, r.avg_latency
-        );
-        csv.push(&[
-            r.workload.to_string(),
-            format!("{:.4}", r.network),
-            format!("{:.4}", r.queue),
-            format!("{:.4}", r.array),
-            format!("{:.2}", r.avg_latency),
-        ]);
-        overhead += r.network + r.queue;
-    }
-    println!(
-        "fig02 | AVG remote overhead = {:.1}% (paper: ~43%) | wallclock {:.1}s",
-        overhead / rows.len() as f64 * 100.0,
-        t0.elapsed().as_secs_f64()
-    );
-    csv.write("target/figures/fig02.csv").expect("write csv");
-    let artifact = figures::emit_artifact("2").expect("known figure");
-    println!("fig02 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig02");
 }

@@ -1,29 +1,8 @@
-//! Fig 3: coefficient of variation of per-vault demand — HMC baseline.
-//! Paper: PHELinReg, CHABsBez and SPLRad dominate; most others are low.
-
-use dlpim::benchkit::Csv;
-use dlpim::config::MemKind;
-use dlpim::figures;
+//! Fig 3: baseline CoV of per-vault demand, HMC — a thin shim: the
+//! experiment itself is the "fig03" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig_cov(MemKind::Hmc);
-    let mut csv = Csv::new("workload,cov");
-    for (name, cov) in &rows {
-        println!("fig03 | {name:<12} | cov {cov:.3}");
-        csv.push(&[name.to_string(), format!("{cov:.4}")]);
-    }
-    let top: Vec<&str> = {
-        let mut sorted = rows.clone();
-        sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        sorted.iter().take(3).map(|(n, _)| *n).collect()
-    };
-    println!(
-        "fig03 | top-3 CoV: {} (paper: PHELinReg, CHABsBez, SPLRad) | wallclock {:.1}s",
-        top.join(", "),
-        t0.elapsed().as_secs_f64()
-    );
-    csv.write("target/figures/fig03.csv").expect("write csv");
-    let artifact = figures::emit_artifact("3").expect("known figure");
-    println!("fig03 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig03");
 }

@@ -1,25 +1,8 @@
-//! Fig 4: CoV of per-channel demand — HBM baseline.
-//! Paper: same skewed workloads stand out but overall CoV is lower than
-//! HMC (8 channels vs 32 vaults).
-
-use dlpim::benchkit::Csv;
-use dlpim::config::MemKind;
-use dlpim::figures;
+//! Fig 4: baseline CoV of per-vault demand, HBM — a thin shim: the
+//! experiment itself is the "fig04" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let hbm = figures::fig_cov(MemKind::Hbm);
-    let mut csv = Csv::new("workload,cov");
-    for (name, cov) in &hbm {
-        println!("fig04 | {name:<12} | cov {cov:.3}");
-        csv.push(&[name.to_string(), format!("{cov:.4}")]);
-    }
-    let avg = hbm.iter().map(|(_, c)| c).sum::<f64>() / hbm.len() as f64;
-    println!(
-        "fig04 | AVG CoV = {avg:.3} (paper: lower than HMC overall) | wallclock {:.1}s",
-        t0.elapsed().as_secs_f64()
-    );
-    csv.write("target/figures/fig04.csv").expect("write csv");
-    let artifact = figures::emit_artifact("4").expect("known figure");
-    println!("fig04 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig04");
 }

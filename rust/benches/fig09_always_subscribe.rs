@@ -1,41 +1,8 @@
-//! Fig 9: performance gain of always-subscribe over baseline — HMC, all 31
-//! workloads.
-//!
-//! Paper shape: SPLRad up to +105%, PLYgemm/PLY3mm down to −17%, a wide
-//! flat middle at 1.00, average ≈ +6%.
-
-use dlpim::benchkit::Csv;
-use dlpim::figures;
+//! Fig 9: always-subscribe speedup over baseline, HMC — a thin shim: the
+//! experiment itself is the "fig09" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig9_always_subscribe();
-    let mut csv = Csv::new("workload,speedup,latency_improvement");
-    for r in &rows {
-        println!(
-            "fig09 | {:<12} | speedup {:.3} | latency impr {:+.1}%",
-            r.workload,
-            r.speedup,
-            r.latency_improvement * 100.0
-        );
-        csv.push(&[
-            r.workload.to_string(),
-            format!("{:.4}", r.speedup),
-            format!("{:.4}", r.latency_improvement),
-        ]);
-    }
-    let best = rows.iter().max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap()).unwrap();
-    let worst = rows.iter().min_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap()).unwrap();
-    println!(
-        "fig09 | GEOMEAN {:.3} (paper ~1.06) | best {} {:.2} (paper SPLRad 2.05) | worst {} {:.2} (paper PLYgemm/3mm 0.83) | wallclock {:.1}s",
-        figures::geomean(rows.iter().map(|r| r.speedup)),
-        best.workload,
-        best.speedup,
-        worst.workload,
-        worst.speedup,
-        t0.elapsed().as_secs_f64()
-    );
-    csv.write("target/figures/fig09.csv").expect("write csv");
-    let artifact = figures::emit_artifact("9").expect("known figure");
-    println!("fig09 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig09");
 }

@@ -1,28 +1,8 @@
-//! Fig 10: average local / remote accesses per subscription under
-//! always-subscribe — the reuse profile that separates Fig 9's winners
-//! from its flat middle.
-
-use dlpim::benchkit::Csv;
-use dlpim::figures;
+//! Fig 10: reuse per subscription under always-subscribe — a thin shim: the
+//! experiment itself is the "fig10" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig10_reuse();
-    let mut csv = Csv::new("workload,local,remote");
-    let mut near_zero = 0;
-    for (name, l, r) in &rows {
-        println!("fig10 | {name:<12} | local {l:.2} | remote {r:.2} | total {:.2}", l + r);
-        csv.push(&[name.to_string(), format!("{l:.4}"), format!("{r:.4}")]);
-        if l + r < 0.5 {
-            near_zero += 1;
-        }
-    }
-    println!(
-        "fig10 | {near_zero}/{} workloads with near-zero reuse (paper: 'many') | wallclock {:.1}s",
-        rows.len(),
-        t0.elapsed().as_secs_f64()
-    );
-    csv.write("target/figures/fig10.csv").expect("write csv");
-    let artifact = figures::emit_artifact("10").expect("known figure");
-    println!("fig10 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig10");
 }

@@ -1,39 +1,8 @@
-//! Fig 11: always vs adaptive speedups (bars) and adaptive memory-latency
-//! improvement (orange line) on the non-negligible-reuse workloads — HMC.
-//!
-//! Paper: always ≈ +14%, adaptive ≈ +15% average; adaptive recovers the
-//! workloads always-subscribe hurts; avg latency per request −54%.
-
-use dlpim::benchkit::Csv;
-use dlpim::figures;
+//! Fig 11: always vs adaptive on reuse workloads, HMC — a thin shim: the
+//! experiment itself is the "fig11" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig11_adaptive();
-    let mut csv = Csv::new("workload,always,adaptive,latency_improvement");
-    for r in &rows {
-        println!(
-            "fig11 | {:<12} | always {:.3} | adaptive {:.3} | latency impr {:+.1}%",
-            r.workload,
-            r.always_speedup,
-            r.adaptive_speedup,
-            r.latency_improvement * 100.0
-        );
-        csv.push(&[
-            r.workload.to_string(),
-            format!("{:.4}", r.always_speedup),
-            format!("{:.4}", r.adaptive_speedup),
-            format!("{:.4}", r.latency_improvement),
-        ]);
-    }
-    println!(
-        "fig11 | GEOMEAN always {:.3} adaptive {:.3} | AVG latency impr {:.1}% (paper ~1.14 / ~1.15 / 54%) | wallclock {:.1}s",
-        figures::geomean(rows.iter().map(|r| r.always_speedup)),
-        figures::geomean(rows.iter().map(|r| r.adaptive_speedup)),
-        rows.iter().map(|r| r.latency_improvement).sum::<f64>() / rows.len() as f64 * 100.0,
-        t0.elapsed().as_secs_f64()
-    );
-    csv.write("target/figures/fig11.csv").expect("write csv");
-    let artifact = figures::emit_artifact("11").expect("known figure");
-    println!("fig11 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig11");
 }

@@ -1,29 +1,8 @@
-//! Fig 12: CoV of the access distribution per vault for always-subscribe
-//! and adaptive vs baseline — HMC. DL-PIM must flatten the high-CoV
-//! workloads (PHELinReg, CHABsBez, SPLRad).
-
-use dlpim::benchkit::Csv;
-use dlpim::config::MemKind;
-use dlpim::figures;
+//! Fig 12: CoV under baseline/always/adaptive, HMC — a thin shim: the
+//! experiment itself is the "fig12" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig_cov_policies(MemKind::Hmc, true);
-    let mut csv = Csv::new("workload,baseline,always,adaptive");
-    for (name, covs) in &rows {
-        println!(
-            "fig12 | {name:<12} | base {:.3} | always {:.3} | adaptive {:.3}",
-            covs[0], covs[1], covs[2]
-        );
-        csv.push(&[
-            name.to_string(),
-            format!("{:.4}", covs[0]),
-            format!("{:.4}", covs[1]),
-            format!("{:.4}", covs[2]),
-        ]);
-    }
-    println!("fig12 | wallclock {:.1}s", t0.elapsed().as_secs_f64());
-    csv.write("target/figures/fig12.csv").expect("write csv");
-    let artifact = figures::emit_artifact("12").expect("known figure");
-    println!("fig12 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig12");
 }

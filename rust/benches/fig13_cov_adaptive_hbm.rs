@@ -1,19 +1,8 @@
-//! Fig 13: CoV of memory access distribution, baseline vs adaptive — HBM.
-
-use dlpim::benchkit::Csv;
-use dlpim::config::MemKind;
-use dlpim::figures;
+//! Fig 13: CoV under baseline/adaptive, HBM — a thin shim: the
+//! experiment itself is the "fig13" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig_cov_policies(MemKind::Hbm, false);
-    let mut csv = Csv::new("workload,baseline,adaptive");
-    for (name, covs) in &rows {
-        println!("fig13 | {name:<12} | base {:.3} | adaptive {:.3}", covs[0], covs[1]);
-        csv.push(&[name.to_string(), format!("{:.4}", covs[0]), format!("{:.4}", covs[1])]);
-    }
-    println!("fig13 | wallclock {:.1}s", t0.elapsed().as_secs_f64());
-    csv.write("target/figures/fig13.csv").expect("write csv");
-    let artifact = figures::emit_artifact("13").expect("known figure");
-    println!("fig13 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig13");
 }

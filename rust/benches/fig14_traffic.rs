@@ -1,31 +1,8 @@
-//! Fig 14: average network traffic (bytes/cycle) for always-subscribe and
-//! adaptive vs baseline, including subscription-protocol packets.
-//!
-//! Paper: always-subscribe +88% average traffic; adaptive only +14%;
-//! PHELinReg's traffic *drops* below baseline.
-
-use dlpim::benchkit::Csv;
-use dlpim::figures;
+//! Fig 14: network traffic under the three policies, HMC — a thin shim: the
+//! experiment itself is the "fig14" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig14_traffic();
-    let mut csv = Csv::new("workload,baseline,always,adaptive");
-    let (mut sb, mut sa, mut sd) = (0.0, 0.0, 0.0);
-    for (name, b, a, d) in &rows {
-        println!("fig14 | {name:<12} | base {b:.2} | always {a:.2} | adaptive {d:.2}");
-        csv.push(&[name.to_string(), format!("{b:.4}"), format!("{a:.4}"), format!("{d:.4}")]);
-        sb += b;
-        sa += a;
-        sd += d;
-    }
-    println!(
-        "fig14 | AVG increase: always {:+.0}% adaptive {:+.0}% (paper +88% / +14%) | wallclock {:.1}s",
-        (sa / sb - 1.0) * 100.0,
-        (sd / sb - 1.0) * 100.0,
-        t0.elapsed().as_secs_f64()
-    );
-    csv.write("target/figures/fig14.csv").expect("write csv");
-    let artifact = figures::emit_artifact("14").expect("known figure");
-    println!("fig14 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig14");
 }

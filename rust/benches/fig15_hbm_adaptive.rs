@@ -1,44 +1,8 @@
-//! Fig 15: HBM memory access latency, baseline vs adaptive (bars) and
-//! speedup percentage (orange line), all 31 workloads.
-//!
-//! Paper: ~50% average latency reduction; +3% speedup overall, +5% on
-//! data-heavy workloads.
-
-use dlpim::benchkit::Csv;
-use dlpim::figures;
-use dlpim::workloads::catalog;
+//! Fig 15: HBM latency baseline vs adaptive — a thin shim: the
+//! experiment itself is the "fig15" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig15_hbm_adaptive();
-    let mut csv = Csv::new("workload,base_latency,adaptive_latency,speedup");
-    let mut impr = Vec::new();
-    for r in &rows {
-        println!(
-            "fig15 | {:<12} | base {:.1} | adaptive {:.1} | speedup {:.3}",
-            r.workload, r.base_latency, r.adaptive_latency, r.speedup
-        );
-        csv.push(&[
-            r.workload.to_string(),
-            format!("{:.2}", r.base_latency),
-            format!("{:.2}", r.adaptive_latency),
-            format!("{:.4}", r.speedup),
-        ]);
-        if r.base_latency > 0.0 {
-            impr.push(1.0 - r.adaptive_latency / r.base_latency);
-        }
-    }
-    let sel_speedup = figures::geomean(
-        rows.iter().filter(|r| catalog::SELECTED.contains(&r.workload)).map(|r| r.speedup),
-    );
-    println!(
-        "fig15 | AVG latency impr {:.1}% (paper ~50%) | GEOMEAN speedup all {:.3} (paper ~1.03) selected {:.3} (paper ~1.05) | wallclock {:.1}s",
-        impr.iter().sum::<f64>() / impr.len() as f64 * 100.0,
-        figures::geomean(rows.iter().map(|r| r.speedup)),
-        sel_speedup,
-        t0.elapsed().as_secs_f64()
-    );
-    csv.write("target/figures/fig15.csv").expect("write csv");
-    let artifact = figures::emit_artifact("15").expect("known figure");
-    println!("fig15 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig15");
 }

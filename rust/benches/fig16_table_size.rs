@@ -1,33 +1,8 @@
-//! Fig 16: adaptive speedup vs subscription-table size (total entries per
-//! vault). Paper: gains grow with table size and flatten at 8192 entries
-//! (the default, 0.125% state overhead).
-
-use dlpim::benchkit::Csv;
-use dlpim::figures;
+//! Fig 16: adaptive speedup vs subscription-table size — a thin shim: the
+//! experiment itself is the "fig16" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig16_table_size();
-    let mut csv = Csv::new("workload,entries,speedup");
-    for (name, series) in &rows {
-        let cols: Vec<String> = series.iter().map(|(e, s)| format!("{e}:{s:.3}")).collect();
-        println!("fig16 | {name:<12} | {}", cols.join(" | "));
-        for (e, s) in series {
-            csv.push(&[name.to_string(), e.to_string(), format!("{s:.4}")]);
-        }
-    }
-    // Flattening check: last doubling must add less than the first.
-    for (name, series) in &rows {
-        if series.len() >= 3 {
-            let first_gain = series[1].1 - series[0].1;
-            let last_gain = series[series.len() - 1].1 - series[series.len() - 2].1;
-            println!(
-                "fig16 | {name:<12} | first-doubling gain {first_gain:+.3} vs last {last_gain:+.3} (paper: flattens at 8192)"
-            );
-        }
-    }
-    println!("fig16 | wallclock {:.1}s", t0.elapsed().as_secs_f64());
-    csv.write("target/figures/fig16.csv").expect("write csv");
-    let artifact = figures::emit_artifact("16").expect("known figure");
-    println!("fig16 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig16");
 }

@@ -1,24 +1,8 @@
-//! Ablation (§III-A): the abandoned count-threshold subscription filter.
-//! The paper found a 0-count threshold (subscribe on first access) matches
-//! or beats positive thresholds on subscription-friendly workloads — which
-//! is why DL-PIM carries no count table.
-
-use dlpim::benchkit::Csv;
-use dlpim::figures;
+//! Fig 17 (ablation): count-threshold filter — a thin shim: the
+//! experiment itself is the "fig17" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig17_threshold_ablation();
-    let mut csv = Csv::new("workload,threshold,speedup");
-    for (name, series) in &rows {
-        let cols: Vec<String> = series.iter().map(|(th, s)| format!("thr{th}:{s:.3}")).collect();
-        println!("fig17 | {name:<12} | {}", cols.join(" | "));
-        for (th, s) in series {
-            csv.push(&[name.to_string(), th.to_string(), format!("{s:.4}")]);
-        }
-    }
-    println!("fig17 | wallclock {:.1}s", t0.elapsed().as_secs_f64());
-    csv.write("target/figures/fig17.csv").expect("write csv");
-    let artifact = figures::emit_artifact("17").expect("known figure");
-    println!("fig17 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig17");
 }

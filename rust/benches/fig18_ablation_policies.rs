@@ -1,24 +1,8 @@
-//! Ablation (§III-D): adaptive-policy variants — always-subscribe,
-//! hops-based, latency-based (global), and the headline adaptive
-//! (latency + leading-set sampling) — on winners, losers and a neutral
-//! streaming workload.
-
-use dlpim::benchkit::Csv;
-use dlpim::figures;
+//! Fig 18 (ablation): adaptive-policy variants — a thin shim: the
+//! experiment itself is the "fig18" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig18_policy_ablation();
-    let mut csv = Csv::new("workload,policy,speedup");
-    for (name, series) in &rows {
-        let cols: Vec<String> = series.iter().map(|(p, s)| format!("{p}:{s:.3}")).collect();
-        println!("fig18 | {name:<12} | {}", cols.join(" | "));
-        for (p, s) in series {
-            csv.push(&[name.to_string(), p.to_string(), format!("{s:.4}")]);
-        }
-    }
-    println!("fig18 | wallclock {:.1}s", t0.elapsed().as_secs_f64());
-    csv.write("target/figures/fig18.csv").expect("write csv");
-    let artifact = figures::emit_artifact("18").expect("known figure");
-    println!("fig18 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig18");
 }

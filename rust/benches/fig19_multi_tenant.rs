@@ -1,45 +1,8 @@
-//! Fig 19 (extension): adaptive DL-PIM under multi-tenant trace mixes.
-//!
-//! Records the four tenant workloads' baseline traffic, composes 2- and
-//! 4-tenant mixed traces (per-tenant address offsets, interleaved core
-//! assignment), and compares never/always/adaptive on the mixes. Tenants'
-//! hot home vaults collide on the same physical vaults, stressing the
-//! subscription protocol in a way no single Table III generator does.
-
-use dlpim::benchkit::Csv;
-use dlpim::figures;
+//! Fig 19 (extension): multi-tenant trace mixes — a thin shim: the
+//! experiment itself is the "fig19" data entry in
+//! `dlpim::exp::registry`; running, printing, CSV and the JSON artifact
+//! all go through the generic `exp::run_named_figure` path.
 
 fn main() {
-    let t0 = std::time::Instant::now();
-    let rows = figures::fig19_multi_tenant();
-    let mut csv = Csv::new("scenario,tenants,always,adaptive,latency_improvement,base_cov,adaptive_cov");
-    for r in &rows {
-        println!(
-            "fig19 | {:<10} | {} tenants | always {:.3} | adaptive {:.3} | latency impr {:.1}% | cov base {:.3} -> adaptive {:.3}",
-            r.scenario,
-            r.tenants,
-            r.always_speedup,
-            r.adaptive_speedup,
-            r.latency_improvement * 100.0,
-            r.base_cov,
-            r.adaptive_cov
-        );
-        csv.push(&[
-            r.scenario.to_string(),
-            r.tenants.to_string(),
-            format!("{:.4}", r.always_speedup),
-            format!("{:.4}", r.adaptive_speedup),
-            format!("{:.4}", r.latency_improvement),
-            format!("{:.4}", r.base_cov),
-            format!("{:.4}", r.adaptive_cov),
-        ]);
-    }
-    println!(
-        "fig19 | GEOMEAN adaptive speedup over mixes = {:.3} | wallclock {:.1}s",
-        figures::geomean(rows.iter().map(|r| r.adaptive_speedup)),
-        t0.elapsed().as_secs_f64()
-    );
-    csv.write("target/figures/fig19.csv").expect("write csv");
-    let artifact = figures::emit_artifact("19").expect("known figure");
-    println!("fig19 | artifact: {}", artifact.display());
+    dlpim::exp::run_named_figure("fig19");
 }

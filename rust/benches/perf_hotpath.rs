@@ -15,6 +15,7 @@ use dlpim::memsys::{
     RingInterconnect,
 };
 use dlpim::policy::{PolicyKind, PolicyRuntime};
+use dlpim::sim::network::LinkCal;
 use dlpim::sim::{Mesh, VaultMem};
 use dlpim::subscription::table::{Role, SubState, SubTable};
 use dlpim::workloads::catalog;
@@ -72,6 +73,33 @@ fn main() {
             }
         });
         report("perf_hotpath", "ring_transfer_x100", &timing);
+    }
+
+    // LinkCal backfill under an out-of-order reservation storm: response
+    // legs book far-future link slots while request legs backfill gaps
+    // near "now", so most reserves take the slow path over a long
+    // calendar. §Perf: the first-fit scan is seeded with partition_point
+    // past the intervals ending before the reservation start.
+    {
+        let mut state = 0x1234_5678_u64;
+        let mut rng = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let timing = time(10, 200, || {
+            let mut cal = LinkCal::default();
+            let mut base = 0u64;
+            for _ in 0..1000 {
+                // A far-future booking stretches the calendar...
+                std::hint::black_box(cal.reserve(base + 1_000 + rng() % 600, 5));
+                // ...then a near-now reservation must backfill a gap.
+                std::hint::black_box(cal.reserve(base + rng() % 400, 3));
+                base += 2;
+            }
+        });
+        report("perf_hotpath", "linkcal_backfill_x1000", &timing);
     }
 
     // DRAM bank access.

@@ -106,6 +106,15 @@ pub mod flags {
     pub const TRACE_MIX: &[&str] = &["out", "weights", "cores"];
     pub const TRACE_DILATE: &[&str] = &["factor"];
     pub const TRACE_REMAP: &[&str] = &["vaults"];
+    /// `repro figure`: `--list` enumerates the spec registry.
+    pub const FIGURE: &[&str] = &["list"];
+    /// `repro sweep`: `--spec FILE`, or the ad-hoc axis flags mirroring
+    /// the spec-file keys (dashes for underscores).
+    pub const SWEEP: &[&str] = &[
+        "spec", "name", "title", "memory", "topology", "workloads", "policies",
+        "baseline", "table-entries", "thresholds", "epochs", "trace", "trace-mix",
+        "mixes", "warmup", "measure", "runs", "seed",
+    ];
     pub const NONE: &[&str] = &[];
 }
 
@@ -115,7 +124,9 @@ pub fn known_flags(command: &str, sub: Option<&str>) -> Option<&'static [&'stati
     Some(match (command, sub) {
         ("run", _) => flags::RUN,
         ("config", _) => flags::CONFIG,
-        ("figure" | "all-figures" | "workloads" | "artifacts", _) => flags::NONE,
+        ("figure", _) => flags::FIGURE,
+        ("sweep", _) => flags::SWEEP,
+        ("all-figures" | "workloads" | "artifacts", _) => flags::NONE,
         ("trace", Some("record")) => flags::TRACE_RECORD,
         ("trace", Some("replay")) => flags::TRACE_REPLAY,
         ("trace", Some("info")) => flags::NONE,
@@ -178,10 +189,18 @@ COMMANDS:
                   [--trace FILE] replay a recorded trace instead of a generator
                   [--record FILE] capture this run's traffic to a trace file
                   [--no-loop] end when a replayed trace runs out instead of looping
-    figure        Regenerate one figure: figure <1|2|3|4|9|10|11|12|13|14|15|16|17|18|19>
+    figure        Regenerate one figure from the spec registry: figure <N>
                   (runs on the parallel sweep engine; writes target/repro/figNN.json)
-    all-figures   Regenerate every figure (writes target/repro/*.json; repeated
-                  figure targets reuse the sweep engine's report cache)
+                  figure --list prints every spec's name, axes and point count
+    all-figures   Regenerate every registry figure (writes target/repro/*.json;
+                  repeated figure targets reuse the sweep engine's report cache)
+    sweep         Run an ad-hoc declarative sweep: sweep --spec FILE (TOML), or
+                  axis flags: [--workloads all|selected|A,B] [--policies P,P]
+                  [--topology T] [--memory hmc|hbm] [--baseline]
+                  [--table-entries N,N] [--thresholds N,N] [--epochs N,N]
+                  [--trace FILE | --trace-mix W,W [--mixes label:k,..]]
+                  [--name S] [--warmup N] [--measure N] [--runs N] [--seed N]
+                  Emits a long-form JSON artifact (one row per point)
     workloads     Print Table III (the 31 representative workloads)
     config        Print the resolved config: --memory hmc|hbm [--policy P]
                   [--topology mesh|crossbar|ring]
@@ -274,7 +293,7 @@ mod tests {
 
     #[test]
     fn every_command_has_a_flag_list() {
-        for cmd in ["run", "figure", "all-figures", "workloads", "config", "artifacts"] {
+        for cmd in ["run", "figure", "all-figures", "sweep", "workloads", "config", "artifacts"] {
             assert!(known_flags(cmd, None).is_some(), "{cmd}");
         }
         for sub in ["record", "replay", "info", "mix", "dilate", "remap"] {

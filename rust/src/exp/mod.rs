@@ -1,0 +1,90 @@
+//! The declarative experiment engine: figures, benches and ad-hoc sweeps
+//! are *data* over one spec registry.
+//!
+//! DL-PIM's whole evaluation has one shape — a sweep over `workload ×
+//! policy × memory-kind × knob` rendered as per-figure artifacts. This
+//! module encodes that shape once:
+//!
+//! * [`spec`] — [`ExperimentSpec`]: the axes (workload set, policy set,
+//!   topology, memory preset, table-size/threshold/epoch overrides,
+//!   trace source) plus an output schema naming the series/group/value
+//!   extractors; cartesian-product expansion into sweep points.
+//! * [`registry`] — every figure of the paper (1–19) as a pure data
+//!   entry. `repro figure`, `repro all-figures`, the bench shims and the
+//!   CI smoke matrix all enumerate this table.
+//! * [`run`] — the one generic execution path through the parallel sweep
+//!   engine (report-cache keys unchanged for unchanged configs),
+//!   including the record-and-mix preparation of multi-tenant trace
+//!   scenarios.
+//! * [`output`] — renders a completed run as the figure's JSON artifact
+//!   (byte-identical to the pre-registry harness), printed rows, and the
+//!   bench CSV.
+//! * [`tomlspec`] — `repro sweep`: parse an ad-hoc spec from a TOML
+//!   file or CLI flags, so new scenarios cost a table row, not Rust.
+//!
+//! ```no_run
+//! use dlpim::exp;
+//!
+//! // A paper figure is a registry lookup:
+//! let spec = exp::registry::by_figure("11").unwrap();
+//! let run = exp::run_spec(&spec).unwrap();
+//! exp::print_rows(&spec, &run);
+//! exp::emit_artifact(&spec, &run).unwrap();
+//!
+//! // A novel scenario is data, not code:
+//! let spec = exp::tomlspec::from_text(
+//!     "name = ring-thr\n\
+//!      topology = ring\n\
+//!      policies = never,adaptive\n\
+//!      thresholds = 0,4\n\
+//!      trace_mix = SPLRad,PHELinReg,CHABsBez,PLYgemm\n",
+//! )
+//! .unwrap();
+//! let run = exp::run_spec(&spec).unwrap();
+//! ```
+
+pub mod output;
+pub mod registry;
+pub mod run;
+pub mod spec;
+pub mod tomlspec;
+
+pub use output::{geomean, print_rows, render_csv, render_json};
+pub use run::{emit_artifact, run_spec, RowResult, SpecRun};
+pub use spec::{cfg_for, scaled, ExperimentSpec, OutputSchema, TraceSource, WorkloadSet};
+
+use std::path::PathBuf;
+
+/// The one run → print → (CSV) → artifact pipeline shared by the bench
+/// shims, `repro figure`/`all-figures` and `repro sweep`. Prints the
+/// rows, the declared paper-comparison summaries and the artifact path;
+/// writes `target/figures/<name>.csv` when `write_csv` is set (the bench
+/// plotting contract).
+pub fn run_and_emit(spec: &ExperimentSpec, write_csv: bool) -> Result<PathBuf, String> {
+    let run = run_spec(spec)?;
+    print_rows(spec, &run);
+    if write_csv {
+        let csv = render_csv(spec, &run).join("\n") + "\n";
+        let path = format!("target/figures/{}.csv", spec.artifact_name());
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("create {}: {e}", dir.display()))?;
+        }
+        std::fs::write(&path, csv).map_err(|e| format!("write {path}: {e}"))?;
+    }
+    let artifact = emit_artifact(spec, &run)?;
+    println!("{} | artifact: {}", spec.artifact_name(), artifact.display());
+    Ok(artifact)
+}
+
+/// Bench-shim entry point: [`run_and_emit`] on a registry spec, with a
+/// wallclock line. Panics on failure — a bench with a silently missing
+/// figure is worse than a loud one.
+pub fn run_named_figure(name: &str) -> PathBuf {
+    let t0 = std::time::Instant::now();
+    let spec = registry::by_figure(name)
+        .unwrap_or_else(|| panic!("no spec named {name:?} in the figure registry"));
+    let artifact = run_and_emit(&spec, true).unwrap_or_else(|e| panic!("{e}"));
+    println!("{} | wallclock {:.1}s", spec.artifact_name(), t0.elapsed().as_secs_f64());
+    artifact
+}

@@ -1,0 +1,389 @@
+//! Render a completed spec run: the JSON artifact (byte-identical to the
+//! pre-registry harness for every figure schema — pinned by the
+//! `golden_artifacts` test), the printed row table, and the CSV the bench
+//! shims write.
+
+use super::run::{RowResult, SpecRun};
+use super::spec::{Agg, Column, ExperimentSpec, Extract, Metric, OutputSchema};
+use crate::sweep::json::JsonValue;
+
+/// Evaluate one extractor over a row's per-config reports.
+pub fn extract(ex: Extract, row: &RowResult) -> f64 {
+    match ex {
+        Extract::Metric { cfg, metric } => {
+            let r = &row.reports[cfg];
+            match metric {
+                Metric::AvgLatency => r.avg_latency(),
+                Metric::Cov => r.cov(),
+                Metric::BytesPerCycle => r.bytes_per_cycle(),
+                Metric::NetworkFraction => r.latency_fractions().0,
+                Metric::QueueFraction => r.latency_fractions().1,
+                Metric::ArrayFraction => r.latency_fractions().2,
+                Metric::RemoteOverhead => {
+                    let (n, q, _) = r.latency_fractions();
+                    n + q
+                }
+                Metric::ReuseLocal => r.reuse().0,
+                Metric::ReuseRemote => r.reuse().1,
+            }
+        }
+        Extract::Speedup { cfg } => row.reports[cfg].speedup_vs(&row.reports[0]),
+        Extract::LatencyImprovement { cfg } => {
+            row.reports[cfg].latency_improvement_vs(&row.reports[0])
+        }
+        Extract::Tenants => row.tenants.unwrap_or(0) as f64,
+    }
+}
+
+fn row_obj(label: &str, cols: &[(&str, f64)]) -> JsonValue {
+    let mut pairs = vec![("workload", JsonValue::str(label))];
+    pairs.extend(cols.iter().map(|(k, v)| (*k, JsonValue::num(*v))));
+    JsonValue::obj(pairs)
+}
+
+fn series_obj(label: &str, key: &str, series: &[(String, f64)]) -> JsonValue {
+    JsonValue::obj(vec![
+        ("workload", JsonValue::str(label)),
+        (
+            "series",
+            JsonValue::Arr(
+                series
+                    .iter()
+                    .map(|(x, s)| {
+                        JsonValue::obj(vec![
+                            (key, JsonValue::str(x.clone())),
+                            ("speedup", JsonValue::num(*s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn columns_of(row: &RowResult, cols: &[Column]) -> Vec<(&'static str, f64)> {
+    cols.iter().map(|c| (c.name, extract(c.extract, row))).collect()
+}
+
+/// The per-config series of a [`OutputSchema::Series`] row: axis label +
+/// speedup vs config 0, over configs `1..`.
+fn series_of(run: &SpecRun, row: &RowResult, axis: super::spec::SeriesAxis) -> Vec<(String, f64)> {
+    run.configs[1..]
+        .iter()
+        .enumerate()
+        .map(|(i, cp)| (axis.label(cp), extract(Extract::Speedup { cfg: i + 1 }, row)))
+        .collect()
+}
+
+/// The long-form row of one (workload × config) point.
+fn long_obj(run: &SpecRun, row: &RowResult, cfg_idx: usize) -> JsonValue {
+    let cp = &run.configs[cfg_idx];
+    let rep = &row.reports[cfg_idx];
+    let (network, queue, array) = rep.latency_fractions();
+    let (reuse_local, reuse_remote) = rep.reuse();
+    let mut pairs = vec![
+        ("workload", JsonValue::str(row.label.clone())),
+        ("config", JsonValue::str(cp.label.clone())),
+        ("policy", JsonValue::str(cp.policy.as_str())),
+        ("mem", JsonValue::str(cp.cfg.mem.as_str())),
+        ("topology", JsonValue::str(cp.cfg.topology.as_str())),
+        ("table_entries", JsonValue::num(cp.cfg.sub_table_entries() as f64)),
+        ("count_threshold", JsonValue::num(cp.cfg.count_threshold as f64)),
+        ("epoch_cycles", JsonValue::num(cp.cfg.epoch_cycles as f64)),
+    ];
+    if let Some(t) = &row.trace {
+        pairs.push(("trace", JsonValue::str(t.clone())));
+    }
+    if let Some(k) = row.tenants {
+        pairs.push(("tenants", JsonValue::num(k as f64)));
+    }
+    pairs.extend([
+        ("cycles", JsonValue::num(rep.cycles())),
+        ("avg_latency", JsonValue::num(rep.avg_latency())),
+        ("cov", JsonValue::num(rep.cov())),
+        ("bytes_per_cycle", JsonValue::num(rep.bytes_per_cycle())),
+        ("network_frac", JsonValue::num(network)),
+        ("queue_frac", JsonValue::num(queue)),
+        ("array_frac", JsonValue::num(array)),
+        ("reuse_local", JsonValue::num(reuse_local)),
+        ("reuse_remote", JsonValue::num(reuse_remote)),
+        ("local_fraction", JsonValue::num(rep.local_fraction())),
+        ("speedup", JsonValue::num(extract(Extract::Speedup { cfg: cfg_idx }, row))),
+        (
+            "latency_improvement",
+            JsonValue::num(extract(Extract::LatencyImprovement { cfg: cfg_idx }, row)),
+        ),
+    ]);
+    JsonValue::obj(pairs)
+}
+
+/// Build the JSON artifact body for a completed run.
+pub fn render_json(spec: &ExperimentSpec, run: &SpecRun) -> JsonValue {
+    let rows: Vec<JsonValue> = match &spec.output {
+        OutputSchema::Columns(cols) => run
+            .rows
+            .iter()
+            .map(|row| {
+                let cols = columns_of(row, cols);
+                row_obj(&row.label, &cols)
+            })
+            .collect(),
+        OutputSchema::Series(axis) => run
+            .rows
+            .iter()
+            .map(|row| series_obj(&row.label, axis.key(), &series_of(run, row, *axis)))
+            .collect(),
+        OutputSchema::Long => run
+            .rows
+            .iter()
+            .flat_map(|row| (0..run.configs.len()).map(move |i| long_obj(run, row, i)))
+            .collect(),
+    };
+    JsonValue::obj(vec![
+        ("figure", JsonValue::str(spec.artifact_name())),
+        ("rows", JsonValue::Arr(rows)),
+    ])
+}
+
+/// Print the run as aligned `name | row | col value | …` lines, plus a
+/// geomean summary for speedup-bearing schemas (the paper averages over
+/// workloads geometrically).
+pub fn print_rows(spec: &ExperimentSpec, run: &SpecRun) {
+    let name = spec.artifact_name();
+    match &spec.output {
+        OutputSchema::Columns(cols) => {
+            for row in &run.rows {
+                let rendered: Vec<String> = columns_of(row, cols)
+                    .iter()
+                    .map(|(k, v)| format!("{k} {v:.3}"))
+                    .collect();
+                println!("{name} | {:<12} | {}", row.label, rendered.join(" | "));
+            }
+        }
+        OutputSchema::Series(axis) => {
+            for row in &run.rows {
+                let rendered: Vec<String> = series_of(run, row, *axis)
+                    .iter()
+                    .map(|(x, s)| format!("{x}:{s:.3}"))
+                    .collect();
+                println!("{name} | {:<12} | {}", row.label, rendered.join(" | "));
+            }
+        }
+        OutputSchema::Long => {
+            for row in &run.rows {
+                for (i, cp) in run.configs.iter().enumerate() {
+                    let rep = &row.reports[i];
+                    println!(
+                        "{name} | {:<12} | {:<24} | cycles {:>12.0} | avg_lat {:>8.1} | \
+                         cov {:.3} | speedup {:.3}",
+                        row.label,
+                        cp.label,
+                        rep.cycles(),
+                        rep.avg_latency(),
+                        rep.cov(),
+                        extract(Extract::Speedup { cfg: i }, row),
+                    );
+                }
+            }
+        }
+    }
+    // The paper-comparison aggregates (declared per spec, like everything
+    // else about a figure).
+    for s in &spec.summaries {
+        let value = match s.agg {
+            Agg::Geomean => {
+                format!("{:.3}", geomean(run.rows.iter().map(|r| extract(s.of, r))))
+            }
+            Agg::MeanPct => {
+                let sum: f64 = run.rows.iter().map(|r| extract(s.of, r)).sum();
+                format!("{:.1}%", sum / run.rows.len().max(1) as f64 * 100.0)
+            }
+            Agg::SumRatioPct { vs } => {
+                let a: f64 = run.rows.iter().map(|r| extract(s.of, r)).sum();
+                let b: f64 = run.rows.iter().map(|r| extract(vs, r)).sum();
+                format!("{:+.0}%", (a / b - 1.0) * 100.0)
+            }
+        };
+        if s.paper.is_empty() {
+            println!("{name} | {} = {value}", s.label);
+        } else {
+            println!("{name} | {} = {value} (paper: {})", s.label, s.paper);
+        }
+    }
+}
+
+/// CSV rendering for the bench shims (`target/figures/<name>.csv`):
+/// header + one line per row (Columns), per series point (Series), or
+/// per point (Long).
+pub fn render_csv(spec: &ExperimentSpec, run: &SpecRun) -> Vec<String> {
+    let mut lines = Vec::new();
+    match &spec.output {
+        OutputSchema::Columns(cols) => {
+            let header: Vec<&str> = cols.iter().map(|c| c.name).collect();
+            lines.push(format!("workload,{}", header.join(",")));
+            for row in &run.rows {
+                let vals: Vec<String> = columns_of(row, cols)
+                    .iter()
+                    .map(|(_, v)| format!("{v:.4}"))
+                    .collect();
+                lines.push(format!("{},{}", row.label, vals.join(",")));
+            }
+        }
+        OutputSchema::Series(axis) => {
+            lines.push(format!("workload,{},speedup", axis.key()));
+            for row in &run.rows {
+                for (x, s) in series_of(run, row, *axis) {
+                    lines.push(format!("{},{x},{s:.4}", row.label));
+                }
+            }
+        }
+        OutputSchema::Long => {
+            lines.push(
+                "workload,config,policy,mem,topology,table_entries,count_threshold,\
+                 epoch_cycles,cycles,avg_latency,cov,bytes_per_cycle,speedup"
+                    .to_string(),
+            );
+            for row in &run.rows {
+                for (i, cp) in run.configs.iter().enumerate() {
+                    let rep = &row.reports[i];
+                    lines.push(format!(
+                        "{},{},{},{},{},{},{},{},{:.0},{:.4},{:.4},{:.4},{:.4}",
+                        row.label,
+                        cp.label,
+                        cp.policy.as_str(),
+                        cp.cfg.mem.as_str(),
+                        cp.cfg.topology.as_str(),
+                        cp.cfg.sub_table_entries(),
+                        cp.cfg.count_threshold,
+                        cp.cfg.epoch_cycles,
+                        rep.cycles(),
+                        rep.avg_latency(),
+                        rep.cov(),
+                        rep.bytes_per_cycle(),
+                        extract(Extract::Speedup { cfg: i }, row),
+                    ));
+                }
+            }
+        }
+    }
+    lines
+}
+
+/// Geometric mean over positive values (the paper's workload averages).
+pub fn geomean(xs: impl Iterator<Item = f64>) -> f64 {
+    let (mut logsum, mut n) = (0.0, 0usize);
+    for x in xs {
+        if x > 0.0 {
+            logsum += x.ln();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        (logsum / n as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::coordinator::report::{RunReport, SimReport};
+    use crate::exp::spec::{ConfigPoint, SeriesAxis};
+    use crate::policy::PolicyKind;
+    use crate::stats::SimStats;
+
+    fn report(cycles: u64) -> SimReport {
+        SimReport {
+            workload: "t".into(),
+            policy: "never",
+            runs: vec![RunReport {
+                cycles,
+                stats: SimStats::new(4),
+                decisions: vec![],
+                exhausted: false,
+            }],
+        }
+    }
+
+    fn point(label: &str, policy: PolicyKind) -> ConfigPoint {
+        let mut cfg = SimConfig::hmc();
+        cfg.policy = policy;
+        ConfigPoint {
+            label: label.into(),
+            policy,
+            table_entries: None,
+            threshold: Some(4),
+            epoch: None,
+            is_baseline: false,
+            cfg,
+        }
+    }
+
+    fn fake_run() -> SpecRun {
+        SpecRun {
+            configs: vec![point("never", PolicyKind::Never), point("always", PolicyKind::Always)],
+            rows: vec![RowResult {
+                label: "STRAdd".into(),
+                tenants: None,
+                trace: None,
+                reports: vec![report(2000), report(1000)],
+            }],
+        }
+    }
+
+    #[test]
+    fn columns_render_matches_legacy_row_shape() {
+        let mut spec = ExperimentSpec::adhoc("figXX");
+        spec.output = OutputSchema::Columns(vec![Column::new(
+            "speedup",
+            Extract::Speedup { cfg: 1 },
+        )]);
+        let json = render_json(&spec, &fake_run());
+        assert_eq!(
+            json.render(),
+            r#"{"figure":"figXX","rows":[{"workload":"STRAdd","speedup":2}]}"#
+        );
+    }
+
+    #[test]
+    fn series_render_matches_legacy_shape() {
+        let mut spec = ExperimentSpec::adhoc("figYY");
+        spec.output = OutputSchema::Series(SeriesAxis::Threshold);
+        let json = render_json(&spec, &fake_run());
+        assert_eq!(
+            json.render(),
+            r#"{"figure":"figYY","rows":[{"workload":"STRAdd","series":[{"threshold":"4","speedup":2}]}]}"#
+        );
+    }
+
+    #[test]
+    fn long_rows_carry_axis_coordinates() {
+        let spec = ExperimentSpec::adhoc("sweepZZ");
+        let json = render_json(&spec, &fake_run()).render();
+        assert!(json.contains("\"config\":\"always\""), "{json}");
+        assert!(json.contains("\"policy\":\"always\""), "{json}");
+        assert!(json.contains("\"speedup\":2"), "{json}");
+    }
+
+    #[test]
+    fn csv_headers_per_schema() {
+        let run = fake_run();
+        let mut spec = ExperimentSpec::adhoc("s");
+        spec.output = OutputSchema::Series(SeriesAxis::Threshold);
+        assert_eq!(render_csv(&spec, &run)[0], "workload,threshold,speedup");
+        spec.output = OutputSchema::Long;
+        assert!(render_csv(&spec, &run)[0].starts_with("workload,config,policy"));
+    }
+
+    #[test]
+    fn geomean_of_constants() {
+        assert!((geomean([2.0, 2.0, 2.0].into_iter()) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_ignores_nonpositive() {
+        assert!((geomean([4.0, 0.0, -1.0].into_iter()) - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,315 @@
+//! The figure registry: every figure of the paper's evaluation is one
+//! [`ExperimentSpec`] data entry. Adding a figure is adding a table row
+//! here — no imperative harness code, no new bench binary logic, no CLI
+//! dispatch arm, no CI list edit (CI derives its matrix from
+//! `repro figure --list`, which enumerates this table).
+//!
+//! The output schemas below are pinned byte-for-byte against the
+//! pre-registry harness by the `golden_artifacts` integration test.
+
+use super::spec::{
+    Agg, Column, ExperimentSpec, Extract, Metric, MixScenario, OutputSchema, ScaleOverride,
+    SeriesAxis, Summary, TraceSource, WorkloadSet,
+};
+use crate::config::MemKind;
+use crate::policy::PolicyKind;
+
+/// Fig 16's table-sensitive workloads.
+pub const FIG16_WORKLOADS: [&str; 4] = ["PLYDoitgen", "PHELinReg", "SPLRad", "CHABsBez"];
+
+/// Fig 19's tenant workloads, chosen for clashing home-vault footprints:
+/// two single-hot-vault tile reusers, one multi-lane reuser, one
+/// shared-panel thrasher.
+pub const FIG19_TENANTS: [&str; 4] = ["SPLRad", "PHELinReg", "CHABsBez", "PLYgemm"];
+
+fn named(names: &[&str]) -> WorkloadSet {
+    WorkloadSet::Named(names.iter().map(|s| s.to_string()).collect())
+}
+
+/// The skeleton every figure entry starts from.
+fn figure(id: &str, title: &str, mem: MemKind) -> ExperimentSpec {
+    ExperimentSpec {
+        name: format!("fig{id:0>2}"),
+        figure: Some(id.to_string()),
+        title: title.to_string(),
+        mem,
+        topology: None,
+        workloads: WorkloadSet::All,
+        baseline: false,
+        policies: vec![PolicyKind::Never],
+        table_entries: Vec::new(),
+        thresholds: Vec::new(),
+        epochs: Vec::new(),
+        trace: TraceSource::Generators,
+        scale: ScaleOverride::default(),
+        output: OutputSchema::Long,
+        summaries: Vec::new(),
+    }
+}
+
+fn metric(cfg: usize, metric: Metric) -> Extract {
+    Extract::Metric { cfg, metric }
+}
+
+/// Figs 1/2: latency breakdown per workload under the baseline.
+fn breakdown(id: &str, mem: MemKind, paper_overhead: &'static str) -> ExperimentSpec {
+    let mut s = figure(id, &format!("latency breakdown ({})", mem.as_str()), mem);
+    s.output = OutputSchema::Columns(vec![
+        Column::new("network", metric(0, Metric::NetworkFraction)),
+        Column::new("queue", metric(0, Metric::QueueFraction)),
+        Column::new("array", metric(0, Metric::ArrayFraction)),
+        Column::new("avg_latency", metric(0, Metric::AvgLatency)),
+    ]);
+    s.summaries = vec![Summary::new(
+        "AVG remote overhead (network+queue)",
+        Agg::MeanPct,
+        metric(0, Metric::RemoteOverhead),
+        paper_overhead,
+    )];
+    s
+}
+
+/// Figs 3/4: baseline CoV of per-vault demand.
+fn cov(id: &str, mem: MemKind) -> ExperimentSpec {
+    let mut s = figure(id, &format!("CoV of per-vault demand ({})", mem.as_str()), mem);
+    s.output = OutputSchema::Columns(vec![Column::new("cov", metric(0, Metric::Cov))]);
+    s
+}
+
+/// Every figure of the evaluation, in figure order.
+pub fn figures() -> Vec<ExperimentSpec> {
+    let mut specs = vec![
+        breakdown("1", MemKind::Hmc, "~53%"),
+        breakdown("2", MemKind::Hbm, "~43%"),
+        cov("3", MemKind::Hmc),
+        cov("4", MemKind::Hbm),
+    ];
+
+    // Fig 9: always-subscribe speedup over baseline, all 31 workloads.
+    let mut f9 = figure("9", "always-subscribe speedup (HMC)", MemKind::Hmc);
+    f9.policies = vec![PolicyKind::Never, PolicyKind::Always];
+    f9.output = OutputSchema::Columns(vec![
+        Column::new("speedup", Extract::Speedup { cfg: 1 }),
+        Column::new("latency_improvement", Extract::LatencyImprovement { cfg: 1 }),
+    ]);
+    f9.summaries = vec![Summary::new(
+        "GEOMEAN speedup",
+        Agg::Geomean,
+        Extract::Speedup { cfg: 1 },
+        "~1.06",
+    )];
+    specs.push(f9);
+
+    // Fig 10: reuse per subscription under always-subscribe.
+    let mut f10 = figure("10", "reuse per subscription under always-subscribe", MemKind::Hmc);
+    f10.policies = vec![PolicyKind::Always];
+    f10.output = OutputSchema::Columns(vec![
+        Column::new("local", metric(0, Metric::ReuseLocal)),
+        Column::new("remote", metric(0, Metric::ReuseRemote)),
+    ]);
+    specs.push(f10);
+
+    // Fig 11: always vs adaptive on the non-negligible-reuse workloads.
+    let mut f11 = figure("11", "always vs adaptive on reuse workloads (HMC)", MemKind::Hmc);
+    f11.workloads = WorkloadSet::Selected;
+    f11.policies = vec![PolicyKind::Never, PolicyKind::Always, PolicyKind::Adaptive];
+    f11.output = OutputSchema::Columns(vec![
+        Column::new("always", Extract::Speedup { cfg: 1 }),
+        Column::new("adaptive", Extract::Speedup { cfg: 2 }),
+        Column::new("latency_improvement", Extract::LatencyImprovement { cfg: 2 }),
+    ]);
+    f11.summaries = vec![
+        Summary::new("GEOMEAN always", Agg::Geomean, Extract::Speedup { cfg: 1 }, "~1.14"),
+        Summary::new("GEOMEAN adaptive", Agg::Geomean, Extract::Speedup { cfg: 2 }, "~1.15"),
+        Summary::new(
+            "AVG latency improvement",
+            Agg::MeanPct,
+            Extract::LatencyImprovement { cfg: 2 },
+            "~54%",
+        ),
+    ];
+    specs.push(f11);
+
+    // Fig 12 (HMC, incl. always) / Fig 13 (HBM): CoV by policy.
+    let mut f12 = figure("12", "CoV by policy (hmc)", MemKind::Hmc);
+    f12.workloads = WorkloadSet::Selected;
+    f12.policies = vec![PolicyKind::Never, PolicyKind::Always, PolicyKind::Adaptive];
+    f12.output = OutputSchema::Columns(vec![
+        Column::new("baseline", metric(0, Metric::Cov)),
+        Column::new("always", metric(1, Metric::Cov)),
+        Column::new("adaptive", metric(2, Metric::Cov)),
+    ]);
+    specs.push(f12);
+
+    let mut f13 = figure("13", "CoV by policy (hbm)", MemKind::Hbm);
+    f13.workloads = WorkloadSet::Selected;
+    f13.policies = vec![PolicyKind::Never, PolicyKind::Adaptive];
+    f13.output = OutputSchema::Columns(vec![
+        Column::new("baseline", metric(0, Metric::Cov)),
+        Column::new("adaptive", metric(1, Metric::Cov)),
+    ]);
+    specs.push(f13);
+
+    // Fig 14: network traffic under baseline / always / adaptive.
+    let mut f14 = figure("14", "network traffic (B/cycle)", MemKind::Hmc);
+    f14.workloads = WorkloadSet::Selected;
+    f14.policies = vec![PolicyKind::Never, PolicyKind::Always, PolicyKind::Adaptive];
+    f14.output = OutputSchema::Columns(vec![
+        Column::new("baseline", metric(0, Metric::BytesPerCycle)),
+        Column::new("always", metric(1, Metric::BytesPerCycle)),
+        Column::new("adaptive", metric(2, Metric::BytesPerCycle)),
+    ]);
+    f14.summaries = vec![
+        Summary::new(
+            "AVG traffic increase (always)",
+            Agg::SumRatioPct { vs: metric(0, Metric::BytesPerCycle) },
+            metric(1, Metric::BytesPerCycle),
+            "+88%",
+        ),
+        Summary::new(
+            "AVG traffic increase (adaptive)",
+            Agg::SumRatioPct { vs: metric(0, Metric::BytesPerCycle) },
+            metric(2, Metric::BytesPerCycle),
+            "+14%",
+        ),
+    ];
+    specs.push(f14);
+
+    // Fig 15: HBM latency baseline vs adaptive, all 31 workloads.
+    let mut f15 = figure("15", "HBM latency baseline vs adaptive", MemKind::Hbm);
+    f15.policies = vec![PolicyKind::Never, PolicyKind::Adaptive];
+    f15.output = OutputSchema::Columns(vec![
+        Column::new("base_latency", metric(0, Metric::AvgLatency)),
+        Column::new("adaptive_latency", metric(1, Metric::AvgLatency)),
+        Column::new("speedup", Extract::Speedup { cfg: 1 }),
+    ]);
+    f15.summaries = vec![
+        Summary::new(
+            "AVG latency improvement",
+            Agg::MeanPct,
+            Extract::LatencyImprovement { cfg: 1 },
+            "~50%",
+        ),
+        Summary::new("GEOMEAN speedup", Agg::Geomean, Extract::Speedup { cfg: 1 }, "~1.03"),
+    ];
+    specs.push(f15);
+
+    // Fig 16: adaptive speedup vs subscription-table size.
+    let mut f16 = figure("16", "adaptive speedup vs subscription-table entries", MemKind::Hmc);
+    f16.workloads = named(&FIG16_WORKLOADS);
+    f16.baseline = true;
+    f16.policies = vec![PolicyKind::Adaptive];
+    f16.table_entries = crate::config::presets::TABLE_SIZE_SWEEP.to_vec();
+    f16.output = OutputSchema::Series(SeriesAxis::TableEntries);
+    specs.push(f16);
+
+    // Fig 17 (ablation): count-threshold filter under always-subscribe.
+    let mut f17 = figure("17", "count-threshold filter ablation (always-subscribe)", MemKind::Hmc);
+    f17.workloads = named(&["SPLRad", "PHELinReg", "PLYgemm", "HSJNPO"]);
+    f17.baseline = true;
+    f17.policies = vec![PolicyKind::Always];
+    f17.thresholds = vec![0, 1, 4, 16];
+    f17.output = OutputSchema::Series(SeriesAxis::Threshold);
+    specs.push(f17);
+
+    // Fig 18 (ablation): adaptive-policy variants.
+    let mut f18 = figure("18", "adaptive-policy variant ablation", MemKind::Hmc);
+    f18.workloads = named(&["SPLRad", "PHELinReg", "PLYgemm", "PLY3mm", "STRTriad"]);
+    f18.baseline = true;
+    f18.policies = vec![
+        PolicyKind::Always,
+        PolicyKind::AdaptiveHops,
+        PolicyKind::AdaptiveLatency,
+        PolicyKind::Adaptive,
+    ];
+    f18.output = OutputSchema::Series(SeriesAxis::Policy);
+    specs.push(f18);
+
+    // Fig 19 (extension): adaptive DL-PIM under multi-tenant trace mixes.
+    let mut f19 = figure("19", "adaptive DL-PIM under multi-tenant trace mixes", MemKind::Hmc);
+    f19.policies = vec![PolicyKind::Never, PolicyKind::Always, PolicyKind::Adaptive];
+    f19.trace = TraceSource::TenantMixes {
+        tenants: FIG19_TENANTS.iter().map(|s| s.to_string()).collect(),
+        mixes: vec![
+            MixScenario { label: "mix2".into(), tenants: 2 },
+            MixScenario { label: "mix4".into(), tenants: 4 },
+        ],
+    };
+    f19.output = OutputSchema::Columns(vec![
+        Column::new("tenants", Extract::Tenants),
+        Column::new("always", Extract::Speedup { cfg: 1 }),
+        Column::new("adaptive", Extract::Speedup { cfg: 2 }),
+        Column::new("latency_improvement", Extract::LatencyImprovement { cfg: 2 }),
+        Column::new("base_cov", metric(0, Metric::Cov)),
+        Column::new("adaptive_cov", metric(2, Metric::Cov)),
+    ]);
+    // Extension figure: no paper value to compare against.
+    f19.summaries = vec![Summary::new(
+        "GEOMEAN adaptive speedup over mixes",
+        Agg::Geomean,
+        Extract::Speedup { cfg: 2 },
+        "",
+    )];
+    specs.push(f19);
+
+    specs
+}
+
+/// Figure ids in figure order (`"1"`, `"2"`, … `"19"`).
+pub fn figure_ids() -> Vec<String> {
+    figures().into_iter().filter_map(|s| s.figure).collect()
+}
+
+/// Look a spec up by figure id (`"11"`) or registry name (`"fig11"`).
+pub fn by_figure(which: &str) -> Option<ExperimentSpec> {
+    figures()
+        .into_iter()
+        .find(|s| s.figure.as_deref() == Some(which) || s.name == which)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_nineteen_figures() {
+        let ids = figure_ids();
+        assert_eq!(
+            ids,
+            ["1", "2", "3", "4", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "19"]
+        );
+    }
+
+    #[test]
+    fn names_match_artifact_convention() {
+        for s in figures() {
+            let id = s.figure.as_ref().unwrap();
+            assert_eq!(s.name, format!("fig{id:0>2}"));
+        }
+    }
+
+    #[test]
+    fn lookup_by_id_and_name() {
+        assert_eq!(by_figure("11").unwrap().name, "fig11");
+        assert_eq!(by_figure("fig09").unwrap().figure.as_deref(), Some("9"));
+        assert!(by_figure("20").is_none());
+    }
+
+    #[test]
+    fn every_figure_expands_cleanly() {
+        for s in figures() {
+            let configs = s.expand().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            assert!(!configs.is_empty(), "{}", s.name);
+            s.row_labels().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+        }
+    }
+
+    #[test]
+    fn fig16_matches_legacy_shape() {
+        let s = by_figure("16").unwrap();
+        let cfgs = s.expand().unwrap();
+        assert_eq!(cfgs.len(), 1 + crate::config::presets::TABLE_SIZE_SWEEP.len());
+        assert!(cfgs[0].is_baseline);
+        assert_eq!(cfgs[1].cfg.sub_table_entries(), 1024);
+    }
+}

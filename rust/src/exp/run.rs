@@ -1,0 +1,191 @@
+//! The one generic execution path behind every spec: expand the axes,
+//! prepare the traffic source (recording + mixing tenant traces when the
+//! spec asks for them), run all points on the parallel sweep engine, and
+//! hand the per-row reports to the output renderer.
+//!
+//! Cache behaviour is identical to the pre-registry harness: points go
+//! through [`crate::sweep::SweepPoint`] unchanged, so the report-cache
+//! key of an unchanged expanded config is unchanged, and figure targets
+//! sharing points (every HMC figure reuses the baseline runs) still
+//! compute each point once per process.
+
+use std::path::PathBuf;
+
+use super::spec::{ConfigPoint, ExperimentSpec, TraceSource};
+use crate::coordinator::report::SimReport;
+use crate::sweep::{self, Sweep, SweepPoint};
+use crate::trace::{self, TraceData};
+
+/// One row (workload or trace scenario) of a completed spec run.
+#[derive(Clone, Debug)]
+pub struct RowResult {
+    /// Workload short name, trace label, or mix scenario label.
+    pub label: String,
+    /// Tenant count for multi-tenant scenario rows.
+    pub tenants: Option<usize>,
+    /// The trace file this row replayed, if any.
+    pub trace: Option<String>,
+    /// One report per expanded config, in config order.
+    pub reports: Vec<SimReport>,
+}
+
+/// A completed spec run: the expanded configs and every row's reports.
+#[derive(Clone, Debug)]
+pub struct SpecRun {
+    pub configs: Vec<ConfigPoint>,
+    pub rows: Vec<RowResult>,
+}
+
+/// A row to simulate: its label and optional trace file.
+struct Row {
+    label: String,
+    tenants: Option<usize>,
+    trace: Option<String>,
+}
+
+/// Run a spec end-to-end on the sweep engine. Errors carry the failing
+/// axis value, workload or trace step.
+pub fn run_spec(spec: &ExperimentSpec) -> Result<SpecRun, String> {
+    let configs = spec.expand()?;
+    let rows = prepare_rows(spec)?;
+
+    let mut points = Vec::with_capacity(rows.len() * configs.len());
+    for row in &rows {
+        for cp in &configs {
+            let mut cfg = cp.cfg.clone();
+            if let Some(t) = &row.trace {
+                cfg.trace = Some(t.clone());
+            }
+            points.push(SweepPoint::new(row.label.clone(), cfg));
+        }
+    }
+    let mut outcomes = Sweep::new(points).run().into_iter();
+
+    let mut results = Vec::with_capacity(rows.len());
+    for row in rows {
+        let mut reports: Vec<SimReport> = Vec::with_capacity(configs.len());
+        for cp in &configs {
+            let outcome = outcomes.next().expect("one outcome per point");
+            let rep = outcome.result.map_err(|e| {
+                format!("{}: job ({} x {}) failed: {e}", spec.name, row.label, cp.label)
+            })?;
+            reports.push(rep);
+        }
+        results.push(RowResult {
+            label: row.label,
+            tenants: row.tenants,
+            trace: row.trace,
+            reports,
+        });
+    }
+    Ok(SpecRun { configs, rows: results })
+}
+
+/// Resolve the row axis, materializing trace files where needed.
+fn prepare_rows(spec: &ExperimentSpec) -> Result<Vec<Row>, String> {
+    let labels = spec.row_labels()?;
+    match &spec.trace {
+        TraceSource::Generators => Ok(labels
+            .into_iter()
+            .map(|label| Row { label, tenants: None, trace: None })
+            .collect()),
+        TraceSource::File(path) => {
+            // Fail early with a labelled error instead of poisoning every
+            // sweep job on the same unreadable file.
+            TraceData::load(std::path::Path::new(path))?;
+            Ok(labels
+                .into_iter()
+                .map(|label| Row { label, tenants: None, trace: Some(path.clone()) })
+                .collect())
+        }
+        TraceSource::TenantMixes { tenants, mixes } => {
+            let dir = trace_dir();
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| format!("create trace dir {}: {e}", dir.display()))?;
+            // Record every tenant's baseline traffic under the spec's
+            // base config (never-subscribe, default knobs).
+            let rec_cfg = spec.base_cfg();
+            let data: Vec<TraceData> = tenants
+                .iter()
+                .map(|name| {
+                    let path = dir.join(format!("{name}.dlpt"));
+                    trace::record_run(&rec_cfg, name, &path)
+                        .map_err(|e| format!("record tenant {name}: {e}"))?;
+                    TraceData::load(&path)
+                })
+                .collect::<Result<_, String>>()?;
+            mixes
+                .iter()
+                .map(|m| {
+                    let mixed =
+                        trace::transform::mix(&data[..m.tenants], &vec![1; m.tenants], rec_cfg.n_vaults)
+                            .map_err(|e| format!("{}: {e}", m.label))?;
+                    let path = dir.join(format!("{}.dlpt", m.label));
+                    mixed.save(&path).map_err(|e| format!("{}: {e}", m.label))?;
+                    Ok(Row {
+                        label: m.label.clone(),
+                        tenants: Some(m.tenants),
+                        trace: Some(path.to_string_lossy().into_owned()),
+                    })
+                })
+                .collect()
+        }
+    }
+}
+
+/// Where recorded/mixed tenant traces land (uploaded by CI alongside the
+/// figure JSON).
+pub fn trace_dir() -> PathBuf {
+    sweep::artifact::artifact_dir().join("traces")
+}
+
+/// Render a completed run and write `<artifact_dir>/<name>.json`.
+pub fn emit_artifact(spec: &ExperimentSpec, run: &SpecRun) -> Result<PathBuf, String> {
+    let value = super::output::render_json(spec, run);
+    sweep::artifact::write_figure_json(spec.artifact_name(), &value)
+        .map_err(|e| format!("write artifact {}: {e}", spec.artifact_name()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MemKind;
+    use crate::exp::spec::{OutputSchema, ScaleOverride, WorkloadSet};
+    use crate::policy::PolicyKind;
+
+    fn tiny(name: &str) -> ExperimentSpec {
+        let mut spec = ExperimentSpec::adhoc(name);
+        spec.mem = MemKind::Hmc;
+        spec.workloads = WorkloadSet::Named(vec!["STRAdd".into(), "STRCpy".into()]);
+        spec.policies = vec![PolicyKind::Never, PolicyKind::Always];
+        spec.scale = ScaleOverride {
+            warmup: Some(100),
+            measure: Some(800),
+            runs: Some(1),
+            seed: None,
+        };
+        spec.output = OutputSchema::Long;
+        spec
+    }
+
+    #[test]
+    fn run_spec_shape_matches_expansion() {
+        let spec = tiny("unit-sweep");
+        let run = run_spec(&spec).unwrap();
+        assert_eq!(run.configs.len(), 2);
+        assert_eq!(run.rows.len(), 2);
+        assert_eq!(run.rows[0].label, "STRAdd");
+        assert_eq!(run.rows[0].reports.len(), 2);
+        assert_eq!(run.rows[1].reports[1].workload, "STRCpy");
+    }
+
+    #[test]
+    fn run_spec_reports_failures_with_labels() {
+        let mut spec = tiny("unit-sweep-bad");
+        // Bypass row_labels validation to force a sweep-level failure.
+        spec.workloads = WorkloadSet::Named(vec!["STRAdd".into()]);
+        spec.trace = crate::exp::spec::TraceSource::File("/nonexistent/x.dlpt".into());
+        let err = run_spec(&spec).unwrap_err();
+        assert!(err.contains("x.dlpt") || err.contains("No such file"), "{err}");
+    }
+}

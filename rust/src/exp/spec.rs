@@ -1,0 +1,799 @@
+//! The declarative experiment specification: every evaluation in this
+//! repo — paper figure, bench target, ad-hoc CLI sweep — is one
+//! [`ExperimentSpec`] value describing *axes* (workload set, policy set,
+//! topology, memory preset, knob overrides, trace source) and an *output
+//! schema* (how sweep reports become rows/series/values). Running a spec
+//! is generic ([`super::run_spec`]); adding a scenario is adding data.
+//!
+//! Expansion is a pure cartesian product over the config axes:
+//!
+//! ```text
+//! configs = [baseline?] ++ policies × table_entries × thresholds × epochs
+//! points  = workloads (or trace scenarios) × configs
+//! ```
+//!
+//! Every expanded config passes [`SimConfig::validate`]; an invalid
+//! combination is rejected at expansion time with the offending axis
+//! value in the error message. Expansion is deterministic and
+//! duplicate-free (pinned by the `exp_spec_props` property tests), so
+//! sweep-engine cache keys are a pure function of the spec.
+
+use crate::config::{MemKind, SimConfig, Topology};
+use crate::policy::PolicyKind;
+use crate::workloads::catalog;
+
+/// Scale knobs, overridable from the environment:
+/// `REPRO_WARMUP` / `REPRO_MEASURE` / `REPRO_RUNS` / `REPRO_EPOCH`, plus
+/// `REPRO_TOPOLOGY` to force one interconnect across the whole suite
+/// (the CI smoke job's topology axis).
+pub fn scaled(mut cfg: SimConfig) -> SimConfig {
+    fn env_u64(key: &str) -> Option<u64> {
+        std::env::var(key).ok()?.parse().ok()
+    }
+    if let Some(v) = env_u64("REPRO_WARMUP") {
+        cfg.warmup_requests = v;
+    }
+    if let Some(v) = env_u64("REPRO_MEASURE") {
+        cfg.measure_requests = v;
+    }
+    if let Some(v) = env_u64("REPRO_RUNS") {
+        cfg.runs = v as u32;
+    }
+    if let Some(v) = env_u64("REPRO_EPOCH") {
+        cfg.epoch_cycles = v;
+    }
+    if let Ok(t) = std::env::var("REPRO_TOPOLOGY") {
+        cfg.topology = Topology::parse(&t)
+            .unwrap_or_else(|| panic!("unknown REPRO_TOPOLOGY {t:?} (mesh|crossbar|ring)"));
+    }
+    cfg
+}
+
+/// Base config for a memory kind with a policy, at harness scale.
+pub fn cfg_for(mem: MemKind, policy: PolicyKind) -> SimConfig {
+    let mut cfg = match mem {
+        MemKind::Hmc => SimConfig::hmc(),
+        MemKind::Hbm => SimConfig::hbm(),
+    };
+    cfg.policy = policy;
+    scaled(cfg)
+}
+
+/// Which workloads a spec sweeps (the row axis for generator-driven
+/// specs; trace-driven specs derive their rows from [`TraceSource`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WorkloadSet {
+    /// All 31 Table III workloads.
+    All,
+    /// The paper's non-negligible-reuse subset (Figs 11/12/14).
+    Selected,
+    /// An explicit list of Table III short names.
+    Named(Vec<String>),
+}
+
+/// Where a spec's memory traffic comes from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceSource {
+    /// The named Table III generators (the [`WorkloadSet`] axis).
+    Generators,
+    /// Every point replays one recorded `.dlpt` trace file.
+    File(String),
+    /// Multi-tenant scenarios: record each tenant's baseline traffic,
+    /// compose k-tenant mixes, sweep the mixes (Fig 19's shape).
+    TenantMixes {
+        /// Table III short names recorded as tenant baselines.
+        tenants: Vec<String>,
+        /// Scenarios: each mixes the first `tenants` recordings.
+        mixes: Vec<MixScenario>,
+    },
+}
+
+/// One multi-tenant scenario of a [`TraceSource::TenantMixes`] spec.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MixScenario {
+    /// Scenario label (also the mixed trace's file stem).
+    pub label: String,
+    /// How many of the spec's tenants participate (a prefix).
+    pub tenants: usize,
+}
+
+/// Explicit scale overrides, applied after the environment knobs.
+/// Registry figures leave these unset (the `REPRO_*` env contract);
+/// ad-hoc specs and the golden tests pin scale explicitly.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScaleOverride {
+    pub warmup: Option<u64>,
+    pub measure: Option<u64>,
+    pub runs: Option<u32>,
+    pub seed: Option<u64>,
+}
+
+impl ScaleOverride {
+    fn apply(&self, cfg: &mut SimConfig) {
+        if let Some(v) = self.warmup {
+            cfg.warmup_requests = v;
+        }
+        if let Some(v) = self.measure {
+            cfg.measure_requests = v;
+        }
+        if let Some(v) = self.runs {
+            cfg.runs = v;
+        }
+        if let Some(v) = self.seed {
+            cfg.seed = v;
+        }
+    }
+}
+
+/// How a spec's sweep reports become its JSON artifact (and printed
+/// rows). The vocabulary is small and closed: every figure of the paper
+/// is expressible, and the renderer guarantees the exact artifact bytes
+/// the pre-registry harness emitted.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OutputSchema {
+    /// One row per workload: named value columns extracted from the
+    /// row's per-config reports.
+    Columns(Vec<Column>),
+    /// One row per workload holding a series over configs `1..` (the
+    /// sweep-axis figures 16/17/18): each series point is the config's
+    /// axis label and its speedup vs config 0.
+    Series(SeriesAxis),
+    /// One row per (workload × config) point carrying the full axis
+    /// coordinates and the standard metric set — the ad-hoc `repro
+    /// sweep` long form.
+    Long,
+}
+
+/// One named output column of an [`OutputSchema::Columns`] spec.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Column {
+    pub name: &'static str,
+    pub extract: Extract,
+}
+
+impl Column {
+    pub fn new(name: &'static str, extract: Extract) -> Self {
+        Column { name, extract }
+    }
+}
+
+/// A value extractor over one row's per-config reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Extract {
+    /// A raw metric of config `cfg`'s report.
+    Metric { cfg: usize, metric: Metric },
+    /// Speedup of config `cfg` vs config 0 (`cycles0 / cycles`).
+    Speedup { cfg: usize },
+    /// Memory-latency improvement of config `cfg` vs config 0.
+    LatencyImprovement { cfg: usize },
+    /// The scenario's tenant count (multi-tenant trace rows only).
+    Tenants,
+}
+
+/// Raw report metrics the output schema can name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    AvgLatency,
+    Cov,
+    BytesPerCycle,
+    NetworkFraction,
+    QueueFraction,
+    ArrayFraction,
+    /// Network + queue latency fractions — the paper's "remote access
+    /// overhead" headline of Figs 1/2.
+    RemoteOverhead,
+    ReuseLocal,
+    ReuseRemote,
+}
+
+/// A cross-row aggregate printed after the rows (the paper-comparison
+/// lines: geomean speedups, average improvements, traffic increases).
+/// Print-only — never part of the JSON artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Summary {
+    /// Printed label, e.g. `GEOMEAN speedup`.
+    pub label: &'static str,
+    pub agg: Agg,
+    pub of: Extract,
+    /// The paper's value for the at-a-glance comparison (empty to omit).
+    pub paper: &'static str,
+}
+
+impl Summary {
+    pub fn new(label: &'static str, agg: Agg, of: Extract, paper: &'static str) -> Self {
+        Summary { label, agg, of, paper }
+    }
+}
+
+/// How a [`Summary`] aggregates its extractor over rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Agg {
+    /// Geometric mean over rows.
+    Geomean,
+    /// Arithmetic mean over rows, printed as a percentage.
+    MeanPct,
+    /// `sum(of) / sum(vs) - 1`, printed as a signed percentage (Fig 14's
+    /// average traffic increase).
+    SumRatioPct { vs: Extract },
+}
+
+/// Which config axis labels the x-values of an [`OutputSchema::Series`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeriesAxis {
+    TableEntries,
+    Threshold,
+    Policy,
+}
+
+impl SeriesAxis {
+    /// The JSON key of a series point's x-value.
+    pub fn key(self) -> &'static str {
+        match self {
+            SeriesAxis::TableEntries => "entries",
+            SeriesAxis::Threshold => "threshold",
+            SeriesAxis::Policy => "policy",
+        }
+    }
+
+    /// The x-label of one expanded config.
+    pub fn label(self, point: &ConfigPoint) -> String {
+        match self {
+            SeriesAxis::TableEntries => {
+                point.table_entries.expect("entries axis config").to_string()
+            }
+            SeriesAxis::Threshold => point.threshold.expect("threshold axis config").to_string(),
+            SeriesAxis::Policy => point.policy.as_str().to_string(),
+        }
+    }
+}
+
+/// A declarative experiment: axes + output schema. See the module docs
+/// for the expansion rule; [`super::registry`] holds every paper figure
+/// as one of these values.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    /// Registry/artifact name (`fig11`, or an ad-hoc sweep's name).
+    pub name: String,
+    /// Paper figure number (`"11"`) when this spec is a figure.
+    pub figure: Option<String>,
+    /// One-line description (shown by `repro figure --list`).
+    pub title: String,
+    /// Memory preset the configs start from.
+    pub mem: MemKind,
+    /// Explicit interconnect override; `None` keeps the preset default
+    /// (and the `REPRO_TOPOLOGY` environment override).
+    pub topology: Option<Topology>,
+    /// Row axis for generator-driven specs.
+    pub workloads: WorkloadSet,
+    /// Prepend a default-knob never-subscribe baseline as config 0 (the
+    /// speedup denominator of knob-sweep figures).
+    pub baseline: bool,
+    /// Policy axis (must be non-empty).
+    pub policies: Vec<PolicyKind>,
+    /// Subscription-table size axis (total entries/vault); empty keeps
+    /// the preset geometry.
+    pub table_entries: Vec<u32>,
+    /// Count-threshold axis; empty keeps the preset threshold.
+    pub thresholds: Vec<u32>,
+    /// Epoch-length axis (cycles); empty keeps the preset epoch.
+    pub epochs: Vec<u64>,
+    /// Traffic source.
+    pub trace: TraceSource,
+    /// Explicit scale overrides (applied last).
+    pub scale: ScaleOverride,
+    /// How results render.
+    pub output: OutputSchema,
+    /// Paper-comparison aggregate lines printed after the rows.
+    pub summaries: Vec<Summary>,
+}
+
+/// One expanded config of a spec, with its axis coordinates.
+#[derive(Clone, Debug)]
+pub struct ConfigPoint {
+    /// Short label: `baseline`, `adaptive`, `always thr=4`, …
+    pub label: String,
+    pub policy: PolicyKind,
+    /// Table-entries axis value, when that axis is active.
+    pub table_entries: Option<u32>,
+    /// Threshold axis value, when that axis is active.
+    pub threshold: Option<u32>,
+    /// Epoch axis value, when that axis is active.
+    pub epoch: Option<u64>,
+    /// True for the prepended baseline config.
+    pub is_baseline: bool,
+    /// The fully resolved simulation config.
+    pub cfg: SimConfig,
+}
+
+impl ExperimentSpec {
+    /// A minimal ad-hoc spec: HMC, all workloads, baseline-vs-adaptive,
+    /// long-form output. The TOML/CLI parsers start from this.
+    pub fn adhoc(name: impl Into<String>) -> Self {
+        ExperimentSpec {
+            name: name.into(),
+            figure: None,
+            title: String::new(),
+            mem: MemKind::Hmc,
+            topology: None,
+            workloads: WorkloadSet::All,
+            baseline: false,
+            policies: vec![PolicyKind::Never, PolicyKind::Adaptive],
+            table_entries: Vec::new(),
+            thresholds: Vec::new(),
+            epochs: Vec::new(),
+            trace: TraceSource::Generators,
+            scale: ScaleOverride::default(),
+            output: OutputSchema::Long,
+            summaries: Vec::new(),
+        }
+    }
+
+    /// The artifact file stem this spec writes (`<name>.json`).
+    pub fn artifact_name(&self) -> &str {
+        &self.name
+    }
+
+    /// Resolve the row labels (workload short names, a trace file's
+    /// label, or the mix scenario labels), validating names against the
+    /// Table III catalog with a did-you-mean.
+    pub fn row_labels(&self) -> Result<Vec<String>, String> {
+        match &self.trace {
+            TraceSource::Generators => {
+                let names: Vec<String> = match &self.workloads {
+                    WorkloadSet::All => {
+                        catalog::ALL_NAMES.iter().map(|s| s.to_string()).collect()
+                    }
+                    WorkloadSet::Selected => {
+                        catalog::SELECTED.iter().map(|s| s.to_string()).collect()
+                    }
+                    WorkloadSet::Named(v) => {
+                        for n in v {
+                            check_workload(n)?;
+                        }
+                        v.clone()
+                    }
+                };
+                if names.is_empty() {
+                    return Err("workloads axis must not be empty".into());
+                }
+                no_dupes("workloads", names.iter())?;
+                Ok(names)
+            }
+            TraceSource::File(path) => {
+                let stem = std::path::Path::new(path)
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or("trace");
+                Ok(vec![stem.to_string()])
+            }
+            TraceSource::TenantMixes { tenants, mixes } => {
+                if tenants.len() < 2 {
+                    return Err(format!(
+                        "trace mix needs at least 2 tenants, got {}",
+                        tenants.len()
+                    ));
+                }
+                for t in tenants {
+                    check_workload(t)?;
+                }
+                no_dupes("tenants", tenants.iter())?;
+                if mixes.is_empty() {
+                    return Err("trace mix needs at least one scenario".into());
+                }
+                for m in mixes {
+                    check_file_stem("mix label", &m.label)?;
+                    if m.tenants < 2 || m.tenants > tenants.len() {
+                        return Err(format!(
+                            "mix {:?} wants {} tenants but the spec records {} \
+                             (each mix takes a 2..=len prefix)",
+                            m.label,
+                            m.tenants,
+                            tenants.len()
+                        ));
+                    }
+                }
+                no_dupes("mixes", mixes.iter().map(|m| &m.label))?;
+                Ok(mixes.iter().map(|m| m.label.clone()).collect())
+            }
+        }
+    }
+
+    /// The baseline config (config 0 when [`Self::baseline`], and the
+    /// recording config of a [`TraceSource::TenantMixes`] spec): the
+    /// memory preset under never-subscribe with default knobs.
+    pub fn base_cfg(&self) -> SimConfig {
+        let mut cfg = cfg_for(self.mem, PolicyKind::Never);
+        if let Some(t) = self.topology {
+            cfg.topology = t;
+        }
+        self.scale.apply(&mut cfg);
+        cfg
+    }
+
+    /// Expand the config axes into the full cartesian product. Errors
+    /// name the offending axis value (invalid combination, duplicate,
+    /// empty axis).
+    pub fn expand(&self) -> Result<Vec<ConfigPoint>, String> {
+        check_file_stem("spec name", &self.name)?;
+        if self.policies.is_empty() {
+            return Err("policies axis must not be empty".into());
+        }
+        no_dupes("policies", self.policies.iter().map(|p| p.as_str()))?;
+        no_dupes("table_entries", self.table_entries.iter())?;
+        no_dupes("thresholds", self.thresholds.iter())?;
+        no_dupes("epochs", self.epochs.iter())?;
+
+        let ways = self.base_cfg().sub_table_ways as u32;
+        for &e in &self.table_entries {
+            if e == 0 || e % ways != 0 {
+                return Err(format!(
+                    "table_entries={e}: must be a positive multiple of the \
+                     {ways}-way associativity"
+                ));
+            }
+        }
+
+        let mut out = Vec::new();
+        if self.baseline {
+            let cfg = self.base_cfg();
+            cfg.validate()
+                .map_err(|errs| format!("invalid baseline config: {}", errs.join("; ")))?;
+            out.push(ConfigPoint {
+                label: "baseline".into(),
+                policy: PolicyKind::Never,
+                table_entries: None,
+                threshold: None,
+                epoch: None,
+                is_baseline: true,
+                cfg,
+            });
+        }
+
+        // Cartesian product, policy-major, each optional axis defaulting
+        // to a single "preset" value.
+        let entries_axis: Vec<Option<u32>> = axis_or_default(&self.table_entries);
+        let thr_axis: Vec<Option<u32>> = axis_or_default(&self.thresholds);
+        let epoch_axis: Vec<Option<u64>> = axis_or_default(&self.epochs);
+        for &policy in &self.policies {
+            for &entries in &entries_axis {
+                for &threshold in &thr_axis {
+                    for &epoch in &epoch_axis {
+                        let mut cfg = cfg_for(self.mem, policy);
+                        if let Some(t) = self.topology {
+                            cfg.topology = t;
+                        }
+                        if let Some(e) = entries {
+                            cfg.sub_table_sets = (e / cfg.sub_table_ways as u32).max(1);
+                        }
+                        if let Some(t) = threshold {
+                            cfg.count_threshold = t;
+                        }
+                        if let Some(e) = epoch {
+                            cfg.epoch_cycles = e;
+                        }
+                        self.scale.apply(&mut cfg);
+                        let label = point_label(policy, entries, threshold, epoch);
+                        cfg.validate().map_err(|errs| {
+                            format!("invalid config at axis point {label}: {}", errs.join("; "))
+                        })?;
+                        out.push(ConfigPoint {
+                            label,
+                            policy,
+                            table_entries: entries,
+                            threshold,
+                            epoch,
+                            is_baseline: false,
+                            cfg,
+                        });
+                    }
+                }
+            }
+        }
+
+        // Duplicate-free across the whole expansion (e.g. `baseline`
+        // plus an overlapping default-knob `never` axis point).
+        let mut seen = std::collections::HashSet::new();
+        for p in &out {
+            if !seen.insert(crate::config::presets::render(&p.cfg)) {
+                return Err(format!(
+                    "duplicate expanded config at axis point {} (baseline and a \
+                     default-knob `never` axis point coincide?)",
+                    p.label
+                ));
+            }
+        }
+        self.check_output_refs(out.len())?;
+        Ok(out)
+    }
+
+    /// Fail fast (here, not after an hours-long sweep) when the output
+    /// schema or a summary references a config index the expansion does
+    /// not produce, or a series axis that is not active.
+    fn check_output_refs(&self, n_configs: usize) -> Result<(), String> {
+        fn cfg_of(ex: Extract) -> usize {
+            match ex {
+                Extract::Metric { cfg, .. }
+                | Extract::Speedup { cfg }
+                | Extract::LatencyImprovement { cfg } => cfg,
+                Extract::Tenants => 0,
+            }
+        }
+        let mut max_ref = 0usize;
+        match &self.output {
+            OutputSchema::Columns(cols) => {
+                for c in cols {
+                    max_ref = max_ref.max(cfg_of(c.extract));
+                }
+            }
+            OutputSchema::Series(axis) => {
+                if n_configs < 2 {
+                    return Err(format!(
+                        "series output needs at least 2 configs (config 0 is the \
+                         speedup denominator), spec expands to {n_configs}"
+                    ));
+                }
+                let active = match axis {
+                    SeriesAxis::TableEntries => !self.table_entries.is_empty(),
+                    SeriesAxis::Threshold => !self.thresholds.is_empty(),
+                    SeriesAxis::Policy => true,
+                };
+                if !active {
+                    return Err(format!(
+                        "series axis {axis:?} has no values in this spec"
+                    ));
+                }
+            }
+            OutputSchema::Long => {}
+        }
+        for s in &self.summaries {
+            max_ref = max_ref.max(cfg_of(s.of));
+            if let Agg::SumRatioPct { vs } = s.agg {
+                max_ref = max_ref.max(cfg_of(vs));
+            }
+        }
+        if max_ref >= n_configs {
+            return Err(format!(
+                "output schema references config {max_ref} but the spec expands \
+                 to only {n_configs} configs"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Total sweep points this spec expands to (rows × configs).
+    pub fn point_count(&self) -> Result<usize, String> {
+        Ok(self.row_labels()?.len() * self.expand()?.len())
+    }
+
+    /// Compact one-line axes summary (`repro figure --list`).
+    pub fn axes_summary(&self) -> String {
+        let workloads = match &self.trace {
+            TraceSource::Generators => match &self.workloads {
+                WorkloadSet::All => "all".to_string(),
+                WorkloadSet::Selected => "selected".to_string(),
+                WorkloadSet::Named(v) => format!("{} named", v.len()),
+            },
+            TraceSource::File(p) => format!("trace {p}"),
+            TraceSource::TenantMixes { tenants, mixes } => {
+                format!("{} tenants, {} mixes", tenants.len(), mixes.len())
+            }
+        };
+        let mut parts = vec![
+            format!("mem={}", self.mem.as_str()),
+            format!(
+                "topology={}",
+                self.topology.map_or("preset", |t| t.as_str())
+            ),
+            format!("workloads={workloads}"),
+            format!(
+                "policies={}",
+                self.policies.iter().map(|p| p.as_str()).collect::<Vec<_>>().join("/")
+            ),
+        ];
+        if self.baseline {
+            parts.insert(3, "baseline".to_string());
+        }
+        if !self.table_entries.is_empty() {
+            parts.push(format!("entries={:?}", self.table_entries));
+        }
+        if !self.thresholds.is_empty() {
+            parts.push(format!("thresholds={:?}", self.thresholds));
+        }
+        if !self.epochs.is_empty() {
+            parts.push(format!("epochs={:?}", self.epochs));
+        }
+        parts.join(" ")
+    }
+}
+
+/// Names that become file stems (the spec/artifact name, mix scenario
+/// labels) must not smuggle path components: `name = ../../x` would
+/// write outside the artifact directory.
+fn check_file_stem(kind: &str, s: &str) -> Result<(), String> {
+    let ok = !s.is_empty()
+        && !s.starts_with('.')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'));
+    if ok {
+        Ok(())
+    } else {
+        Err(format!(
+            "{kind} {s:?} names a file: use only [A-Za-z0-9._-], not starting with '.'"
+        ))
+    }
+}
+
+/// Validate one Table III short name, suggesting the nearest on a miss.
+fn check_workload(name: &str) -> Result<(), String> {
+    if catalog::ALL_NAMES.contains(&name) {
+        return Ok(());
+    }
+    let hint = match crate::cli::suggest(name, catalog::ALL_NAMES.iter().copied()) {
+        Some(s) => format!("; did you mean {s:?}?"),
+        None => String::new(),
+    };
+    Err(format!("unknown workload {name:?} in workload axis{hint}"))
+}
+
+/// An optional axis: explicit values, or one "keep the preset" slot.
+fn axis_or_default<T: Copy>(values: &[T]) -> Vec<Option<T>> {
+    if values.is_empty() {
+        vec![None]
+    } else {
+        values.iter().map(|&v| Some(v)).collect()
+    }
+}
+
+fn no_dupes<T: std::fmt::Debug + PartialEq>(
+    axis: &str,
+    values: impl Iterator<Item = T>,
+) -> Result<(), String> {
+    let mut seen: Vec<T> = Vec::new();
+    for v in values {
+        if seen.contains(&v) {
+            return Err(format!("duplicate {axis} axis value {v:?}"));
+        }
+        seen.push(v);
+    }
+    Ok(())
+}
+
+fn point_label(
+    policy: PolicyKind,
+    entries: Option<u32>,
+    threshold: Option<u32>,
+    epoch: Option<u64>,
+) -> String {
+    let mut label = policy.as_str().to_string();
+    if let Some(e) = entries {
+        label.push_str(&format!(" entries={e}"));
+    }
+    if let Some(t) = threshold {
+        label.push_str(&format!(" thr={t}"));
+    }
+    if let Some(e) = epoch {
+        label.push_str(&format!(" epoch={e}"));
+    }
+    label
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_for_sets_policy_and_mem() {
+        let c = cfg_for(MemKind::Hbm, PolicyKind::Adaptive);
+        assert_eq!(c.mem, MemKind::Hbm);
+        assert_eq!(c.policy, PolicyKind::Adaptive);
+    }
+
+    #[test]
+    fn baseline_plus_axis_expansion_order() {
+        let mut spec = ExperimentSpec::adhoc("t");
+        spec.baseline = true;
+        spec.policies = vec![PolicyKind::Adaptive];
+        spec.table_entries = vec![1024, 2048];
+        let pts = spec.expand().unwrap();
+        assert_eq!(pts.len(), 3);
+        assert!(pts[0].is_baseline);
+        assert_eq!(pts[0].policy, PolicyKind::Never);
+        assert_eq!(pts[1].table_entries, Some(1024));
+        assert_eq!(pts[2].table_entries, Some(2048));
+        assert_eq!(pts[1].cfg.sub_table_sets, 1024 / 4);
+        assert_eq!(pts[2].cfg.sub_table_entries(), 2048);
+    }
+
+    #[test]
+    fn empty_policy_axis_rejected() {
+        let mut spec = ExperimentSpec::adhoc("t");
+        spec.policies = Vec::new();
+        assert!(spec.expand().unwrap_err().contains("policies"));
+    }
+
+    #[test]
+    fn duplicate_axis_value_rejected() {
+        let mut spec = ExperimentSpec::adhoc("t");
+        spec.policies = vec![PolicyKind::Never, PolicyKind::Never];
+        assert!(spec.expand().unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn invalid_epoch_axis_names_offender() {
+        let mut spec = ExperimentSpec::adhoc("t");
+        spec.epochs = vec![0];
+        let err = spec.expand().unwrap_err();
+        assert!(err.contains("epoch=0"), "{err}");
+        assert!(err.contains("epoch_cycles"), "{err}");
+    }
+
+    #[test]
+    fn bad_table_entries_named() {
+        let mut spec = ExperimentSpec::adhoc("t");
+        spec.table_entries = vec![7];
+        let err = spec.expand().unwrap_err();
+        assert!(err.contains("table_entries=7"), "{err}");
+    }
+
+    #[test]
+    fn unknown_workload_gets_suggestion() {
+        let mut spec = ExperimentSpec::adhoc("t");
+        spec.workloads = WorkloadSet::Named(vec!["SPLRod".into()]);
+        let err = spec.row_labels().unwrap_err();
+        assert!(err.contains("SPLRod") && err.contains("SPLRad"), "{err}");
+    }
+
+    #[test]
+    fn mix_scenarios_validated() {
+        let mut spec = ExperimentSpec::adhoc("t");
+        spec.trace = TraceSource::TenantMixes {
+            tenants: vec!["SPLRad".into(), "PLYgemm".into()],
+            mixes: vec![MixScenario { label: "mix9".into(), tenants: 9 }],
+        };
+        let err = spec.row_labels().unwrap_err();
+        assert!(err.contains("mix9"), "{err}");
+    }
+
+    #[test]
+    fn output_refs_validated_at_expansion_time() {
+        let mut spec = ExperimentSpec::adhoc("t");
+        spec.policies = vec![PolicyKind::Never, PolicyKind::Adaptive];
+        spec.output =
+            OutputSchema::Columns(vec![Column::new("x", Extract::Speedup { cfg: 2 })]);
+        let err = spec.expand().unwrap_err();
+        assert!(err.contains("config 2"), "{err}");
+
+        // A series over an axis the spec never sweeps.
+        spec.output = OutputSchema::Series(SeriesAxis::TableEntries);
+        let err = spec.expand().unwrap_err();
+        assert!(err.contains("series axis"), "{err}");
+
+        // Summaries are checked too.
+        spec.output = OutputSchema::Long;
+        spec.summaries =
+            vec![Summary::new("g", Agg::Geomean, Extract::Speedup { cfg: 9 }, "")];
+        let err = spec.expand().unwrap_err();
+        assert!(err.contains("config 9"), "{err}");
+    }
+
+    #[test]
+    fn path_smuggling_names_rejected() {
+        let mut spec = ExperimentSpec::adhoc("../../etc-x");
+        assert!(spec.expand().unwrap_err().contains("spec name"), "traversal");
+        spec.name = "ok-name".into();
+        spec.trace = TraceSource::TenantMixes {
+            tenants: vec!["SPLRad".into(), "PLYgemm".into()],
+            mixes: vec![MixScenario { label: "../evil".into(), tenants: 2 }],
+        };
+        assert!(spec.row_labels().unwrap_err().contains("mix label"));
+    }
+
+    #[test]
+    fn series_axis_labels() {
+        let mut spec = ExperimentSpec::adhoc("t");
+        spec.policies = vec![PolicyKind::Always];
+        spec.thresholds = vec![4];
+        let pts = spec.expand().unwrap();
+        assert_eq!(SeriesAxis::Threshold.label(&pts[0]), "4");
+        assert_eq!(SeriesAxis::Policy.label(&pts[0]), "always");
+    }
+}

@@ -1,0 +1,346 @@
+//! Parse an ad-hoc [`ExperimentSpec`] from a TOML-subset file (`repro
+//! sweep --spec my.toml`) or from CLI flags — arbitrary new scenarios
+//! (ring-topology threshold sweeps over traced multi-tenant mixes, …)
+//! without touching Rust.
+//!
+//! The file format is the same `key = value` TOML subset the config
+//! parser reads ([`crate::config::parse::KvFile`]): `#` comments,
+//! last-assignment-wins, quoted values allowed. Schema (all keys
+//! optional unless noted):
+//!
+//! ```text
+//! name          = ring-threshold-mix     # artifact stem (default "sweep")
+//! title         = free text
+//! memory        = hmc | hbm
+//! topology      = mesh | crossbar | ring # default: preset topology
+//! workloads     = all | selected | CSV of Table III short names
+//! policies      = CSV of never|always|adaptive|adaptive-hops|adaptive-latency
+//! baseline      = true | false           # prepend a default-knob baseline
+//! table_entries = CSV of u32             # subscription-table size axis
+//! thresholds    = CSV of u32             # count-threshold axis
+//! epochs        = CSV of u64             # epoch-length axis
+//! trace         = FILE.dlpt              # replay one recorded trace
+//! trace_mix     = CSV of short names     # record tenants + mix them
+//! mixes         = label:k[,label:k...]   # scenarios over trace_mix
+//! warmup        = u64                    # scale overrides
+//! measure       = u64
+//! runs          = u32
+//! seed          = u64
+//! ```
+//!
+//! `trace` and `trace_mix` are mutually exclusive; the output schema of
+//! an ad-hoc sweep is always the long form (one JSON row per point with
+//! full axis coordinates).
+
+use super::spec::{ExperimentSpec, MixScenario, ScaleOverride, TraceSource, WorkloadSet};
+use crate::cli::{suggest, Cli};
+use crate::config::parse::KvFile;
+use crate::config::{MemKind, Topology};
+use crate::policy::PolicyKind;
+
+/// Every key the spec file understands (typos get a did-you-mean).
+const KNOWN_KEYS: &[&str] = &[
+    "name", "title", "memory", "topology", "workloads", "policies", "baseline",
+    "table_entries", "thresholds", "epochs", "trace", "trace_mix", "mixes", "warmup",
+    "measure", "runs", "seed",
+];
+
+/// Parse a spec file's text.
+pub fn from_text(text: &str) -> Result<ExperimentSpec, String> {
+    let kv = KvFile::parse(text).map_err(|(l, m)| format!("line {l}: {m}"))?;
+    for key in kv.keys() {
+        if !KNOWN_KEYS.contains(&key) {
+            let hint = match suggest(key, KNOWN_KEYS.iter().copied()) {
+                Some(s) => format!("; did you mean {s:?}?"),
+                None => String::new(),
+            };
+            return Err(format!("unknown spec key {key:?}{hint}"));
+        }
+    }
+    build(|key| kv.get(key).map(|v| v.to_string()))
+}
+
+/// Build a spec from `repro sweep` CLI flags (`--policies a,b`, …).
+/// Flag names use dashes where the file uses underscores.
+pub fn from_cli(cli: &Cli) -> Result<ExperimentSpec, String> {
+    build(|key| cli.flag(&key.replace('_', "-")).map(|v| v.to_string()))
+}
+
+/// Assemble + validate from a key lookup (file or flags).
+fn build(get: impl Fn(&str) -> Option<String>) -> Result<ExperimentSpec, String> {
+    let mut spec = ExperimentSpec::adhoc(get("name").unwrap_or_else(|| "sweep".into()));
+    if let Some(t) = get("title") {
+        spec.title = t;
+    }
+    if let Some(m) = get("memory") {
+        spec.mem = match m.as_str() {
+            "hmc" => MemKind::Hmc,
+            "hbm" => MemKind::Hbm,
+            _ => return Err(format!("unknown memory {m:?} (hmc|hbm)")),
+        };
+    }
+    if let Some(t) = get("topology") {
+        spec.topology = Some(
+            Topology::parse(&t).ok_or(format!("unknown topology {t:?} (mesh|crossbar|ring)"))?,
+        );
+    }
+    if let Some(w) = get("workloads") {
+        spec.workloads = match w.as_str() {
+            "all" => WorkloadSet::All,
+            "selected" => WorkloadSet::Selected,
+            list => WorkloadSet::Named(csv(list)),
+        };
+    }
+    if let Some(p) = get("policies") {
+        spec.policies = csv(&p)
+            .iter()
+            .map(|s| {
+                PolicyKind::parse(s).ok_or(format!(
+                    "unknown policy {s:?} (never|always|adaptive|adaptive-hops|adaptive-latency)"
+                ))
+            })
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(b) = get("baseline") {
+        spec.baseline = parse_bool("baseline", &b)?;
+    }
+    if let Some(v) = get("table_entries") {
+        spec.table_entries = csv_nums("table_entries", &v)?;
+    }
+    if let Some(v) = get("thresholds") {
+        spec.thresholds = csv_nums("thresholds", &v)?;
+    }
+    if let Some(v) = get("epochs") {
+        spec.epochs = csv_nums("epochs", &v)?;
+    }
+    spec.scale = ScaleOverride {
+        warmup: opt_num("warmup", &get)?,
+        measure: opt_num("measure", &get)?,
+        runs: opt_num("runs", &get)?,
+        seed: opt_num("seed", &get)?,
+    };
+
+    let workloads_given = get("workloads").is_some();
+    match (get("trace"), get("trace_mix")) {
+        (Some(_), Some(_)) => {
+            return Err(
+                "trace and trace_mix are conflicting traffic sources; pick one".into(),
+            )
+        }
+        // A trace source replaces the workload row axis entirely — a
+        // spec naming both would silently drop the workloads, so reject.
+        (Some(_), None) | (None, Some(_)) if workloads_given => {
+            return Err(
+                "workloads conflicts with trace/trace_mix (a trace defines the row \
+                 axis); drop one"
+                    .into(),
+            )
+        }
+        (Some(path), None) => spec.trace = TraceSource::File(path),
+        (None, Some(tenants)) => {
+            let tenants = csv(&tenants);
+            let mixes = match get("mixes") {
+                Some(m) => parse_mixes(&m)?,
+                // Default: one scenario mixing every tenant.
+                None => vec![MixScenario {
+                    label: format!("mix{}", tenants.len()),
+                    tenants: tenants.len(),
+                }],
+            };
+            spec.trace = TraceSource::TenantMixes { tenants, mixes };
+        }
+        (None, None) => {
+            if get("mixes").is_some() {
+                return Err("mixes requires trace_mix (the tenants to record)".into());
+            }
+        }
+    }
+
+    // An ad-hoc sweep writing `fig11.json` would silently clobber a
+    // registry figure's artifact in the shared artifact directory.
+    if super::registry::by_figure(&spec.name).is_some() {
+        return Err(format!(
+            "name {:?} collides with a registry figure artifact; pick another name",
+            spec.name
+        ));
+    }
+
+    // Surface axis errors now, with the file/flag context, instead of at
+    // run time.
+    spec.expand()?;
+    spec.row_labels()?;
+    Ok(spec)
+}
+
+fn csv(s: &str) -> Vec<String> {
+    s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+}
+
+fn csv_nums<T: std::str::FromStr>(key: &str, s: &str) -> Result<Vec<T>, String> {
+    csv(s)
+        .iter()
+        .map(|x| {
+            x.replace('_', "")
+                .parse::<T>()
+                .map_err(|_| format!("{key}: bad numeric value {x:?}"))
+        })
+        .collect()
+}
+
+fn opt_num<T: std::str::FromStr>(
+    key: &str,
+    get: &impl Fn(&str) -> Option<String>,
+) -> Result<Option<T>, String> {
+    match get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .replace('_', "")
+            .parse::<T>()
+            .map(Some)
+            .map_err(|_| format!("{key}: bad numeric value {v:?}")),
+    }
+}
+
+fn parse_bool(key: &str, v: &str) -> Result<bool, String> {
+    match v {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        _ => Err(format!("{key} expects true|false, got {v:?}")),
+    }
+}
+
+/// `label:k[,label:k...]`
+fn parse_mixes(s: &str) -> Result<Vec<MixScenario>, String> {
+    csv(s)
+        .iter()
+        .map(|part| {
+            let (label, k) = part
+                .split_once(':')
+                .ok_or(format!("mixes expects label:k entries, got {part:?}"))?;
+            let tenants = k
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| format!("mixes: bad tenant count in {part:?}"))?;
+            Ok(MixScenario { label: label.trim().to_string(), tenants })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec_file() {
+        let spec = from_text(
+            "# ad-hoc sweep\n\
+             name = ring-thr\n\
+             memory = hmc\n\
+             topology = ring\n\
+             policies = never, always, adaptive\n\
+             thresholds = 0, 4\n\
+             trace_mix = SPLRad,PHELinReg,CHABsBez,PLYgemm\n\
+             mixes = mix4:4\n\
+             warmup = 1_000\n\
+             measure = 5000\n",
+        )
+        .unwrap();
+        assert_eq!(spec.name, "ring-thr");
+        assert_eq!(spec.topology, Some(Topology::Ring));
+        assert_eq!(spec.policies.len(), 3);
+        assert_eq!(spec.thresholds, vec![0, 4]);
+        assert_eq!(spec.scale.warmup, Some(1000));
+        match &spec.trace {
+            TraceSource::TenantMixes { tenants, mixes } => {
+                assert_eq!(tenants.len(), 4);
+                assert_eq!(mixes[0].label, "mix4");
+                assert_eq!(mixes[0].tenants, 4);
+            }
+            other => panic!("{other:?}"),
+        }
+        // 1 mix row x (3 policies x 2 thresholds) configs.
+        assert_eq!(spec.point_count().unwrap(), 6);
+    }
+
+    #[test]
+    fn unknown_key_gets_suggestion() {
+        let err = from_text("policees = always\n").unwrap_err();
+        assert!(err.contains("policees") && err.contains("policies"), "{err}");
+    }
+
+    #[test]
+    fn trace_and_mix_conflict() {
+        let err = from_text("trace = a.dlpt\ntrace_mix = SPLRad,PLYgemm\n").unwrap_err();
+        assert!(err.contains("conflicting"), "{err}");
+    }
+
+    #[test]
+    fn registry_artifact_names_are_reserved() {
+        for name in ["fig01", "fig19", "11"] {
+            let err = from_text(&format!("name = {name}\n")).unwrap_err();
+            assert!(err.contains("collides"), "{name}: {err}");
+        }
+    }
+
+    #[test]
+    fn workloads_conflict_with_trace_sources() {
+        // The trace defines the row axis; silently dropping a named
+        // workload list would be the silent-shadowing failure mode this
+        // parser exists to prevent.
+        let err = from_text("workloads = SPLRad\ntrace_mix = SPLRad,PLYgemm\n").unwrap_err();
+        assert!(err.contains("workloads"), "{err}");
+        let err = from_text("workloads = SPLRad\ntrace = a.dlpt\n").unwrap_err();
+        assert!(err.contains("workloads"), "{err}");
+    }
+
+    #[test]
+    fn axis_errors_surface_at_parse_time() {
+        let err = from_text("epochs = 0\n").unwrap_err();
+        assert!(err.contains("epoch"), "{err}");
+        let err = from_text("workloads = SPLRod\n").unwrap_err();
+        assert!(err.contains("SPLRad"), "{err}");
+    }
+
+    #[test]
+    fn default_mix_covers_all_tenants() {
+        let spec = from_text("trace_mix = SPLRad,PLYgemm\n").unwrap();
+        match &spec.trace {
+            TraceSource::TenantMixes { mixes, .. } => {
+                assert_eq!(mixes[0].label, "mix2");
+                assert_eq!(mixes[0].tenants, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn from_cli_mirrors_file_keys() {
+        let args: Vec<String> = [
+            "sweep",
+            "--name",
+            "cli-sweep",
+            "--policies",
+            "never,adaptive",
+            "--workloads",
+            "STRAdd,STRCpy",
+            "--table-entries",
+            "1024,4096",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let cli = Cli::parse(&args).unwrap();
+        let spec = from_cli(&cli).unwrap();
+        assert_eq!(spec.name, "cli-sweep");
+        assert_eq!(spec.table_entries, vec![1024, 4096]);
+        assert_eq!(spec.point_count().unwrap(), 2 * 4);
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let spec = from_text("").unwrap();
+        assert_eq!(spec.name, "sweep");
+        assert_eq!(spec.mem, MemKind::Hmc);
+        assert!(spec.point_count().unwrap() > 0);
+    }
+}

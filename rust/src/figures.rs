@@ -1,58 +1,23 @@
-//! Figure regeneration harness: one function per figure/table of the
-//! paper's evaluation, shared by the `cargo bench` targets and the
-//! `repro` CLI.
+//! Figure-harness compatibility layer.
 //!
-//! Absolute numbers differ from the paper (our substrate is our own
-//! simulator, not the authors' DAMOV testbed); the *shape* — who wins, by
-//! roughly what factor, where the crossovers fall — is the reproduction
-//! target (see EXPERIMENTS.md for paper-vs-measured).
+//! The per-figure imperative harness that used to live here is gone: every
+//! figure is now a *data entry* in [`crate::exp::registry`], executed by
+//! the one generic [`crate::exp::run_spec`] path and rendered by
+//! [`crate::exp::output`] (artifact bytes pinned by the `golden_artifacts`
+//! test). This module keeps the small helpers external callers still use —
+//! scale/env handling, the strict sweep wrapper, geometric means and
+//! artifact emission by figure id.
 
 use std::path::PathBuf;
 
-use crate::config::{MemKind, SimConfig};
+use crate::config::SimConfig;
 use crate::coordinator::driver::simulate;
 use crate::coordinator::report::SimReport;
-use crate::policy::PolicyKind;
 use crate::sweep;
-use crate::sweep::json::JsonValue;
-use crate::workloads::catalog;
 
-/// Scale knobs, overridable from the environment:
-/// `REPRO_WARMUP` / `REPRO_MEASURE` / `REPRO_RUNS` / `REPRO_EPOCH`, plus
-/// `REPRO_TOPOLOGY` to force one interconnect across the whole suite
-/// (the CI smoke job's topology axis).
-pub fn scaled(mut cfg: SimConfig) -> SimConfig {
-    fn env_u64(key: &str) -> Option<u64> {
-        std::env::var(key).ok()?.parse().ok()
-    }
-    if let Some(v) = env_u64("REPRO_WARMUP") {
-        cfg.warmup_requests = v;
-    }
-    if let Some(v) = env_u64("REPRO_MEASURE") {
-        cfg.measure_requests = v;
-    }
-    if let Some(v) = env_u64("REPRO_RUNS") {
-        cfg.runs = v as u32;
-    }
-    if let Some(v) = env_u64("REPRO_EPOCH") {
-        cfg.epoch_cycles = v;
-    }
-    if let Ok(t) = std::env::var("REPRO_TOPOLOGY") {
-        cfg.topology = crate::config::Topology::parse(&t)
-            .unwrap_or_else(|| panic!("unknown REPRO_TOPOLOGY {t:?} (mesh|crossbar|ring)"));
-    }
-    cfg
-}
-
-/// Base config for a memory kind with a policy, at harness scale.
-pub fn cfg_for(mem: MemKind, policy: PolicyKind) -> SimConfig {
-    let mut cfg = match mem {
-        MemKind::Hmc => SimConfig::hmc(),
-        MemKind::Hbm => SimConfig::hbm(),
-    };
-    cfg.policy = policy;
-    scaled(cfg)
-}
+pub use crate::exp::output::geomean;
+pub use crate::exp::registry::{FIG16_WORKLOADS, FIG19_TENANTS};
+pub use crate::exp::spec::{cfg_for, scaled};
 
 /// Run one workload (or the config's trace) under one config.
 pub fn run(cfg: &SimConfig, workload: &str) -> SimReport {
@@ -70,546 +35,38 @@ pub fn run_matrix(names: &[&str], cfgs: &[SimConfig]) -> Vec<Vec<SimReport>> {
     sweep::run_matrix(names, cfgs)
 }
 
-// ---------------------------------------------------------------------
-// Figure rows
-// ---------------------------------------------------------------------
-
-/// Figs 1 & 2: latency breakdown per workload under the baseline.
-pub struct BreakdownRow {
-    pub workload: &'static str,
-    pub network: f64,
-    pub queue: f64,
-    pub array: f64,
-    pub avg_latency: f64,
-}
-
-pub fn fig_latency_breakdown(mem: MemKind) -> Vec<BreakdownRow> {
-    let cfg = cfg_for(mem, PolicyKind::Never);
-    let reports = run_matrix(&catalog::ALL_NAMES, std::slice::from_ref(&cfg));
-    catalog::ALL_NAMES
-        .iter()
-        .zip(reports)
-        .map(|(name, mut r)| {
-            let rep = r.remove(0);
-            let (n, q, a) = rep.latency_fractions();
-            BreakdownRow {
-                workload: name,
-                network: n,
-                queue: q,
-                array: a,
-                avg_latency: rep.avg_latency(),
-            }
-        })
-        .collect()
-}
-
-/// Figs 3 & 4: baseline CoV per workload.
-pub fn fig_cov(mem: MemKind) -> Vec<(&'static str, f64)> {
-    let cfg = cfg_for(mem, PolicyKind::Never);
-    let reports = run_matrix(&catalog::ALL_NAMES, std::slice::from_ref(&cfg));
-    catalog::ALL_NAMES
-        .iter()
-        .zip(reports)
-        .map(|(name, mut r)| (*name, r.remove(0).cov()))
-        .collect()
-}
-
-/// Fig 9: always-subscribe speedup over baseline, all 31 workloads (HMC).
-pub struct SpeedupRow {
-    pub workload: &'static str,
-    pub speedup: f64,
-    pub latency_improvement: f64,
-}
-
-pub fn fig9_always_subscribe() -> Vec<SpeedupRow> {
-    let base = cfg_for(MemKind::Hmc, PolicyKind::Never);
-    let always = cfg_for(MemKind::Hmc, PolicyKind::Always);
-    let reports = run_matrix(&catalog::ALL_NAMES, &[base, always]);
-    catalog::ALL_NAMES
-        .iter()
-        .zip(reports)
-        .map(|(name, r)| SpeedupRow {
-            workload: name,
-            speedup: r[1].speedup_vs(&r[0]),
-            latency_improvement: r[1].latency_improvement_vs(&r[0]),
-        })
-        .collect()
-}
-
-/// Fig 10: reuse per subscription under always-subscribe (HMC).
-pub fn fig10_reuse() -> Vec<(&'static str, f64, f64)> {
-    let always = cfg_for(MemKind::Hmc, PolicyKind::Always);
-    let reports = run_matrix(&catalog::ALL_NAMES, std::slice::from_ref(&always));
-    catalog::ALL_NAMES
-        .iter()
-        .zip(reports)
-        .map(|(name, mut r)| {
-            let (l, rm) = r.remove(0).reuse();
-            (*name, l, rm)
-        })
-        .collect()
-}
-
-/// Fig 11: selected workloads, always vs adaptive speedup + adaptive
-/// latency improvement (HMC).
-pub struct AdaptiveRow {
-    pub workload: &'static str,
-    pub always_speedup: f64,
-    pub adaptive_speedup: f64,
-    pub latency_improvement: f64,
-}
-
-pub fn fig11_adaptive() -> Vec<AdaptiveRow> {
-    let cfgs = [
-        cfg_for(MemKind::Hmc, PolicyKind::Never),
-        cfg_for(MemKind::Hmc, PolicyKind::Always),
-        cfg_for(MemKind::Hmc, PolicyKind::Adaptive),
-    ];
-    let reports = run_matrix(&catalog::SELECTED, &cfgs);
-    catalog::SELECTED
-        .iter()
-        .zip(reports)
-        .map(|(name, r)| AdaptiveRow {
-            workload: name,
-            always_speedup: r[1].speedup_vs(&r[0]),
-            adaptive_speedup: r[2].speedup_vs(&r[0]),
-            latency_improvement: r[2].latency_improvement_vs(&r[0]),
-        })
-        .collect()
-}
-
-/// Fig 12 (HMC) / Fig 13 (HBM): CoV under baseline / always / adaptive.
-pub fn fig_cov_policies(mem: MemKind, include_always: bool) -> Vec<(&'static str, Vec<f64>)> {
-    let mut cfgs = vec![cfg_for(mem, PolicyKind::Never)];
-    if include_always {
-        cfgs.push(cfg_for(mem, PolicyKind::Always));
-    }
-    cfgs.push(cfg_for(mem, PolicyKind::Adaptive));
-    let reports = run_matrix(&catalog::SELECTED, &cfgs);
-    catalog::SELECTED
-        .iter()
-        .zip(reports)
-        .map(|(name, r)| (*name, r.iter().map(|x| x.cov()).collect()))
-        .collect()
-}
-
-/// Fig 14: traffic (bytes/cycle) under baseline / always / adaptive (HMC).
-pub fn fig14_traffic() -> Vec<(&'static str, f64, f64, f64)> {
-    let cfgs = [
-        cfg_for(MemKind::Hmc, PolicyKind::Never),
-        cfg_for(MemKind::Hmc, PolicyKind::Always),
-        cfg_for(MemKind::Hmc, PolicyKind::Adaptive),
-    ];
-    let reports = run_matrix(&catalog::SELECTED, &cfgs);
-    catalog::SELECTED
-        .iter()
-        .zip(reports)
-        .map(|(name, r)| {
-            (
-                *name,
-                r[0].bytes_per_cycle(),
-                r[1].bytes_per_cycle(),
-                r[2].bytes_per_cycle(),
-            )
-        })
-        .collect()
-}
-
-/// Fig 15: HBM latency baseline vs adaptive + speedup, all 31 workloads.
-pub struct HbmRow {
-    pub workload: &'static str,
-    pub base_latency: f64,
-    pub adaptive_latency: f64,
-    pub speedup: f64,
-}
-
-pub fn fig15_hbm_adaptive() -> Vec<HbmRow> {
-    let cfgs =
-        [cfg_for(MemKind::Hbm, PolicyKind::Never), cfg_for(MemKind::Hbm, PolicyKind::Adaptive)];
-    let reports = run_matrix(&catalog::ALL_NAMES, &cfgs);
-    catalog::ALL_NAMES
-        .iter()
-        .zip(reports)
-        .map(|(name, r)| HbmRow {
-            workload: name,
-            base_latency: r[0].avg_latency(),
-            adaptive_latency: r[1].avg_latency(),
-            speedup: r[1].speedup_vs(&r[0]),
-        })
-        .collect()
-}
-
-/// Fig 16: adaptive speedup vs subscription-table size, table-sensitive
-/// workloads.
-pub const FIG16_WORKLOADS: [&str; 4] = ["PLYDoitgen", "PHELinReg", "SPLRad", "CHABsBez"];
-
-pub fn fig16_table_size() -> Vec<(&'static str, Vec<(u32, f64)>)> {
-    let base = cfg_for(MemKind::Hmc, PolicyKind::Never);
-    let mut cfgs = vec![base];
-    for entries in crate::config::presets::TABLE_SIZE_SWEEP {
-        let mut c = crate::config::presets::hmc_adaptive_with_table_entries(entries);
-        c = scaled(c);
-        cfgs.push(c);
-    }
-    let reports = run_matrix(&FIG16_WORKLOADS, &cfgs);
-    FIG16_WORKLOADS
-        .iter()
-        .zip(reports)
-        .map(|(name, r)| {
-            let series = crate::config::presets::TABLE_SIZE_SWEEP
-                .iter()
-                .enumerate()
-                .map(|(i, &entries)| (entries, r[i + 1].speedup_vs(&r[0])))
-                .collect();
-            (*name, series)
-        })
-        .collect()
-}
-
-/// Fig 17 (ablation): count-threshold filter vs subscribe-on-first-access.
-pub fn fig17_threshold_ablation() -> Vec<(&'static str, Vec<(u32, f64)>)> {
-    const THRESHOLDS: [u32; 4] = [0, 1, 4, 16];
-    let names = ["SPLRad", "PHELinReg", "PLYgemm", "HSJNPO"];
-    let base = cfg_for(MemKind::Hmc, PolicyKind::Never);
-    let mut cfgs = vec![base];
-    for t in THRESHOLDS {
-        let mut c = cfg_for(MemKind::Hmc, PolicyKind::Always);
-        c.count_threshold = t;
-        cfgs.push(c);
-    }
-    let reports = run_matrix(&names, &cfgs);
-    names
-        .iter()
-        .zip(reports)
-        .map(|(name, r)| {
-            let series = THRESHOLDS
-                .iter()
-                .enumerate()
-                .map(|(i, &t)| (t, r[i + 1].speedup_vs(&r[0])))
-                .collect();
-            (*name, series)
-        })
-        .collect()
-}
-
-/// Fig 18 (ablation): adaptive-policy variants.
-pub fn fig18_policy_ablation() -> Vec<(&'static str, Vec<(&'static str, f64)>)> {
-    const POLICIES: [PolicyKind; 4] = [
-        PolicyKind::Always,
-        PolicyKind::AdaptiveHops,
-        PolicyKind::AdaptiveLatency,
-        PolicyKind::Adaptive,
-    ];
-    let names = ["SPLRad", "PHELinReg", "PLYgemm", "PLY3mm", "STRTriad"];
-    let mut cfgs = vec![cfg_for(MemKind::Hmc, PolicyKind::Never)];
-    for p in POLICIES {
-        cfgs.push(cfg_for(MemKind::Hmc, p));
-    }
-    let reports = run_matrix(&names, &cfgs);
-    names
-        .iter()
-        .zip(reports)
-        .map(|(name, r)| {
-            let series = POLICIES
-                .iter()
-                .enumerate()
-                .map(|(i, p)| (p.as_str(), r[i + 1].speedup_vs(&r[0])))
-                .collect();
-            (*name, series)
-        })
-        .collect()
-}
-
-/// Fig 19 (extension): adaptive DL-PIM under multi-tenant trace mixes —
-/// the serving-consolidation scenario no single Table III generator
-/// produces. Each tenant is a recorded baseline trace; mixes interleave
-/// them over one memory system with per-tenant address-space offsets, so
-/// tenants' hot home vaults collide (see [`crate::trace::transform::mix`]).
-#[derive(Clone)]
-pub struct MultiTenantRow {
-    pub scenario: &'static str,
-    pub tenants: usize,
-    pub always_speedup: f64,
-    pub adaptive_speedup: f64,
-    pub latency_improvement: f64,
-    pub base_cov: f64,
-    pub adaptive_cov: f64,
-}
-
-/// Tenant workloads, chosen for clashing home-vault footprints: two
-/// single-hot-vault tile reusers, one multi-lane reuser, one shared-panel
-/// thrasher.
-pub const FIG19_TENANTS: [&str; 4] = ["SPLRad", "PHELinReg", "CHABsBez", "PLYgemm"];
-
-pub fn fig19_multi_tenant() -> Vec<MultiTenantRow> {
-    // Memoized per process: the tenant *recording* runs bypass the sweep
-    // report cache (they go through `record_run`, not the engine), and
-    // every entry point computes the rows twice (once to print, once for
-    // the JSON artifact) — without this the 4 recordings would re-run.
-    static ROWS: std::sync::OnceLock<Vec<MultiTenantRow>> = std::sync::OnceLock::new();
-    ROWS.get_or_init(fig19_compute).clone()
-}
-
-fn fig19_compute() -> Vec<MultiTenantRow> {
-    let dir = sweep::artifact::artifact_dir().join("traces");
-    let rec_cfg = cfg_for(MemKind::Hmc, PolicyKind::Never);
-    let tenants: Vec<crate::trace::TraceData> = FIG19_TENANTS
-        .iter()
-        .map(|name| {
-            let path = dir.join(format!("{name}.dlpt"));
-            crate::trace::record_run(&rec_cfg, name, &path)
-                .unwrap_or_else(|e| panic!("record tenant {name}: {e}"));
-            crate::trace::TraceData::load(&path).unwrap_or_else(|e| panic!("{e}"))
-        })
-        .collect();
-
-    [("mix2", 2usize), ("mix4", 4usize)]
-        .iter()
-        .map(|&(label, k)| {
-            let mixed =
-                crate::trace::transform::mix(&tenants[..k], &vec![1; k], rec_cfg.n_vaults)
-                    .unwrap_or_else(|e| panic!("{label}: {e}"));
-            let path = dir.join(format!("{label}.dlpt"));
-            mixed.save(&path).unwrap_or_else(|e| panic!("{label}: {e}"));
-            let cfgs: Vec<SimConfig> = [PolicyKind::Never, PolicyKind::Always, PolicyKind::Adaptive]
-                .iter()
-                .map(|&p| {
-                    let mut c = cfg_for(MemKind::Hmc, p);
-                    c.trace = Some(path.to_string_lossy().into_owned());
-                    c
-                })
-                .collect();
-            let r = run_matrix(&[label], &cfgs).remove(0);
-            MultiTenantRow {
-                scenario: label,
-                tenants: k,
-                always_speedup: r[1].speedup_vs(&r[0]),
-                adaptive_speedup: r[2].speedup_vs(&r[0]),
-                latency_improvement: r[2].latency_improvement_vs(&r[0]),
-                base_cov: r[0].cov(),
-                adaptive_cov: r[2].cov(),
-            }
-        })
-        .collect()
-}
-
-// ---------------------------------------------------------------------
-// JSON artifacts
-// ---------------------------------------------------------------------
-
-fn row_obj(workload: &str, cols: &[(&str, f64)]) -> JsonValue {
-    let mut pairs = vec![("workload", JsonValue::str(workload))];
-    pairs.extend(cols.iter().map(|(k, v)| (*k, JsonValue::num(*v))));
-    JsonValue::obj(pairs)
-}
-
-fn series_obj(workload: &str, key: &str, series: &[(String, f64)]) -> JsonValue {
-    JsonValue::obj(vec![
-        ("workload", JsonValue::str(workload)),
-        (
-            "series",
-            JsonValue::Arr(
-                series
-                    .iter()
-                    .map(|(x, s)| {
-                        JsonValue::obj(vec![
-                            (key, JsonValue::str(x.clone())),
-                            ("speedup", JsonValue::num(*s)),
-                        ])
-                    })
-                    .collect(),
-            ),
-        ),
-    ])
-}
-
 /// The canonical artifact name of a figure id ("9" -> "fig09").
 pub fn artifact_name(which: &str) -> String {
     format!("fig{which:0>2}")
 }
 
-/// Build the JSON artifact body for one figure. Thanks to the sweep
-/// engine's report cache this is nearly free when the figure was already
-/// computed in this process (e.g. right after printing it).
-pub fn figure_json(which: &str) -> Option<JsonValue> {
-    let rows: Vec<JsonValue> = match which {
-        "1" | "2" => {
-            let mem = if which == "1" { MemKind::Hmc } else { MemKind::Hbm };
-            fig_latency_breakdown(mem)
-                .iter()
-                .map(|r| {
-                    row_obj(
-                        r.workload,
-                        &[
-                            ("network", r.network),
-                            ("queue", r.queue),
-                            ("array", r.array),
-                            ("avg_latency", r.avg_latency),
-                        ],
-                    )
-                })
-                .collect()
-        }
-        "3" | "4" => {
-            let mem = if which == "3" { MemKind::Hmc } else { MemKind::Hbm };
-            fig_cov(mem).iter().map(|(w, cov)| row_obj(w, &[("cov", *cov)])).collect()
-        }
-        "9" => fig9_always_subscribe()
-            .iter()
-            .map(|r| {
-                row_obj(
-                    r.workload,
-                    &[
-                        ("speedup", r.speedup),
-                        ("latency_improvement", r.latency_improvement),
-                    ],
-                )
-            })
-            .collect(),
-        "10" => fig10_reuse()
-            .iter()
-            .map(|(w, l, r)| row_obj(w, &[("local", *l), ("remote", *r)]))
-            .collect(),
-        "11" => fig11_adaptive()
-            .iter()
-            .map(|r| {
-                row_obj(
-                    r.workload,
-                    &[
-                        ("always", r.always_speedup),
-                        ("adaptive", r.adaptive_speedup),
-                        ("latency_improvement", r.latency_improvement),
-                    ],
-                )
-            })
-            .collect(),
-        "12" => fig_cov_policies(MemKind::Hmc, true)
-            .iter()
-            .map(|(w, covs)| {
-                row_obj(
-                    w,
-                    &[("baseline", covs[0]), ("always", covs[1]), ("adaptive", covs[2])],
-                )
-            })
-            .collect(),
-        "13" => fig_cov_policies(MemKind::Hbm, false)
-            .iter()
-            .map(|(w, covs)| row_obj(w, &[("baseline", covs[0]), ("adaptive", covs[1])]))
-            .collect(),
-        "14" => fig14_traffic()
-            .iter()
-            .map(|(w, b, a, d)| {
-                row_obj(w, &[("baseline", *b), ("always", *a), ("adaptive", *d)])
-            })
-            .collect(),
-        "15" => fig15_hbm_adaptive()
-            .iter()
-            .map(|r| {
-                row_obj(
-                    r.workload,
-                    &[
-                        ("base_latency", r.base_latency),
-                        ("adaptive_latency", r.adaptive_latency),
-                        ("speedup", r.speedup),
-                    ],
-                )
-            })
-            .collect(),
-        "16" => fig16_table_size()
-            .iter()
-            .map(|(w, series)| {
-                let s: Vec<(String, f64)> =
-                    series.iter().map(|(e, sp)| (e.to_string(), *sp)).collect();
-                series_obj(w, "entries", &s)
-            })
-            .collect(),
-        "17" => fig17_threshold_ablation()
-            .iter()
-            .map(|(w, series)| {
-                let s: Vec<(String, f64)> =
-                    series.iter().map(|(t, sp)| (t.to_string(), *sp)).collect();
-                series_obj(w, "threshold", &s)
-            })
-            .collect(),
-        "18" => fig18_policy_ablation()
-            .iter()
-            .map(|(w, series)| {
-                let s: Vec<(String, f64)> =
-                    series.iter().map(|(p, sp)| (p.to_string(), *sp)).collect();
-                series_obj(w, "policy", &s)
-            })
-            .collect(),
-        "19" => fig19_multi_tenant()
-            .iter()
-            .map(|r| {
-                row_obj(
-                    r.scenario,
-                    &[
-                        ("tenants", r.tenants as f64),
-                        ("always", r.always_speedup),
-                        ("adaptive", r.adaptive_speedup),
-                        ("latency_improvement", r.latency_improvement),
-                        ("base_cov", r.base_cov),
-                        ("adaptive_cov", r.adaptive_cov),
-                    ],
-                )
-            })
-            .collect(),
-        _ => return None,
-    };
-    Some(JsonValue::obj(vec![
-        ("figure", JsonValue::str(artifact_name(which))),
-        ("rows", JsonValue::Arr(rows)),
-    ]))
-}
-
-/// Compute figure `which` (cache-cheap when already computed) and write
-/// its JSON artifact to the sweep artifact directory. Returns `None` for
-/// an unknown figure id; panics on I/O failure (CI must see it).
+/// Compute figure `which` through the spec registry (cache-cheap when its
+/// points were already computed in this process) and write its JSON
+/// artifact. Returns `None` for an unknown figure id; panics on failure
+/// (CI must see it).
 pub fn emit_artifact(which: &str) -> Option<PathBuf> {
-    let value = figure_json(which)?;
-    let name = artifact_name(which);
-    Some(
-        sweep::artifact::write_figure_json(&name, &value)
-            .unwrap_or_else(|e| panic!("write figure artifact {name}: {e}")),
-    )
-}
-
-/// Geometric mean (the paper's averages over workloads).
-pub fn geomean(xs: impl Iterator<Item = f64>) -> f64 {
-    let (mut logsum, mut n) = (0.0, 0usize);
-    for x in xs {
-        if x > 0.0 {
-            logsum += x.ln();
-            n += 1;
-        }
-    }
-    if n == 0 {
-        0.0
-    } else {
-        (logsum / n as f64).exp()
-    }
+    let spec = crate::exp::registry::by_figure(which)?;
+    let run = crate::exp::run_spec(&spec).unwrap_or_else(|e| panic!("{e}"));
+    Some(crate::exp::emit_artifact(&spec, &run).unwrap_or_else(|e| panic!("{e}")))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn geomean_of_constants() {
-        assert!((geomean([2.0, 2.0, 2.0].into_iter()) - 2.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn geomean_ignores_nonpositive() {
-        assert!((geomean([4.0, 0.0, -1.0].into_iter()) - 4.0).abs() < 1e-12);
-    }
+    use crate::config::MemKind;
+    use crate::policy::PolicyKind;
 
     #[test]
     fn cfg_for_sets_policy_and_mem() {
         let c = cfg_for(MemKind::Hbm, PolicyKind::Adaptive);
         assert_eq!(c.mem, MemKind::Hbm);
         assert_eq!(c.policy, PolicyKind::Adaptive);
+    }
+
+    #[test]
+    fn artifact_names_are_zero_padded() {
+        assert_eq!(artifact_name("9"), "fig09");
+        assert_eq!(artifact_name("19"), "fig19");
     }
 
     #[test]

@@ -46,6 +46,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod error;
+pub mod exp;
 pub mod figures;
 pub mod memsys;
 pub mod policy;

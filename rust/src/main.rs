@@ -4,11 +4,11 @@
 use std::path::Path;
 
 use dlpim::cli::{self, Cli, HELP};
-use dlpim::config::{presets, MemKind, SimConfig, Topology};
+use dlpim::config::{presets, SimConfig, Topology};
 use dlpim::coordinator::driver::simulate;
 use dlpim::coordinator::report::SimReport;
 use dlpim::error::{bail, err, Result};
-use dlpim::figures;
+use dlpim::exp;
 use dlpim::policy::PolicyKind;
 use dlpim::runtime::ArtifactStore;
 use dlpim::sweep;
@@ -41,6 +41,7 @@ fn run(args: &[String]) -> Result<()> {
         "run" => cmd_run(&cli),
         "figure" => cmd_figure(&cli),
         "all-figures" => cmd_all_figures(),
+        "sweep" => cmd_sweep(&cli),
         "workloads" => cmd_workloads(),
         "config" => cmd_config(&cli),
         "trace" => cmd_trace(&cli),
@@ -356,187 +357,85 @@ fn cmd_artifacts() -> Result<()> {
     Ok(())
 }
 
+/// `repro figure <N>` / `repro figure --list`: every figure is a data
+/// entry in [`dlpim::exp::registry`]; this command only enumerates it.
 fn cmd_figure(cli: &Cli) -> Result<()> {
+    if cli.has("list") {
+        return cmd_figure_list();
+    }
     let which = cli
         .positional
         .first()
-        .ok_or_else(|| err!("usage: repro figure <N>"))?
+        .ok_or_else(|| err!("usage: repro figure <N> (or: repro figure --list)"))?
         .as_str();
-    print_figure(which)
+    let spec = exp::registry::by_figure(which).ok_or_else(|| {
+        err!(
+            "unknown figure {which:?} (valid: {}); see `repro figure --list`",
+            exp::registry::figure_ids().join(", ")
+        )
+    })?;
+    print_figure(&spec)
+}
+
+/// One line per registry entry: artifact name first (CI's matrix is
+/// derived from this output), then figure id, point count, axes, title.
+fn cmd_figure_list() -> Result<()> {
+    for spec in exp::registry::figures() {
+        let points = spec.point_count().map_err(|e| err!("{}: {e}", spec.name))?;
+        println!(
+            "{:<6} figure={:<3} points={:<4} {} | {}",
+            spec.name,
+            spec.figure.as_deref().unwrap_or("-"),
+            points,
+            spec.axes_summary(),
+            spec.title
+        );
+    }
+    Ok(())
 }
 
 fn cmd_all_figures() -> Result<()> {
-    for f in ["1", "2", "3", "4", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "19"] {
-        print_figure(f)?;
+    for spec in exp::registry::figures() {
+        print_figure(&spec)?;
         println!();
     }
     Ok(())
 }
 
-fn print_figure(which: &str) -> Result<()> {
-    match which {
-        "1" | "2" => {
-            let mem = if which == "1" { MemKind::Hmc } else { MemKind::Hbm };
-            println!("Figure {which}: latency breakdown ({})", mem.as_str());
-            let rows = figures::fig_latency_breakdown(mem);
-            let mut overhead = Vec::new();
-            for r in &rows {
-                println!(
-                    "fig{which:0>2} | {:<12} | network {:.3} | queue {:.3} | array {:.3} | avg {:.1}",
-                    r.workload, r.network, r.queue, r.array, r.avg_latency
-                );
-                overhead.push(r.network + r.queue);
-            }
-            println!(
-                "fig{which:0>2} | AVG remote overhead (network+queue) = {:.1}% (paper: {}%)",
-                overhead.iter().sum::<f64>() / overhead.len() as f64 * 100.0,
-                if which == "1" { 53 } else { 43 }
+fn print_figure(spec: &exp::ExperimentSpec) -> Result<()> {
+    let id = spec.figure.as_deref().unwrap_or(&spec.name);
+    println!("Figure {id}: {}", spec.title);
+    exp::run_and_emit(spec, false).map_err(|e| err!(e))?;
+    Ok(())
+}
+
+/// `repro sweep` — run an ad-hoc declarative spec from a TOML file
+/// (`--spec FILE`) or from axis flags, through the same engine and
+/// report cache as the figures. Emits a long-form JSON artifact.
+fn cmd_sweep(cli: &Cli) -> Result<()> {
+    let spec = if let Some(path) = cli.flag("spec") {
+        // Axis flags next to --spec would be silently shadowed by the
+        // file; a user who thinks they overrode an axis must hear about
+        // it before a potentially hours-long sweep of the wrong configs.
+        if let Some(extra) = cli::flags::SWEEP
+            .iter()
+            .find(|f| **f != "spec" && cli.has(f))
+        {
+            bail!(
+                "--{extra} conflicts with --spec {path}: a spec file defines every \
+                 axis; edit the file (or drop --spec) instead"
             );
         }
-        "3" | "4" => {
-            let mem = if which == "3" { MemKind::Hmc } else { MemKind::Hbm };
-            println!("Figure {which}: CoV of per-vault demand ({})", mem.as_str());
-            for (name, cov) in figures::fig_cov(mem) {
-                println!("fig{which:0>2} | {name:<12} | cov {cov:.3}");
-            }
-        }
-        "9" => {
-            println!("Figure 9: always-subscribe speedup (HMC)");
-            let rows = figures::fig9_always_subscribe();
-            for r in &rows {
-                println!("fig09 | {:<12} | speedup {:.3}", r.workload, r.speedup);
-            }
-            println!(
-                "fig09 | GEOMEAN speedup = {:.3} (paper: ~1.06)",
-                figures::geomean(rows.iter().map(|r| r.speedup))
-            );
-        }
-        "10" => {
-            println!("Figure 10: reuse per subscription under always-subscribe");
-            for (name, l, r) in figures::fig10_reuse() {
-                println!(
-                    "fig10 | {name:<12} | local {l:.2} | remote {r:.2} | total {:.2}",
-                    l + r
-                );
-            }
-        }
-        "11" => {
-            println!("Figure 11: always vs adaptive on reuse workloads (HMC)");
-            let rows = figures::fig11_adaptive();
-            for r in &rows {
-                println!(
-                    "fig11 | {:<12} | always {:.3} | adaptive {:.3} | latency impr {:.1}%",
-                    r.workload,
-                    r.always_speedup,
-                    r.adaptive_speedup,
-                    r.latency_improvement * 100.0
-                );
-            }
-            println!(
-                "fig11 | GEOMEAN always {:.3} adaptive {:.3} | AVG latency impr {:.1}% (paper: ~1.14 / ~1.15 / 54%)",
-                figures::geomean(rows.iter().map(|r| r.always_speedup)),
-                figures::geomean(rows.iter().map(|r| r.adaptive_speedup)),
-                rows.iter().map(|r| r.latency_improvement).sum::<f64>() / rows.len() as f64
-                    * 100.0
-            );
-        }
-        "12" | "13" => {
-            let (mem, always) =
-                if which == "12" { (MemKind::Hmc, true) } else { (MemKind::Hbm, false) };
-            println!("Figure {which}: CoV by policy ({})", mem.as_str());
-            for (name, covs) in figures::fig_cov_policies(mem, always) {
-                let cols: Vec<String> = covs.iter().map(|c| format!("{c:.3}")).collect();
-                let labels: &[&str] =
-                    if always { &["base", "always", "adaptive"] } else { &["base", "adaptive"] };
-                let joined: Vec<String> = labels
-                    .iter()
-                    .zip(&cols)
-                    .map(|(l, c)| format!("{l} {c}"))
-                    .collect();
-                println!("fig{which} | {name:<12} | {}", joined.join(" | "));
-            }
-        }
-        "14" => {
-            println!("Figure 14: network traffic (B/cycle)");
-            let rows = figures::fig14_traffic();
-            let (mut sb, mut sa, mut sd) = (0.0, 0.0, 0.0);
-            for (name, b, a, d) in &rows {
-                println!("fig14 | {name:<12} | base {b:.2} | always {a:.2} | adaptive {d:.2}");
-                sb += b;
-                sa += a;
-                sd += d;
-            }
-            println!(
-                "fig14 | AVG increase: always {:+.0}% adaptive {:+.0}% (paper: +88% / +14%)",
-                (sa / sb - 1.0) * 100.0,
-                (sd / sb - 1.0) * 100.0
-            );
-        }
-        "15" => {
-            println!("Figure 15: HBM latency baseline vs adaptive");
-            let rows = figures::fig15_hbm_adaptive();
-            let mut impr = Vec::new();
-            for r in &rows {
-                println!(
-                    "fig15 | {:<12} | base {:.1} | adaptive {:.1} | speedup {:.3}",
-                    r.workload, r.base_latency, r.adaptive_latency, r.speedup
-                );
-                if r.base_latency > 0.0 {
-                    impr.push(1.0 - r.adaptive_latency / r.base_latency);
-                }
-            }
-            println!(
-                "fig15 | AVG latency improvement = {:.1}% | GEOMEAN speedup {:.3} (paper: ~50% / ~1.03)",
-                impr.iter().sum::<f64>() / impr.len() as f64 * 100.0,
-                figures::geomean(rows.iter().map(|r| r.speedup))
-            );
-        }
-        "16" => {
-            println!("Figure 16: adaptive speedup vs subscription-table entries");
-            for (name, series) in figures::fig16_table_size() {
-                let cols: Vec<String> =
-                    series.iter().map(|(e, s)| format!("{e}:{s:.3}")).collect();
-                println!("fig16 | {name:<12} | {}", cols.join(" | "));
-            }
-        }
-        "17" => {
-            println!("Figure 17 (ablation): count-threshold filter (always-subscribe)");
-            for (name, series) in figures::fig17_threshold_ablation() {
-                let cols: Vec<String> =
-                    series.iter().map(|(t, s)| format!("thr{t}:{s:.3}")).collect();
-                println!("fig17 | {name:<12} | {}", cols.join(" | "));
-            }
-        }
-        "18" => {
-            println!("Figure 18 (ablation): adaptive-policy variants");
-            for (name, series) in figures::fig18_policy_ablation() {
-                let cols: Vec<String> =
-                    series.iter().map(|(p, s)| format!("{p}:{s:.3}")).collect();
-                println!("fig18 | {name:<12} | {}", cols.join(" | "));
-            }
-        }
-        "19" => {
-            println!("Figure 19 (new): adaptive DL-PIM under multi-tenant trace mixes");
-            for r in figures::fig19_multi_tenant() {
-                println!(
-                    "fig19 | {:<10} | {} tenants | always {:.3} | adaptive {:.3} | \
-                     latency impr {:.1}% | cov base {:.3} -> adaptive {:.3}",
-                    r.scenario,
-                    r.tenants,
-                    r.always_speedup,
-                    r.adaptive_speedup,
-                    r.latency_improvement * 100.0,
-                    r.base_cov,
-                    r.adaptive_cov
-                );
-            }
-        }
-        other => bail!("unknown figure {other:?} (1-4, 9-19)"),
-    }
-    // Every simulate call above went through the sweep engine's report
-    // cache, so assembling the JSON artifact re-runs nothing.
-    if let Some(path) = figures::emit_artifact(which) {
-        println!("fig{which:0>2} | artifact: {}", path.display());
-    }
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err!("read spec {path}: {e}"))?;
+        exp::tomlspec::from_text(&text).map_err(|e| err!("{path}: {e}"))?
+    } else {
+        exp::tomlspec::from_cli(cli).map_err(|e| err!(e))?
+    };
+    let t0 = std::time::Instant::now();
+    let points = spec.point_count().map_err(|e| err!(e))?;
+    println!("sweep {}: {points} points ({})", spec.name, spec.axes_summary());
+    exp::run_and_emit(&spec, false).map_err(|e| err!(e))?;
+    println!("wallclock       {:.2}s", t0.elapsed().as_secs_f64());
     Ok(())
 }

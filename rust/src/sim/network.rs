@@ -47,8 +47,10 @@ pub(crate) const DIR_S: usize = 3;
 /// Shared crate-wide: every [`crate::memsys::Interconnect`] implementation
 /// (mesh, crossbar, ring) models its contended ports/links with the same
 /// calendar, so contention semantics are identical across topologies.
+/// Public so the `perf_hotpath` bench can drive the backfill path with
+/// out-of-order reservation storms directly.
 #[derive(Clone, Debug, Default)]
-pub(crate) struct LinkCal {
+pub struct LinkCal {
     /// Sorted, non-overlapping (start, end) busy windows.
     iv: Vec<(Cycle, Cycle)>,
 }
@@ -63,7 +65,7 @@ const PRUNE_LAG: Cycle = 2_000;
 
 impl LinkCal {
     /// Reserve `f` cycles at or after `t`; returns the start cycle.
-    pub(crate) fn reserve(&mut self, t: Cycle, f: Cycle) -> Cycle {
+    pub fn reserve(&mut self, t: Cycle, f: Cycle) -> Cycle {
         // Fast path: reservation at/after the calendar tail (the common
         // case, since the driver processes events in near-time-order).
         if let Some(last) = self.iv.last_mut() {
@@ -81,13 +83,16 @@ impl LinkCal {
             self.iv.push((t, t + f));
             return t;
         }
-        // Slow path: first-fit gap search from `t` (backfill).
+        // Slow path: first-fit gap search from `t` (backfill). Intervals
+        // are sorted with strictly increasing end cycles, so the ones
+        // ending at or before `t` can never constrain the gap — seed the
+        // scan past them with a binary search instead of walking the
+        // whole calendar front (under an out-of-order reservation storm
+        // that linear prefix dominated the scan).
+        let first = self.iv.partition_point(|&(_, e)| e <= t);
         let mut cur = t;
         let mut pos = self.iv.len();
-        for (i, &(s, e)) in self.iv.iter().enumerate() {
-            if e <= cur {
-                continue;
-            }
+        for (i, &(s, e)) in self.iv.iter().enumerate().skip(first) {
             if s >= cur + f {
                 pos = i;
                 break;
@@ -114,7 +119,7 @@ impl LinkCal {
         }
     }
 
-    pub(crate) fn clear(&mut self) {
+    pub fn clear(&mut self) {
         self.iv.clear();
     }
 }
@@ -356,6 +361,72 @@ mod tests {
         let node = m.node_of(c);
         let (x, y) = (node % 6, node / 6);
         assert!((2..=3).contains(&x) && (2..=3).contains(&y), "({x},{y})");
+    }
+
+    /// Brute-force reference for `LinkCal::reserve`'s slow path: scan the
+    /// whole calendar linearly (the pre-`partition_point` behaviour).
+    fn reserve_reference(iv: &mut Vec<(u64, u64)>, t: u64, f: u64) -> u64 {
+        let mut cur = t;
+        let mut pos = iv.len();
+        for (i, &(s, e)) in iv.iter().enumerate() {
+            if e <= cur {
+                continue;
+            }
+            if s >= cur + f {
+                pos = i;
+                break;
+            }
+            cur = e;
+            pos = i + 1;
+        }
+        if pos > 0 && iv[pos - 1].1 == cur {
+            iv[pos - 1].1 += f;
+        } else {
+            iv.insert(pos, (cur, cur + f));
+        }
+        cur
+    }
+
+    #[test]
+    fn backfill_seeded_scan_matches_linear_reference() {
+        // An out-of-order reservation storm: starts jump between the past
+        // and the far future, sizes vary, so the slow path sees long
+        // calendars with stale prefixes. The seeded scan must make
+        // byte-identical decisions to the full linear scan.
+        let mut cal = LinkCal::default();
+        let mut reference: Vec<(u64, u64)> = Vec::new();
+        let mut state = 0x5eed_1234_u64;
+        let mut rng = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..5_000 {
+            // Stay below PRUNE_LAG so the fast path's pruning (which the
+            // reference deliberately lacks) never fires.
+            let t = rng() % 1_500;
+            let f = 1 + rng() % 9;
+            let got = cal.reserve(t, f);
+            let want = reserve_reference(&mut reference, t, f);
+            assert_eq!(got, want, "divergence at t={t} f={f}");
+            assert_eq!(cal.iv, reference, "calendar divergence at t={t} f={f}");
+        }
+    }
+
+    #[test]
+    fn backfill_fills_earliest_gap_after_t() {
+        let mut cal = LinkCal::default();
+        // Build [10,15) [20,25) [40,45) via out-of-order reserves.
+        assert_eq!(cal.reserve(40, 5), 40);
+        assert_eq!(cal.reserve(10, 5), 10);
+        assert_eq!(cal.reserve(20, 5), 20);
+        // A 5-cycle packet at t=0 fits before the first interval.
+        assert_eq!(cal.reserve(0, 5), 0);
+        // A 5-cycle packet at t=11 must backfill the [15,20) gap.
+        assert_eq!(cal.reserve(11, 5), 15);
+        // The next one is pushed past the merged [10,25) block.
+        assert_eq!(cal.reserve(11, 5), 25);
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! Golden-artifact regression: every registry-driven figure JSON must be
+//! **byte-identical** to the pre-refactor harness output at a fixed scale
+//! and seed.
+//!
+//! The reference implementation below is the pre-registry `figures.rs`
+//! per-figure code, vendored verbatim (modulo explicit scale/topology
+//! injection instead of env vars) — it *is* the pinned fixture. The test
+//! runs fig 1, fig 11, fig 15 and fig 19 across the mesh and crossbar
+//! interconnects and asserts the registry path renders the exact same
+//! artifact bytes. Everything runs in one `#[test]` so the environment
+//! and the shared trace directory are touched sequentially.
+
+use std::path::PathBuf;
+
+use dlpim::config::{MemKind, SimConfig, Topology};
+use dlpim::exp::{self, spec::ScaleOverride};
+use dlpim::figures::run_matrix;
+use dlpim::policy::PolicyKind;
+use dlpim::sweep;
+use dlpim::sweep::json::JsonValue;
+use dlpim::workloads::catalog;
+
+const WARMUP: u64 = 300;
+const MEASURE: u64 = 2_000;
+
+/// The pre-refactor `cfg_for` + `scaled`, with the scale and topology
+/// pinned explicitly instead of read from `REPRO_*`.
+fn cfg_ref(mem: MemKind, policy: PolicyKind, topo: Topology) -> SimConfig {
+    let mut cfg = match mem {
+        MemKind::Hmc => SimConfig::hmc(),
+        MemKind::Hbm => SimConfig::hbm(),
+    };
+    cfg.policy = policy;
+    cfg.topology = topo;
+    cfg.warmup_requests = WARMUP;
+    cfg.measure_requests = MEASURE;
+    cfg.runs = 1;
+    cfg
+}
+
+// ---- verbatim pre-refactor JSON assembly helpers ----
+
+fn row_obj(workload: &str, cols: &[(&str, f64)]) -> JsonValue {
+    let mut pairs = vec![("workload", JsonValue::str(workload))];
+    pairs.extend(cols.iter().map(|(k, v)| (*k, JsonValue::num(*v))));
+    JsonValue::obj(pairs)
+}
+
+fn figure_doc(name: &str, rows: Vec<JsonValue>) -> JsonValue {
+    JsonValue::obj(vec![
+        ("figure", JsonValue::str(name)),
+        ("rows", JsonValue::Arr(rows)),
+    ])
+}
+
+/// Pre-refactor Fig 1: latency breakdown per workload under the baseline.
+fn reference_fig01(topo: Topology) -> JsonValue {
+    let cfg = cfg_ref(MemKind::Hmc, PolicyKind::Never, topo);
+    let reports = run_matrix(&catalog::ALL_NAMES, std::slice::from_ref(&cfg));
+    let rows = catalog::ALL_NAMES
+        .iter()
+        .zip(reports)
+        .map(|(name, mut r)| {
+            let rep = r.remove(0);
+            let (n, q, a) = rep.latency_fractions();
+            row_obj(
+                name,
+                &[
+                    ("network", n),
+                    ("queue", q),
+                    ("array", a),
+                    ("avg_latency", rep.avg_latency()),
+                ],
+            )
+        })
+        .collect();
+    figure_doc("fig01", rows)
+}
+
+/// Pre-refactor Fig 11: always vs adaptive on the reuse workloads (HMC).
+fn reference_fig11(topo: Topology) -> JsonValue {
+    let cfgs = [
+        cfg_ref(MemKind::Hmc, PolicyKind::Never, topo),
+        cfg_ref(MemKind::Hmc, PolicyKind::Always, topo),
+        cfg_ref(MemKind::Hmc, PolicyKind::Adaptive, topo),
+    ];
+    let reports = run_matrix(&catalog::SELECTED, &cfgs);
+    let rows = catalog::SELECTED
+        .iter()
+        .zip(reports)
+        .map(|(name, r)| {
+            row_obj(
+                name,
+                &[
+                    ("always", r[1].speedup_vs(&r[0])),
+                    ("adaptive", r[2].speedup_vs(&r[0])),
+                    ("latency_improvement", r[2].latency_improvement_vs(&r[0])),
+                ],
+            )
+        })
+        .collect();
+    figure_doc("fig11", rows)
+}
+
+/// Pre-refactor Fig 15: HBM latency baseline vs adaptive, all workloads.
+fn reference_fig15(topo: Topology) -> JsonValue {
+    let cfgs = [
+        cfg_ref(MemKind::Hbm, PolicyKind::Never, topo),
+        cfg_ref(MemKind::Hbm, PolicyKind::Adaptive, topo),
+    ];
+    let reports = run_matrix(&catalog::ALL_NAMES, &cfgs);
+    let rows = catalog::ALL_NAMES
+        .iter()
+        .zip(reports)
+        .map(|(name, r)| {
+            row_obj(
+                name,
+                &[
+                    ("base_latency", r[0].avg_latency()),
+                    ("adaptive_latency", r[1].avg_latency()),
+                    ("speedup", r[1].speedup_vs(&r[0])),
+                ],
+            )
+        })
+        .collect();
+    figure_doc("fig15", rows)
+}
+
+/// Pre-refactor Fig 19: multi-tenant trace mixes (record the four tenant
+/// baselines, mix 2- and 4-tenant scenarios, compare the three policies).
+const FIG19_TENANTS: [&str; 4] = ["SPLRad", "PHELinReg", "CHABsBez", "PLYgemm"];
+
+fn reference_fig19(topo: Topology) -> JsonValue {
+    let dir = sweep::artifact::artifact_dir().join("traces");
+    let rec_cfg = cfg_ref(MemKind::Hmc, PolicyKind::Never, topo);
+    let tenants: Vec<dlpim::trace::TraceData> = FIG19_TENANTS
+        .iter()
+        .map(|name| {
+            let path = dir.join(format!("{name}.dlpt"));
+            dlpim::trace::record_run(&rec_cfg, name, &path)
+                .unwrap_or_else(|e| panic!("record tenant {name}: {e}"));
+            dlpim::trace::TraceData::load(&path).unwrap_or_else(|e| panic!("{e}"))
+        })
+        .collect();
+
+    let rows = [("mix2", 2usize), ("mix4", 4usize)]
+        .iter()
+        .map(|&(label, k)| {
+            let mixed =
+                dlpim::trace::transform::mix(&tenants[..k], &vec![1; k], rec_cfg.n_vaults)
+                    .unwrap_or_else(|e| panic!("{label}: {e}"));
+            let path = dir.join(format!("{label}.dlpt"));
+            mixed.save(&path).unwrap_or_else(|e| panic!("{label}: {e}"));
+            let cfgs: Vec<SimConfig> = [PolicyKind::Never, PolicyKind::Always, PolicyKind::Adaptive]
+                .iter()
+                .map(|&p| {
+                    let mut c = cfg_ref(MemKind::Hmc, p, topo);
+                    c.trace = Some(path.to_string_lossy().into_owned());
+                    c
+                })
+                .collect();
+            let r = run_matrix(&[label], &cfgs).remove(0);
+            row_obj(
+                label,
+                &[
+                    ("tenants", k as f64),
+                    ("always", r[1].speedup_vs(&r[0])),
+                    ("adaptive", r[2].speedup_vs(&r[0])),
+                    ("latency_improvement", r[2].latency_improvement_vs(&r[0])),
+                    ("base_cov", r[0].cov()),
+                    ("adaptive_cov", r[2].cov()),
+                ],
+            )
+        })
+        .collect();
+    figure_doc("fig19", rows)
+}
+
+/// The registry path, pinned to the same scale + topology.
+fn registry_json(id: &str, topo: Topology) -> String {
+    let mut spec = exp::registry::by_figure(id).expect("registry figure");
+    spec.topology = Some(topo);
+    spec.scale = ScaleOverride {
+        warmup: Some(WARMUP),
+        measure: Some(MEASURE),
+        runs: Some(1),
+        seed: None,
+    };
+    let run = exp::run_spec(&spec).unwrap_or_else(|e| panic!("{id}: {e}"));
+    exp::render_json(&spec, &run).render()
+}
+
+#[test]
+fn registry_figures_match_prerefactor_bytes() {
+    // Neutralize the env knobs so both sides see exactly the pinned
+    // scale, and point the artifact/trace directory at a temp dir.
+    for key in ["REPRO_WARMUP", "REPRO_MEASURE", "REPRO_RUNS", "REPRO_EPOCH", "REPRO_TOPOLOGY"] {
+        std::env::remove_var(key);
+    }
+    let tmp: PathBuf =
+        std::env::temp_dir().join(format!("dlpim-golden-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::env::set_var("REPRO_ARTIFACT_DIR", &tmp);
+
+    for topo in [Topology::Mesh, Topology::Crossbar] {
+        let cases: [(&str, JsonValue); 4] = [
+            ("1", reference_fig01(topo)),
+            ("11", reference_fig11(topo)),
+            ("15", reference_fig15(topo)),
+            ("19", reference_fig19(topo)),
+        ];
+        for (id, reference) in cases {
+            let got = registry_json(id, topo);
+            assert_eq!(
+                got,
+                reference.render(),
+                "figure {id} over {} diverged from the pre-refactor bytes",
+                topo.as_str()
+            );
+        }
+    }
+
+    std::env::remove_var("REPRO_ARTIFACT_DIR");
+    let _ = std::fs::remove_dir_all(&tmp);
+}
