@@ -1,0 +1,61 @@
+//! Build script: stamp the crate with a fingerprint of its own source
+//! tree.
+//!
+//! The persistent report cache (`sweep::store`) content-addresses cached
+//! simulation reports by *config*, but a report is only reusable while the
+//! simulator that produced it is unchanged — a cache entry computed by an
+//! older build of the model must read as stale, not as truth. Hashing the
+//! `src/` tree at compile time gives every build an identity
+//! (`DLPIM_SRC_FINGERPRINT`) that cache entries embed and verify, so a
+//! `target/` directory restored by CI caching across commits can never
+//! serve reports from a different simulator.
+//!
+//! No dependencies, no network: a plain FNV-1a over the sorted file list
+//! (paths + contents).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn main() {
+    // Any source change re-runs this script (cargo tracks directories
+    // recursively), so the fingerprint can never go stale.
+    println!("cargo:rerun-if-changed=src");
+    println!("cargo:rerun-if-changed=build.rs");
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect(Path::new("src"), &mut files);
+    files.sort();
+
+    let mut h = FNV_OFFSET;
+    for path in &files {
+        for &b in path.to_string_lossy().as_bytes() {
+            h = fnv_step(h, b);
+        }
+        h = fnv_step(h, 0);
+        for &b in &fs::read(path).unwrap_or_default() {
+            h = fnv_step(h, b);
+        }
+    }
+    println!("cargo:rustc-env=DLPIM_SRC_FINGERPRINT={h:016x}");
+}
+
+fn fnv_step(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(FNV_PRIME)
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect(&path, out);
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+}

@@ -106,15 +106,22 @@ pub mod flags {
     pub const TRACE_MIX: &[&str] = &["out", "weights", "cores"];
     pub const TRACE_DILATE: &[&str] = &["factor"];
     pub const TRACE_REMAP: &[&str] = &["vaults"];
-    /// `repro figure`: `--list` enumerates the spec registry.
-    pub const FIGURE: &[&str] = &["list"];
+    /// `repro figure`: `--list` enumerates the spec registry;
+    /// `--no-disk-cache` keeps this invocation from reading/writing the
+    /// persistent report cache.
+    pub const FIGURE: &[&str] = &["list", "no-disk-cache"];
+    /// `repro all-figures`.
+    pub const ALL_FIGURES: &[&str] = &["no-disk-cache"];
     /// `repro sweep`: `--spec FILE`, or the ad-hoc axis flags mirroring
     /// the spec-file keys (dashes for underscores).
     pub const SWEEP: &[&str] = &[
         "spec", "name", "title", "memory", "topology", "workloads", "policies",
         "baseline", "table-entries", "thresholds", "epochs", "trace", "trace-mix",
-        "mixes", "warmup", "measure", "runs", "seed",
+        "mixes", "warmup", "measure", "runs", "seed", "no-disk-cache",
     ];
+    /// `repro cache stats|clear|gc`: `--dir` overrides the store location
+    /// (default: `REPRO_CACHE_DIR` or `target/repro/cache`).
+    pub const CACHE: &[&str] = &["dir"];
     pub const NONE: &[&str] = &[];
 }
 
@@ -126,7 +133,9 @@ pub fn known_flags(command: &str, sub: Option<&str>) -> Option<&'static [&'stati
         ("config", _) => flags::CONFIG,
         ("figure", _) => flags::FIGURE,
         ("sweep", _) => flags::SWEEP,
-        ("all-figures" | "workloads" | "artifacts", _) => flags::NONE,
+        ("all-figures", _) => flags::ALL_FIGURES,
+        ("workloads" | "artifacts", _) => flags::NONE,
+        ("cache", Some("stats" | "clear" | "gc") | None) => flags::CACHE,
         ("trace", Some("record")) => flags::TRACE_RECORD,
         ("trace", Some("replay")) => flags::TRACE_REPLAY,
         ("trace", Some("info")) => flags::NONE,
@@ -211,6 +220,12 @@ COMMANDS:
                     trace mix IN1 IN2 [IN...] --out FILE [--weights A,B,..] [--cores N]
                     trace dilate IN OUT --factor F
                     trace remap IN OUT --vaults N
+    cache         Manage the persistent report cache shared by figure and
+                  sweep runs (entries: target/repro/cache/<key>.json):
+                    cache stats   entry counts, sizes, staleness
+                    cache clear   drop every entry
+                    cache gc      drop stale/corrupt entries, keep current
+                  All accept --dir DIR to address another store.
     artifacts     List figure JSON artifacts and the AOT artifacts (PJRT)
     help          This text
 
@@ -218,11 +233,18 @@ SCALE FLAGS (also env REPRO_WARMUP / REPRO_MEASURE / REPRO_RUNS / REPRO_EPOCH):
     --quick        small run (CI scale)
     --paper-scale  the paper's 1e6-cycle epochs / 1e6-request warmup (slow)
 
+CACHE FLAGS (figure / all-figures / sweep):
+    --no-disk-cache  compute every point; don't read or write the
+                     persistent report cache (in-process reuse still applies)
+
 ENVIRONMENT:
-    REPRO_THREADS       sweep worker threads (default: all cores)
-    REPRO_ARTIFACT_DIR  where figure JSON artifacts land (default: target/repro)
-    REPRO_TOPOLOGY      override the interconnect for every figure run
-                        (mesh|crossbar|ring; default: the preset's topology)
+    REPRO_THREADS        sweep worker threads (default: all cores)
+    REPRO_ARTIFACT_DIR   where figure JSON artifacts land (default: target/repro)
+    REPRO_CACHE_DIR      where the persistent report cache lives
+                         (default: target/repro/cache)
+    REPRO_NO_DISK_CACHE  1|true disables the persistent report cache
+    REPRO_TOPOLOGY       override the interconnect for every figure run
+                         (mesh|crossbar|ring; default: the preset's topology)
 ";
 
 #[cfg(test)]
@@ -293,14 +315,20 @@ mod tests {
 
     #[test]
     fn every_command_has_a_flag_list() {
-        for cmd in ["run", "figure", "all-figures", "sweep", "workloads", "config", "artifacts"] {
+        for cmd in
+            ["run", "figure", "all-figures", "sweep", "workloads", "config", "artifacts", "cache"]
+        {
             assert!(known_flags(cmd, None).is_some(), "{cmd}");
         }
         for sub in ["record", "replay", "info", "mix", "dilate", "remap"] {
             assert!(known_flags("trace", Some(sub)).is_some(), "trace {sub}");
         }
+        for sub in ["stats", "clear", "gc"] {
+            assert!(known_flags("cache", Some(sub)).is_some(), "cache {sub}");
+        }
         assert!(known_flags("bogus", None).is_none());
         assert!(known_flags("trace", Some("bogus")).is_none());
+        assert!(known_flags("cache", Some("bogus")).is_none());
     }
 
     #[test]

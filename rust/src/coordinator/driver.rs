@@ -111,7 +111,10 @@ fn issue_request(
         let stats = mem.stats_mut();
         stats.latency.record(res.network, res.queued, res.array);
         stats.queue_net += res.queued_net;
-        stats.queue_mem += res.queued - res.queued_net;
+        // `queued_mem()` asserts the `queued_net <= queued` invariant in
+        // debug builds and saturates in release (a raw `queued -
+        // queued_net` would panic mid-figure on a violating request).
+        stats.queue_mem += res.queued_mem();
         stats.requests += 1;
         win.measured += 1;
     }
@@ -144,6 +147,10 @@ pub fn simulate_once(cfg: &SimConfig, workload: &mut dyn Workload) -> RunReport 
     let mut win = MeasureWindow::new(cfg);
     let mut ops: u64 = 0;
     let mut last_t: Cycle = 0;
+    // Completion time of the request that filled the measure window;
+    // `None` when the run ended some other way (stream exhausted, op
+    // safety valve).
+    let mut window_end: Option<Cycle> = None;
 
     while let Some(Reverse((t, c))) = heap.pop() {
         last_t = last_t.max(t);
@@ -203,6 +210,16 @@ pub fn simulate_once(cfg: &SimConfig, workload: &mut dyn Workload) -> RunReport 
 
         if win.warmed && win.measured >= cfg.measure_requests {
             debug_check_directory(&mem, cores[c as usize].time);
+            // The measured window ends when the *breaking core* finishes
+            // its last measured request (including its outstanding MLP
+            // misses). Other cores' clocks may sit far past this point —
+            // a long compute gap is charged to `core.time` at issue — and
+            // maxing over them (the old behaviour) inflated `cycles` by
+            // that cross-core drift even though no measured request
+            // needed those cycles.
+            let breaking = &mut cores[c as usize];
+            breaking.drain();
+            window_end = Some(breaking.time.max(t));
             break;
         }
         let next = cores[c as usize].time;
@@ -213,12 +230,17 @@ pub fn simulate_once(cfg: &SimConfig, workload: &mut dyn Workload) -> RunReport 
         core.drain();
         last_t = last_t.max(core.time);
     }
+    let end = window_end.unwrap_or(last_t);
 
     RunReport {
-        cycles: last_t.saturating_sub(win.measure_start),
+        cycles: end.saturating_sub(win.measure_start),
         stats: mem.into_stats(),
         decisions: policy.decisions.clone(),
-        exhausted: cores.iter().any(|c| c.finished),
+        // Only a stream that ran dry *before* the window filled is an
+        // exhausted run: if the window closed normally, a core that
+        // happened to finish (one tenant of a `--no-loop` replay ending
+        // early) does not invalidate the measurement.
+        exhausted: window_end.is_none() && cores.iter().any(|c| c.finished),
     }
 }
 
@@ -227,7 +249,102 @@ mod tests {
     use super::*;
     use crate::config::Topology;
     use crate::policy::PolicyKind;
-    use crate::workloads::catalog;
+    use crate::workloads::{catalog, Op, Workload};
+    use crate::CoreId;
+
+    /// Synthetic streams with per-core op budgets and compute gaps; every
+    /// op is a store to a fresh block (write-no-allocate), so each op is
+    /// exactly one memory request.
+    struct SyntheticStreams {
+        /// Remaining ops per core; `u64::MAX` means unbounded.
+        left: Vec<u64>,
+        next_addr: Vec<u64>,
+        /// Compute gap per op, per core.
+        gaps: Vec<u32>,
+    }
+
+    impl SyntheticStreams {
+        fn new(left: Vec<u64>, gaps: Vec<u32>) -> Self {
+            let n = left.len();
+            SyntheticStreams { left, next_addr: vec![0; n], gaps }
+        }
+    }
+
+    impl Workload for SyntheticStreams {
+        fn name(&self) -> &'static str {
+            "SyntheticStreams"
+        }
+
+        fn next_op(&mut self, core: CoreId) -> Option<Op> {
+            let i = core as usize;
+            if self.left[i] == 0 {
+                return None;
+            }
+            if self.left[i] != u64::MAX {
+                self.left[i] -= 1;
+            }
+            let addr = 0x1_0000_0000u64 * (core as u64 + 1) + self.next_addr[i];
+            self.next_addr[i] += 4096; // a fresh block every op: always misses
+            Some(Op::store(addr, self.gaps[i]))
+        }
+
+        fn reset(&mut self, _seed: u64) {
+            for a in &mut self.next_addr {
+                *a = 0;
+            }
+        }
+    }
+
+    #[test]
+    fn measured_window_not_inflated_by_idle_cores() {
+        // Core 0 streams back-to-back; every other core schedules ops with
+        // a 2M-cycle compute gap, parking its clock far past the window.
+        // The report's cycles must clamp to the breaking core's completion
+        // time, not the idle cores' future issue times (cross-core drift).
+        let mut cfg = SimConfig::hmc().quick();
+        cfg.policy = PolicyKind::Never;
+        cfg.warmup_requests = 0;
+        cfg.measure_requests = 300;
+        let n = cfg.n_vaults as usize;
+        let mut gaps = vec![2_000_000u32; n];
+        gaps[0] = 1;
+        let mut w = SyntheticStreams::new(vec![u64::MAX; n], gaps);
+        let r = simulate_once(&cfg, &mut w);
+        assert!(r.stats.requests >= 300);
+        assert!(
+            r.cycles < 1_000_000,
+            "cycles {} inflated by cores scheduled past the breaking request",
+            r.cycles
+        );
+        assert!(!r.exhausted, "unbounded streams never exhaust");
+    }
+
+    #[test]
+    fn exhausted_only_when_stream_ends_before_window_fills() {
+        // All streams run dry long before the window fills: exhausted.
+        let mut cfg = SimConfig::hmc().quick();
+        cfg.policy = PolicyKind::Never;
+        cfg.warmup_requests = 0;
+        cfg.measure_requests = 100_000;
+        let n = cfg.n_vaults as usize;
+        let mut dry = SyntheticStreams::new(vec![10; n], vec![1; n]);
+        let r = simulate_once(&cfg, &mut dry);
+        assert!(r.exhausted, "streams ended at {} of 100000 requests", r.stats.requests);
+
+        // The window fills normally even though 31 single-op streams ended
+        // long before: NOT exhausted (the pre-fix `any(finished)` flagged
+        // this, misreporting every staggered `--no-loop` trace replay).
+        cfg.measure_requests = 300;
+        let mut left = vec![1u64; n];
+        left[0] = u64::MAX;
+        let mut staggered = SyntheticStreams::new(left, vec![1; n]);
+        let r = simulate_once(&cfg, &mut staggered);
+        assert!(r.stats.requests >= 300);
+        assert!(
+            !r.exhausted,
+            "a filled window is a valid measurement regardless of finished cores"
+        );
+    }
 
     fn quick(policy: PolicyKind, wl: &str) -> SimReport {
         let mut cfg = SimConfig::hmc().quick();

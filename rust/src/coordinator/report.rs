@@ -6,7 +6,7 @@ use crate::stats::SimStats;
 use crate::Cycle;
 
 /// Raw results of a single simulation run (one seed).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunReport {
     /// Cycles elapsed over the measured window (fixed request count), the
     /// execution-time proxy used for speedups.
@@ -31,7 +31,7 @@ impl RunReport {
 
 /// Aggregate over `runs` independent seeds (5 in the paper's methodology;
 /// every accessor reports the mean across runs).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SimReport {
     pub workload: String,
     pub policy: &'static str,

@@ -63,6 +63,15 @@ use std::path::PathBuf;
 pub fn run_and_emit(spec: &ExperimentSpec, write_csv: bool) -> Result<PathBuf, String> {
     let run = run_spec(spec)?;
     print_rows(spec, &run);
+    // The warm-rerun contract (asserted by CI's cold-vs-warm check): a
+    // fully cached figure prints `simulated 0` and scheduled no jobs.
+    println!(
+        "{} | points {} | cached {} | simulated {}",
+        spec.artifact_name(),
+        run.from_cache + run.simulated,
+        run.from_cache,
+        run.simulated
+    );
     if write_csv {
         let csv = render_csv(spec, &run).join("\n") + "\n";
         let path = format!("target/figures/{}.csv", spec.artifact_name());

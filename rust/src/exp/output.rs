@@ -330,6 +330,8 @@ mod tests {
                 trace: None,
                 reports: vec![report(2000), report(1000)],
             }],
+            from_cache: 0,
+            simulated: 2,
         }
     }
 

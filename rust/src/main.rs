@@ -31,11 +31,14 @@ fn run(args: &[String]) -> Result<()> {
     }
     // Every known (sub)command declares its flag set; a typo'd flag fails
     // loudly with a did-you-mean instead of silently running defaults.
-    let sub = (cli.command == "trace")
+    let sub = matches!(cli.command.as_str(), "trace" | "cache")
         .then(|| cli.positional.first().map(|s| s.as_str()))
         .flatten();
     if let Some(known) = cli::known_flags(&cli.command, sub) {
         cli.reject_unknown_flags(known).map_err(|e| err!(e))?;
+    }
+    if cli.has("no-disk-cache") {
+        sweep::cache::set_disk_cache_enabled(false);
     }
     match cli.command.as_str() {
         "run" => cmd_run(&cli),
@@ -45,6 +48,7 @@ fn run(args: &[String]) -> Result<()> {
         "workloads" => cmd_workloads(),
         "config" => cmd_config(&cli),
         "trace" => cmd_trace(&cli),
+        "cache" => cmd_cache(&cli),
         "artifacts" => cmd_artifacts(),
         other => bail!("unknown command {other:?}; try `repro help`"),
     }
@@ -330,6 +334,53 @@ fn two_files<'a>(cli: &'a Cli, usage: &str) -> Result<(&'a str, &'a str)> {
     }
 }
 
+/// `repro cache <stats|clear|gc>` — manage the persistent report store
+/// the sweep engine shares across processes.
+fn cmd_cache(cli: &Cli) -> Result<()> {
+    use dlpim::sweep::store::DiskStore;
+    let store = match cli.flag("dir") {
+        Some(dir) => DiskStore::at(dir),
+        None => DiskStore::at(sweep::cache::default_cache_dir()),
+    };
+    let sub = cli.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match sub {
+        "stats" => {
+            let s = store.scan()?;
+            println!("cache dir       {}", store.dir().display());
+            println!("build           {}", dlpim::sweep::store::build_fingerprint());
+            println!(
+                "entries         {} ({:.1} KiB)",
+                s.entries(),
+                s.bytes as f64 / 1024.0
+            );
+            println!("  current       {}", s.current);
+            println!("  stale         {} (other build or format version)", s.stale);
+            println!("  corrupt       {}", s.corrupt);
+            println!("  tmp leftover  {}", s.tmp);
+            Ok(())
+        }
+        "clear" => {
+            let removed = store.clear()?;
+            println!("cleared         {removed} files from {}", store.dir().display());
+            Ok(())
+        }
+        "gc" => {
+            let out = store.gc()?;
+            println!(
+                "gc              kept {} | removed {} (stale {}, corrupt {}, tmp {})",
+                out.kept,
+                out.removed(),
+                out.removed_stale,
+                out.removed_corrupt,
+                out.removed_tmp
+            );
+            Ok(())
+        }
+        "" => bail!("usage: repro cache <stats|clear|gc> [--dir DIR]"),
+        other => bail!("unknown cache subcommand {other:?} (stats|clear|gc)"),
+    }
+}
+
 fn cmd_artifacts() -> Result<()> {
     // Figure JSON artifacts written by the sweep engine.
     let dir = sweep::artifact::artifact_dir();
@@ -417,9 +468,11 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
         // Axis flags next to --spec would be silently shadowed by the
         // file; a user who thinks they overrode an axis must hear about
         // it before a potentially hours-long sweep of the wrong configs.
+        // (`--no-disk-cache` is an execution flag, not an axis: it
+        // composes with --spec.)
         if let Some(extra) = cli::flags::SWEEP
             .iter()
-            .find(|f| **f != "spec" && cli.has(f))
+            .find(|f| **f != "spec" && **f != "no-disk-cache" && cli.has(f))
         {
             bail!(
                 "--{extra} conflicts with --spec {path}: a spec file defines every \

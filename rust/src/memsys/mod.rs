@@ -59,6 +59,13 @@ use crate::subscription::protocol::SubSystem;
 use crate::{Cycle, VaultId};
 
 /// Timing/result decomposition of one served demand access.
+///
+/// Invariant: `queued_net <= queued` — the network share is a *subset* of
+/// the total queue wait, never an independent counter. Every protocol
+/// handler that accumulates a link wait into `queued_net` must add the
+/// same cycles to `queued`; [`ServedRequest::queued_mem`] enforces the
+/// invariant in debug builds and splits saturating in release, so a
+/// protocol bug degrades one stats line instead of panicking mid-figure.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ServedRequest {
     /// Completion cycle.
@@ -67,7 +74,8 @@ pub struct ServedRequest {
     pub network: u64,
     /// Waits: busy links, controller port, busy banks, pending states.
     pub queued: u64,
-    /// Portion of `queued` spent waiting on busy interconnect links/ports.
+    /// Portion of `queued` spent waiting on busy interconnect links/ports
+    /// (see the struct invariant: always `<= queued`).
     pub queued_net: u64,
     /// DRAM array cycles.
     pub array: u64,
@@ -83,6 +91,23 @@ pub struct ServedRequest {
     pub subscribed_path: bool,
     /// Subscription-table set of the accessed block.
     pub set: u32,
+}
+
+impl ServedRequest {
+    /// Queue cycles spent at vault controllers / banks: the complement of
+    /// `queued_net` within `queued`. Debug builds assert the struct
+    /// invariant (`queued_net <= queued`); release builds saturate, so a
+    /// violating request can skew one queue-split line but never panic or
+    /// underflow mid-figure.
+    pub fn queued_mem(&self) -> u64 {
+        debug_assert!(
+            self.queued_net <= self.queued,
+            "ServedRequest invariant violated: queued_net {} > queued {}",
+            self.queued_net,
+            self.queued
+        );
+        self.queued.saturating_sub(self.queued_net)
+    }
 }
 
 /// The complete memory system of one simulation run.
@@ -276,6 +301,29 @@ mod tests {
         };
         mem.broadcast_decision(&d);
         assert!(mem.stats().traffic.total_bytes() > before);
+    }
+
+    #[test]
+    fn queued_mem_is_the_non_network_share() {
+        let res = ServedRequest { queued: 7, queued_net: 3, ..Default::default() };
+        assert_eq!(res.queued_mem(), 4);
+        let all_net = ServedRequest { queued: 5, queued_net: 5, ..Default::default() };
+        assert_eq!(all_net.queued_mem(), 0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "queued_net")]
+    fn queued_mem_invariant_violation_panics_in_debug() {
+        let bad = ServedRequest { queued: 1, queued_net: 2, ..Default::default() };
+        let _ = bad.queued_mem();
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn queued_mem_saturates_in_release() {
+        let bad = ServedRequest { queued: 1, queued_net: 2, ..Default::default() };
+        assert_eq!(bad.queued_mem(), 0);
     }
 
     #[test]

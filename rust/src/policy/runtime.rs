@@ -31,7 +31,7 @@ pub enum SetGroup {
 }
 
 /// One epoch-boundary decision (logged for tests, figures and the CLI).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct EpochDecision {
     pub epoch: u64,
     pub at: Cycle,

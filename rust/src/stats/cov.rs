@@ -6,7 +6,7 @@
 //! at those vaults — the imbalance DL-PIM's subscriptions flatten.
 
 /// Per-vault served-request counters.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct VaultDemand {
     counts: Vec<u64>,
 }
@@ -14,6 +14,12 @@ pub struct VaultDemand {
 impl VaultDemand {
     pub fn new(n_vaults: u16) -> Self {
         VaultDemand { counts: vec![0; n_vaults as usize] }
+    }
+
+    /// Rebuild from previously captured per-vault counts (the disk cache's
+    /// deserializer). The vault count is the vector's length.
+    pub fn from_counts(counts: Vec<u64>) -> Self {
+        VaultDemand { counts }
     }
 
     #[inline]

@@ -13,7 +13,7 @@ pub use reuse::ReuseStats;
 pub use traffic::TrafficStats;
 
 /// All per-run statistics, reset together after warmup.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct SimStats {
     pub latency: LatencyBreakdown,
     pub demand: VaultDemand,

@@ -1,4 +1,5 @@
-//! Process-wide report cache keyed by config hash.
+//! Process-wide report cache keyed by config hash, with a persistent
+//! second level on disk.
 //!
 //! A figure suite re-runs the same (workload, config) points many times —
 //! fig 9 and fig 10 share the always-subscribe HMC runs, every HMC figure
@@ -8,11 +9,20 @@
 //! (policy, table geometry, scale knobs, seed) yields a distinct key while
 //! repeated figure targets reuse results for free. Reports are
 //! deterministic functions of their point, so reuse is transparent.
+//!
+//! The in-memory map here is the first level; [`super::store::DiskStore`]
+//! persists the same keyed reports across processes (warm `repro` reruns,
+//! interrupted sweeps, CI matrix legs). This module owns the *process
+//! defaults* for that second level: the directory (`REPRO_CACHE_DIR`, or
+//! `target/repro/cache`) and the kill switches (`--no-disk-cache` via
+//! [`set_disk_cache_enabled`], or `REPRO_NO_DISK_CACHE=1`).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
+use super::store::DiskStore;
 use crate::config::{presets, SimConfig};
 use crate::coordinator::report::SimReport;
 
@@ -90,8 +100,45 @@ pub fn entries() -> usize {
 }
 
 /// Drop every cached report (tests; long-lived tools sweeping huge grids).
+/// Only the in-memory level — the on-disk store is managed by
+/// `repro cache clear|gc`.
 pub fn clear() {
     cache().lock().unwrap().clear();
+}
+
+// ---------------------------------------------------------------------
+// Process defaults for the persistent second level.
+// ---------------------------------------------------------------------
+
+static DISK_DISABLED: AtomicBool = AtomicBool::new(false);
+
+/// Enable/disable the process-default disk store (the CLI's
+/// `--no-disk-cache`). Sweeps that were handed an explicit store are not
+/// affected.
+pub fn set_disk_cache_enabled(yes: bool) {
+    DISK_DISABLED.store(!yes, Ordering::Relaxed);
+}
+
+/// The directory the process-default disk store lives in:
+/// `REPRO_CACHE_DIR`, or `target/repro/cache`.
+pub fn default_cache_dir() -> PathBuf {
+    std::env::var("REPRO_CACHE_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("target/repro/cache"))
+}
+
+/// The process-default disk store, or `None` when persistence is turned
+/// off (`--no-disk-cache`, or `REPRO_NO_DISK_CACHE=1` in the environment).
+pub fn default_disk_store() -> Option<DiskStore> {
+    if DISK_DISABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    if let Ok(v) = std::env::var("REPRO_NO_DISK_CACHE") {
+        if v == "1" || v.eq_ignore_ascii_case("true") {
+            return None;
+        }
+    }
+    Some(DiskStore::at(default_cache_dir()))
 }
 
 #[cfg(test)]

@@ -80,7 +80,8 @@ impl JsonValue {
     }
 }
 
-fn escape_into(s: &str, out: &mut String) {
+/// JSON string escaping (shared with the disk cache's entry writer).
+pub(crate) fn escape_into(s: &str, out: &mut String) {
     for c in s.chars() {
         match c {
             '"' => out.push_str("\\\""),

@@ -16,6 +16,12 @@
 //! * a **report cache** ([`cache`]) keyed by config hash, so the many
 //!   figure targets that share points (every HMC figure reuses the
 //!   baseline runs) compute each point once per process;
+//! * a **persistent content-addressed store** ([`store`]) under the same
+//!   keys: before a job is scheduled the engine checks
+//!   `target/repro/cache/<key>.json`, and every computed report is flushed
+//!   there as its job completes — so a warm rerun of the whole figure
+//!   suite schedules zero simulations, and an interrupted sweep resumes
+//!   from its completed points;
 //! * **JSON artifact emission** ([`artifact`]) to `target/repro/*.json`,
 //!   consumed by the CLI, the benches and the CI figure-smoke job.
 
@@ -23,13 +29,16 @@ pub mod artifact;
 pub mod cache;
 pub mod json;
 pub mod scheduler;
+pub mod store;
 
 use std::panic::{AssertUnwindSafe, catch_unwind};
+use std::path::PathBuf;
 
 use crate::config::SimConfig;
 use crate::coordinator::driver::simulate;
 use crate::coordinator::report::SimReport;
 use crate::workloads::build_source;
+use store::DiskStore;
 
 /// One (workload, config) point of a sweep.
 #[derive(Clone, Debug)]
@@ -105,16 +114,32 @@ impl JobOutcome {
     }
 }
 
+/// Which persistent store a sweep consults (the in-memory level is
+/// always first).
+#[derive(Clone, Debug, Default)]
+pub enum DiskCache {
+    /// The process default: `REPRO_CACHE_DIR` or `target/repro/cache`,
+    /// unless disabled (`--no-disk-cache` / `REPRO_NO_DISK_CACHE=1`).
+    #[default]
+    Default,
+    /// In-memory caching only; nothing persists.
+    Off,
+    /// An explicit store directory (hermetic tests, tools managing
+    /// several stores).
+    Dir(PathBuf),
+}
+
 /// Builder for a parallel sweep.
 pub struct Sweep {
     points: Vec<SweepPoint>,
     threads: Option<usize>,
     use_cache: bool,
+    disk: DiskCache,
 }
 
 impl Sweep {
     pub fn new(points: Vec<SweepPoint>) -> Self {
-        Sweep { points, threads: None, use_cache: true }
+        Sweep { points, threads: None, use_cache: true, disk: DiskCache::Default }
     }
 
     /// The full cross product `names x cfgs`, in `[workload][config]`
@@ -135,9 +160,17 @@ impl Sweep {
     }
 
     /// Enable/disable the report cache for this sweep (on by default;
-    /// determinism tests turn it off to force recomputation).
+    /// determinism tests turn it off to force recomputation). Disabling
+    /// it also disables disk persistence.
     pub fn use_cache(mut self, yes: bool) -> Self {
         self.use_cache = yes;
+        self
+    }
+
+    /// Choose the persistent store for this sweep (defaults to the
+    /// process-wide store; see [`DiskCache`]).
+    pub fn disk_cache(mut self, disk: DiskCache) -> Self {
+        self.disk = disk;
         self
     }
 
@@ -146,11 +179,41 @@ impl Sweep {
         let n = self.points.len();
         let mut outcomes: Vec<Option<JobOutcome>> = (0..n).map(|_| None).collect();
 
-        // Cache pass: satisfy what we can without scheduling a job.
+        let disk: Option<DiskStore> = if self.use_cache {
+            match &self.disk {
+                DiskCache::Default => cache::default_disk_store(),
+                DiskCache::Off => None,
+                DiskCache::Dir(dir) => Some(DiskStore::at(dir.clone())),
+            }
+        } else {
+            None
+        };
+
+        // Each point's key is computed once and reused by the cache pass
+        // and the job's store/flush — trace-backed keys hash the trace
+        // file's contents, so recomputing per use would re-read the file.
+        let keys: Vec<u64> = if self.use_cache {
+            self.points.iter().map(|p| p.key()).collect()
+        } else {
+            vec![0; n]
+        };
+
+        // Cache pass: satisfy what we can without scheduling a job —
+        // first the in-memory level, then the persistent store (which is
+        // what makes an interrupted sweep resume from completed points).
         let mut live: Vec<usize> = Vec::with_capacity(n);
         for (i, p) in self.points.iter().enumerate() {
             if self.use_cache {
-                if let Some(rep) = cache::lookup(p.key()) {
+                let key = keys[i];
+                let hit = cache::lookup(key).or_else(|| {
+                    disk.as_ref().and_then(|d| d.load(key)).map(|rep| {
+                        // Promote so later figures in this process skip
+                        // the file read too.
+                        cache::store(key, &rep);
+                        rep
+                    })
+                });
+                if let Some(rep) = hit {
                     outcomes[i] = Some(JobOutcome {
                         workload: p.workload.clone(),
                         result: Ok(rep),
@@ -164,9 +227,11 @@ impl Sweep {
 
         let threads = self.threads.unwrap_or_else(scheduler::default_threads);
         let points = &self.points;
+        let keys = &keys;
         let use_cache = self.use_cache;
+        let disk_ref = disk.as_ref();
         let computed = scheduler::run_jobs(live.len(), threads, |k| {
-            run_point(&points[live[k]], use_cache)
+            run_point(&points[live[k]], keys[live[k]], use_cache, disk_ref)
         });
         for (slot, outcome) in live.iter().zip(computed) {
             outcomes[*slot] = Some(outcome);
@@ -176,8 +241,9 @@ impl Sweep {
 }
 
 /// Execute one point with panic isolation: a workload that panics (or that
-/// does not exist) poisons only its own job.
-fn run_point(point: &SweepPoint, use_cache: bool) -> JobOutcome {
+/// does not exist) poisons only its own job. `key` is the point's cache
+/// key, computed once by the caller (meaningless when `use_cache` is off).
+fn run_point(point: &SweepPoint, key: u64, use_cache: bool, disk: Option<&DiskStore>) -> JobOutcome {
     let cfg = point.job_cfg();
     let name = point.workload.clone();
     let result = catch_unwind(AssertUnwindSafe(|| {
@@ -190,7 +256,13 @@ fn run_point(point: &SweepPoint, use_cache: bool) -> JobOutcome {
     match result {
         Ok(report) => {
             if use_cache {
-                cache::store(point.key(), &report);
+                cache::store(key, &report);
+                // Flush to disk as the job completes (not at sweep end),
+                // so a killed sweep keeps everything it finished. A failed
+                // write only costs a future recompute — never the job.
+                if let Some(d) = disk {
+                    let _ = d.save(key, &report);
+                }
             }
             JobOutcome { workload: name, result: Ok(report), from_cache: false }
         }

@@ -1,0 +1,1053 @@
+//! The persistent, content-addressed report store behind the sweep
+//! engine's disk cache.
+//!
+//! Every completed [`SweepPoint`](super::SweepPoint) result can be written
+//! to `<cache dir>/<key>.json`, where `key` is the existing
+//! [`super::cache::config_key`] — an FNV-1a hash over the workload name,
+//! the fully rendered config and (for trace-backed points) the trace
+//! file's *contents*. Because reports are deterministic functions of their
+//! point, a stored entry is valid for any later process running the same
+//! build, which is what makes warm `repro figure` / `repro sweep` reruns
+//! free and interrupted sweeps resumable.
+//!
+//! ## Entry format
+//!
+//! One JSON object per entry, with a header that must validate before the
+//! body is trusted:
+//!
+//! ```text
+//! {"format":1,                 file-format version (FORMAT_VERSION)
+//!  "build":"<16 hex>",         fingerprint of the src/ tree that wrote it
+//!  "key":"<16 hex>",           the content-addressed cache key
+//!  "body_hash":"<16 hex>",     FNV-1a of the canonical body encoding
+//!  "report":{"workload":…, "policy":…, "runs":[…]}}   the SimReport
+//! ```
+//!
+//! `body_hash` is verified against the *re-encoding* of the decoded
+//! report, so corruption that still parses as JSON (a flipped digit in a
+//! counter) is rejected as corrupt instead of being served as a wrong
+//! figure value.
+//!
+//! `build` embeds [`build_fingerprint`] — a compile-time hash of the
+//! crate's own `src/` tree (see `build.rs`) — so entries written by a
+//! *different simulator* (e.g. a CI-cached `target/` restored across
+//! commits) are stale, never wrong answers. All integers are written as
+//! exact decimal JSON integers (no f64 round-trip), so a warm run's
+//! artifacts are byte-identical to the cold run's.
+//!
+//! ## Crash and corruption behaviour
+//!
+//! * Writes go to a hidden `.*.tmp` file in the same directory and are
+//!   published with an atomic `rename`, so concurrent readers (another
+//!   `repro` process sharing the store) never observe a torn entry.
+//! * Reads treat *any* defect — unreadable file, truncated/garbage JSON,
+//!   format-version or build-fingerprint mismatch, key mismatch — as a
+//!   plain cache miss: the point is recomputed and the entry rewritten.
+//!   A poisoned cache can cost time, never correctness, and never panics.
+//! * `repro cache stats|clear|gc` manages the store; `gc` removes stale
+//!   and corrupt entries (plus temp files old enough to only be crash
+//!   leftovers, never a live writer's) while keeping current entries.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::report::{RunReport, SimReport};
+use crate::policy::{EpochDecision, PolicyKind};
+use crate::stats::{LatencyBreakdown, ReuseStats, SimStats, TrafficStats, VaultDemand};
+
+/// On-disk entry format version; bump on any layout change so old entries
+/// read as stale instead of misparsing.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Compile-time fingerprint of this build's `src/` tree (see `build.rs`).
+/// Entries written by a different fingerprint are stale.
+pub fn build_fingerprint() -> &'static str {
+    env!("DLPIM_SRC_FINGERPRINT")
+}
+
+/// A persistent report store rooted at one directory. Cheap to clone and
+/// `Sync`: all state lives in the filesystem.
+#[derive(Clone, Debug)]
+pub struct DiskStore {
+    dir: PathBuf,
+}
+
+/// What a scan of the store directory found.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Entries readable by this build.
+    pub current: usize,
+    /// Well-formed entries from another format version or build.
+    pub stale: usize,
+    /// Unparseable or mis-keyed entries.
+    pub corrupt: usize,
+    /// Leftover temporary files (a crashed writer).
+    pub tmp: usize,
+    /// Total bytes across all of the above.
+    pub bytes: u64,
+}
+
+impl StoreStats {
+    pub fn entries(&self) -> usize {
+        self.current + self.stale + self.corrupt
+    }
+}
+
+/// What `gc` removed and kept.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcOutcome {
+    pub kept: usize,
+    pub removed_stale: usize,
+    pub removed_corrupt: usize,
+    pub removed_tmp: usize,
+}
+
+impl GcOutcome {
+    pub fn removed(&self) -> usize {
+        self.removed_stale + self.removed_corrupt + self.removed_tmp
+    }
+}
+
+/// Why an entry failed to decode: stale entries are *expected* (another
+/// build wrote them); corrupt ones indicate truncation or tampering. Both
+/// read as cache misses; `gc`/`stats` report them separately. The
+/// messages exist for debugging sessions; no caller reads them.
+enum DecodeError {
+    Stale(#[allow(dead_code)] String),
+    Corrupt(#[allow(dead_code)] String),
+}
+
+impl DiskStore {
+    /// A store rooted at `dir` (created lazily on first save).
+    pub fn at(dir: impl Into<PathBuf>) -> Self {
+        DiskStore { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of the entry for `key`.
+    pub fn entry_path(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.json"))
+    }
+
+    /// Load the report stored under `key`, or `None` on any miss, defect
+    /// or mismatch. Never panics: a poisoned entry is just a recompute.
+    pub fn load(&self, key: u64) -> Option<SimReport> {
+        let text = std::fs::read_to_string(self.entry_path(key)).ok()?;
+        decode(&text, key).ok()
+    }
+
+    /// Persist `report` under `key`: serialize, write to a same-directory
+    /// temp file, publish with an atomic rename. Concurrent writers of the
+    /// same key race benignly (identical content, last rename wins).
+    pub fn save(&self, key: u64, report: &SimReport) -> io::Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.entry_path(key);
+        write_atomic(&path, encode(key, report).as_bytes())?;
+        Ok(path)
+    }
+
+    /// Classify everything in the store directory. A missing directory is
+    /// an empty store.
+    pub fn scan(&self) -> io::Result<StoreStats> {
+        let mut stats = StoreStats::default();
+        for (path, kind) in self.classify_dir()? {
+            match kind {
+                FileKind::Current => stats.current += 1,
+                FileKind::Stale => stats.stale += 1,
+                FileKind::Corrupt => stats.corrupt += 1,
+                FileKind::Tmp => stats.tmp += 1,
+                FileKind::Foreign => continue,
+            }
+            stats.bytes += std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        }
+        Ok(stats)
+    }
+
+    /// Remove every entry and temp file (files this store did not write —
+    /// wrong name shape — are left alone). Returns the number removed.
+    /// Classification is by *name only*: clear deletes entries whatever
+    /// their contents, so there is no reason to read them.
+    pub fn clear(&self) -> io::Result<usize> {
+        let mut removed = 0;
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(0),
+            Err(e) => return Err(e),
+        };
+        for entry in entries {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            let ours = entry_key(name).is_some()
+                || (name.starts_with('.') && name.ends_with(".tmp"));
+            if ours && std::fs::remove_file(&path).is_ok() {
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+
+    /// Remove stale and corrupt entries, keep entries this build can
+    /// still serve. Temp files are removed only once they are older than
+    /// an hour — a *live* writer's temp file (another process's sweep
+    /// mid-publish) must survive a concurrent `repro cache gc`; only a
+    /// crashed writer leaves temp files that old.
+    pub fn gc(&self) -> io::Result<GcOutcome> {
+        self.gc_with_tmp_age(std::time::Duration::from_secs(3600))
+    }
+
+    /// [`Self::gc`] with an explicit temp-file age threshold (tests).
+    pub fn gc_with_tmp_age(&self, tmp_older_than: std::time::Duration) -> io::Result<GcOutcome> {
+        let mut out = GcOutcome::default();
+        for (path, kind) in self.classify_dir()? {
+            match kind {
+                FileKind::Current => out.kept += 1,
+                FileKind::Foreign => {}
+                FileKind::Stale => {
+                    if std::fs::remove_file(&path).is_ok() {
+                        out.removed_stale += 1;
+                    }
+                }
+                FileKind::Corrupt => {
+                    if std::fs::remove_file(&path).is_ok() {
+                        out.removed_corrupt += 1;
+                    }
+                }
+                FileKind::Tmp => {
+                    let age = std::fs::metadata(&path)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|m| std::time::SystemTime::now().duration_since(m).ok())
+                        .unwrap_or_default();
+                    if age >= tmp_older_than && std::fs::remove_file(&path).is_ok() {
+                        out.removed_tmp += 1;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn classify_dir(&self) -> io::Result<Vec<(PathBuf, FileKind)>> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(out),
+            Err(e) => return Err(e),
+        };
+        for entry in entries {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            let kind = if name.starts_with('.') && name.ends_with(".tmp") {
+                FileKind::Tmp
+            } else if let Some(key) = entry_key(name) {
+                match std::fs::read_to_string(&path) {
+                    Err(_) => FileKind::Corrupt,
+                    Ok(text) => match decode(&text, key) {
+                        Ok(_) => FileKind::Current,
+                        Err(DecodeError::Stale(_)) => FileKind::Stale,
+                        Err(DecodeError::Corrupt(_)) => FileKind::Corrupt,
+                    },
+                }
+            } else {
+                // Not a name this store writes; never touch it.
+                FileKind::Foreign
+            };
+            out.push((path, kind));
+        }
+        Ok(out)
+    }
+}
+
+enum FileKind {
+    Current,
+    Stale,
+    Corrupt,
+    Tmp,
+    Foreign,
+}
+
+/// Publish `bytes` at `path` via a uniquely named same-directory temp
+/// file (`.{name}.{pid}.{seq}.tmp` — pid *and* a process-wide sequence,
+/// so concurrent threads of one process never share a temp file) and an
+/// atomic rename. Shared by the report store and the trace writers.
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    let mut tmp = path.to_path_buf();
+    tmp.set_file_name(format!(
+        ".{name}.{}.{}.tmp",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, bytes)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+/// `<16 hex>.json` → the key; anything else is not ours.
+fn entry_key(name: &str) -> Option<u64> {
+    let stem = name.strip_suffix(".json")?;
+    if stem.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(stem, 16).ok()
+}
+
+// ---------------------------------------------------------------------
+// Serialization. Hand-rolled (like sweep::json) because the cache needs
+// *exact* u64 round-trips: JsonValue renders through f64, which silently
+// rounds counters above 2^53. Integers are written as plain decimal JSON
+// integers and parsed back with `u64::from_str`, so a disk round-trip is
+// lossless and warm artifacts stay byte-identical.
+// ---------------------------------------------------------------------
+
+fn push_str(out: &mut String, s: &str) {
+    out.push('"');
+    super::json::escape_into(s, out);
+    out.push('"');
+}
+
+fn push_f64(out: &mut String, v: f64) {
+    // Rust's f64 Display is the shortest representation that parses back
+    // to the same bits, so finite values round-trip exactly.
+    if v.is_finite() {
+        out.push_str(&format!("{v}"));
+    } else {
+        out.push_str("null");
+    }
+}
+
+fn push_u64s(out: &mut String, vs: &[u64]) {
+    out.push('[');
+    for (i, v) in vs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&v.to_string());
+    }
+    out.push(']');
+}
+
+/// FNV-1a over a byte string (the body-integrity hash).
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Canonical body encoding of a report — the hashed portion of an entry.
+/// Deterministic and round-trip-stable: `encode_body(decode(x)) ==
+/// encode_body(original)` iff the decoded report equals the original
+/// (integers are exact; f64 uses the shortest round-trip form).
+fn encode_body(report: &SimReport) -> String {
+    let mut s = String::with_capacity(1024);
+    s.push_str("{\"workload\":");
+    push_str(&mut s, &report.workload);
+    s.push_str(",\"policy\":");
+    push_str(&mut s, report.policy);
+    s.push_str(",\"runs\":[");
+    for (i, run) in report.runs.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        encode_run(&mut s, run);
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Serialize one cache entry.
+pub(crate) fn encode(key: u64, report: &SimReport) -> String {
+    let body = encode_body(report);
+    format!(
+        "{{\"format\":{FORMAT_VERSION},\"build\":\"{}\",\"key\":\"{key:016x}\",\
+         \"body_hash\":\"{:016x}\",\"report\":{body}}}\n",
+        build_fingerprint(),
+        fnv64(body.as_bytes())
+    )
+}
+
+fn encode_run(s: &mut String, run: &RunReport) {
+    s.push_str("{\"cycles\":");
+    s.push_str(&run.cycles.to_string());
+    s.push_str(",\"exhausted\":");
+    s.push_str(if run.exhausted { "true" } else { "false" });
+    s.push_str(",\"decisions\":[");
+    for (i, d) in run.decisions.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push('[');
+        s.push_str(&d.epoch.to_string());
+        s.push(',');
+        s.push_str(&d.at.to_string());
+        s.push(',');
+        s.push_str(if d.enabled { "true" } else { "false" });
+        s.push(',');
+        s.push_str(&d.vaults_enabled.to_string());
+        s.push(',');
+        match d.avg_latency {
+            Some(v) => push_f64(s, v),
+            None => s.push_str("null"),
+        }
+        s.push(']');
+    }
+    s.push_str("],\"stats\":{\"latency\":");
+    let l = &run.stats.latency;
+    push_u64s(s, &[l.network, l.queue, l.array, l.requests]);
+    s.push_str(",\"demand\":");
+    push_u64s(s, run.stats.demand.counts());
+    s.push_str(",\"traffic\":");
+    push_u64s(s, &[run.stats.traffic.demand_bytes, run.stats.traffic.subscription_bytes]);
+    s.push_str(",\"reuse\":");
+    let r = &run.stats.reuse;
+    push_u64s(s, &[r.subscriptions, r.local_hits, r.remote_hits]);
+    s.push_str(",\"counters\":");
+    push_u64s(
+        s,
+        &[
+            run.stats.requests,
+            run.stats.queue_net,
+            run.stats.queue_mem,
+            run.stats.l1_hits,
+            run.stats.local_requests,
+            run.stats.subscriptions,
+            run.stats.sub_nacks,
+            run.stats.unsubscriptions,
+            run.stats.resubscriptions,
+        ],
+    );
+    s.push_str("}}");
+}
+
+/// Parse + validate one entry against the key it claims to serve.
+fn decode(text: &str, expected_key: u64) -> Result<SimReport, DecodeError> {
+    let doc = parse::parse(text).map_err(DecodeError::Corrupt)?;
+    let top = doc.obj().map_err(DecodeError::Corrupt)?;
+
+    // Header first: version and build gate everything else.
+    let format = field(top, "format").map_err(DecodeError::Corrupt)?;
+    let format = format.u64().map_err(DecodeError::Corrupt)?;
+    if format != FORMAT_VERSION as u64 {
+        return Err(DecodeError::Stale(format!(
+            "entry format v{format}, this build reads v{FORMAT_VERSION}"
+        )));
+    }
+    let build = field(top, "build")
+        .and_then(|v| v.str())
+        .map_err(DecodeError::Corrupt)?;
+    if build != build_fingerprint() {
+        return Err(DecodeError::Stale(format!(
+            "entry written by build {build}, this build is {}",
+            build_fingerprint()
+        )));
+    }
+    let key = field(top, "key").and_then(|v| v.str()).map_err(DecodeError::Corrupt)?;
+    if key != format!("{expected_key:016x}") {
+        return Err(DecodeError::Corrupt(format!(
+            "entry claims key {key}, expected {expected_key:016x}"
+        )));
+    }
+
+    let report = (|| -> Result<SimReport, String> {
+        let body = field(top, "report")?.obj()?;
+        let workload = field(body, "workload")?.str()?.to_string();
+        let policy_name = field(body, "policy")?.str()?;
+        let policy = PolicyKind::parse(policy_name)
+            .ok_or_else(|| format!("unknown policy {policy_name:?}"))?
+            .as_str();
+        let runs = field(body, "runs")?
+            .arr()?
+            .iter()
+            .map(decode_run)
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(SimReport { workload, policy, runs })
+    })()
+    .map_err(DecodeError::Corrupt)?;
+
+    // Body integrity: the stored hash must match the canonical
+    // re-encoding of what we just decoded, so corruption that still
+    // parses (a flipped digit) cannot surface as a wrong figure value.
+    let stored = field(top, "body_hash")
+        .and_then(|v| v.str())
+        .map_err(DecodeError::Corrupt)?;
+    let actual = format!("{:016x}", fnv64(encode_body(&report).as_bytes()));
+    if stored != actual {
+        return Err(DecodeError::Corrupt(format!(
+            "body hash mismatch: entry says {stored}, body is {actual}"
+        )));
+    }
+    Ok(report)
+}
+
+fn decode_run(v: &parse::Jv) -> Result<RunReport, String> {
+    let run = v.obj()?;
+    let cycles = field(run, "cycles")?.u64()?;
+    let exhausted = field(run, "exhausted")?.boolean()?;
+    let decisions = field(run, "decisions")?
+        .arr()?
+        .iter()
+        .map(|d| {
+            let d = d.arr()?;
+            if d.len() != 5 {
+                return Err(format!("decision tuple has {} fields, expected 5", d.len()));
+            }
+            Ok(EpochDecision {
+                epoch: d[0].u64()?,
+                at: d[1].u64()?,
+                enabled: d[2].boolean()?,
+                vaults_enabled: u32::try_from(d[3].u64()?)
+                    .map_err(|_| "vaults_enabled out of range".to_string())?,
+                avg_latency: match &d[4] {
+                    parse::Jv::Null => None,
+                    other => Some(other.f64()?),
+                },
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+
+    let stats_obj = field(run, "stats")?.obj()?;
+    let lat = u64s(field(stats_obj, "latency")?, 4)?;
+    let demand = field(stats_obj, "demand")?
+        .arr()?
+        .iter()
+        .map(|v| v.u64())
+        .collect::<Result<Vec<_>, String>>()?;
+    if demand.len() > u16::MAX as usize {
+        return Err(format!("demand counts {} vaults (max {})", demand.len(), u16::MAX));
+    }
+    let traffic = u64s(field(stats_obj, "traffic")?, 2)?;
+    let reuse = u64s(field(stats_obj, "reuse")?, 3)?;
+    let c = u64s(field(stats_obj, "counters")?, 9)?;
+
+    let stats = SimStats {
+        latency: LatencyBreakdown {
+            network: lat[0],
+            queue: lat[1],
+            array: lat[2],
+            requests: lat[3],
+        },
+        demand: VaultDemand::from_counts(demand),
+        traffic: TrafficStats { demand_bytes: traffic[0], subscription_bytes: traffic[1] },
+        reuse: ReuseStats {
+            subscriptions: reuse[0],
+            local_hits: reuse[1],
+            remote_hits: reuse[2],
+        },
+        requests: c[0],
+        queue_net: c[1],
+        queue_mem: c[2],
+        l1_hits: c[3],
+        local_requests: c[4],
+        subscriptions: c[5],
+        sub_nacks: c[6],
+        unsubscriptions: c[7],
+        resubscriptions: c[8],
+    };
+    Ok(RunReport { cycles, stats, decisions, exhausted })
+}
+
+fn field<'a>(obj: &'a [(String, parse::Jv)], key: &str) -> Result<&'a parse::Jv, String> {
+    obj.iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v)
+        .ok_or_else(|| format!("missing field {key:?}"))
+}
+
+fn u64s(v: &parse::Jv, expect: usize) -> Result<Vec<u64>, String> {
+    let arr = v.arr()?;
+    if arr.len() != expect {
+        return Err(format!("array has {} values, expected {expect}", arr.len()));
+    }
+    arr.iter().map(|v| v.u64()).collect()
+}
+
+/// Minimal JSON parser for cache entries (the crate's `sweep::json` is a
+/// writer only). Numbers are kept as raw text so integers convert without
+/// an f64 round-trip; all errors are `String`s — the store maps them to
+/// cache misses, never panics.
+mod parse {
+    /// A parsed JSON value; numbers stay raw until a type is requested.
+    #[derive(Clone, Debug, PartialEq)]
+    pub(super) enum Jv {
+        Null,
+        Bool(bool),
+        Num(String),
+        Str(String),
+        Arr(Vec<Jv>),
+        Obj(Vec<(String, Jv)>),
+    }
+
+    impl Jv {
+        pub(super) fn obj(&self) -> Result<&[(String, Jv)], String> {
+            match self {
+                Jv::Obj(kvs) => Ok(kvs),
+                other => Err(format!("expected object, got {}", kind(other))),
+            }
+        }
+
+        pub(super) fn arr(&self) -> Result<&[Jv], String> {
+            match self {
+                Jv::Arr(vs) => Ok(vs),
+                other => Err(format!("expected array, got {}", kind(other))),
+            }
+        }
+
+        pub(super) fn str(&self) -> Result<&str, String> {
+            match self {
+                Jv::Str(s) => Ok(s),
+                other => Err(format!("expected string, got {}", kind(other))),
+            }
+        }
+
+        pub(super) fn boolean(&self) -> Result<bool, String> {
+            match self {
+                Jv::Bool(b) => Ok(*b),
+                other => Err(format!("expected bool, got {}", kind(other))),
+            }
+        }
+
+        pub(super) fn u64(&self) -> Result<u64, String> {
+            match self {
+                Jv::Num(raw) => raw
+                    .parse::<u64>()
+                    .map_err(|_| format!("expected unsigned integer, got {raw:?}")),
+                other => Err(format!("expected number, got {}", kind(other))),
+            }
+        }
+
+        pub(super) fn f64(&self) -> Result<f64, String> {
+            match self {
+                Jv::Num(raw) => {
+                    raw.parse::<f64>().map_err(|_| format!("bad number {raw:?}"))
+                }
+                other => Err(format!("expected number, got {}", kind(other))),
+            }
+        }
+    }
+
+    fn kind(v: &Jv) -> &'static str {
+        match v {
+            Jv::Null => "null",
+            Jv::Bool(_) => "bool",
+            Jv::Num(_) => "number",
+            Jv::Str(_) => "string",
+            Jv::Arr(_) => "array",
+            Jv::Obj(_) => "object",
+        }
+    }
+
+    /// Deep-nesting guard: no legitimate entry nests past a handful of
+    /// levels, and a hostile `[[[[…` must not blow the stack.
+    const MAX_DEPTH: u32 = 64;
+
+    pub(super) fn parse(text: &str) -> Result<Jv, String> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing bytes at offset {}", p.i));
+        }
+        Ok(v)
+    }
+
+    struct Parser<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+
+    impl Parser<'_> {
+        fn skip_ws(&mut self) {
+            while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+                self.i += 1;
+            }
+        }
+
+        fn value(&mut self, depth: u32) -> Result<Jv, String> {
+            if depth > MAX_DEPTH {
+                return Err("nesting too deep".into());
+            }
+            match self.b.get(self.i) {
+                None => Err("unexpected end of input".into()),
+                Some(b'{') => self.object(depth),
+                Some(b'[') => self.array(depth),
+                Some(b'"') => Ok(Jv::Str(self.string()?)),
+                Some(b't') => self.literal("true", Jv::Bool(true)),
+                Some(b'f') => self.literal("false", Jv::Bool(false)),
+                Some(b'n') => self.literal("null", Jv::Null),
+                Some(c) if c.is_ascii_digit() || *c == b'-' => self.number(),
+                Some(c) => Err(format!("unexpected byte {:?} at offset {}", *c as char, self.i)),
+            }
+        }
+
+        fn literal(&mut self, word: &str, v: Jv) -> Result<Jv, String> {
+            if self.b[self.i..].starts_with(word.as_bytes()) {
+                self.i += word.len();
+                Ok(v)
+            } else {
+                Err(format!("bad literal at offset {}", self.i))
+            }
+        }
+
+        fn number(&mut self) -> Result<Jv, String> {
+            let start = self.i;
+            while matches!(
+                self.b.get(self.i),
+                Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            ) {
+                self.i += 1;
+            }
+            let raw = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+            // Validate now so a malformed token fails the parse, not a
+            // later typed read.
+            raw.parse::<f64>().map_err(|_| format!("bad number {raw:?}"))?;
+            Ok(Jv::Num(raw.to_string()))
+        }
+
+        fn string(&mut self) -> Result<String, String> {
+            self.i += 1; // opening quote
+            let mut out = String::new();
+            loop {
+                match self.b.get(self.i) {
+                    None => return Err("unterminated string".into()),
+                    Some(b'"') => {
+                        self.i += 1;
+                        return Ok(out);
+                    }
+                    Some(b'\\') => {
+                        self.i += 1;
+                        match self.b.get(self.i) {
+                            Some(b'"') => out.push('"'),
+                            Some(b'\\') => out.push('\\'),
+                            Some(b'/') => out.push('/'),
+                            Some(b'n') => out.push('\n'),
+                            Some(b'r') => out.push('\r'),
+                            Some(b't') => out.push('\t'),
+                            Some(b'b') => out.push('\u{8}'),
+                            Some(b'f') => out.push('\u{c}'),
+                            Some(b'u') => {
+                                let hex = self
+                                    .b
+                                    .get(self.i + 1..self.i + 5)
+                                    .ok_or("truncated \\u escape")?;
+                                let code = u32::from_str_radix(
+                                    std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?,
+                                    16,
+                                )
+                                .map_err(|_| "bad \\u escape")?;
+                                out.push(
+                                    char::from_u32(code).ok_or("bad \\u code point")?,
+                                );
+                                self.i += 4;
+                            }
+                            _ => return Err("bad escape".into()),
+                        }
+                        self.i += 1;
+                    }
+                    Some(_) => {
+                        // Consume one UTF-8 scalar (entries are valid UTF-8:
+                        // read_to_string already validated).
+                        let rest = std::str::from_utf8(&self.b[self.i..])
+                            .map_err(|_| "invalid UTF-8")?;
+                        let c = rest.chars().next().unwrap();
+                        out.push(c);
+                        self.i += c.len_utf8();
+                    }
+                }
+            }
+        }
+
+        fn array(&mut self, depth: u32) -> Result<Jv, String> {
+            self.i += 1; // '['
+            let mut out = Vec::new();
+            self.skip_ws();
+            if self.b.get(self.i) == Some(&b']') {
+                self.i += 1;
+                return Ok(Jv::Arr(out));
+            }
+            loop {
+                self.skip_ws();
+                out.push(self.value(depth + 1)?);
+                self.skip_ws();
+                match self.b.get(self.i) {
+                    Some(b',') => self.i += 1,
+                    Some(b']') => {
+                        self.i += 1;
+                        return Ok(Jv::Arr(out));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at offset {}", self.i)),
+                }
+            }
+        }
+
+        fn object(&mut self, depth: u32) -> Result<Jv, String> {
+            self.i += 1; // '{'
+            let mut out = Vec::new();
+            self.skip_ws();
+            if self.b.get(self.i) == Some(&b'}') {
+                self.i += 1;
+                return Ok(Jv::Obj(out));
+            }
+            loop {
+                self.skip_ws();
+                if self.b.get(self.i) != Some(&b'"') {
+                    return Err(format!("expected object key at offset {}", self.i));
+                }
+                let key = self.string()?;
+                self.skip_ws();
+                if self.b.get(self.i) != Some(&b':') {
+                    return Err(format!("expected ':' at offset {}", self.i));
+                }
+                self.i += 1;
+                self.skip_ws();
+                let value = self.value(depth + 1)?;
+                out.push((key, value));
+                self.skip_ws();
+                match self.b.get(self.i) {
+                    Some(b',') => self.i += 1,
+                    Some(b'}') => {
+                        self.i += 1;
+                        return Ok(Jv::Obj(out));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at offset {}", self.i)),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(tag: &str) -> DiskStore {
+        let dir = std::env::temp_dir()
+            .join(format!("dlpim-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        DiskStore::at(dir)
+    }
+
+    /// A report exercising every serialized field, including values that
+    /// do not survive an f64 round-trip.
+    fn thorny_report() -> SimReport {
+        let mut stats = SimStats::new(4);
+        stats.latency = LatencyBreakdown {
+            network: u64::MAX,
+            queue: (1 << 53) + 1, // not representable as f64
+            array: 3,
+            requests: 7,
+        };
+        stats.demand = VaultDemand::from_counts(vec![0, u64::MAX, 42, 1]);
+        stats.traffic = TrafficStats { demand_bytes: 123, subscription_bytes: 456 };
+        stats.reuse = ReuseStats { subscriptions: 1, local_hits: 2, remote_hits: 3 };
+        stats.requests = 9;
+        stats.queue_net = 10;
+        stats.queue_mem = 11;
+        stats.l1_hits = 12;
+        stats.local_requests = 13;
+        stats.subscriptions = 14;
+        stats.sub_nacks = 15;
+        stats.unsubscriptions = 16;
+        stats.resubscriptions = 17;
+        SimReport {
+            workload: "mix(SPL+\"quoted\")".into(),
+            policy: "adaptive-hops",
+            runs: vec![
+                RunReport {
+                    cycles: (1 << 60) + 3,
+                    stats,
+                    decisions: vec![
+                        EpochDecision {
+                            epoch: 1,
+                            at: 1_000_000,
+                            enabled: true,
+                            vaults_enabled: 32,
+                            avg_latency: Some(0.1 + 0.2),
+                        },
+                        EpochDecision {
+                            epoch: 2,
+                            at: 2_000_000,
+                            enabled: false,
+                            vaults_enabled: 0,
+                            avg_latency: None,
+                        },
+                    ],
+                    exhausted: true,
+                },
+                RunReport {
+                    cycles: 0,
+                    stats: SimStats::new(2),
+                    decisions: vec![],
+                    exhausted: false,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn save_load_round_trips_every_field() {
+        let store = tmp_store("roundtrip");
+        let report = thorny_report();
+        let key = 0xDEAD_BEEF_0000_0001;
+        store.save(key, &report).unwrap();
+        let got = store.load(key).expect("entry readable");
+        assert_eq!(got, report);
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+
+    #[test]
+    fn save_leaves_no_temp_files(){
+        let store = tmp_store("atomic");
+        store.save(7, &thorny_report()).unwrap();
+        let names: Vec<String> = std::fs::read_dir(store.dir())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["0000000000000007.json".to_string()]);
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+
+    #[test]
+    fn missing_entry_and_missing_dir_are_misses() {
+        let store = tmp_store("missing");
+        assert!(store.load(1).is_none(), "missing dir");
+        assert_eq!(store.scan().unwrap(), StoreStats::default());
+        store.save(1, &thorny_report()).unwrap();
+        assert!(store.load(2).is_none(), "missing entry");
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+
+    #[test]
+    fn renamed_entry_is_rejected_by_key_check() {
+        let store = tmp_store("renamed");
+        store.save(0xAA, &thorny_report()).unwrap();
+        std::fs::copy(store.entry_path(0xAA), store.entry_path(0xBB)).unwrap();
+        assert!(store.load(0xBB).is_none(), "key mismatch must read as a miss");
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+
+    #[test]
+    fn corrupt_truncated_and_stale_entries_are_misses() {
+        let store = tmp_store("poison");
+        let key = 0xF00D;
+        store.save(key, &thorny_report()).unwrap();
+        let path = store.entry_path(key);
+        let good = std::fs::read_to_string(&path).unwrap();
+
+        for (label, bad) in [
+            ("truncated", good[..good.len() / 2].to_string()),
+            ("garbage", "not json at all".to_string()),
+            ("empty", String::new()),
+            ("deep-nesting", format!("{}1{}", "[".repeat(500), "]".repeat(500))),
+            ("future-version", good.replacen("\"format\":1", "\"format\":999", 1)),
+            ("other-build", good.replacen(build_fingerprint(), "0123456789abcdef", 1)),
+            // Still-parseable corruption: a flipped digit must fail the
+            // body hash, not surface as a wrong figure value.
+            ("flipped-digit", good.replacen("\"cycles\":0", "\"cycles\":7", 1)),
+        ] {
+            std::fs::write(&path, &bad).unwrap();
+            assert!(store.load(key).is_none(), "{label} must be a miss, not a panic");
+        }
+
+        // And a rewrite recovers the entry.
+        store.save(key, &thorny_report()).unwrap();
+        assert!(store.load(key).is_some());
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+
+    #[test]
+    fn scan_gc_and_clear_classify_correctly() {
+        let store = tmp_store("gc");
+        let report = thorny_report();
+        store.save(1, &report).unwrap();
+        store.save(2, &report).unwrap();
+        // Stale: a valid entry from a "different build".
+        let stale = encode(3, &report).replacen(build_fingerprint(), "ffffffffffffffff", 1);
+        std::fs::write(store.entry_path(3), stale).unwrap();
+        // Corrupt: truncated.
+        std::fs::write(store.entry_path(4), "{\"format\":1").unwrap();
+        // Leftover tmp from a crashed writer + a foreign file.
+        std::fs::write(store.dir().join(".0000000000000005.99.0.tmp"), "x").unwrap();
+        std::fs::write(store.dir().join("notes.json"), "{}").unwrap();
+
+        let stats = store.scan().unwrap();
+        assert_eq!(
+            (stats.current, stats.stale, stats.corrupt, stats.tmp),
+            (2, 1, 1, 1),
+            "{stats:?}"
+        );
+        assert!(stats.bytes > 0);
+
+        // A default gc must NOT remove the (fresh) temp file — it could
+        // belong to a live writer in another process.
+        let gc = store.gc().unwrap();
+        assert_eq!(gc.kept, 2);
+        assert_eq!((gc.removed_stale, gc.removed_corrupt, gc.removed_tmp), (1, 1, 0));
+        assert!(store.dir().join(".0000000000000005.99.0.tmp").exists());
+        // With the age threshold collapsed, it goes too.
+        let gc = store.gc_with_tmp_age(std::time::Duration::ZERO).unwrap();
+        assert_eq!((gc.kept, gc.removed_tmp), (2, 1));
+        assert!(store.load(1).is_some() && store.load(2).is_some());
+        assert!(store.dir().join("notes.json").exists(), "foreign files untouched");
+
+        let removed = store.clear().unwrap();
+        assert_eq!(removed, 2);
+        assert!(store.load(1).is_none());
+        assert!(store.dir().join("notes.json").exists(), "clear keeps foreign files");
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+
+    #[test]
+    fn concurrent_saves_and_loads_never_tear() {
+        let store = tmp_store("race");
+        let report = thorny_report();
+        let key = 0xACE;
+        std::thread::scope(|scope| {
+            let writer_store = store.clone();
+            let writer_report = report.clone();
+            scope.spawn(move || {
+                for _ in 0..200 {
+                    writer_store.save(key, &writer_report).unwrap();
+                }
+            });
+            let reader_store = store.clone();
+            let reader_report = report.clone();
+            scope.spawn(move || {
+                for _ in 0..200 {
+                    if let Some(got) = reader_store.load(key) {
+                        assert_eq!(got, reader_report, "torn read");
+                    }
+                }
+            });
+        });
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+
+    #[test]
+    fn entry_key_only_accepts_store_names() {
+        assert_eq!(entry_key("0000000000000007.json"), Some(7));
+        assert_eq!(entry_key("00000000000000ZZ.json"), None);
+        assert_eq!(entry_key("7.json"), None, "short stems are foreign");
+        assert_eq!(entry_key("fig09.json"), None);
+        assert_eq!(entry_key("0000000000000007.txt"), None);
+    }
+}

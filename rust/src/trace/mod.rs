@@ -104,6 +104,17 @@ impl TraceMeta {
             n_cores: cfg.n_vaults,
         }
     }
+
+    /// The header [`record_run`] would write for `workload` under `cfg`,
+    /// after the same normalization `record_run` applies (one run, no
+    /// replay source). Callers compare this against an existing file's
+    /// header to skip re-recording traffic that is already on disk.
+    pub fn for_recording(workload: &str, cfg: &SimConfig) -> Self {
+        let mut cfg = cfg.clone();
+        cfg.runs = 1;
+        cfg.trace = None;
+        TraceMeta::for_run(workload, &cfg)
+    }
 }
 
 /// Serialize the fixed header + metadata strings (shared by the writer
@@ -127,7 +138,11 @@ pub(crate) fn write_str(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(&bytes[..len]);
 }
 
-/// Write `bytes` to `path`, creating parent directories.
+/// Write `bytes` to `path`, creating parent directories. The write is
+/// published atomically (same-dir temp + rename, unique per process *and*
+/// writer — see `sweep::store::write_atomic`), so a concurrent reader
+/// (two `repro` processes preparing the same tenant mixes against one
+/// artifact dir) never loads a torn trace.
 pub(crate) fn write_file(path: &Path, bytes: &[u8]) -> Result<(), String> {
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
@@ -135,7 +150,8 @@ pub(crate) fn write_file(path: &Path, bytes: &[u8]) -> Result<(), String> {
                 .map_err(|e| format!("create {}: {e}", parent.display()))?;
         }
     }
-    std::fs::write(path, bytes).map_err(|e| format!("write {}: {e}", path.display()))
+    crate::sweep::store::write_atomic(path, bytes)
+        .map_err(|e| format!("write {}: {e}", path.display()))
 }
 
 /// Intern a trace display name so [`TraceWorkload`] can satisfy
@@ -159,12 +175,15 @@ pub fn intern(name: &str) -> &'static str {
 ///
 /// [`simulate`]: crate::coordinator::driver::simulate
 pub fn record_run(cfg: &SimConfig, workload: &str, path: &Path) -> Result<SimReport, String> {
+    // Keep this normalization in sync with [`TraceMeta::for_recording`],
+    // which predicts the header without running anything.
+    let meta = TraceMeta::for_recording(workload, cfg);
     let mut cfg = cfg.clone();
     cfg.runs = 1;
     cfg.trace = None; // record from the generator, even if a replay is configured
     let inner = catalog::build(workload, &cfg)
         .ok_or_else(|| crate::workloads::unknown_workload_message(workload))?;
-    let writer = writer::shared(TraceMeta::for_run(workload, &cfg));
+    let writer = writer::shared(meta);
     let rec = Recording::new(inner, writer.clone());
     let report = crate::coordinator::driver::simulate(&cfg, Box::new(rec));
     let guard = writer.lock().unwrap();

@@ -1,0 +1,222 @@
+//! Persistent report-store integration: sweeps resume from disk across
+//! "process restarts" (simulated by clearing the in-memory level),
+//! concurrent sweeps share one store safely, and poisoned entries —
+//! truncated, garbage, stale-version — silently degrade to recompute and
+//! are rewritten, never panicking and never changing results.
+//!
+//! Every test uses its own store directory and its own seeds, so tests
+//! stay hermetic against each other and against earlier `cargo test`
+//! runs (the suite-wide contract the default `target/repro/cache` store
+//! relies on is the build fingerprint, covered by the store's unit
+//! tests).
+
+use std::path::PathBuf;
+
+use dlpim::config::SimConfig;
+use dlpim::coordinator::report::SimReport;
+use dlpim::policy::PolicyKind;
+use dlpim::sweep::store::DiskStore;
+use dlpim::sweep::{cache, DiskCache, Sweep, SweepPoint};
+
+fn tiny(policy: PolicyKind, seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::hmc();
+    cfg.policy = policy;
+    cfg.warmup_requests = 200;
+    cfg.measure_requests = 1_500;
+    cfg.epoch_cycles = 5_000;
+    cfg.seed = seed;
+    cfg
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dlpim-diskcache-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn fingerprint(r: &SimReport) -> (u64, u64, u64, u64) {
+    let run = &r.runs[0];
+    (
+        run.cycles,
+        run.stats.requests,
+        run.stats.traffic.total_bytes(),
+        run.stats.latency.total(),
+    )
+}
+
+#[test]
+fn warm_sweep_is_served_from_disk_across_memory_clear() {
+    let dir = tmp_dir("warm");
+    let point = SweepPoint::new("STRAdd", tiny(PolicyKind::Never, 0xD15C_0001));
+
+    let first = Sweep::new(vec![point.clone()])
+        .disk_cache(DiskCache::Dir(dir.clone()))
+        .run();
+    assert!(!first[0].from_cache, "cold run must compute");
+
+    // The entry must be on disk already (flushed as the job completed).
+    let store = DiskStore::at(&dir);
+    assert!(
+        store.load(point.key()).is_some(),
+        "completed job must be persisted at {}",
+        store.entry_path(point.key()).display()
+    );
+
+    // Drop the in-memory level: the next sweep models a fresh process
+    // sharing the same store directory.
+    cache::clear();
+    let second = Sweep::new(vec![point.clone()])
+        .disk_cache(DiskCache::Dir(dir.clone()))
+        .run();
+    assert!(second[0].from_cache, "warm run must schedule zero jobs");
+    assert_eq!(
+        fingerprint(first[0].report()),
+        fingerprint(second[0].report()),
+        "disk round-trip must be lossless"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn interrupted_sweep_resumes_from_completed_points() {
+    let dir = tmp_dir("resume");
+    let points: Vec<SweepPoint> = ["STRAdd", "STRCpy", "STRSca"]
+        .iter()
+        .map(|w| SweepPoint::new(*w, tiny(PolicyKind::Never, 0xD15C_0002)))
+        .collect();
+
+    // "Interrupted" run: only the middle point completed before the kill.
+    let partial = Sweep::new(vec![points[1].clone()])
+        .disk_cache(DiskCache::Dir(dir.clone()))
+        .run();
+    assert!(!partial[0].from_cache);
+
+    cache::clear();
+    let resumed = Sweep::new(points.clone())
+        .disk_cache(DiskCache::Dir(dir.clone()))
+        .run();
+    assert!(!resumed[0].from_cache, "uncomputed point must simulate");
+    assert!(resumed[1].from_cache, "completed point must resume from disk");
+    assert!(!resumed[2].from_cache, "uncomputed point must simulate");
+    assert_eq!(fingerprint(partial[0].report()), fingerprint(resumed[1].report()));
+
+    // Every point is persisted now: a third pass is fully warm.
+    cache::clear();
+    let warm = Sweep::new(points).disk_cache(DiskCache::Dir(dir.clone())).run();
+    assert!(warm.iter().all(|o| o.from_cache), "fully resumable");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn poisoned_entries_recompute_and_are_rewritten() {
+    let dir = tmp_dir("poison");
+    let point = SweepPoint::new("STRTriad", tiny(PolicyKind::Always, 0xD15C_0003));
+    let store = DiskStore::at(&dir);
+
+    let reference = Sweep::new(vec![point.clone()])
+        .disk_cache(DiskCache::Dir(dir.clone()))
+        .run();
+    let reference_fp = fingerprint(reference[0].report());
+    let path = store.entry_path(point.key());
+    let good = std::fs::read_to_string(&path).expect("entry written");
+
+    for (label, bad) in [
+        ("truncated", good[..good.len() / 3].to_string()),
+        ("garbage", "}{ not json []".to_string()),
+        ("empty", String::new()),
+        ("stale-version", good.replacen("\"format\":1", "\"format\":999", 1)),
+    ] {
+        std::fs::write(&path, &bad).unwrap();
+        cache::clear();
+        let out = Sweep::new(vec![point.clone()])
+            .disk_cache(DiskCache::Dir(dir.clone()))
+            .run();
+        assert!(
+            !out[0].from_cache,
+            "{label}: a poisoned entry must fall back to recompute"
+        );
+        assert_eq!(
+            fingerprint(out[0].report()),
+            reference_fp,
+            "{label}: recompute must reproduce the reference report"
+        );
+        // The poisoned entry must have been overwritten with a valid one.
+        assert!(
+            store.load(point.key()).is_some(),
+            "{label}: entry must be rewritten after recompute"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_sweeps_share_one_store_safely() {
+    let dir = tmp_dir("race");
+    let cfgs = [tiny(PolicyKind::Never, 0xD15C_0004), tiny(PolicyKind::Always, 0xD15C_0004)];
+    let points: Vec<SweepPoint> = ["STRAdd", "STRCpy", "SPLRad", "HSJNPO"]
+        .iter()
+        .flat_map(|w| cfgs.iter().map(move |c| SweepPoint::new(*w, c.clone())))
+        .collect();
+
+    // Two sweeps over the same points race on the same directory: both
+    // must complete with identical, valid reports — entries written by
+    // one and read by the other must never tear (atomic rename).
+    let (a, b) = std::thread::scope(|scope| {
+        let pa = points.clone();
+        let da = dir.clone();
+        let ta = scope.spawn(move || {
+            Sweep::new(pa).disk_cache(DiskCache::Dir(da)).threads(4).run()
+        });
+        let pb = points.clone();
+        let db = dir.clone();
+        let tb = scope.spawn(move || {
+            Sweep::new(pb).disk_cache(DiskCache::Dir(db)).threads(4).run()
+        });
+        (ta.join().unwrap(), tb.join().unwrap())
+    });
+
+    assert_eq!(a.len(), points.len());
+    assert_eq!(b.len(), points.len());
+    for (oa, ob) in a.iter().zip(&b) {
+        assert_eq!(oa.workload, ob.workload);
+        assert_eq!(
+            fingerprint(oa.report()),
+            fingerprint(ob.report()),
+            "racing sweeps must agree on {}",
+            oa.workload
+        );
+    }
+
+    // Whatever the interleaving, the store ends up fully populated with
+    // entries this build can read back.
+    let store = DiskStore::at(&dir);
+    for p in &points {
+        assert!(store.load(p.key()).is_some(), "{} entry readable", p.workload);
+    }
+    let stats = store.scan().unwrap();
+    assert_eq!(stats.corrupt, 0, "no torn entries: {stats:?}");
+    assert_eq!(stats.tmp, 0, "no leaked temp files: {stats:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn off_mode_neither_reads_nor_writes_the_store() {
+    let dir = tmp_dir("off");
+    let point = SweepPoint::new("STRAdd", tiny(PolicyKind::Never, 0xD15C_0005));
+
+    // Seed the store, then run the same point with persistence off and a
+    // cold memory level: it must recompute (no read) …
+    let seeded = Sweep::new(vec![point.clone()])
+        .disk_cache(DiskCache::Dir(dir.clone()))
+        .run();
+    assert!(!seeded[0].from_cache);
+    cache::clear();
+    let off = Sweep::new(vec![point.clone()]).disk_cache(DiskCache::Off).run();
+    assert!(!off[0].from_cache, "Off mode must not read the store");
+
+    // … and leave the store exactly as it was (one entry, no writes).
+    let n = std::fs::read_dir(&dir).unwrap().count();
+    assert_eq!(n, 1, "Off mode must not write the store");
+    std::fs::remove_dir_all(&dir).ok();
+}

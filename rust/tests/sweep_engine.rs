@@ -5,7 +5,7 @@
 use dlpim::config::SimConfig;
 use dlpim::coordinator::report::SimReport;
 use dlpim::policy::PolicyKind;
-use dlpim::sweep::{Sweep, SweepPoint};
+use dlpim::sweep::{DiskCache, Sweep, SweepPoint};
 
 fn tiny(policy: PolicyKind) -> SimConfig {
     let mut cfg = SimConfig::hmc();
@@ -57,22 +57,27 @@ fn reports_identical_at_one_thread_and_many() {
 #[test]
 fn identical_configs_hit_the_cache() {
     // A (workload, config) pair no other test in this binary uses, so the
-    // first sweep is guaranteed to compute it.
+    // first sweep is guaranteed to compute it. Disk persistence is off:
+    // this test pins the *in-memory* level, and must not turn into a hit
+    // on the second `cargo test` run via a leftover store entry
+    // (tests/disk_cache.rs covers the persistent level hermetically).
     let mut cfg = tiny(PolicyKind::Never);
     cfg.seed = 0xCAFE_0001;
     let point = SweepPoint::new("STRSca", cfg);
 
-    let first = Sweep::new(vec![point.clone()]).run();
+    let first = Sweep::new(vec![point.clone()]).disk_cache(DiskCache::Off).run();
     assert!(!first[0].from_cache, "first run must compute");
 
-    let second = Sweep::new(vec![point.clone()]).run();
+    let second = Sweep::new(vec![point.clone()]).disk_cache(DiskCache::Off).run();
     assert!(second[0].from_cache, "identical config must reuse the cached report");
     assert_eq!(fingerprint(first[0].report()), fingerprint(second[0].report()));
 
     // Any config difference must miss.
     let mut other_cfg = point.cfg.clone();
     other_cfg.seed ^= 1;
-    let third = Sweep::new(vec![SweepPoint::new("STRSca", other_cfg)]).run();
+    let third = Sweep::new(vec![SweepPoint::new("STRSca", other_cfg)])
+        .disk_cache(DiskCache::Off)
+        .run();
     assert!(!third[0].from_cache, "a different seed is a different point");
 }
 
