@@ -214,4 +214,25 @@ fn main() {
             dt
         );
     }
+
+    // The pinned perf trajectory (same measurement `repro bench` emits as
+    // BENCH_*.json): end-to-end serve_ops_per_sec per topology/policy
+    // point, at the pinned scale, plus the headline aggregate.
+    {
+        let rep = dlpim::perf::run_trajectory();
+        for p in &rep.points {
+            println!(
+                "bench | perf_hotpath               | serve_ops_{}_{:<8} | {:.2}M ops/s | {:.0}ns/access",
+                p.topology,
+                p.policy,
+                p.ops_per_sec() / 1e6,
+                p.ns_per_access()
+            );
+        }
+        println!(
+            "bench | perf_hotpath               | serve_ops_per_sec     | {:.2}M ops/s | {:.0}ns/access",
+            rep.serve_ops_per_sec() / 1e6,
+            rep.ns_per_access()
+        );
+    }
 }

@@ -122,6 +122,11 @@ pub mod flags {
     /// `repro cache stats|clear|gc`: `--dir` overrides the store location
     /// (default: `REPRO_CACHE_DIR` or `target/repro/cache`).
     pub const CACHE: &[&str] = &["dir"];
+    /// `repro bench`: the pinned perf trajectory. `--json` emits the
+    /// BENCH_*.json document (to `--out FILE`, default
+    /// target/repro/BENCH_6.json), `--check FILE` gates against a
+    /// checked-in baseline at `--threshold` percent (default 10).
+    pub const BENCH: &[&str] = &["json", "out", "check", "threshold"];
     pub const NONE: &[&str] = &[];
 }
 
@@ -135,6 +140,7 @@ pub fn known_flags(command: &str, sub: Option<&str>) -> Option<&'static [&'stati
         ("sweep", _) => flags::SWEEP,
         ("all-figures", _) => flags::ALL_FIGURES,
         ("workloads" | "artifacts", _) => flags::NONE,
+        ("bench", _) => flags::BENCH,
         ("cache", Some("stats" | "clear" | "gc") | None) => flags::CACHE,
         ("trace", Some("record")) => flags::TRACE_RECORD,
         ("trace", Some("replay")) => flags::TRACE_REPLAY,
@@ -226,6 +232,14 @@ COMMANDS:
                     cache clear   drop every entry
                     cache gc      drop stale/corrupt entries, keep current
                   All accept --dir DIR to address another store.
+    bench         Measure the pinned serve-throughput trajectory (fixed seed
+                  and scale; see docs/BENCHMARKING.md):
+                    bench                 print per-topology rows
+                    bench --json [--out FILE]   also write BENCH_*.json
+                                          (default target/repro/BENCH_6.json)
+                    bench --check FILE [--threshold PCT]  fail if headline
+                                          serve_ops_per_sec drops > PCT (10)
+                  Env REPRO_BENCH_SKIP=1 skips entirely (noisy runners)
     artifacts     List figure JSON artifacts and the AOT artifacts (PJRT)
     help          This text
 
@@ -315,8 +329,10 @@ mod tests {
 
     #[test]
     fn every_command_has_a_flag_list() {
-        for cmd in
-            ["run", "figure", "all-figures", "sweep", "workloads", "config", "artifacts", "cache"]
+        for cmd in [
+            "run", "figure", "all-figures", "sweep", "workloads", "config", "artifacts",
+            "cache", "bench",
+        ]
         {
             assert!(known_flags(cmd, None).is_some(), "{cmd}");
         }

@@ -1,0 +1,326 @@
+//! Data-oriented batching machinery for the simulation driver.
+//!
+//! Two structures, both struct-of-arrays, both bit-identity-preserving by
+//! construction (the proofs are sketched inline and exercised by
+//! `tests/batched_equivalence.rs`):
+//!
+//! * [`WindowQueue`] — replaces the driver's per-event `BinaryHeap` with
+//!   cycle-window admission: per-core next-issue times live in flat
+//!   arrays, and events inside the current admission window are drained
+//!   from a small sorted batch. The pop sequence is *exactly* the
+//!   `BinaryHeap<Reverse<(Cycle, CoreId)>>` order, so the simulation is
+//!   unchanged observation-for-observation.
+//! * [`Frame`] — replaces the per-request warmup-gated stats branches
+//!   with unconditional pushes into flat component arrays, folded into
+//!   [`SimStats`] by tight sum loops at window boundaries. Folding before
+//!   the warmup `stats.reset()` makes the end state identical to the
+//!   scalar gated accumulation (pre-warm contributions are wiped by the
+//!   reset either way).
+//!
+//! ## Why window admission preserves event order
+//!
+//! The scalar driver pops the lexicographic minimum `(time, core)` event.
+//! [`WindowQueue::admit`] moves every pending core whose next-issue time
+//! is `< window_end = t_min + ADMIT_WINDOW` into a batch sorted
+//! descending, popped from the tail — i.e. in `(time, core)` order. Any
+//! core left outside has `next >= window_end`, strictly later than every
+//! batched event, so the batch's minimum *is* the global minimum. When a
+//! served core re-arms inside the window it is binary-inserted back into
+//! the batch (keeping order); re-arms at or past `window_end` return to
+//! the flat pending arrays and are reconsidered at the next admission.
+//! Each core has at most one queued event, so `(time, core)` keys are
+//! unique and the order is total.
+
+use crate::memsys::ServedRequest;
+use crate::stats::SimStats;
+use crate::{CoreId, Cycle};
+
+/// Admission-window width in cycles. Any positive value is
+/// order-preserving (see the module docs); this one keeps the batch a few
+/// hundred events at figure scale — large enough to amortize the
+/// per-window scans, small enough that binary re-insertion stays cheap.
+pub const ADMIT_WINDOW: Cycle = 4096;
+
+/// Frame capacity: component arrays are folded into [`SimStats`] when
+/// this many requests have accumulated (and at every window boundary).
+pub const FRAME_CAPACITY: usize = 4096;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum CoreState {
+    /// Next-issue time in the flat `next` array awaits admission.
+    Pending,
+    /// Event sits in the sorted admission batch (or was just popped and
+    /// awaits `reissue`/`finish`).
+    InWindow,
+    /// Stream ended; the core schedules no further events.
+    Done,
+}
+
+/// SoA event queue with cycle-window admission (see the module docs).
+pub struct WindowQueue {
+    /// Per-core next issue time; meaningful while `state` is `Pending`.
+    next: Vec<Cycle>,
+    state: Vec<CoreState>,
+    /// Current admission batch, sorted descending by `(time, core)`;
+    /// `pop` takes from the tail (the minimum).
+    window: Vec<(Cycle, CoreId)>,
+    /// Exclusive upper bound of the current admission window.
+    window_end: Cycle,
+    /// Cores not yet `Done`.
+    live: usize,
+}
+
+impl WindowQueue {
+    /// All `n` cores start pending at cycle 0 (the heap's initial state).
+    pub fn new(n: usize) -> Self {
+        WindowQueue {
+            next: vec![0; n],
+            state: vec![CoreState::Pending; n],
+            window: Vec::with_capacity(n),
+            window_end: 0,
+            live: n,
+        }
+    }
+
+    /// Pop the globally-earliest `(time, core)` event, refilling the
+    /// admission window from the pending arrays when it runs dry.
+    /// Returns `None` when every core is done.
+    pub fn pop(&mut self) -> Option<(Cycle, CoreId)> {
+        if self.window.is_empty() {
+            self.admit()?;
+        }
+        self.window.pop()
+    }
+
+    /// Gather every pending event within `ADMIT_WINDOW` of the earliest
+    /// one into the sorted batch.
+    fn admit(&mut self) -> Option<()> {
+        let t_min = self
+            .state
+            .iter()
+            .zip(&self.next)
+            .filter(|(s, _)| **s == CoreState::Pending)
+            .map(|(_, t)| *t)
+            .min()?;
+        self.window_end = t_min.saturating_add(ADMIT_WINDOW);
+        for c in 0..self.next.len() {
+            if self.state[c] == CoreState::Pending && self.next[c] < self.window_end {
+                self.state[c] = CoreState::InWindow;
+                self.window.push((self.next[c], c as CoreId));
+            }
+        }
+        // Descending sort; `pop` then yields ascending `(time, core)`.
+        self.window.sort_unstable_by(|a, b| b.cmp(a));
+        Some(())
+    }
+
+    /// Re-arm core `c` at time `t` after it executed an op. Events inside
+    /// the live window are binary-inserted back into the batch; later
+    /// ones return to the pending arrays for the next admission.
+    pub fn reissue(&mut self, c: CoreId, t: Cycle) {
+        debug_assert_eq!(self.state[c as usize], CoreState::InWindow);
+        if !self.window.is_empty() && t < self.window_end {
+            let key = (t, c);
+            let pos = self.window.partition_point(|&e| e > key);
+            self.window.insert(pos, key);
+        } else {
+            self.state[c as usize] = CoreState::Pending;
+            self.next[c as usize] = t;
+        }
+    }
+
+    /// Mark core `c`'s stream as ended.
+    pub fn finish(&mut self, c: CoreId) {
+        debug_assert_ne!(self.state[c as usize], CoreState::Done);
+        self.state[c as usize] = CoreState::Done;
+        self.live -= 1;
+    }
+
+    /// Cores that can still schedule events.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+}
+
+/// Flat per-request stat components, folded into [`SimStats`] in bulk.
+///
+/// The scalar driver's `issue_request` gates six stat accumulations on
+/// `win.warmed` per request. The frame records every request
+/// unconditionally (branch-free on the hot path) into parallel arrays;
+/// [`Frame::fold_into`] reduces them with tight sum loops. Equivalence:
+/// the driver folds the frame immediately *before* the warmup-boundary
+/// `stats.reset()` and again at the end of the run, so pre-warm
+/// contributions land in `SimStats` only to be wiped by the same reset
+/// that wipes them in the scalar path.
+pub struct Frame {
+    network: Vec<u64>,
+    queued: Vec<u64>,
+    array: Vec<u64>,
+    queued_net: Vec<u64>,
+    queued_mem: Vec<u64>,
+    /// L1 hits observed since the last fold (no per-hit warmup branch).
+    l1_hits: u64,
+}
+
+impl Frame {
+    pub fn with_capacity(cap: usize) -> Self {
+        Frame {
+            network: Vec::with_capacity(cap),
+            queued: Vec::with_capacity(cap),
+            array: Vec::with_capacity(cap),
+            queued_net: Vec::with_capacity(cap),
+            queued_mem: Vec::with_capacity(cap),
+            l1_hits: 0,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, res: &ServedRequest) {
+        self.network.push(res.network);
+        self.queued.push(res.queued);
+        self.array.push(res.array);
+        self.queued_net.push(res.queued_net);
+        self.queued_mem.push(res.queued_mem());
+    }
+
+    #[inline]
+    pub fn record_l1_hit(&mut self) {
+        self.l1_hits += 1;
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.network.len() >= FRAME_CAPACITY
+    }
+
+    /// Reduce the component arrays into `stats` and clear the frame.
+    pub fn fold_into(&mut self, stats: &mut SimStats) {
+        stats.latency.network += self.network.iter().sum::<u64>();
+        stats.latency.queue += self.queued.iter().sum::<u64>();
+        stats.latency.array += self.array.iter().sum::<u64>();
+        stats.latency.requests += self.network.len() as u64;
+        stats.queue_net += self.queued_net.iter().sum::<u64>();
+        stats.queue_mem += self.queued_mem.iter().sum::<u64>();
+        stats.requests += self.network.len() as u64;
+        stats.l1_hits += self.l1_hits;
+        self.network.clear();
+        self.queued.clear();
+        self.array.clear();
+        self.queued_net.clear();
+        self.queued_mem.clear();
+        self.l1_hits = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// Deterministic LCG for the order-equivalence storm.
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self) -> u64 {
+            self.0 = self
+                .0
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            self.0 >> 16
+        }
+    }
+
+    /// Drive the WindowQueue and a reference BinaryHeap with identical
+    /// randomized re-arm schedules (gaps spanning far below and beyond
+    /// ADMIT_WINDOW) and assert identical pop sequences, including core
+    /// finishes.
+    #[test]
+    fn pop_order_matches_binary_heap() {
+        let n: usize = 8;
+        let mut rng = Lcg(42);
+        let mut q = WindowQueue::new(n);
+        let mut heap: BinaryHeap<Reverse<(Cycle, CoreId)>> =
+            (0..n as CoreId).map(|c| Reverse((0, c))).collect();
+        // Per-core op budgets so streams end at different times.
+        let mut left: Vec<u64> = (0..n).map(|i| 200 + 37 * i as u64).collect();
+        let mut popped = 0u64;
+        loop {
+            let a = q.pop();
+            let b = heap.pop().map(|Reverse(e)| e);
+            assert_eq!(a, b, "divergence after {popped} pops");
+            let Some((t, c)) = a else { break };
+            popped += 1;
+            if left[c as usize] == 0 {
+                q.finish(c);
+                // The heap reference simply never re-pushes.
+                continue;
+            }
+            left[c as usize] -= 1;
+            // Gaps: mostly small (stay in-window), sometimes huge
+            // (leave the window), sometimes zero (same-cycle re-arm).
+            let gap = match rng.next() % 10 {
+                0 => 0,
+                1..=2 => ADMIT_WINDOW + rng.next() % 100_000,
+                _ => rng.next() % 500,
+            };
+            q.reissue(c, t + gap);
+            heap.push(Reverse((t + gap, c)));
+        }
+        assert_eq!(q.live(), 0);
+        assert!(popped > 1000);
+    }
+
+    #[test]
+    fn fold_matches_scalar_accumulation() {
+        let mut frame = Frame::with_capacity(16);
+        let mut batched = SimStats::new(4);
+        let mut scalar = SimStats::new(4);
+        let mut rng = Lcg(7);
+        for _ in 0..100 {
+            let queued_net = rng.next() % 50;
+            let res = ServedRequest {
+                network: rng.next() % 100,
+                queued: queued_net + rng.next() % 80,
+                queued_net,
+                array: 14 + rng.next() % 24,
+                ..Default::default()
+            };
+            frame.record(&res);
+            scalar.latency.record(res.network, res.queued, res.array);
+            scalar.queue_net += res.queued_net;
+            scalar.queue_mem += res.queued_mem();
+            scalar.requests += 1;
+        }
+        frame.record_l1_hit();
+        scalar.l1_hits += 1;
+        frame.fold_into(&mut batched);
+        assert_eq!(batched.latency, scalar.latency);
+        assert_eq!(batched.queue_net, scalar.queue_net);
+        assert_eq!(batched.queue_mem, scalar.queue_mem);
+        assert_eq!(batched.requests, scalar.requests);
+        assert_eq!(batched.l1_hits, scalar.l1_hits);
+        // Second fold is a no-op: the frame cleared itself.
+        frame.fold_into(&mut batched);
+        assert_eq!(batched.requests, scalar.requests);
+    }
+
+    #[test]
+    fn same_cycle_rearm_pops_in_core_order() {
+        let mut q = WindowQueue::new(3);
+        assert_eq!(q.pop(), Some((0, 0)));
+        q.reissue(0, 0); // zero-gap re-arm: still cycle 0
+        // Core 0 re-arms at (0,0) but cores 1,2 are also at cycle 0 —
+        // the heap order is (0,0), (0,1), (0,2).
+        assert_eq!(q.pop(), Some((0, 0)));
+        q.reissue(0, 5);
+        assert_eq!(q.pop(), Some((0, 1)));
+        q.reissue(1, 1);
+        assert_eq!(q.pop(), Some((0, 2)));
+        q.finish(2);
+        assert_eq!(q.pop(), Some((1, 1)));
+        q.finish(1);
+        assert_eq!(q.pop(), Some((5, 0)));
+        q.finish(0);
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.live(), 0);
+    }
+}

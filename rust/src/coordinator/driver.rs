@@ -8,15 +8,22 @@
 //! subscription directory is consistency-checked at both measure-window
 //! boundaries, so protocol regressions fail loudly in `cargo test` instead
 //! of silently skewing figures.
+//!
+//! Two drivers share these semantics bit for bit: [`simulate_once`], the
+//! batched data-oriented hot path (cycle-window event admission, flat
+//! stats frames — see [`crate::coordinator::batch`]), and
+//! [`simulate_once_scalar`], the original heap-driven reference that the
+//! equivalence tests diff against.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::config::SimConfig;
+use crate::coordinator::batch::{Frame, WindowQueue, FRAME_CAPACITY};
 use crate::coordinator::core::PimCore;
 use crate::coordinator::l1::L1Result;
 use crate::coordinator::report::{RunReport, SimReport};
-use crate::memsys::{Access, MemorySystem};
+use crate::memsys::{Access, MemorySystem, ServedRequest};
 use crate::policy::PolicyRuntime;
 use crate::workloads::Workload;
 use crate::Cycle;
@@ -68,6 +75,25 @@ impl MeasureWindow {
             self.measure_start = core_time;
         }
     }
+
+    /// Batched-path warmup boundary: identical to [`Self::end_of_op`],
+    /// except the pending [`Frame`] is folded first so the boundary
+    /// `stats.reset()` wipes the pre-warm contributions exactly as the
+    /// scalar warmed-gate would have skipped them.
+    fn end_of_op_batched(
+        &mut self,
+        mem: &mut MemorySystem,
+        frame: &mut Frame,
+        core_time: Cycle,
+    ) {
+        if !self.warmed && self.total_requests >= self.warmup_requests {
+            frame.fold_into(mem.stats_mut());
+            debug_check_directory(mem, core_time);
+            mem.stats_mut().reset();
+            self.warmed = true;
+            self.measure_start = core_time;
+        }
+    }
 }
 
 /// `debug_assertions`-gated directory invariant check at measure-window
@@ -95,17 +121,20 @@ fn debug_check_directory(mem: &MemorySystem, now: Cycle) {
 /// This single path replaces the four near-duplicated `L1Result` arms the
 /// driver used to thread through `&mut Mesh, &mut Vec<VaultMem>,
 /// &mut SimStats`.
-fn issue_request(
+fn issue_request<F: FnMut(Access, &ServedRequest)>(
     mem: &mut MemorySystem,
     policy: &mut PolicyRuntime,
     core: &mut PimCore,
     win: &mut MeasureWindow,
+    obs: &mut F,
     block: u64,
     write: bool,
 ) {
     let requester = core.vault;
     let now = core.time;
-    let res = mem.serve(Access { requester, block, write }, now, policy);
+    let req = Access { requester, block, write };
+    let res = mem.serve(req, now, policy);
+    obs(req, &res);
     core.note_miss(res.done);
     if win.warmed {
         let stats = mem.stats_mut();
@@ -131,8 +160,212 @@ fn issue_request(
     );
 }
 
+/// Batched-path counterpart of [`issue_request`]: the pure address
+/// resolution is split out ([`MemorySystem::prepare`]) and the per-request
+/// stats branches are replaced by unconditional [`Frame`] pushes (folded
+/// at window boundaries). Event-order position, serve call and policy
+/// feed are identical to the scalar helper.
+#[allow(clippy::too_many_arguments)]
+fn issue_batched<F: FnMut(Access, &ServedRequest)>(
+    mem: &mut MemorySystem,
+    policy: &mut PolicyRuntime,
+    core: &mut PimCore,
+    win: &mut MeasureWindow,
+    frame: &mut Frame,
+    obs: &mut F,
+    block: u64,
+    write: bool,
+) {
+    let requester = core.vault;
+    let now = core.time;
+    let req = Access { requester, block, write };
+    let prep = mem.prepare(requester, block);
+    let res = mem.serve_prepared(req, now, policy, prep);
+    obs(req, &res);
+    core.note_miss(res.done);
+    frame.record(&res);
+    if win.warmed {
+        win.measured += 1;
+    }
+    win.total_requests += 1;
+    policy.on_request(
+        requester,
+        res.served_by,
+        res.subscribed_path,
+        res.actual_hops,
+        res.baseline_hops,
+        res.network + res.queued + res.array,
+        res.set,
+        now,
+    );
+}
+
 /// One simulation run over an already-seeded workload.
+///
+/// This is the batched data-oriented path (cycle-window event admission
+/// via [`WindowQueue`], flat [`Frame`] stats folded at window
+/// boundaries). It is bit-identical to [`simulate_once_scalar`] — the
+/// original one-event-at-a-time driver kept as the differential
+/// reference — which `tests/batched_equivalence.rs` asserts request
+/// stream by request stream.
 pub fn simulate_once(cfg: &SimConfig, workload: &mut dyn Workload) -> RunReport {
+    simulate_once_observed(cfg, workload, |_, _| {})
+}
+
+/// [`simulate_once`] with an observer called on every served request in
+/// issue order — the hook the scalar-vs-batched differential tests use to
+/// capture and compare full `ServedRequest` streams.
+pub fn simulate_once_observed<F: FnMut(Access, &ServedRequest)>(
+    cfg: &SimConfig,
+    workload: &mut dyn Workload,
+    mut obs: F,
+) -> RunReport {
+    debug_assert!(cfg.validate().is_ok());
+    let n = cfg.n_vaults;
+    let mut mem = MemorySystem::new(cfg);
+    let mut policy = PolicyRuntime::new(cfg);
+    let mut cores: Vec<PimCore> = (0..n).map(|i| PimCore::new(i, cfg)).collect();
+    let block_shift = cfg.block_bytes.trailing_zeros();
+
+    let mut queue = WindowQueue::new(n as usize);
+    let mut frame = Frame::with_capacity(FRAME_CAPACITY);
+    let mut win = MeasureWindow::new(cfg);
+    let mut ops: u64 = 0;
+    let mut last_t: Cycle = 0;
+    // Completion time of the request that filled the measure window;
+    // `None` when the run ended some other way (stream exhausted, op
+    // safety valve).
+    let mut window_end: Option<Cycle> = None;
+
+    while let Some((t, c)) = queue.pop() {
+        last_t = last_t.max(t);
+
+        // Epoch machinery: decisions broadcast from the central vault; the
+        // per-vault stats reports and policy packets contend like any
+        // other traffic (§III-D4).
+        for d in policy.tick(t) {
+            mem.broadcast_decision(&d);
+        }
+
+        let Some(op) = workload.next_op(c) else {
+            cores[c as usize].finished = true;
+            queue.finish(c);
+            if queue.live() == 0 {
+                break;
+            }
+            continue;
+        };
+        ops += 1;
+        if ops > MAX_OPS_PER_RUN {
+            break;
+        }
+
+        let core = &mut cores[c as usize];
+        core.time = t + op.gap as Cycle;
+        core.ops += 1;
+        let block = op.addr >> block_shift;
+
+        match core.l1.access(block, op.write) {
+            L1Result::Hit => {
+                core.time += 1; // L1 hit latency
+                frame.record_l1_hit();
+            }
+            L1Result::WriteMiss => {
+                // Streaming store: write-no-allocate, straight to memory.
+                let core = &mut cores[c as usize];
+                issue_batched(
+                    &mut mem, &mut policy, core, &mut win, &mut frame, &mut obs,
+                    block, true,
+                );
+                let core_time = core.time;
+                win.end_of_op_batched(&mut mem, &mut frame, core_time);
+            }
+            L1Result::Miss { writeback } => {
+                // Dirty eviction: a posted write to the victim's home.
+                if let Some(wb) = writeback {
+                    let core = &mut cores[c as usize];
+                    issue_batched(
+                        &mut mem, &mut policy, core, &mut win, &mut frame, &mut obs,
+                        wb, true,
+                    );
+                }
+                // Read miss: fill the line (stores to resident lines merge
+                // in L1 and reach memory later as full-block writebacks).
+                let core = &mut cores[c as usize];
+                issue_batched(
+                    &mut mem, &mut policy, core, &mut win, &mut frame, &mut obs,
+                    block, false,
+                );
+                let core_time = core.time;
+                win.end_of_op_batched(&mut mem, &mut frame, core_time);
+            }
+        }
+        if frame.is_full() {
+            frame.fold_into(mem.stats_mut());
+        }
+
+        if win.warmed && win.measured >= cfg.measure_requests {
+            debug_check_directory(&mem, cores[c as usize].time);
+            // The measured window ends when the *breaking core* finishes
+            // its last measured request (including its outstanding MLP
+            // misses); see `simulate_once_scalar` for the cross-core
+            // drift rationale.
+            let breaking = &mut cores[c as usize];
+            breaking.drain();
+            window_end = Some(breaking.time.max(t));
+            break;
+        }
+        queue.reissue(c, cores[c as usize].time);
+    }
+
+    frame.fold_into(mem.stats_mut());
+    if !win.warmed {
+        // The run ended (stream exhausted / op valve) before the warmup
+        // boundary: the scalar driver's warmed gate recorded none of these
+        // requests, but the frame folds did. The folded fields are
+        // driver-exclusive — `serve` never touches them — so zeroing them
+        // reproduces the scalar report exactly.
+        let stats = mem.stats_mut();
+        stats.latency = Default::default();
+        stats.queue_net = 0;
+        stats.queue_mem = 0;
+        stats.requests = 0;
+        stats.l1_hits = 0;
+    }
+    for core in &mut cores {
+        core.drain();
+        last_t = last_t.max(core.time);
+    }
+    let end = window_end.unwrap_or(last_t);
+
+    RunReport {
+        cycles: end.saturating_sub(win.measure_start),
+        stats: mem.into_stats(),
+        decisions: policy.decisions.clone(),
+        // Only a stream that ran dry *before* the window filled is an
+        // exhausted run: if the window closed normally, a core that
+        // happened to finish (one tenant of a `--no-loop` replay ending
+        // early) does not invalidate the measurement.
+        exhausted: window_end.is_none() && cores.iter().any(|c| c.finished),
+    }
+}
+
+/// The original scalar driver: one `BinaryHeap` event at a time, stats
+/// gated per request on the warmup flag. Kept as the bit-identity
+/// reference for the batched path (`tests/batched_equivalence.rs` drives
+/// both on identical seeds and asserts identical `ServedRequest` streams
+/// and reports).
+pub fn simulate_once_scalar(cfg: &SimConfig, workload: &mut dyn Workload) -> RunReport {
+    simulate_once_scalar_observed(cfg, workload, |_, _| {})
+}
+
+/// [`simulate_once_scalar`] with a per-request observer (see
+/// [`simulate_once_observed`]).
+pub fn simulate_once_scalar_observed<F: FnMut(Access, &ServedRequest)>(
+    cfg: &SimConfig,
+    workload: &mut dyn Workload,
+    mut obs: F,
+) -> RunReport {
     debug_assert!(cfg.validate().is_ok());
     let n = cfg.n_vaults;
     let mut mem = MemorySystem::new(cfg);
@@ -147,17 +380,11 @@ pub fn simulate_once(cfg: &SimConfig, workload: &mut dyn Workload) -> RunReport 
     let mut win = MeasureWindow::new(cfg);
     let mut ops: u64 = 0;
     let mut last_t: Cycle = 0;
-    // Completion time of the request that filled the measure window;
-    // `None` when the run ended some other way (stream exhausted, op
-    // safety valve).
     let mut window_end: Option<Cycle> = None;
 
     while let Some(Reverse((t, c))) = heap.pop() {
         last_t = last_t.max(t);
 
-        // Epoch machinery: decisions broadcast from the central vault; the
-        // per-vault stats reports and policy packets contend like any
-        // other traffic (§III-D4).
         for d in policy.tick(t) {
             mem.broadcast_decision(&d);
         }
@@ -189,7 +416,7 @@ pub fn simulate_once(cfg: &SimConfig, workload: &mut dyn Workload) -> RunReport 
             L1Result::WriteMiss => {
                 // Streaming store: write-no-allocate, straight to memory.
                 let core = &mut cores[c as usize];
-                issue_request(&mut mem, &mut policy, core, &mut win, block, true);
+                issue_request(&mut mem, &mut policy, core, &mut win, &mut obs, block, true);
                 let core_time = core.time;
                 win.end_of_op(&mut mem, core_time);
             }
@@ -197,12 +424,12 @@ pub fn simulate_once(cfg: &SimConfig, workload: &mut dyn Workload) -> RunReport 
                 // Dirty eviction: a posted write to the victim's home.
                 if let Some(wb) = writeback {
                     let core = &mut cores[c as usize];
-                    issue_request(&mut mem, &mut policy, core, &mut win, wb, true);
+                    issue_request(&mut mem, &mut policy, core, &mut win, &mut obs, wb, true);
                 }
                 // Read miss: fill the line (stores to resident lines merge
                 // in L1 and reach memory later as full-block writebacks).
                 let core = &mut cores[c as usize];
-                issue_request(&mut mem, &mut policy, core, &mut win, block, false);
+                issue_request(&mut mem, &mut policy, core, &mut win, &mut obs, block, false);
                 let core_time = core.time;
                 win.end_of_op(&mut mem, core_time);
             }
@@ -236,10 +463,6 @@ pub fn simulate_once(cfg: &SimConfig, workload: &mut dyn Workload) -> RunReport 
         cycles: end.saturating_sub(win.measure_start),
         stats: mem.into_stats(),
         decisions: policy.decisions.clone(),
-        // Only a stream that ran dry *before* the window filled is an
-        // exhausted run: if the window closed normally, a core that
-        // happened to finish (one tenant of a `--no-loop` replay ending
-        // early) does not invalidate the measurement.
         exhausted: window_end.is_none() && cores.iter().any(|c| c.finished),
     }
 }
@@ -353,6 +576,26 @@ mod tests {
         cfg.policy = policy;
         let w = catalog::build(wl, &cfg).unwrap();
         simulate(&cfg, w)
+    }
+
+    #[test]
+    fn batched_matches_scalar_on_a_quick_run() {
+        // Cheap in-module insurance; the full stream-level differential
+        // matrix lives in tests/batched_equivalence.rs.
+        let mut cfg = SimConfig::hmc().quick();
+        cfg.policy = PolicyKind::Adaptive;
+        cfg.warmup_requests = 500;
+        cfg.measure_requests = 3000;
+        let mut wa = catalog::build("SPLRad", &cfg).unwrap();
+        wa.reset(cfg.seed);
+        let a = simulate_once(&cfg, wa.as_mut());
+        let mut wb = catalog::build("SPLRad", &cfg).unwrap();
+        wb.reset(cfg.seed);
+        let b = simulate_once_scalar(&cfg, wb.as_mut());
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.exhausted, b.exhausted);
+        assert_eq!(a.decisions, b.decisions);
     }
 
     #[test]

@@ -2,12 +2,16 @@
 //! L1 caches, and the discrete-event driver that runs a workload over the
 //! memory system and produces a [`report::SimReport`].
 
+pub mod batch;
 pub mod core;
 pub mod driver;
 pub mod l1;
 pub mod report;
 
 pub use core::PimCore;
-pub use driver::{simulate, simulate_once};
+pub use driver::{
+    simulate, simulate_once, simulate_once_observed, simulate_once_scalar,
+    simulate_once_scalar_observed,
+};
 pub use l1::{L1Cache, L1Result};
 pub use report::{RunReport, SimReport};

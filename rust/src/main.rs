@@ -49,6 +49,7 @@ fn run(args: &[String]) -> Result<()> {
         "config" => cmd_config(&cli),
         "trace" => cmd_trace(&cli),
         "cache" => cmd_cache(&cli),
+        "bench" => cmd_bench(&cli),
         "artifacts" => cmd_artifacts(),
         other => bail!("unknown command {other:?}; try `repro help`"),
     }
@@ -379,6 +380,58 @@ fn cmd_cache(cli: &Cli) -> Result<()> {
         "" => bail!("usage: repro cache <stats|clear|gc> [--dir DIR]"),
         other => bail!("unknown cache subcommand {other:?} (stats|clear|gc)"),
     }
+}
+
+/// `repro bench` — measure the pinned serve-throughput trajectory and
+/// (optionally) emit BENCH_*.json / gate against a checked-in baseline.
+/// See `docs/BENCHMARKING.md` for the schema and CI workflow.
+fn cmd_bench(cli: &Cli) -> Result<()> {
+    use dlpim::perf;
+    if std::env::var(perf::SKIP_ENV).map(|v| v == "1" || v == "true").unwrap_or(false) {
+        println!("bench skipped   {}=1", perf::SKIP_ENV);
+        return Ok(());
+    }
+    let t0 = std::time::Instant::now();
+    let rep = perf::run_trajectory();
+    for p in &rep.points {
+        println!(
+            "bench | {:<8} | {:<8} | {:>8.2}M ops/s | {:>6.0} ns/access | {} req x{}",
+            p.topology,
+            p.policy,
+            p.ops_per_sec() / 1e6,
+            p.ns_per_access(),
+            p.requests,
+            p.timing.iters
+        );
+    }
+    println!(
+        "headline        serve_ops_per_sec {:.0} ({:.1} ns/access)",
+        rep.serve_ops_per_sec(),
+        rep.ns_per_access()
+    );
+    println!("wallclock       {:.2}s", t0.elapsed().as_secs_f64());
+    if cli.has("json") || cli.has("out") {
+        let out = cli.flag_or("out", "target/repro/BENCH_6.json");
+        if let Some(dir) = Path::new(out).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(out, rep.to_json())?;
+        println!("wrote           {out}");
+    }
+    if let Some(base_path) = cli.flag("check") {
+        let text = std::fs::read_to_string(base_path)
+            .map_err(|e| err!("read baseline {base_path}: {e}"))?;
+        let baseline = perf::parse_baseline(&text).map_err(|e| err!("{base_path}: {e}"))?;
+        let threshold: f64 = cli
+            .flag_or("threshold", "10")
+            .parse()
+            .map_err(|_| err!("--threshold expects a number (percent)"))?;
+        match perf::check_regression(rep.serve_ops_per_sec(), &baseline, threshold) {
+            Ok(line) => println!("gate            {line}"),
+            Err(e) => bail!("perf regression vs {base_path}: {e}"),
+        }
+    }
+    Ok(())
 }
 
 fn cmd_artifacts() -> Result<()> {

@@ -26,6 +26,32 @@
 //!   submodules as `impl MemorySystem` blocks — they are the only code
 //!   that reaches through the facade's crate-private fields.
 //!
+//! ## The serve hot path
+//!
+//! [`MemorySystem::serve`] is the innermost per-request operation of every
+//! simulation (directory lookup → route → link/bank reservation → stats),
+//! so its state is laid out data-oriented — flat arrays indexed by vault
+//! and by `vault × bank`, not vectors of per-vault objects:
+//!
+//! * vault DRAM tails live in one [`crate::sim::VaultArray`]
+//!   (struct-of-arrays; see its docs for the exact layout);
+//! * pairwise hop counts are flattened into an `n × n` lookup table at
+//!   construction ([`MemorySystem::prepare`] reads it instead of making a
+//!   virtual [`Interconnect::hops`] call);
+//! * the subscription directory keeps a dense tag array beside its entry
+//!   structs ([`crate::subscription::table::SubTable`]), so a lookup scans
+//!   8 contiguous words per set and touches an
+//!   [`Entry`](crate::subscription::table::Entry) only on a match.
+//!
+//! `serve` itself splits into a pure [`MemorySystem::prepare`] (address →
+//! home vault, set, baseline hops) and the stateful
+//! `serve_prepared`, which lets the batched driver
+//! ([`crate::coordinator::driver`]) resolve a whole admission window of
+//! addresses before running the stateful pass. Every layout change here is
+//! value-preserving by construction: `tests/batched_equivalence.rs` and
+//! `tests/golden_artifacts.rs` pin the equivalence. The request lifecycle
+//! end-to-end is diagrammed in `rust/docs/ARCHITECTURE.md`.
+//!
 //! ## Adding a fourth topology
 //!
 //! 1. Create `memsys/<name>.rs` implementing [`Interconnect`]; model each
@@ -53,7 +79,7 @@ pub use crate::subscription::protocol::Access;
 
 use crate::config::SimConfig;
 use crate::policy::EpochDecision;
-use crate::sim::{PacketKind, Transfer, VaultMem};
+use crate::sim::{PacketKind, Transfer, VaultArray};
 use crate::stats::SimStats;
 use crate::subscription::protocol::SubSystem;
 use crate::{Cycle, VaultId};
@@ -110,28 +136,88 @@ impl ServedRequest {
     }
 }
 
+/// Pure, state-independent preparation of one demand access: everything
+/// `serve` derives from the address alone, hoisted out so the batched
+/// driver can compute it for a whole admission window before the stateful
+/// pass runs. `serve(req, ..) ==
+/// serve_prepared(req, .., prepare(req.requester, req.block))` by
+/// construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServePrep {
+    /// The block's home vault (address-map interleave).
+    pub home: VaultId,
+    /// Subscription-table set of the block.
+    pub set: u32,
+    /// One-way requester→home hop count (the unsubscribed estimate).
+    pub baseline_hops: u32,
+}
+
 /// The complete memory system of one simulation run.
 ///
-/// Owns the interconnect, the vault DRAM array, the subscription directory
+/// Owns the interconnect, the vault DRAM state, the subscription directory
 /// and the statistics; all demand traffic enters through
 /// [`MemorySystem::serve`] (defined with the protocol handlers in
 /// [`crate::subscription`]).
+///
+/// ## Data-oriented hot-path state
+///
+/// Two serve-path structures are struct-of-arrays rather than
+/// vectors-of-objects (see `docs/ARCHITECTURE.md` for the full layout):
+///
+/// * `vaults` is a [`VaultArray`] — all controller-port and bank tails in
+///   three flat arrays instead of a `Vec<VaultMem>` of per-vault heap
+///   objects;
+/// * `hop_lut` flattens the interconnect's pairwise hop counts into one
+///   `n × n` array filled from [`Interconnect::hops`] at construction, so
+///   the per-request baseline-hops read is an indexed load instead of a
+///   virtual call.
+///
+/// Both hold exactly the state/values of the structures they replaced, so
+/// every request decomposition is bit-identical.
 pub struct MemorySystem {
     pub(crate) cfg: SimConfig,
     pub(crate) net: Box<dyn Interconnect>,
-    pub(crate) vaults: Vec<VaultMem>,
+    pub(crate) vaults: VaultArray,
     pub(crate) subs: SubSystem,
     pub(crate) stats: SimStats,
+    /// Pairwise hop counts, `a * n_vaults + b` (values from `net.hops`).
+    hop_lut: Vec<u32>,
+    /// Cached `cfg.n_vaults as usize` for `hop_lut` indexing.
+    n: usize,
 }
 
 impl MemorySystem {
     pub fn new(cfg: &SimConfig) -> Self {
+        let net = build_interconnect(cfg);
+        let n = cfg.n_vaults as usize;
+        let mut hop_lut = vec![0u32; n * n];
+        for a in 0..n {
+            for b in 0..n {
+                hop_lut[a * n + b] = net.hops(a as VaultId, b as VaultId);
+            }
+        }
         MemorySystem {
-            net: build_interconnect(cfg),
-            vaults: (0..cfg.n_vaults).map(|_| VaultMem::new(cfg)).collect(),
+            net,
+            vaults: VaultArray::new(cfg),
             subs: SubSystem::new(cfg),
             stats: SimStats::new(cfg.n_vaults),
             cfg: cfg.clone(),
+            hop_lut,
+            n,
+        }
+    }
+
+    /// Resolve the address-dependent part of a demand access (home vault,
+    /// table set, baseline hops). Pure: no interconnect, DRAM or directory
+    /// state is read or written, so the batched driver may call this for
+    /// many queued accesses in any order.
+    #[inline]
+    pub fn prepare(&self, requester: VaultId, block: u64) -> ServePrep {
+        let home = self.subs.map.home_of_block(block);
+        ServePrep {
+            home,
+            set: self.subs.map.set_of_block(block),
+            baseline_hops: self.hop_lut[requester as usize * self.n + home as usize],
         }
     }
 
@@ -150,9 +236,10 @@ impl MemorySystem {
         self.net.n_vaults()
     }
 
-    /// Topological distance between two vaults on the active interconnect.
+    /// Topological distance between two vaults on the active interconnect
+    /// (indexed read of the LUT filled from [`Interconnect::hops`]).
     pub fn hops(&self, a: VaultId, b: VaultId) -> u32 {
-        self.net.hops(a, b)
+        self.hop_lut[a as usize * self.n + b as usize]
     }
 
     /// The vault hosting the global policy's decision logic (§III-D4).
@@ -212,9 +299,7 @@ impl MemorySystem {
     /// system can be reused for another run.
     pub fn reset(&mut self) {
         self.net.reset();
-        for v in &mut self.vaults {
-            v.reset();
-        }
+        self.vaults.reset();
         self.subs.reset();
         self.stats.reset();
     }

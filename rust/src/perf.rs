@@ -1,0 +1,335 @@
+//! The pinned performance trajectory: the end-to-end serve-throughput
+//! benchmark behind `repro bench` and the `BENCH_*.json` artifacts.
+//!
+//! Every figure is a sweep over millions of `MemorySystem::serve` calls,
+//! so the simulator's own speed is a first-class artifact. This module
+//! pins one benchmark — fixed seed, fixed scale, fixed workload, one run
+//! per topology — and renders the result as a small JSON document
+//! (`BENCH_<PR>.json`) that CI uploads and diffs against the checked-in
+//! baseline at the repository root. The gate fails a PR whose headline
+//! `serve_ops_per_sec` regresses by more than
+//! [`DEFAULT_REGRESSION_PCT`] percent; `docs/BENCHMARKING.md` describes
+//! the workflow, the schema and how to update a legitimate change.
+//!
+//! Nothing here feeds figures: the simulated *results* are governed by
+//! the bit-identity tests; this module only measures wall-clock.
+
+use crate::benchkit::{self, Timing};
+use crate::config::{SimConfig, Topology};
+use crate::coordinator::driver::simulate_once;
+use crate::policy::PolicyKind;
+use crate::workloads::catalog;
+
+/// Format version of the emitted JSON document.
+pub const SCHEMA_VERSION: u32 = 1;
+/// Fixed seed: the trajectory must measure the same simulated work in
+/// every PR.
+pub const BENCH_SEED: u64 = 0xD11;
+/// Warmup requests per point (served through the same hot path; the
+/// boundary only resets counters, so they count as served work).
+pub const BENCH_WARMUP: u64 = 5_000;
+/// Measured requests per point.
+pub const BENCH_MEASURE: u64 = 50_000;
+/// Timed iterations per point (median taken).
+pub const BENCH_ITERS: usize = 5;
+/// The pinned workload (high reuse, exercises the subscription protocol).
+pub const BENCH_WORKLOAD: &str = "SPLRad";
+/// CI gate: maximum tolerated `serve_ops_per_sec` drop, in percent.
+pub const DEFAULT_REGRESSION_PCT: f64 = 10.0;
+/// Environment variable that skips the bench entirely (underpowered or
+/// noisy runners).
+pub const SKIP_ENV: &str = "REPRO_BENCH_SKIP";
+
+/// One measured (topology, policy) point of the trajectory.
+pub struct BenchPoint {
+    pub topology: &'static str,
+    pub policy: &'static str,
+    /// Memory requests served per iteration (measured + warmup).
+    pub requests: u64,
+    pub timing: Timing,
+}
+
+impl BenchPoint {
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.timing.median_ns <= 0.0 {
+            return 0.0;
+        }
+        self.requests as f64 / (self.timing.median_ns / 1e9)
+    }
+
+    pub fn ns_per_access(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.timing.median_ns / self.requests as f64
+    }
+}
+
+/// The full trajectory measurement (one [`BenchPoint`] per config).
+pub struct BenchReport {
+    pub points: Vec<BenchPoint>,
+    pub warmup_requests: u64,
+    pub measure_requests: u64,
+}
+
+impl BenchReport {
+    /// Headline number: total requests over total median wall time.
+    pub fn serve_ops_per_sec(&self) -> f64 {
+        let reqs: f64 = self.points.iter().map(|p| p.requests as f64).sum();
+        let secs: f64 = self.points.iter().map(|p| p.timing.median_ns / 1e9).sum();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            reqs / secs
+        }
+    }
+
+    pub fn ns_per_access(&self) -> f64 {
+        let ops = self.serve_ops_per_sec();
+        if ops <= 0.0 {
+            0.0
+        } else {
+            1e9 / ops
+        }
+    }
+
+    /// Render the `BENCH_*.json` document (hand-rolled: the crate is
+    /// dependency-free). The headline keys come before `points`, so the
+    /// first `serve_ops_per_sec` occurrence in the text is the headline —
+    /// [`parse_baseline`] relies on that.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema\": {SCHEMA_VERSION},\n"));
+        s.push_str("  \"bench\": \"serve_hotpath\",\n");
+        s.push_str(&format!("  \"workload\": \"{BENCH_WORKLOAD}\",\n"));
+        s.push_str(&format!("  \"seed\": {BENCH_SEED},\n"));
+        s.push_str(&format!("  \"warmup_requests\": {},\n", self.warmup_requests));
+        s.push_str(&format!("  \"measure_requests\": {},\n", self.measure_requests));
+        s.push_str(&format!("  \"iters\": {BENCH_ITERS},\n"));
+        s.push_str("  \"provisional\": false,\n");
+        s.push_str(&format!(
+            "  \"serve_ops_per_sec\": {},\n",
+            json_num(self.serve_ops_per_sec())
+        ));
+        s.push_str(&format!("  \"ns_per_access\": {},\n", json_num(self.ns_per_access())));
+        s.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"topology\": \"{}\", \"policy\": \"{}\", \"requests\": {}, \
+                 \"median_ms\": {}, \"mad_ms\": {}, \"serve_ops_per_sec\": {}, \
+                 \"ns_per_access\": {}}}{}\n",
+                p.topology,
+                p.policy,
+                p.requests,
+                json_num(p.timing.median_ns / 1e6),
+                json_num(p.timing.mad_ns / 1e6),
+                json_num(p.ops_per_sec()),
+                json_num(p.ns_per_access()),
+                if i + 1 == self.points.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Finite-and-plain float formatting (JSON has no NaN/Inf).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "0.000".to_string()
+    }
+}
+
+fn bench_cfg(topology: Topology, policy: PolicyKind, warmup: u64, measure: u64) -> SimConfig {
+    let mut cfg = SimConfig::hmc();
+    cfg.topology = topology;
+    cfg.policy = policy;
+    cfg.seed = BENCH_SEED;
+    cfg.warmup_requests = warmup;
+    cfg.measure_requests = measure;
+    cfg.runs = 1;
+    cfg
+}
+
+/// Measure one (topology, policy) point: `iters` timed full simulations
+/// (workload reseed included — it is part of driving the hot path).
+fn measure_point(
+    topology: Topology,
+    policy: PolicyKind,
+    warmup: u64,
+    measure: u64,
+    iters: usize,
+) -> BenchPoint {
+    let cfg = bench_cfg(topology, policy, warmup, measure);
+    debug_assert!(cfg.validate().is_ok());
+    let mut w = catalog::build(BENCH_WORKLOAD, &cfg).expect("pinned workload exists");
+    let mut requests = 0u64;
+    let timing = benchkit::time(1, iters, || {
+        w.reset(cfg.seed);
+        let rep = simulate_once(&cfg, w.as_mut());
+        // Warmup requests went through the same serve path; the boundary
+        // reset only wiped their counters.
+        requests = rep.stats.requests + cfg.warmup_requests;
+    });
+    BenchPoint {
+        topology: topology.as_str(),
+        policy: policy.as_str(),
+        requests,
+        timing,
+    }
+}
+
+/// The pinned trajectory: mesh baseline (no subscriptions) plus the
+/// adaptive policy over all three topologies, on the HMC preset.
+pub fn run_trajectory() -> BenchReport {
+    run_with_scale(BENCH_WARMUP, BENCH_MEASURE, BENCH_ITERS)
+}
+
+/// [`run_trajectory`] at an explicit scale (tests and the `perf_hotpath`
+/// bench use smaller/faster settings; `BENCH_*.json` artifacts must come
+/// from the pinned constants).
+pub fn run_with_scale(warmup: u64, measure: u64, iters: usize) -> BenchReport {
+    let mut points = vec![measure_point(
+        Topology::Mesh,
+        PolicyKind::Never,
+        warmup,
+        measure,
+        iters,
+    )];
+    for topo in [Topology::Mesh, Topology::Crossbar, Topology::Ring] {
+        points.push(measure_point(topo, PolicyKind::Adaptive, warmup, measure, iters));
+    }
+    BenchReport { points, warmup_requests: warmup, measure_requests: measure }
+}
+
+/// The comparison-relevant part of a checked-in `BENCH_*.json`.
+pub struct Baseline {
+    pub serve_ops_per_sec: f64,
+    /// A provisional baseline records the schema without a trusted
+    /// measurement (e.g. first commit from an environment that cannot
+    /// run the bench); the gate records but does not compare.
+    pub provisional: bool,
+}
+
+/// Extract the first numeric value of `"key": <number>` in `text`.
+/// A full JSON parser is not needed: the schema is flat, emitted by
+/// [`BenchReport::to_json`], and the headline keys precede `points`.
+pub fn extract_number(text: &str, key: &str) -> Option<f64> {
+    let needle = format!("\"{key}\"");
+    let at = text.find(&needle)? + needle.len();
+    let rest = text[at..].trim_start().strip_prefix(':')?.trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == '+' || c == 'e' || c == 'E'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Parse the baseline fields out of a checked-in `BENCH_*.json`.
+pub fn parse_baseline(text: &str) -> Result<Baseline, String> {
+    let ops = extract_number(text, "serve_ops_per_sec")
+        .ok_or_else(|| "baseline has no serve_ops_per_sec".to_string())?;
+    let provisional = extract_bool(text, "provisional").unwrap_or(false);
+    Ok(Baseline { serve_ops_per_sec: ops, provisional })
+}
+
+fn extract_bool(text: &str, key: &str) -> Option<bool> {
+    let needle = format!("\"{key}\"");
+    let at = text.find(&needle)? + needle.len();
+    let rest = text[at..].trim_start().strip_prefix(':')?.trim_start();
+    if rest.starts_with("true") {
+        Some(true)
+    } else if rest.starts_with("false") {
+        Some(false)
+    } else {
+        None
+    }
+}
+
+/// The CI regression gate: compare a fresh headline against the baseline.
+/// `Ok` carries a status line to print; `Err` carries the failure text.
+/// Provisional or non-positive baselines record without comparing (there
+/// is nothing trustworthy to compare against).
+pub fn check_regression(
+    current_ops: f64,
+    baseline: &Baseline,
+    threshold_pct: f64,
+) -> Result<String, String> {
+    if baseline.provisional || baseline.serve_ops_per_sec <= 0.0 {
+        return Ok(format!(
+            "baseline is provisional — recorded {current_ops:.0} ops/s, not gated"
+        ));
+    }
+    let delta_pct = (current_ops / baseline.serve_ops_per_sec - 1.0) * 100.0;
+    if delta_pct < -threshold_pct {
+        Err(format!(
+            "serve_ops_per_sec {current_ops:.0} is {:.1}% below baseline {:.0} \
+             (threshold {threshold_pct:.0}%)",
+            -delta_pct, baseline.serve_ops_per_sec
+        ))
+    } else {
+        Ok(format!(
+            "{delta_pct:+.1}% vs baseline {:.0} ops/s (threshold -{threshold_pct:.0}%)",
+            baseline.serve_ops_per_sec
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_trajectory_measures_and_serializes() {
+        // A tiny-scale run: the pinned constants are too slow for unit
+        // tests, but the machinery is identical.
+        let rep = run_with_scale(100, 500, 1);
+        assert_eq!(rep.points.len(), 4);
+        for p in &rep.points {
+            assert!(p.requests >= 600, "{}/{}: {}", p.topology, p.policy, p.requests);
+            assert!(p.ops_per_sec() > 0.0);
+        }
+        assert!(rep.serve_ops_per_sec() > 0.0);
+        let json = rep.to_json();
+        for key in [
+            "\"schema\"",
+            "\"serve_ops_per_sec\"",
+            "\"ns_per_access\"",
+            "\"points\"",
+            "\"topology\": \"mesh\"",
+            "\"topology\": \"crossbar\"",
+            "\"topology\": \"ring\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        // Round-trip: the emitted headline parses back as a baseline.
+        let base = parse_baseline(&json).unwrap();
+        assert!(!base.provisional);
+        assert!((base.serve_ops_per_sec - rep.serve_ops_per_sec()).abs()
+            / rep.serve_ops_per_sec()
+            < 0.01);
+    }
+
+    #[test]
+    fn extractors_read_flat_json() {
+        let text = "{\n  \"provisional\": true,\n  \"serve_ops_per_sec\": 1234.5,\n}";
+        assert_eq!(extract_number(text, "serve_ops_per_sec"), Some(1234.5));
+        assert_eq!(extract_bool(text, "provisional"), Some(true));
+        assert_eq!(extract_number(text, "missing"), None);
+        let b = parse_baseline(text).unwrap();
+        assert!(b.provisional);
+    }
+
+    #[test]
+    fn regression_gate_logic() {
+        let base = Baseline { serve_ops_per_sec: 1000.0, provisional: false };
+        assert!(check_regression(990.0, &base, 10.0).is_ok(), "-1% passes");
+        assert!(check_regression(1500.0, &base, 10.0).is_ok(), "faster passes");
+        assert!(check_regression(905.0, &base, 10.0).is_ok(), "-9.5% passes");
+        assert!(check_regression(850.0, &base, 10.0).is_err(), "-15% fails");
+        let prov = Baseline { serve_ops_per_sec: 0.0, provisional: true };
+        assert!(check_regression(1.0, &prov, 10.0).is_ok(), "provisional never gates");
+    }
+}

@@ -9,7 +9,7 @@
 //! component of the paper's latency breakdown.
 
 use crate::config::SimConfig;
-use crate::{Addr, Cycle};
+use crate::{Addr, Cycle, VaultId};
 
 /// Timing decomposition of one array access.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -113,6 +113,106 @@ impl VaultMem {
     }
 }
 
+/// Struct-of-arrays timing state for *all* vaults of one memory system.
+///
+/// [`VaultMem`] models one vault behind one `Vec<Bank>` allocation; a
+/// 32-vault system built as `Vec<VaultMem>` scatters 33 small allocations
+/// across the heap and every serve-path access chases two pointers. This
+/// type flattens the same state into three dense arrays indexed by
+/// `vault * banks_per_vault + bank`, so the hot path touches one cache
+/// line per access in the common case.
+///
+/// Bit-identity contract: [`VaultArray::access`] performs *exactly* the
+/// arithmetic of [`VaultMem::access`] on the same state, so any access
+/// sequence produces identical [`MemAccess`] results (asserted by the
+/// `vault_array_matches_vault_mem_*` differential tests below).
+pub struct VaultArray {
+    n_banks: usize,
+    /// Controller-port queue tail, one per vault.
+    ctrl_free: Vec<Cycle>,
+    /// Bank busy tails, `vault * n_banks + bank`.
+    bank_busy: Vec<Cycle>,
+    /// Open row per bank, same indexing (`u64::MAX` = closed).
+    bank_row: Vec<u64>,
+    t_hit: u64,
+    t_miss: u64,
+    ctrl_occupancy: u64,
+    row_bytes: u64,
+    /// Row hits per vault (reports and tests).
+    hits: Vec<u64>,
+    /// Total accesses per vault.
+    accesses: Vec<u64>,
+}
+
+impl VaultArray {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let n = cfg.n_vaults as usize;
+        let n_banks = cfg.banks_per_vault as usize;
+        VaultArray {
+            n_banks,
+            ctrl_free: vec![0; n],
+            bank_busy: vec![0; n * n_banks],
+            bank_row: vec![u64::MAX; n * n_banks],
+            t_hit: cfg.t_row_hit as u64,
+            t_miss: cfg.t_row_miss as u64,
+            ctrl_occupancy: cfg.vault_service_cycles as u64,
+            row_bytes: cfg.row_buffer_bytes as u64,
+            hits: vec![0; n],
+            accesses: vec![0; n],
+        }
+    }
+
+    pub fn n_vaults(&self) -> usize {
+        self.ctrl_free.len()
+    }
+
+    pub fn reset(&mut self) {
+        self.ctrl_free.fill(0);
+        self.bank_busy.fill(0);
+        self.bank_row.fill(u64::MAX);
+        self.hits.fill(0);
+        self.accesses.fill(0);
+    }
+
+    /// Serve one block access at vault `v` arriving at cycle `at`.
+    /// Same arithmetic as [`VaultMem::access`], on flat state.
+    pub fn access(&mut self, v: VaultId, addr: Addr, at: Cycle) -> MemAccess {
+        let vi = v as usize;
+        let ctrl_start = at.max(self.ctrl_free[vi]);
+        self.ctrl_free[vi] = ctrl_start + self.ctrl_occupancy;
+
+        let row = addr / self.row_bytes;
+        let bank_idx = ((row ^ (row >> 3) ^ (row >> 7)) % self.n_banks as u64) as usize;
+        let b = vi * self.n_banks + bank_idx;
+
+        let bank_start = ctrl_start.max(self.bank_busy[b]);
+        let row_hit = self.bank_row[b] == row;
+        let array = if row_hit { self.t_hit } else { self.t_miss };
+        let done = bank_start + array;
+        self.bank_busy[b] = done;
+        self.bank_row[b] = row;
+
+        self.accesses[vi] += 1;
+        self.hits[vi] += u64::from(row_hit);
+        MemAccess {
+            done,
+            queued: (ctrl_start - at) + (bank_start - ctrl_start),
+            array,
+            row_hit,
+        }
+    }
+
+    /// Fraction of vault `v`'s accesses that hit the open row so far.
+    pub fn row_hit_rate(&self, v: VaultId) -> f64 {
+        let vi = v as usize;
+        if self.accesses[vi] == 0 {
+            0.0
+        } else {
+            self.hits[vi] as f64 / self.accesses[vi] as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,5 +297,67 @@ mod tests {
         let a = m.access(0, 0);
         assert!(!a.row_hit);
         assert_eq!(m.accesses, 1);
+    }
+
+    /// Deterministic access storm: interleaved vaults, clustered rows (to
+    /// provoke row hits and bank conflicts) and non-monotone arrival
+    /// jitter per vault.
+    fn storm(n_vaults: u16) -> Vec<(u16, u64, u64)> {
+        let mut s = 0x9e3779b97f4a7c15u64;
+        let mut out = Vec::with_capacity(4000);
+        let mut t = 0u64;
+        for i in 0..4000u64 {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = (s >> 33) as u16 % n_vaults;
+            // Small row space so open rows get re-hit and banks collide.
+            let addr = ((s >> 17) % 64) * 256 + (s % 4) * 64;
+            t += i % 3; // arrivals drift forward with jitter
+            out.push((v, addr, t));
+        }
+        out
+    }
+
+    #[test]
+    fn vault_array_matches_vault_mem_results() {
+        let cfg = SimConfig::hmc();
+        let mut soa = VaultArray::new(&cfg);
+        let mut aos: Vec<VaultMem> =
+            (0..cfg.n_vaults).map(|_| VaultMem::new(&cfg)).collect();
+        for (v, addr, at) in storm(cfg.n_vaults) {
+            let a = aos[v as usize].access(addr, at);
+            let b = soa.access(v, addr, at);
+            assert_eq!(a, b, "vault {v} addr {addr:#x} at {at}");
+        }
+        for v in 0..cfg.n_vaults {
+            assert_eq!(aos[v as usize].accesses, {
+                let vi = v as usize;
+                soa.accesses[vi]
+            });
+            assert!(
+                (aos[v as usize].row_hit_rate() - soa.row_hit_rate(v)).abs() < 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn vault_array_matches_vault_mem_after_reset() {
+        let cfg = SimConfig::hbm();
+        let mut soa = VaultArray::new(&cfg);
+        let mut aos: Vec<VaultMem> =
+            (0..cfg.n_vaults).map(|_| VaultMem::new(&cfg)).collect();
+        let accs = storm(cfg.n_vaults);
+        for &(v, addr, at) in &accs {
+            aos[v as usize].access(addr, at);
+            soa.access(v, addr, at);
+        }
+        soa.reset();
+        for m in &mut aos {
+            m.reset();
+        }
+        for (v, addr, at) in accs {
+            let a = aos[v as usize].access(addr, at);
+            let b = soa.access(v, addr, at);
+            assert_eq!(a, b, "post-reset divergence at vault {v}");
+        }
     }
 }

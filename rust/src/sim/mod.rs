@@ -41,7 +41,7 @@ pub mod memmap;
 pub mod network;
 pub mod packet;
 
-pub use dram::VaultMem;
+pub use dram::{VaultArray, VaultMem};
 pub use memmap::AddressMap;
 pub use network::{Mesh, Transfer};
 pub use packet::PacketKind;

@@ -27,9 +27,7 @@ impl MemorySystem {
                 let home = e.peer;
                 // Read the parked block out of reserved space if dirty.
                 let depart = if e.dirty {
-                    self.vaults[v as usize]
-                        .access(SubSystem::reserved_slot_addr(idx), now)
-                        .done
+                    self.vaults.access(v, SubSystem::reserved_slot_addr(idx), now).done
                 } else {
                     now
                 };
@@ -37,8 +35,7 @@ impl MemorySystem {
                 let flits = if e.dirty { self.subs.k } else { 1 };
                 let data = self.send(kind, flits, v, home, depart);
                 if e.dirty {
-                    self.vaults[home as usize]
-                        .access(SubSystem::home_addr(e.block), data.arrive);
+                    self.vaults.access(home, SubSystem::home_addr(e.block), data.arrive);
                 }
                 let ack = self.send(
                     PacketKind::UnsubscriptionTransferAck,
@@ -88,8 +85,8 @@ impl MemorySystem {
                     let j = self.subs.tables[holder as usize]
                         .lookup(set, e.block, req.arrive)
                         .expect("dirty holder entry present");
-                    self.vaults[holder as usize]
-                        .access(SubSystem::reserved_slot_addr(j), req.arrive)
+                    self.vaults
+                        .access(holder, SubSystem::reserved_slot_addr(j), req.arrive)
                         .done
                 } else {
                     req.arrive
@@ -98,8 +95,7 @@ impl MemorySystem {
                 let flits = if dirty { self.subs.k } else { 1 };
                 let data = self.send(kind, flits, holder, v, depart);
                 if dirty {
-                    self.vaults[v as usize]
-                        .access(SubSystem::home_addr(e.block), data.arrive);
+                    self.vaults.access(v, SubSystem::home_addr(e.block), data.arrive);
                 }
                 let ack = self.send(
                     PacketKind::UnsubscriptionTransferAck,

@@ -37,7 +37,7 @@ impl MemorySystem {
             Some(i) => SubSystem::reserved_slot_addr(i),
             None => SubSystem::home_addr(block), // directory raced; charge a row
         };
-        let acc = self.vaults[s as usize].access(addr, f.arrive);
+        let acc = self.vaults.access(s, addr, f.arrive);
         out.queued += acc.queued;
         out.array += acc.array;
         out.served_by = s;

@@ -36,7 +36,7 @@ use crate::{Cycle, VaultId};
 const RESERVED_BASE: u64 = 1 << 40;
 
 /// One demand access from a PIM core.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Access {
     pub requester: VaultId,
     pub block: u64,

@@ -5,7 +5,7 @@
 //! [`super::forward`], the subscription handshakes in [`super::subscribe`]
 //! and the eviction/return flows in [`super::evict`].
 
-use crate::memsys::{MemorySystem, ServedRequest};
+use crate::memsys::{MemorySystem, ServePrep, ServedRequest};
 use crate::policy::PolicyRuntime;
 use crate::sim::PacketKind;
 use crate::subscription::protocol::{Access, SubSystem};
@@ -15,17 +15,34 @@ use crate::{Cycle, VaultId};
 impl MemorySystem {
     /// Serve one demand access end to end. The driver is responsible for
     /// recording the returned breakdown and feeding the policy registers.
+    ///
+    /// Composes the pure address resolution ([`MemorySystem::prepare`])
+    /// with the stateful pass ([`MemorySystem::serve_prepared`]); the
+    /// batched driver calls the two halves separately.
     pub fn serve(
         &mut self,
         req: Access,
         now: Cycle,
         policy: &PolicyRuntime,
     ) -> ServedRequest {
+        let prep = self.prepare(req.requester, req.block);
+        self.serve_prepared(req, now, policy, prep)
+    }
+
+    /// The stateful serve pass, taking the address-derived values as an
+    /// argument. Must be fed `prepare(req.requester, req.block)` — the
+    /// batched driver computes the [`ServePrep`]s for a whole admission
+    /// window up front, then runs this pass in event order.
+    pub fn serve_prepared(
+        &mut self,
+        req: Access,
+        now: Cycle,
+        policy: &PolicyRuntime,
+        prep: ServePrep,
+    ) -> ServedRequest {
         let block = req.block;
         let r = req.requester;
-        let home = self.subs.map.home_of_block(block);
-        let set = self.subs.map.set_of_block(block);
-        let baseline_hops = self.net.hops(r, home);
+        let ServePrep { home, set, baseline_hops } = prep;
 
         let mut out = ServedRequest {
             set,
@@ -42,8 +59,8 @@ impl MemorySystem {
                     && e.state == SubState::Subscribed
                     && e.ready_at <= now
                 {
-                    let acc = self.vaults[r as usize]
-                        .access(SubSystem::reserved_slot_addr(i), now);
+                    let acc =
+                        self.vaults.access(r, SubSystem::reserved_slot_addr(i), now);
                     self.subs.tables[r as usize].touch(i, now);
                     if req.write {
                         self.subs.tables[r as usize].entry_mut(i).dirty = true;
@@ -87,7 +104,7 @@ impl MemorySystem {
                 }
             }
             // Plain local access at home.
-            let acc = self.vaults[r as usize].access(SubSystem::home_addr(block), now);
+            let acc = self.vaults.access(r, SubSystem::home_addr(block), now);
             self.stats.demand.record(r);
             self.stats.local_requests += 1;
             out.done = acc.done;
@@ -183,8 +200,9 @@ impl MemorySystem {
                 // Serve at home (after any pending-unsubscription wait that
                 // was already added to out.queued above).
                 let wait_extra = out.queued - t1.queued;
-                let acc = self.vaults[home as usize]
-                    .access(SubSystem::home_addr(block), t1.arrive + wait_extra);
+                let acc = self
+                    .vaults
+                    .access(home, SubSystem::home_addr(block), t1.arrive + wait_extra);
                 out.queued += acc.queued;
                 out.array += acc.array;
                 out.served_by = home;

@@ -114,9 +114,32 @@ impl Entry {
     }
 }
 
+/// Hot-array sentinel for an invalid way (mirrors `Entry::empty().block`).
+const TAG_EMPTY: u64 = u64::MAX;
+
 /// A per-vault subscription table.
+///
+/// ## Hot/cold struct-of-arrays split
+///
+/// `lookup` is on the serve hot path and, in the common all-miss case,
+/// only needs to answer "does any way of this set hold `block`?". The
+/// `tags` array carries exactly that: one `u64` per way — the entry's
+/// block when the way is valid, [`TAG_EMPTY`] when invalid — so a 4-way
+/// probe reads 32 contiguous bytes instead of four 56-byte [`Entry`]
+/// structs. The cold `entries` array keeps the full protocol state and is
+/// only touched for ways whose tag is live.
+///
+/// Coherence invariant: `tags[i] == entries[i].block` whenever
+/// `entries[i]` is valid, `TAG_EMPTY` otherwise. The four mutation points
+/// (`install`, `invalidate`, the lazy `commit` inside `lookup`, `reset`)
+/// maintain it. **`entry_mut` callers must not change an entry's `block`
+/// or make it Invalid directly** — the protocol handlers only mutate
+/// `state`/`dirty`/`ready_at`/`peer`/`peer_next`/LFU fields, and
+/// `debug_assert_tags_coherent` enforces the invariant in tests.
 pub struct SubTable {
     ways: usize,
+    /// Hot array: block tag per way, [`TAG_EMPTY`] when the way is free.
+    tags: Vec<u64>,
     entries: Vec<Entry>,
     /// Holder-role entries currently valid (reserved-space occupancy).
     holder_count: u32,
@@ -124,14 +147,17 @@ pub struct SubTable {
 
 impl SubTable {
     pub fn new(sets: u32, ways: u16) -> Self {
+        let n = sets as usize * ways as usize;
         SubTable {
             ways: ways as usize,
-            entries: vec![Entry::empty(); sets as usize * ways as usize],
+            tags: vec![TAG_EMPTY; n],
+            entries: vec![Entry::empty(); n],
             holder_count: 0,
         }
     }
 
     pub fn reset(&mut self) {
+        self.tags.fill(TAG_EMPTY);
         self.entries.fill(Entry::empty());
         self.holder_count = 0;
     }
@@ -144,20 +170,29 @@ impl SubTable {
 
     /// Commit any completed pending transitions in `set`, then look up
     /// `block`. Returns the way index.
+    ///
+    /// The probe walks the hot `tags` array; invalid ways are skipped on a
+    /// tag read alone (a commit attempt on an Invalid entry is a no-op and
+    /// an Invalid entry never matches, so skipping is exactly the scalar
+    /// behaviour). Only ways with a live tag touch the cold `entries`.
     pub fn lookup(&mut self, set: u32, block: u64, now: Cycle) -> Option<usize> {
-        let r = self.set_range(set);
-        for i in r {
+        for i in self.set_range(set) {
+            if self.tags[i] == TAG_EMPTY {
+                continue;
+            }
             let e = &mut self.entries[i];
-            if !e.is_invalid() && e.ready_at <= now && e.state != SubState::Subscribed
-            {
+            if e.ready_at <= now && e.state != SubState::Subscribed {
                 let was_holder = e.role == Role::Holder
                     && matches!(e.state, SubState::PendingResub | SubState::PendingUnsub);
-                if e.commit(now) && was_holder {
-                    self.holder_count -= 1;
+                if e.commit(now) {
+                    self.tags[i] = TAG_EMPTY;
+                    if was_holder {
+                        self.holder_count -= 1;
+                    }
+                    continue; // a freed way cannot match
                 }
             }
-            let e = &self.entries[i];
-            if !e.is_invalid() && e.block == block {
+            if self.tags[i] == block {
                 return Some(i);
             }
         }
@@ -179,9 +214,9 @@ impl SubTable {
         e.last_use = now;
     }
 
-    /// Find a free way in `set`, if any.
+    /// Find a free way in `set`, if any (hot-array probe).
     pub fn free_way(&self, set: u32) -> Option<usize> {
-        self.set_range(set).find(|&i| self.entries[i].is_invalid())
+        self.set_range(set).find(|&i| self.tags[i] == TAG_EMPTY)
     }
 
     /// LFU-then-LRU victim among *Subscribed* (non-pending) entries in
@@ -205,9 +240,11 @@ impl SubTable {
         now: Cycle,
     ) {
         debug_assert!(self.entries[idx].is_invalid());
+        debug_assert_ne!(block, TAG_EMPTY, "block id collides with the tag sentinel");
         if role == Role::Holder {
             self.holder_count += 1;
         }
+        self.tags[idx] = block;
         self.entries[idx] = Entry {
             block,
             state,
@@ -226,6 +263,7 @@ impl SubTable {
         if self.entries[idx].role == Role::Holder && !self.entries[idx].is_invalid() {
             self.holder_count -= 1;
         }
+        self.tags[idx] = TAG_EMPTY;
         self.entries[idx] = Entry::empty();
     }
 
@@ -265,6 +303,22 @@ impl SubTable {
 
     pub fn ways(&self) -> usize {
         self.ways
+    }
+
+    /// Assert the hot/cold coherence invariant (see the struct docs):
+    /// `tags[i]` mirrors `entries[i].block` for valid ways and is
+    /// [`TAG_EMPTY`] for invalid ones. Called from tests after protocol
+    /// churn; a violation means some handler mutated `block`/validity
+    /// through `entry_mut` instead of `install`/`invalidate`.
+    pub fn debug_assert_tags_coherent(&self) {
+        for (i, e) in self.entries.iter().enumerate() {
+            let want = if e.is_invalid() { TAG_EMPTY } else { e.block };
+            assert_eq!(
+                self.tags[i], want,
+                "tag/entry divergence at way {i}: tag {:#x}, entry {:?}",
+                self.tags[i], e
+            );
+        }
     }
 
     /// Count entries in every state — protocol invariants are asserted over
@@ -401,6 +455,35 @@ mod tests {
         }
         assert!(t.free_way(1).is_none());
         assert!(t.free_way(2).is_some(), "other sets unaffected");
+    }
+
+    #[test]
+    fn tags_stay_coherent_under_churn() {
+        let mut t = table();
+        // Install across states, lazily commit, invalidate, reinstall —
+        // the tag array must mirror entry validity at every step.
+        for b in 0..4u64 {
+            let w = t.free_way(0).unwrap();
+            t.install(w, b, Role::Holder, 1, SubState::PendingSub, 10 * b, 0);
+            t.debug_assert_tags_coherent();
+        }
+        for b in 0..4u64 {
+            t.lookup(0, b, 100); // commits PendingSub -> Subscribed
+            t.debug_assert_tags_coherent();
+        }
+        let v = t.victim(0).unwrap();
+        t.begin_unsub(v, 200);
+        t.debug_assert_tags_coherent();
+        assert!(t.lookup(0, t.entry(v).block, 300).is_none(), "freed by commit");
+        t.debug_assert_tags_coherent();
+        let w = t.free_way(0).unwrap();
+        assert_eq!(w, v, "committed unsub frees the way");
+        t.install(w, 99, Role::Home, 2, SubState::Subscribed, 0, 0);
+        t.invalidate(w);
+        t.debug_assert_tags_coherent();
+        t.reset();
+        t.debug_assert_tags_coherent();
+        assert_eq!(t.occupancy(), 0);
     }
 
     #[test]

@@ -1,0 +1,212 @@
+//! Differential tests for the data-oriented batched driver.
+//!
+//! `simulate_once` (batched admission windows, SoA vaults, frame-buffered
+//! stats) and `simulate_once_scalar` (the original one-event-at-a-time
+//! heap loop, kept as the reference) must be *indistinguishable* from the
+//! outside: identical seeds must produce identical `ServedRequest`
+//! streams request-by-request, identical reports, and identical epoch
+//! decisions — across every topology, both memory presets, and both ends
+//! of the policy spectrum. `tests/golden_artifacts.rs` guards the figure
+//! JSON bytes; these tests guard the mechanism underneath and localize a
+//! divergence to the first differing request instead of a checksum.
+
+use dlpim::config::{SimConfig, Topology};
+use dlpim::coordinator::driver::{simulate_once_observed, simulate_once_scalar_observed};
+use dlpim::memsys::{Access, ServedRequest};
+use dlpim::policy::PolicyKind;
+use dlpim::workloads::{catalog, Op, Workload};
+use dlpim::CoreId;
+
+type Stream = Vec<(Access, ServedRequest)>;
+
+/// Run both drivers on identical seeds and return the captured streams
+/// plus both reports, after asserting stream equality with a pinpointed
+/// first-divergence message.
+fn diff_drivers(
+    cfg: &SimConfig,
+    workload: &mut dyn Workload,
+    label: &str,
+) -> (Stream, dlpim::coordinator::RunReport, dlpim::coordinator::RunReport) {
+    let mut batched: Stream = Vec::new();
+    workload.reset(cfg.seed);
+    let rep_b = simulate_once_observed(cfg, workload, |a, r| batched.push((a, *r)));
+
+    let mut scalar: Stream = Vec::new();
+    workload.reset(cfg.seed);
+    let rep_s = simulate_once_scalar_observed(cfg, workload, |a, r| scalar.push((a, *r)));
+
+    assert_eq!(
+        batched.len(),
+        scalar.len(),
+        "{label}: request counts diverge (batched {} vs scalar {})",
+        batched.len(),
+        scalar.len()
+    );
+    for (i, (b, s)) in batched.iter().zip(scalar.iter()).enumerate() {
+        assert_eq!(b, s, "{label}: first divergence at request #{i}");
+    }
+    (batched, rep_s, rep_b)
+}
+
+/// The full matrix the tentpole promises: every topology on both presets,
+/// no-subscription baseline and the headline adaptive policy. Identical
+/// streams and identical reports.
+#[test]
+fn batched_and_scalar_streams_identical_across_matrix() {
+    for preset in ["hmc", "hbm"] {
+        for topology in [Topology::Mesh, Topology::Crossbar, Topology::Ring] {
+            for policy in [PolicyKind::Never, PolicyKind::Adaptive] {
+                let mut cfg = SimConfig::preset(preset).unwrap();
+                cfg.topology = topology;
+                cfg.policy = policy;
+                cfg.warmup_requests = 500;
+                cfg.measure_requests = 3_000;
+                cfg.runs = 1;
+                cfg.validate().unwrap_or_else(|e| {
+                    panic!("{preset}/{}: {}", topology.as_str(), e.join("; "))
+                });
+                let label =
+                    format!("{preset}/{}/{}", topology.as_str(), policy.as_str());
+                let mut w = catalog::build("SPLRad", &cfg).unwrap();
+                let (stream, rep_s, rep_b) = diff_drivers(&cfg, w.as_mut(), &label);
+                assert!(!stream.is_empty(), "{label}: no requests captured");
+                assert_eq!(rep_b, rep_s, "{label}: reports diverge");
+            }
+        }
+    }
+}
+
+/// Two batched runs on the same seed are bit-identical (the batched path
+/// introduces no hidden iteration-order or allocation dependence).
+#[test]
+fn batched_driver_is_deterministic() {
+    let mut cfg = SimConfig::hmc();
+    cfg.policy = PolicyKind::Adaptive;
+    cfg.warmup_requests = 500;
+    cfg.measure_requests = 3_000;
+    let mut w = catalog::build("PLYgemm", &cfg).unwrap();
+
+    let mut run = || {
+        let mut stream: Stream = Vec::new();
+        w.reset(cfg.seed);
+        let rep = simulate_once_observed(&cfg, w.as_mut(), |a, r| stream.push((a, *r)));
+        (stream, rep)
+    };
+    let (s1, r1) = run();
+    let (s2, r2) = run();
+    assert_eq!(s1, s2);
+    assert_eq!(r1, r2);
+}
+
+/// A deliberately skewed multi-core workload: core 0 issues back-to-back
+/// while the rest idle through huge compute gaps, and every stream is
+/// finite. This pins the measured-window accounting fixes (PR 5) under
+/// batching: the window must end when the breaking core's *local* time
+/// passes, not when the laggards drain, and exhaustion must be reported
+/// identically by both drivers.
+struct SkewedFinite {
+    remaining: Vec<u64>,
+    issued: Vec<u64>,
+    n: u16,
+}
+
+impl SkewedFinite {
+    fn new(n: u16) -> Self {
+        SkewedFinite { remaining: vec![0; n as usize], issued: vec![0; n as usize], n }
+    }
+}
+
+impl Workload for SkewedFinite {
+    fn name(&self) -> &'static str {
+        "SkewedFinite"
+    }
+
+    fn next_op(&mut self, core: CoreId) -> Option<Op> {
+        let c = core as usize;
+        if self.remaining[c] == 0 {
+            return None;
+        }
+        self.remaining[c] -= 1;
+        let i = self.issued[c];
+        self.issued[c] += 1;
+        // Core 0 streams over a region far larger than its 32 KB L1
+        // (every access misses) with unit gaps; everyone else touches a
+        // few private blocks separated by compute gaps big enough that a
+        // 4096-cycle admission window never holds two of their events.
+        let (addr, gap) = if core == 0 {
+            (((i * 97) % 65_536) * 64, 1)
+        } else {
+            ((0x10_0000 * core as u64 + i) * 64, 200_000)
+        };
+        Some(Op { addr, write: i % 5 == 0, gap })
+    }
+
+    fn reset(&mut self, _seed: u64) {
+        for c in 0..self.n as usize {
+            // Core 0: the bulk of the traffic. Others: a trickle.
+            self.remaining[c] = if c == 0 { 2_000 } else { 8 };
+            self.issued[c] = 0;
+        }
+    }
+}
+
+#[test]
+fn skewed_window_boundary_accounting_matches_scalar() {
+    for policy in [PolicyKind::Never, PolicyKind::Adaptive] {
+        let mut cfg = SimConfig::hmc();
+        cfg.policy = policy;
+        cfg.warmup_requests = 200;
+        cfg.measure_requests = 1_500;
+        cfg.runs = 1;
+        let mut w = SkewedFinite::new(cfg.n_vaults);
+        let label = format!("skewed/{}", policy.as_str());
+        let (stream, rep_s, rep_b) = diff_drivers(&cfg, &mut w, &label);
+        assert_eq!(rep_b, rep_s, "{label}: reports diverge");
+        // The measured window closes on the breaking core's clock: the
+        // laggards' 200k-cycle gaps must not inflate the measured cycles
+        // (2000 unit-gap requests from core 0 end the window long before
+        // the slow cores would drain their 1.6M-cycle streams).
+        assert!(
+            rep_b.cycles < 1_000_000,
+            "{label}: window accounting leaked laggard time ({} cycles)",
+            rep_b.cycles
+        );
+        assert!(!rep_b.exhausted, "{label}: core 0 supplies the full window");
+        assert!(!stream.is_empty());
+    }
+}
+
+/// The same skewed generator, sized so every stream ends before the
+/// measured window fills: both drivers must agree on the exhausted flag
+/// and on everything else.
+#[test]
+fn exhausted_streams_agree_between_drivers() {
+    let mut cfg = SimConfig::hmc();
+    cfg.policy = PolicyKind::Adaptive;
+    cfg.warmup_requests = 200;
+    cfg.measure_requests = 100_000; // far more than the generator holds
+    cfg.runs = 1;
+    let mut w = SkewedFinite::new(cfg.n_vaults);
+    let (_, rep_s, rep_b) = diff_drivers(&cfg, &mut w, "skewed/exhausted");
+    assert_eq!(rep_b, rep_s);
+    assert!(rep_b.exhausted, "finite streams must report exhaustion");
+}
+
+/// Streams that run dry before the warmup boundary: the scalar driver's
+/// warmed gate records nothing, so the batched frame machinery must not
+/// leak pre-warm folds into the final stats.
+#[test]
+fn exhaustion_before_warmup_measures_nothing_in_both_drivers() {
+    let mut cfg = SimConfig::hmc();
+    cfg.policy = PolicyKind::Adaptive;
+    cfg.warmup_requests = 50_000; // more than SkewedFinite ever supplies
+    cfg.measure_requests = 10_000;
+    cfg.runs = 1;
+    let mut w = SkewedFinite::new(cfg.n_vaults);
+    let (_, rep_s, rep_b) = diff_drivers(&cfg, &mut w, "skewed/pre-warm-exhausted");
+    assert_eq!(rep_b, rep_s);
+    assert!(rep_b.exhausted);
+    assert_eq!(rep_b.stats.requests, 0, "nothing may count as measured");
+    assert_eq!(rep_b.stats.l1_hits, 0);
+    assert_eq!(rep_b.stats.latency.requests, 0);
+}
