@@ -234,5 +234,13 @@ fn main() {
             rep.serve_ops_per_sec() / 1e6,
             rep.ns_per_access()
         );
+        for tp in &rep.threads {
+            println!(
+                "bench | perf_hotpath               | kernel_scale_t{:<7} | {:.2} sims/s | {} runs",
+                tp.threads,
+                tp.sims_per_sec(),
+                tp.runs
+            );
+        }
     }
 }

@@ -94,6 +94,7 @@ pub mod flags {
     pub const RUN: &[&str] = &[
         "config", "memory", "policy", "topology", "quick", "paper-scale", "warmup",
         "measure", "runs", "seed", "epoch", "trace", "workload", "record", "no-loop",
+        "threads",
     ];
     pub const TRACE_RECORD: &[&str] = &[
         "config", "memory", "policy", "topology", "quick", "paper-scale", "warmup",
@@ -124,7 +125,7 @@ pub mod flags {
     pub const CACHE: &[&str] = &["dir"];
     /// `repro bench`: the pinned perf trajectory. `--json` emits the
     /// BENCH_*.json document (to `--out FILE`, default
-    /// target/repro/BENCH_6.json), `--check FILE` gates against a
+    /// target/repro/BENCH_7.json), `--check FILE` gates against a
     /// checked-in baseline at `--threshold` percent (default 10).
     pub const BENCH: &[&str] = &["json", "out", "check", "threshold"];
     pub const NONE: &[&str] = &[];
@@ -204,6 +205,9 @@ COMMANDS:
                   [--trace FILE] replay a recorded trace instead of a generator
                   [--record FILE] capture this run's traffic to a trace file
                   [--no-loop] end when a replayed trace runs out instead of looping
+                  [--threads N] fan the runs across N kernel threads
+                  (default REPRO_THREADS or 1; reports are bit-identical
+                  at any thread count)
     figure        Regenerate one figure from the spec registry: figure <N>
                   (runs on the parallel sweep engine; writes target/repro/figNN.json)
                   figure --list prints every spec's name, axes and point count
@@ -236,7 +240,7 @@ COMMANDS:
                   and scale; see docs/BENCHMARKING.md):
                     bench                 print per-topology rows
                     bench --json [--out FILE]   also write BENCH_*.json
-                                          (default target/repro/BENCH_6.json)
+                                          (default target/repro/BENCH_7.json)
                     bench --check FILE [--threshold PCT]  fail if headline
                                           serve_ops_per_sec drops > PCT (10)
                   Env REPRO_BENCH_SKIP=1 skips entirely (noisy runners)
@@ -252,7 +256,8 @@ CACHE FLAGS (figure / all-figures / sweep):
                      persistent report cache (in-process reuse still applies)
 
 ENVIRONMENT:
-    REPRO_THREADS        sweep worker threads (default: all cores)
+    REPRO_THREADS        sweep worker threads (default: all cores) and the
+                         run command's kernel threads (default: 1)
     REPRO_ARTIFACT_DIR   where figure JSON artifacts land (default: target/repro)
     REPRO_CACHE_DIR      where the persistent report cache lives
                          (default: target/repro/cache)

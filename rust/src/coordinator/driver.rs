@@ -9,9 +9,10 @@
 //! boundaries, so protocol regressions fail loudly in `cargo test` instead
 //! of silently skewing figures.
 //!
-//! Two drivers share these semantics bit for bit: [`simulate_once`], the
-//! batched data-oriented hot path (cycle-window event admission, flat
-//! stats frames — see [`crate::coordinator::batch`]), and
+//! Two drivers share these semantics bit for bit: [`simulate_once`], which
+//! delegates to the event kernel's batched data-oriented hot path
+//! (cycle-window event admission, flat stats frames — see
+//! [`crate::coordinator::kernel`] and [`crate::coordinator::batch`]), and
 //! [`simulate_once_scalar`], the original heap-driven reference that the
 //! equivalence tests diff against.
 
@@ -19,8 +20,9 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::config::SimConfig;
-use crate::coordinator::batch::{Frame, WindowQueue, FRAME_CAPACITY};
+use crate::coordinator::batch::Frame;
 use crate::coordinator::core::PimCore;
+use crate::coordinator::kernel::Kernel;
 use crate::coordinator::l1::L1Result;
 use crate::coordinator::report::{RunReport, SimReport};
 use crate::memsys::{Access, MemorySystem, ServedRequest};
@@ -29,7 +31,7 @@ use crate::workloads::Workload;
 use crate::Cycle;
 
 /// Hard safety valve against a workload that stops missing its L1.
-const MAX_OPS_PER_RUN: u64 = 2_000_000_000;
+pub(crate) const MAX_OPS_PER_RUN: u64 = 2_000_000_000;
 
 /// Run `cfg.runs` independent simulations of `workload` and aggregate.
 pub fn simulate(cfg: &SimConfig, mut workload: Box<dyn Workload>) -> SimReport {
@@ -42,19 +44,20 @@ pub fn simulate(cfg: &SimConfig, mut workload: Box<dyn Workload>) -> SimReport {
     SimReport { workload: name, policy: cfg.policy.as_str(), runs }
 }
 
-/// Warmup/measure bookkeeping of one run.
-struct MeasureWindow {
-    warmup_requests: u64,
-    warmed: bool,
+/// Warmup/measure bookkeeping of one run (shared by the scalar reference
+/// and the event kernel).
+pub(crate) struct MeasureWindow {
+    pub(crate) warmup_requests: u64,
+    pub(crate) warmed: bool,
     /// Memory (post-L1) requests served, including warmup.
-    total_requests: u64,
+    pub(crate) total_requests: u64,
     /// Requests served inside the measure window.
-    measured: u64,
-    measure_start: Cycle,
+    pub(crate) measured: u64,
+    pub(crate) measure_start: Cycle,
 }
 
 impl MeasureWindow {
-    fn new(cfg: &SimConfig) -> Self {
+    pub(crate) fn new(cfg: &SimConfig) -> Self {
         MeasureWindow {
             warmup_requests: cfg.warmup_requests,
             warmed: cfg.warmup_requests == 0,
@@ -80,7 +83,7 @@ impl MeasureWindow {
     /// except the pending [`Frame`] is folded first so the boundary
     /// `stats.reset()` wipes the pre-warm contributions exactly as the
     /// scalar warmed-gate would have skipped them.
-    fn end_of_op_batched(
+    pub(crate) fn end_of_op_batched(
         &mut self,
         mem: &mut MemorySystem,
         frame: &mut Frame,
@@ -104,7 +107,7 @@ impl MeasureWindow {
 /// behavior, present since the original monolith — do not turn into
 /// deterministic test failures, while role mismatches, holder entries
 /// without a home side and every other corruption still panic.
-fn debug_check_directory(mem: &MemorySystem, now: Cycle) {
+pub(crate) fn debug_check_directory(mem: &MemorySystem, now: Cycle) {
     if !cfg!(debug_assertions) {
         return;
     }
@@ -160,56 +163,19 @@ fn issue_request<F: FnMut(Access, &ServedRequest)>(
     );
 }
 
-/// Batched-path counterpart of [`issue_request`]: the pure address
-/// resolution is split out ([`MemorySystem::prepare`]) and the per-request
-/// stats branches are replaced by unconditional [`Frame`] pushes (folded
-/// at window boundaries). Event-order position, serve call and policy
-/// feed are identical to the scalar helper.
-#[allow(clippy::too_many_arguments)]
-fn issue_batched<F: FnMut(Access, &ServedRequest)>(
-    mem: &mut MemorySystem,
-    policy: &mut PolicyRuntime,
-    core: &mut PimCore,
-    win: &mut MeasureWindow,
-    frame: &mut Frame,
-    obs: &mut F,
-    block: u64,
-    write: bool,
-) {
-    let requester = core.vault;
-    let now = core.time;
-    let req = Access { requester, block, write };
-    let prep = mem.prepare(requester, block);
-    let res = mem.serve_prepared(req, now, policy, prep);
-    obs(req, &res);
-    core.note_miss(res.done);
-    frame.record(&res);
-    if win.warmed {
-        win.measured += 1;
-    }
-    win.total_requests += 1;
-    policy.on_request(
-        requester,
-        res.served_by,
-        res.subscribed_path,
-        res.actual_hops,
-        res.baseline_hops,
-        res.network + res.queued + res.array,
-        res.set,
-        now,
-    );
-}
-
 /// One simulation run over an already-seeded workload.
 ///
-/// This is the batched data-oriented path (cycle-window event admission
-/// via [`WindowQueue`], flat [`Frame`] stats folded at window
+/// This is the batched data-oriented path — since the event-kernel
+/// refactor a thin delegation to the sequential
+/// [`Kernel`](crate::coordinator::kernel::Kernel) (cycle-window event
+/// admission via `WindowQueue`, flat [`Frame`] stats folded at window
 /// boundaries). It is bit-identical to [`simulate_once_scalar`] — the
 /// original one-event-at-a-time driver kept as the differential
-/// reference — which `tests/batched_equivalence.rs` asserts request
-/// stream by request stream.
+/// reference — which `tests/batched_equivalence.rs` and
+/// `tests/kernel_equivalence.rs` assert request stream by request
+/// stream.
 pub fn simulate_once(cfg: &SimConfig, workload: &mut dyn Workload) -> RunReport {
-    simulate_once_observed(cfg, workload, |_, _| {})
+    Kernel::single().run_once(cfg, workload)
 }
 
 /// [`simulate_once`] with an observer called on every served request in
@@ -218,136 +184,9 @@ pub fn simulate_once(cfg: &SimConfig, workload: &mut dyn Workload) -> RunReport 
 pub fn simulate_once_observed<F: FnMut(Access, &ServedRequest)>(
     cfg: &SimConfig,
     workload: &mut dyn Workload,
-    mut obs: F,
+    obs: F,
 ) -> RunReport {
-    debug_assert!(cfg.validate().is_ok());
-    let n = cfg.n_vaults;
-    let mut mem = MemorySystem::new(cfg);
-    let mut policy = PolicyRuntime::new(cfg);
-    let mut cores: Vec<PimCore> = (0..n).map(|i| PimCore::new(i, cfg)).collect();
-    let block_shift = cfg.block_bytes.trailing_zeros();
-
-    let mut queue = WindowQueue::new(n as usize);
-    let mut frame = Frame::with_capacity(FRAME_CAPACITY);
-    let mut win = MeasureWindow::new(cfg);
-    let mut ops: u64 = 0;
-    let mut last_t: Cycle = 0;
-    // Completion time of the request that filled the measure window;
-    // `None` when the run ended some other way (stream exhausted, op
-    // safety valve).
-    let mut window_end: Option<Cycle> = None;
-
-    while let Some((t, c)) = queue.pop() {
-        last_t = last_t.max(t);
-
-        // Epoch machinery: decisions broadcast from the central vault; the
-        // per-vault stats reports and policy packets contend like any
-        // other traffic (§III-D4).
-        for d in policy.tick(t) {
-            mem.broadcast_decision(&d);
-        }
-
-        let Some(op) = workload.next_op(c) else {
-            cores[c as usize].finished = true;
-            queue.finish(c);
-            if queue.live() == 0 {
-                break;
-            }
-            continue;
-        };
-        ops += 1;
-        if ops > MAX_OPS_PER_RUN {
-            break;
-        }
-
-        let core = &mut cores[c as usize];
-        core.time = t + op.gap as Cycle;
-        core.ops += 1;
-        let block = op.addr >> block_shift;
-
-        match core.l1.access(block, op.write) {
-            L1Result::Hit => {
-                core.time += 1; // L1 hit latency
-                frame.record_l1_hit();
-            }
-            L1Result::WriteMiss => {
-                // Streaming store: write-no-allocate, straight to memory.
-                let core = &mut cores[c as usize];
-                issue_batched(
-                    &mut mem, &mut policy, core, &mut win, &mut frame, &mut obs,
-                    block, true,
-                );
-                let core_time = core.time;
-                win.end_of_op_batched(&mut mem, &mut frame, core_time);
-            }
-            L1Result::Miss { writeback } => {
-                // Dirty eviction: a posted write to the victim's home.
-                if let Some(wb) = writeback {
-                    let core = &mut cores[c as usize];
-                    issue_batched(
-                        &mut mem, &mut policy, core, &mut win, &mut frame, &mut obs,
-                        wb, true,
-                    );
-                }
-                // Read miss: fill the line (stores to resident lines merge
-                // in L1 and reach memory later as full-block writebacks).
-                let core = &mut cores[c as usize];
-                issue_batched(
-                    &mut mem, &mut policy, core, &mut win, &mut frame, &mut obs,
-                    block, false,
-                );
-                let core_time = core.time;
-                win.end_of_op_batched(&mut mem, &mut frame, core_time);
-            }
-        }
-        if frame.is_full() {
-            frame.fold_into(mem.stats_mut());
-        }
-
-        if win.warmed && win.measured >= cfg.measure_requests {
-            debug_check_directory(&mem, cores[c as usize].time);
-            // The measured window ends when the *breaking core* finishes
-            // its last measured request (including its outstanding MLP
-            // misses); see `simulate_once_scalar` for the cross-core
-            // drift rationale.
-            let breaking = &mut cores[c as usize];
-            breaking.drain();
-            window_end = Some(breaking.time.max(t));
-            break;
-        }
-        queue.reissue(c, cores[c as usize].time);
-    }
-
-    frame.fold_into(mem.stats_mut());
-    if !win.warmed {
-        // The run ended (stream exhausted / op valve) before the warmup
-        // boundary: the scalar driver's warmed gate recorded none of these
-        // requests, but the frame folds did. The folded fields are
-        // driver-exclusive — `serve` never touches them — so zeroing them
-        // reproduces the scalar report exactly.
-        let stats = mem.stats_mut();
-        stats.latency = Default::default();
-        stats.queue_net = 0;
-        stats.queue_mem = 0;
-        stats.requests = 0;
-        stats.l1_hits = 0;
-    }
-    for core in &mut cores {
-        core.drain();
-        last_t = last_t.max(core.time);
-    }
-    let end = window_end.unwrap_or(last_t);
-
-    RunReport {
-        cycles: end.saturating_sub(win.measure_start),
-        stats: mem.into_stats(),
-        decisions: policy.decisions.clone(),
-        // Only a stream that ran dry *before* the window filled is an
-        // exhausted run: if the window closed normally, a core that
-        // happened to finish (one tenant of a `--no-loop` replay ending
-        // early) does not invalidate the measurement.
-        exhausted: window_end.is_none() && cores.iter().any(|c| c.finished),
-    }
+    Kernel::single().run_once_observed(cfg, workload, obs)
 }
 
 /// The original scalar driver: one `BinaryHeap` event at a time, stats

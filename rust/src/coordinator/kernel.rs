@@ -1,0 +1,488 @@
+//! The unified event-driven simulation kernel.
+//!
+//! One time-ordered event loop replaces `simulate_once`'s per-core issue
+//! loop over globally shared calendars: every step of a run is a typed
+//! [`Event`] dispatched through a single `match`, with the happens-before
+//! edges between event kinds stated explicitly (below) instead of being
+//! implicit in loop structure. The kernel is the seam the parallel
+//! execution hangs off: a [`Kernel`] carries a thread count (`--threads
+//! N` / `REPRO_THREADS`, default 1) and uses it for the three fan-outs
+//! that are **exact by construction** — run-level parallelism across
+//! `cfg.runs`, partitioned epoch-barrier table decay, and partitioned
+//! `hop_lut` construction — so reports are bit-identical at any thread
+//! count. `tests/kernel_equivalence.rs` pins that claim against
+//! [`simulate_once_scalar`](crate::coordinator::driver::simulate_once_scalar)
+//! request by request and across a 1/2/4/8-thread determinism matrix.
+//!
+//! ## Event vocabulary and happens-before edges
+//!
+//! * `EpochBarrier { at } ≺ Issue { at, core }` — every epoch decision
+//!   whose boundary is `<= at` broadcasts (and ages the directory's LFU
+//!   counters) *before* the issue event that first observes time `at`.
+//!   Barriers are **lazily gated** behind the next issue event: a
+//!   boundary with no later issue event never fires, exactly as the
+//!   scalar driver's `policy.tick(t)` call — firing it eagerly would
+//!   diverge from the reference bit-for-bit.
+//! * `Issue ≺ Serve ≺ Complete` — an issue event runs its op's L1 access
+//!   and emits zero, one (write miss / clean read miss) or two (dirty
+//!   eviction writeback + read fill) `Serve` events in program order;
+//!   each `Serve` synchronously yields the `Complete` that stalls the
+//!   issuing core's MLP window. Serve latency is computed analytically
+//!   (the memory system returns the completion cycle), so `Serve` and
+//!   `Complete` collapse into one dispatch chain rather than re-entering
+//!   the calendar — the edge is program order, and it is explicit in the
+//!   dispatcher instead of being spread over four duplicated arms.
+//! * `Serve* ≺ WindowBreak` — the measured window closes only after the
+//!   breaking issue's final serve completes; the break drains the
+//!   breaking core's outstanding misses and clamps the run's cycle count
+//!   to that core's clock (the PR 5 accounting semantics, now
+//!   structural).
+//! * `StreamEnd { core }` removes a core from the calendar; the run ends
+//!   when the last live core ends (exhaustion) or the window breaks.
+//!
+//! ## Deterministic parallelism
+//!
+//! Request-level fan-out cannot preserve bit-identity at sane cost: the
+//! mesh links, the home-interleaved directory and the global policy
+//! registers make almost every request's footprint overlap its
+//! neighbours' (see `docs/ARCHITECTURE.md` for the full argument). The
+//! kernel therefore parallelizes only what commutes or is disjoint:
+//!
+//! * **Runs** — `cfg.runs` independent simulations, each worker building
+//!   its own workload from a factory and seeding `seed + r`; results land
+//!   in per-run slots merged in run order. Exact because the
+//!   `reset(seed)` replay contract (pinned by
+//!   `tests/workload_determinism.rs`) makes each run a pure function of
+//!   its seed.
+//! * **Epoch-barrier decay** — the per-vault `SubTable` LFU aging at a
+//!   broadcast touches disjoint vault partitions; the kernel fans the
+//!   tables out over a scoped pool in home-vault chunks
+//!   ([`crate::subscription::protocol::SubSystem::decay_partitioned`]).
+//! * **`hop_lut` rows** — each source vault's row of the n×n hop matrix
+//!   is an independent pure computation
+//!   ([`crate::memsys::MemorySystem::new_with_threads`]).
+//!
+//! Per-partition [`Frame`] stat batches stay thread-local and are folded
+//! into each run's `SimStats` exactly as in the serial path; run reports
+//! merge in fixed run order, so the aggregate is independent of which
+//! worker finished first.
+
+use crate::config::SimConfig;
+use crate::coordinator::batch::{Frame, WindowQueue, FRAME_CAPACITY};
+use crate::coordinator::core::PimCore;
+use crate::coordinator::driver::{debug_check_directory, MeasureWindow, MAX_OPS_PER_RUN};
+use crate::coordinator::l1::L1Result;
+use crate::coordinator::report::{RunReport, SimReport};
+use crate::memsys::{Access, MemorySystem, ServedRequest};
+use crate::policy::PolicyRuntime;
+use crate::workloads::Workload;
+use crate::{CoreId, Cycle};
+
+/// One kernel event (see the module docs for the happens-before edges).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// Broadcast every epoch decision with boundary `<= at` (lazily
+    /// gated behind the issue event that observes `at`).
+    EpochBarrier { at: Cycle },
+    /// Core `core` issues its next op at cycle `at`.
+    Issue { at: Cycle, core: CoreId },
+    /// A memory request dispatched by an issue (post-L1).
+    Serve { core: CoreId, block: u64, write: bool },
+    /// The issuing core observes a request's completion (MLP window).
+    Complete { core: CoreId, done: Cycle },
+    /// Core `core`'s op stream ran dry.
+    StreamEnd { core: CoreId },
+    /// The request that filled the measured window completed.
+    WindowBreak { at: Cycle, core: CoreId },
+}
+
+/// Dispatch outcome: whether the run's main loop keeps consuming events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Flow {
+    Continue,
+    Stop,
+}
+
+/// Execution parameters of the kernel: how many OS threads the exact
+/// fan-outs may use. `Kernel::single()` (threads = 1) is the plain
+/// sequential kernel `simulate_once` delegates to.
+#[derive(Clone, Copy, Debug)]
+pub struct Kernel {
+    threads: usize,
+}
+
+impl Default for Kernel {
+    fn default() -> Self {
+        Kernel::single()
+    }
+}
+
+impl Kernel {
+    /// A kernel using up to `threads` OS threads (clamped to >= 1).
+    pub fn new(threads: usize) -> Self {
+        Kernel { threads: threads.max(1) }
+    }
+
+    /// The sequential kernel (thread count 1).
+    pub fn single() -> Self {
+        Kernel::new(1)
+    }
+
+    /// Thread count from `REPRO_THREADS`, default 1. The default is
+    /// deliberately *not* the core count: sweeps already parallelize
+    /// across points, and nesting a per-run fan-out under a point
+    /// fan-out would oversubscribe the machine.
+    pub fn from_env() -> Self {
+        let threads = std::env::var("REPRO_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(1);
+        Kernel::new(threads)
+    }
+
+    /// The configured thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// One simulation run over an already-seeded workload (the event-loop
+    /// core of [`simulate_once`](crate::coordinator::driver::simulate_once)).
+    pub fn run_once(&self, cfg: &SimConfig, workload: &mut dyn Workload) -> RunReport {
+        self.run_once_observed(cfg, workload, |_, _| {})
+    }
+
+    /// [`Kernel::run_once`] with a per-request observer in issue order
+    /// (the hook the differential tests use to diff full request
+    /// streams).
+    pub fn run_once_observed<F: FnMut(Access, &ServedRequest)>(
+        &self,
+        cfg: &SimConfig,
+        workload: &mut dyn Workload,
+        obs: F,
+    ) -> RunReport {
+        debug_assert!(cfg.validate().is_ok());
+        let n = cfg.n_vaults;
+        let mut run = KernelRun {
+            cfg,
+            threads: self.threads,
+            mem: MemorySystem::new_with_threads(cfg, self.threads),
+            policy: PolicyRuntime::new(cfg),
+            cores: (0..n).map(|i| PimCore::new(i, cfg)).collect(),
+            queue: WindowQueue::new(n as usize),
+            frame: Frame::with_capacity(FRAME_CAPACITY),
+            win: MeasureWindow::new(cfg),
+            obs,
+            block_shift: cfg.block_bytes.trailing_zeros(),
+            ops: 0,
+            last_t: 0,
+            window_end: None,
+        };
+        run.event_loop(workload);
+        run.finish()
+    }
+
+    /// Run `cfg.runs` independent simulations of the workload `build`
+    /// constructs, in parallel across this kernel's threads, and
+    /// aggregate — bit-identical to the sequential
+    /// [`simulate`](crate::coordinator::driver::simulate) loop at any
+    /// thread count (run `r` always seeds `cfg.seed + r`, and reports
+    /// merge in run order).
+    ///
+    /// When the run fan-out uses fewer workers than `threads`, the
+    /// remainder widens each run's partition fan-outs instead of idling.
+    /// `build` runs on worker threads; a build failure (e.g. a trace
+    /// file deleted mid-run) panics with its message, matching the sweep
+    /// engine's poisoned-job semantics.
+    pub fn simulate_runs<B>(&self, cfg: &SimConfig, name: &str, build: B) -> SimReport
+    where
+        B: Fn() -> Box<dyn Workload> + Sync,
+    {
+        let runs_n = cfg.runs.max(1) as usize;
+        let run_workers = self.threads.min(runs_n);
+        let per_run = Kernel::new(self.threads / run_workers);
+
+        let runs: Vec<RunReport> = if run_workers <= 1 {
+            let mut w = build();
+            (0..runs_n)
+                .map(|r| {
+                    w.reset(cfg.seed.wrapping_add(r as u64));
+                    per_run.run_once(cfg, w.as_mut())
+                })
+                .collect()
+        } else {
+            use std::sync::atomic::{AtomicUsize, Ordering};
+            use std::sync::Mutex;
+            let next = AtomicUsize::new(0);
+            let slots: Vec<Mutex<Option<RunReport>>> =
+                (0..runs_n).map(|_| Mutex::new(None)).collect();
+            std::thread::scope(|scope| {
+                for _ in 0..run_workers {
+                    scope.spawn(|| loop {
+                        let r = next.fetch_add(1, Ordering::Relaxed);
+                        if r >= runs_n {
+                            break;
+                        }
+                        let mut w = build();
+                        w.reset(cfg.seed.wrapping_add(r as u64));
+                        let rep = per_run.run_once(cfg, w.as_mut());
+                        *slots[r].lock().unwrap() = Some(rep);
+                    });
+                }
+            });
+            slots
+                .into_iter()
+                .map(|m| m.into_inner().unwrap().expect("every run produced a report"))
+                .collect()
+        };
+
+        SimReport { workload: name.to_string(), policy: cfg.policy.as_str(), runs }
+    }
+}
+
+/// All mutable state of one kernel run; the event dispatcher lives here.
+struct KernelRun<'a, F: FnMut(Access, &ServedRequest)> {
+    cfg: &'a SimConfig,
+    threads: usize,
+    mem: MemorySystem,
+    policy: PolicyRuntime,
+    cores: Vec<PimCore>,
+    queue: WindowQueue,
+    frame: Frame,
+    win: MeasureWindow,
+    obs: F,
+    block_shift: u32,
+    ops: u64,
+    last_t: Cycle,
+    /// Completion time of the request that filled the measure window;
+    /// `None` when the run ended some other way (stream exhausted, op
+    /// safety valve).
+    window_end: Option<Cycle>,
+}
+
+impl<F: FnMut(Access, &ServedRequest)> KernelRun<'_, F> {
+    /// Consume calendar events in global `(time, core)` order. Each pop
+    /// fires the epoch barriers it gates, then its issue event; the loop
+    /// ends on a `WindowBreak`, the op-valve, or the last `StreamEnd`.
+    fn event_loop(&mut self, workload: &mut dyn Workload) {
+        while let Some((at, core)) = self.queue.pop() {
+            self.last_t = self.last_t.max(at);
+            self.step(Event::EpochBarrier { at }, workload);
+            if self.step(Event::Issue { at, core }, workload) == Flow::Stop {
+                break;
+            }
+        }
+    }
+
+    /// The single dispatch point: every state transition of a run is one
+    /// arm of this `match` (the happens-before edges are in the module
+    /// docs). The recursion (`Issue` → `Serve` → `Complete`,
+    /// `Issue` → `WindowBreak`) is depth-bounded and inlines away.
+    fn step(&mut self, ev: Event, workload: &mut dyn Workload) -> Flow {
+        match ev {
+            Event::EpochBarrier { at } => {
+                // Decisions broadcast from the central vault; the
+                // per-vault stats reports and policy packets contend like
+                // any other traffic (§III-D4). Directory aging fans out
+                // over disjoint vault partitions.
+                for d in self.policy.tick(at) {
+                    self.mem.broadcast_decision_partitioned(&d, self.threads);
+                }
+                Flow::Continue
+            }
+
+            Event::Issue { at, core } => {
+                let Some(op) = workload.next_op(core) else {
+                    return self.step(Event::StreamEnd { core }, workload);
+                };
+                self.ops += 1;
+                if self.ops > MAX_OPS_PER_RUN {
+                    return Flow::Stop;
+                }
+
+                let c = &mut self.cores[core as usize];
+                c.time = at + op.gap as Cycle;
+                c.ops += 1;
+                let block = op.addr >> self.block_shift;
+
+                match c.l1.access(block, op.write) {
+                    L1Result::Hit => {
+                        c.time += 1; // L1 hit latency
+                        self.frame.record_l1_hit();
+                    }
+                    L1Result::WriteMiss => {
+                        // Streaming store: write-no-allocate, straight to
+                        // memory.
+                        self.step(Event::Serve { core, block, write: true }, workload);
+                        let core_time = self.cores[core as usize].time;
+                        self.win.end_of_op_batched(&mut self.mem, &mut self.frame, core_time);
+                    }
+                    L1Result::Miss { writeback } => {
+                        // Dirty eviction: a posted write to the victim's
+                        // home.
+                        if let Some(wb) = writeback {
+                            self.step(Event::Serve { core, block: wb, write: true }, workload);
+                        }
+                        // Read miss: fill the line (stores to resident
+                        // lines merge in L1 and reach memory later as
+                        // full-block writebacks).
+                        self.step(Event::Serve { core, block, write: false }, workload);
+                        let core_time = self.cores[core as usize].time;
+                        self.win.end_of_op_batched(&mut self.mem, &mut self.frame, core_time);
+                    }
+                }
+                if self.frame.is_full() {
+                    self.frame.fold_into(self.mem.stats_mut());
+                }
+
+                if self.win.warmed && self.win.measured >= self.cfg.measure_requests {
+                    return self.step(Event::WindowBreak { at, core }, workload);
+                }
+                self.queue.reissue(core, self.cores[core as usize].time);
+                Flow::Continue
+            }
+
+            Event::Serve { core, block, write } => {
+                let c = &mut self.cores[core as usize];
+                let requester = c.vault;
+                let now = c.time;
+                let req = Access { requester, block, write };
+                let prep = self.mem.prepare(requester, block);
+                let res = self.mem.serve_prepared(req, now, &self.policy, prep);
+                (self.obs)(req, &res);
+                self.step(Event::Complete { core, done: res.done }, workload);
+                self.frame.record(&res);
+                if self.win.warmed {
+                    self.win.measured += 1;
+                }
+                self.win.total_requests += 1;
+                self.policy.on_request(
+                    requester,
+                    res.served_by,
+                    res.subscribed_path,
+                    res.actual_hops,
+                    res.baseline_hops,
+                    res.network + res.queued + res.array,
+                    res.set,
+                    now,
+                );
+                Flow::Continue
+            }
+
+            Event::Complete { core, done } => {
+                self.cores[core as usize].note_miss(done);
+                Flow::Continue
+            }
+
+            Event::StreamEnd { core } => {
+                self.cores[core as usize].finished = true;
+                self.queue.finish(core);
+                if self.queue.live() == 0 {
+                    Flow::Stop
+                } else {
+                    Flow::Continue
+                }
+            }
+
+            Event::WindowBreak { at, core } => {
+                debug_check_directory(&self.mem, self.cores[core as usize].time);
+                // The measured window ends when the *breaking core*
+                // finishes its last measured request (including its
+                // outstanding MLP misses); see `simulate_once_scalar` for
+                // the cross-core drift rationale.
+                let breaking = &mut self.cores[core as usize];
+                breaking.drain();
+                self.window_end = Some(breaking.time.max(at));
+                Flow::Stop
+            }
+        }
+    }
+
+    /// Fold the trailing frame, reconcile pre-warm exhaustion, drain the
+    /// cores and assemble the report (identical tail to both drivers).
+    fn finish(mut self) -> RunReport {
+        self.frame.fold_into(self.mem.stats_mut());
+        if !self.win.warmed {
+            // The run ended (stream exhausted / op valve) before the
+            // warmup boundary: the scalar driver's warmed gate recorded
+            // none of these requests, but the frame folds did. The folded
+            // fields are driver-exclusive — `serve` never touches them —
+            // so zeroing them reproduces the scalar report exactly.
+            let stats = self.mem.stats_mut();
+            stats.latency = Default::default();
+            stats.queue_net = 0;
+            stats.queue_mem = 0;
+            stats.requests = 0;
+            stats.l1_hits = 0;
+        }
+        for core in &mut self.cores {
+            core.drain();
+            self.last_t = self.last_t.max(core.time);
+        }
+        let end = self.window_end.unwrap_or(self.last_t);
+
+        RunReport {
+            cycles: end.saturating_sub(self.win.measure_start),
+            stats: self.mem.into_stats(),
+            decisions: self.policy.decisions.clone(),
+            // Only a stream that ran dry *before* the window filled is an
+            // exhausted run: if the window closed normally, a core that
+            // happened to finish (one tenant of a `--no-loop` replay
+            // ending early) does not invalidate the measurement.
+            exhausted: self.window_end.is_none() && self.cores.iter().any(|c| c.finished),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::driver::{simulate, simulate_once_scalar};
+    use crate::policy::PolicyKind;
+    use crate::workloads::{build_source, catalog};
+
+    fn quick_cfg() -> SimConfig {
+        let mut cfg = SimConfig::hmc().quick();
+        cfg.policy = PolicyKind::Adaptive;
+        cfg.warmup_requests = 500;
+        cfg.measure_requests = 3_000;
+        cfg
+    }
+
+    #[test]
+    fn kernel_matches_scalar_on_a_quick_run() {
+        // Cheap in-module insurance; the full matrix + randomized storm
+        // live in tests/kernel_equivalence.rs.
+        let cfg = quick_cfg();
+        let mut wa = catalog::build("SPLRad", &cfg).unwrap();
+        wa.reset(cfg.seed);
+        let a = Kernel::new(4).run_once(&cfg, wa.as_mut());
+        let mut wb = catalog::build("SPLRad", &cfg).unwrap();
+        wb.reset(cfg.seed);
+        let b = simulate_once_scalar(&cfg, wb.as_mut());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_runs_match_the_sequential_simulate_loop() {
+        let mut cfg = quick_cfg();
+        cfg.runs = 3;
+        let seq = simulate(&cfg, build_source(Some("STRTriad"), &cfg).unwrap());
+        for threads in [1, 2, 8] {
+            let par = Kernel::new(threads).simulate_runs(&cfg, "STRTriad", || {
+                build_source(Some("STRTriad"), &cfg).unwrap()
+            });
+            assert_eq!(par.workload, seq.workload, "threads={threads}");
+            assert_eq!(par.policy, seq.policy, "threads={threads}");
+            assert_eq!(par.runs, seq.runs, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn from_env_defaults_to_single_thread() {
+        // REPRO_THREADS is unset in test runs unless a harness sets it;
+        // either way the kernel is well-formed and >= 1.
+        assert!(Kernel::from_env().threads() >= 1);
+        assert_eq!(Kernel::new(0).threads(), 1, "clamped");
+    }
+}

@@ -5,6 +5,7 @@
 pub mod batch;
 pub mod core;
 pub mod driver;
+pub mod kernel;
 pub mod l1;
 pub mod report;
 
@@ -13,5 +14,6 @@ pub use driver::{
     simulate, simulate_once, simulate_once_observed, simulate_once_scalar,
     simulate_once_scalar_observed,
 };
+pub use kernel::Kernel;
 pub use l1::{L1Cache, L1Result};
 pub use report::{RunReport, SimReport};

@@ -27,8 +27,8 @@ pub fn run(cfg: &SimConfig, workload: &str) -> SimReport {
 }
 
 /// Run `names x configs` on the parallel sweep engine ([`crate::sweep`]):
-/// work-stealing across all cores, per-point result caching, deterministic
-/// per-job seeding. Returns results in `[workload][config]` order; panics
+/// a shared injector queue across all cores, per-point result caching,
+/// deterministic per-job seeding. Returns results in `[workload][config]` order; panics
 /// if any job failed (a figure with a silently missing bar is worse than a
 /// loud failure).
 pub fn run_matrix(names: &[&str], cfgs: &[SimConfig]) -> Vec<Vec<SimReport>> {

@@ -6,6 +6,7 @@ use std::path::Path;
 use dlpim::cli::{self, Cli, HELP};
 use dlpim::config::{presets, SimConfig, Topology};
 use dlpim::coordinator::driver::simulate;
+use dlpim::coordinator::kernel::Kernel;
 use dlpim::coordinator::report::SimReport;
 use dlpim::error::{bail, err, Result};
 use dlpim::exp;
@@ -103,10 +104,21 @@ fn config_from_cli(cli: &Cli) -> Result<SimConfig> {
 
 fn cmd_run(cli: &Cli) -> Result<()> {
     let cfg = config_from_cli(cli)?;
+    // Kernel threads for the run fan-out: --threads beats REPRO_THREADS
+    // beats 1. Never part of SimConfig (reports are bit-identical at any
+    // thread count, and the sweep cache key must not depend on it).
+    let kernel = match cli.flag_u64("threads").map_err(|e| err!(e))? {
+        Some(0) => bail!("--threads expects at least 1"),
+        Some(n) => Kernel::new(usize::try_from(n).unwrap_or(usize::MAX)),
+        None => Kernel::from_env(),
+    };
     let t0 = std::time::Instant::now();
     let (name, rep) = if let Some(out) = cli.flag("record") {
         if cfg.trace.is_some() {
             bail!("--record captures a generator run; drop --trace (that file already is a recording)");
+        }
+        if kernel.threads() > 1 {
+            bail!("--threads does not apply to --record (recording instruments a single serial run)");
         }
         let name = cli
             .flag("workload")
@@ -121,12 +133,26 @@ fn cmd_run(cli: &Cli) -> Result<()> {
                  (a trace file already names its recorded workload)"
             );
         }
+        // Build once up front so a bad workload name or trace path fails
+        // with a proper error before any thread spawns.
         let w = workloads::build_source(cli.flag("workload"), &cfg).map_err(|e| err!(e))?;
         let name = w.name().to_string();
-        (name, simulate(&cfg, w))
+        let rep = if kernel.threads() > 1 {
+            let source = cli.flag("workload");
+            drop(w);
+            kernel.simulate_runs(&cfg, &name, || {
+                workloads::build_source(source, &cfg).expect("source validated above")
+            })
+        } else {
+            simulate(&cfg, w)
+        };
+        (name, rep)
     };
     let dt = t0.elapsed();
     print_report(&name, &cfg, &rep);
+    if kernel.threads() > 1 {
+        println!("threads         {}", kernel.threads());
+    }
     println!("wallclock       {:.2}s", dt.as_secs_f64());
     Ok(())
 }
@@ -404,6 +430,15 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
             p.timing.iters
         );
     }
+    for p in &rep.threads {
+        println!(
+            "scale | {:>2} threads | {:>8.2} sims/s | {} runs x{}",
+            p.threads,
+            p.sims_per_sec(),
+            p.runs,
+            p.timing.iters
+        );
+    }
     println!(
         "headline        serve_ops_per_sec {:.0} ({:.1} ns/access)",
         rep.serve_ops_per_sec(),
@@ -411,7 +446,7 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
     );
     println!("wallclock       {:.2}s", t0.elapsed().as_secs_f64());
     if cli.has("json") || cli.has("out") {
-        let out = cli.flag_or("out", "target/repro/BENCH_6.json");
+        let out = cli.flag_or("out", "target/repro/BENCH_7.json");
         if let Some(dir) = Path::new(out).parent() {
             std::fs::create_dir_all(dir)?;
         }

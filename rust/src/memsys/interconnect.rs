@@ -24,7 +24,12 @@ use crate::{Cycle, VaultId};
 ///   `arrive == depart + network + queued`;
 /// * uncontended transfers cost `flits * hops(a, b)` cycles (the paper's
 ///   §III-C cost model).
-pub trait Interconnect: Send {
+///
+/// `Send + Sync` because the event kernel fills the hop LUT by sharing
+/// `&dyn Interconnect` across its partition threads (a pure read of the
+/// precomputed hop tables); every implementation is plain owned data, so
+/// both bounds auto-derive.
+pub trait Interconnect: Send + Sync {
     /// Short name for reports ("mesh" | "crossbar" | "ring").
     fn name(&self) -> &'static str;
 

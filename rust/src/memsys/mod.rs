@@ -188,13 +188,40 @@ pub struct MemorySystem {
 
 impl MemorySystem {
     pub fn new(cfg: &SimConfig) -> Self {
+        Self::new_with_threads(cfg, 1)
+    }
+
+    /// [`MemorySystem::new`] with the n×n `hop_lut` fill partitioned over
+    /// up to `threads` OS threads (the event kernel's construction path).
+    /// Each source vault's row is an independent pure read of the
+    /// interconnect's precomputed hop tables, so the filled LUT is
+    /// identical at any thread count.
+    pub fn new_with_threads(cfg: &SimConfig, threads: usize) -> Self {
         let net = build_interconnect(cfg);
         let n = cfg.n_vaults as usize;
         let mut hop_lut = vec![0u32; n * n];
-        for a in 0..n {
-            for b in 0..n {
-                hop_lut[a * n + b] = net.hops(a as VaultId, b as VaultId);
+        let threads = threads.clamp(1, n.max(1));
+        if threads <= 1 {
+            for a in 0..n {
+                for b in 0..n {
+                    hop_lut[a * n + b] = net.hops(a as VaultId, b as VaultId);
+                }
             }
+        } else {
+            let rows_per = n.div_ceil(threads);
+            let net_ref: &dyn Interconnect = net.as_ref();
+            std::thread::scope(|scope| {
+                for (chunk_i, chunk) in hop_lut.chunks_mut(rows_per * n).enumerate() {
+                    scope.spawn(move || {
+                        for (ra, row) in chunk.chunks_mut(n).enumerate() {
+                            let a = (chunk_i * rows_per + ra) as VaultId;
+                            for (b, h) in row.iter_mut().enumerate() {
+                                *h = net_ref.hops(a, b as VaultId);
+                            }
+                        }
+                    });
+                }
+            });
         }
         MemorySystem {
             net,
@@ -309,7 +336,17 @@ impl MemorySystem {
     /// all contending with demand traffic like any other packets; the
     /// tables' LFU counters age at the same boundary.
     pub fn broadcast_decision(&mut self, d: &EpochDecision) {
-        self.subs.decay_all();
+        self.broadcast_decision_partitioned(d, 1);
+    }
+
+    /// [`MemorySystem::broadcast_decision`] with the directory's LFU aging
+    /// fanned out over up to `threads` OS threads in home-vault chunks
+    /// (see [`SubSystem::decay_partitioned`]). The packet sends stay
+    /// serial: they reserve shared link calendars in vault order, and that
+    /// order is part of the pinned cost model. Bit-identical at any
+    /// thread count.
+    pub fn broadcast_decision_partitioned(&mut self, d: &EpochDecision, threads: usize) {
+        self.subs.decay_partitioned(threads);
         let central = self.net.central_vault();
         let kind = if d.enabled {
             PacketKind::TurnOnSubscription

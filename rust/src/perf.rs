@@ -17,11 +17,13 @@
 use crate::benchkit::{self, Timing};
 use crate::config::{SimConfig, Topology};
 use crate::coordinator::driver::simulate_once;
+use crate::coordinator::kernel::Kernel;
 use crate::policy::PolicyKind;
 use crate::workloads::catalog;
 
-/// Format version of the emitted JSON document.
-pub const SCHEMA_VERSION: u32 = 1;
+/// Format version of the emitted JSON document (2 added the
+/// `threads`/`thread_scaling` kernel-scaling series).
+pub const SCHEMA_VERSION: u32 = 2;
 /// Fixed seed: the trajectory must measure the same simulated work in
 /// every PR.
 pub const BENCH_SEED: u64 = 0xD11;
@@ -39,6 +41,18 @@ pub const DEFAULT_REGRESSION_PCT: f64 = 10.0;
 /// Environment variable that skips the bench entirely (underpowered or
 /// noisy runners).
 pub const SKIP_ENV: &str = "REPRO_BENCH_SKIP";
+/// Kernel thread counts of the scaling series.
+pub const THREAD_COUNTS: &[usize] = &[1, 2, 4, 8];
+/// Warmup requests per run in the thread-scaling series (smaller than the
+/// serve-hotpath points: the series multiplies by runs and thread counts).
+pub const THREAD_BENCH_WARMUP: u64 = 2_000;
+/// Measured requests per run in the thread-scaling series.
+pub const THREAD_BENCH_MEASURE: u64 = 20_000;
+/// Independent runs fanned across the kernel's threads per timed
+/// iteration (the unit of parallelism being measured).
+pub const THREAD_BENCH_RUNS: u32 = 8;
+/// Timed iterations per thread count (median taken).
+pub const THREAD_BENCH_ITERS: usize = 3;
 
 /// One measured (topology, policy) point of the trajectory.
 pub struct BenchPoint {
@@ -65,9 +79,32 @@ impl BenchPoint {
     }
 }
 
-/// The full trajectory measurement (one [`BenchPoint`] per config).
+/// One thread count of the kernel-scaling series: [`THREAD_BENCH_RUNS`]
+/// independent runs fanned across `threads` via
+/// [`Kernel::simulate_runs`], timed end to end.
+pub struct ThreadPoint {
+    pub threads: usize,
+    /// Runs per timed iteration (each is one full simulation).
+    pub runs: u32,
+    pub timing: Timing,
+}
+
+impl ThreadPoint {
+    /// Full simulations completed per second at this thread count.
+    pub fn sims_per_sec(&self) -> f64 {
+        if self.timing.median_ns <= 0.0 {
+            return 0.0;
+        }
+        self.runs as f64 / (self.timing.median_ns / 1e9)
+    }
+}
+
+/// The full trajectory measurement (one [`BenchPoint`] per config, plus
+/// the kernel thread-scaling series — empty when only the serve-hotpath
+/// points were measured, e.g. from [`run_with_scale`]).
 pub struct BenchReport {
     pub points: Vec<BenchPoint>,
+    pub threads: Vec<ThreadPoint>,
     pub warmup_requests: u64,
     pub measure_requests: u64,
 }
@@ -129,6 +166,24 @@ impl BenchReport {
                 if i + 1 == self.points.len() { "" } else { "," }
             ));
         }
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"threads\": [{}],\n",
+            THREAD_COUNTS.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(", ")
+        ));
+        s.push_str("  \"thread_scaling\": [\n");
+        for (i, p) in self.threads.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"threads\": {}, \"runs\": {}, \"median_ms\": {}, \
+                 \"mad_ms\": {}, \"sims_per_sec\": {}}}{}\n",
+                p.threads,
+                p.runs,
+                json_num(p.timing.median_ns / 1e6),
+                json_num(p.timing.mad_ns / 1e6),
+                json_num(p.sims_per_sec()),
+                if i + 1 == self.threads.len() { "" } else { "," }
+            ));
+        }
         s.push_str("  ]\n}\n");
         s
     }
@@ -183,9 +238,42 @@ fn measure_point(
 }
 
 /// The pinned trajectory: mesh baseline (no subscriptions) plus the
-/// adaptive policy over all three topologies, on the HMC preset.
+/// adaptive policy over all three topologies, on the HMC preset —
+/// followed by the kernel thread-scaling series at [`THREAD_COUNTS`].
 pub fn run_trajectory() -> BenchReport {
-    run_with_scale(BENCH_WARMUP, BENCH_MEASURE, BENCH_ITERS)
+    let mut rep = run_with_scale(BENCH_WARMUP, BENCH_MEASURE, BENCH_ITERS);
+    rep.threads = thread_scaling(
+        THREAD_BENCH_WARMUP,
+        THREAD_BENCH_MEASURE,
+        THREAD_BENCH_RUNS,
+        THREAD_BENCH_ITERS,
+    );
+    rep
+}
+
+/// Measure the kernel's run-level scaling: for each entry of
+/// [`THREAD_COUNTS`], time `runs` independent simulations fanned across
+/// that many threads via [`Kernel::simulate_runs`] (mesh/adaptive, the
+/// most protocol-heavy pinned point). Simulated results are bit-identical
+/// at every thread count — `tests/kernel_equivalence.rs` pins that — so
+/// this series measures wall-clock only.
+pub fn thread_scaling(warmup: u64, measure: u64, runs: u32, iters: usize) -> Vec<ThreadPoint> {
+    let mut cfg = bench_cfg(Topology::Mesh, PolicyKind::Adaptive, warmup, measure);
+    cfg.runs = runs;
+    debug_assert!(cfg.validate().is_ok());
+    THREAD_COUNTS
+        .iter()
+        .map(|&t| {
+            let kernel = Kernel::new(t);
+            let timing = benchkit::time(1, iters, || {
+                let rep = kernel.simulate_runs(&cfg, BENCH_WORKLOAD, || {
+                    catalog::build(BENCH_WORKLOAD, &cfg).expect("pinned workload exists")
+                });
+                assert_eq!(rep.runs.len(), runs as usize);
+            });
+            ThreadPoint { threads: t, runs, timing }
+        })
+        .collect()
 }
 
 /// [`run_trajectory`] at an explicit scale (tests and the `perf_hotpath`
@@ -202,7 +290,7 @@ pub fn run_with_scale(warmup: u64, measure: u64, iters: usize) -> BenchReport {
     for topo in [Topology::Mesh, Topology::Crossbar, Topology::Ring] {
         points.push(measure_point(topo, PolicyKind::Adaptive, warmup, measure, iters));
     }
-    BenchReport { points, warmup_requests: warmup, measure_requests: measure }
+    BenchReport { points, threads: Vec::new(), warmup_requests: warmup, measure_requests: measure }
 }
 
 /// The comparison-relevant part of a checked-in `BENCH_*.json`.
@@ -259,7 +347,9 @@ pub fn check_regression(
 ) -> Result<String, String> {
     if baseline.provisional || baseline.serve_ops_per_sec <= 0.0 {
         return Ok(format!(
-            "baseline is provisional — recorded {current_ops:.0} ops/s, not gated"
+            "baseline is provisional — record-only, gate skipped \
+             (recorded {current_ops:.0} ops/s; promote the baseline per \
+             docs/BENCHMARKING.md to arm the gate)"
         ));
     }
     let delta_pct = (current_ops / baseline.serve_ops_per_sec - 1.0) * 100.0;
@@ -301,6 +391,8 @@ mod tests {
             "\"topology\": \"mesh\"",
             "\"topology\": \"crossbar\"",
             "\"topology\": \"ring\"",
+            "\"threads\": [1, 2, 4, 8]",
+            "\"thread_scaling\"",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
@@ -310,6 +402,28 @@ mod tests {
         assert!((base.serve_ops_per_sec - rep.serve_ops_per_sec()).abs()
             / rep.serve_ops_per_sec()
             < 0.01);
+    }
+
+    #[test]
+    fn micro_thread_scaling_measures_every_count() {
+        // Tiny scale again: the series' shape and serialization, not its
+        // wall-clock, are what unit tests can check.
+        let pts = thread_scaling(50, 200, 2, 1);
+        assert_eq!(pts.len(), THREAD_COUNTS.len());
+        for p in &pts {
+            assert!(p.sims_per_sec() > 0.0, "threads={}", p.threads);
+            assert_eq!(p.runs, 2);
+        }
+        let rep = BenchReport {
+            points: Vec::new(),
+            threads: pts,
+            warmup_requests: 50,
+            measure_requests: 200,
+        };
+        let json = rep.to_json();
+        for t in THREAD_COUNTS {
+            assert!(json.contains(&format!("\"threads\": {t},")), "row for {t}");
+        }
     }
 
     #[test]

@@ -193,6 +193,29 @@ impl SubSystem {
         }
     }
 
+    /// [`Self::decay_all`] partitioned over up to `threads` OS threads in
+    /// home-vault chunks — the event kernel's epoch-barrier fan-out. Each
+    /// vault's table is touched by exactly one thread and `decay` reads
+    /// and writes only that table's own counters, so the result is
+    /// identical at any thread count (disjoint state, no ordering).
+    pub fn decay_partitioned(&mut self, threads: usize) {
+        let threads = threads.clamp(1, self.tables.len().max(1));
+        if threads <= 1 {
+            self.decay_all();
+            return;
+        }
+        let per = self.tables.len().div_ceil(threads);
+        std::thread::scope(|scope| {
+            for chunk in self.tables.chunks_mut(per) {
+                scope.spawn(move || {
+                    for t in chunk {
+                        t.decay();
+                    }
+                });
+            }
+        });
+    }
+
     /// Sum of holder occupancies (blocks parked anywhere).
     pub fn total_parked(&self) -> u64 {
         self.tables.iter().map(|t| t.holder_occupancy() as u64).sum()

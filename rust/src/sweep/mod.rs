@@ -5,9 +5,10 @@
 //! policies and two memory kinds. This module turns that matrix into one
 //! engine:
 //!
-//! * a **work-stealing scheduler** ([`scheduler`]) that saturates all
-//!   cores regardless of how unevenly the points' simulation costs are
-//!   distributed;
+//! * a **condvar-parked scheduler** ([`scheduler`]) — one shared injector
+//!   queue feeding all workers, idle workers parked on a condvar rather
+//!   than polling — that saturates all cores regardless of how unevenly
+//!   the points' simulation costs are distributed;
 //! * **deterministic per-job seeding** — each point's PRNG seed is a pure
 //!   function of the point, never of scheduling, so a sweep's reports are
 //!   bit-identical at 1 thread and N threads;

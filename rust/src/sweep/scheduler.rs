@@ -1,17 +1,17 @@
-//! Work-stealing job scheduler for sweep points.
+//! Condvar-parked job scheduler for sweep points.
 //!
-//! Jobs are dealt round-robin onto per-worker deques; a worker drains its
-//! own deque from the front and, when empty, steals from the back of its
-//! siblings' deques (classic Chase-Lev shape, implemented with mutexed
-//! deques — at sweep granularity a job is a whole simulation, thousands of
-//! times longer than a lock, so contention is irrelevant while the
-//! imbalance between a 31-workload figure's fast and slow jobs is not).
-//! Results come back in submission order regardless of which worker ran
-//! which job, and no job output depends on scheduling, so sweeps are
-//! deterministic for any thread count.
+//! One shared injector queue feeds all workers: an idle worker **parks on
+//! a condvar** and is woken by exactly the submission (or close) that
+//! concerns it — no sleep-poll loop, no busy-wait core burned while a
+//! skewed sweep drains its last slow jobs. At sweep granularity a job is
+//! a whole simulation, thousands of times longer than a lock, so a single
+//! mutexed `VecDeque` outperforms anything cleverer while keeping the
+//! semantics obvious. Results come back in submission order regardless of
+//! which worker ran which job, and no job output depends on scheduling,
+//! so sweeps are deterministic for any thread count.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Worker-thread count: `REPRO_THREADS` overrides the machine's available
 /// parallelism (useful for CI determinism checks and sizing experiments).
@@ -26,8 +26,57 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
 }
 
-/// Run `f(0..n_jobs)` across `threads` workers with work stealing; returns
-/// the results in job order. `f` must be safe to call from any worker (the
+/// The shared injector: a FIFO of job indices plus the closed flag, with
+/// a condvar that parks idle workers until either changes.
+struct Injector {
+    q: Mutex<InjectorState>,
+    cv: Condvar,
+}
+
+struct InjectorState {
+    jobs: VecDeque<usize>,
+    closed: bool,
+}
+
+impl Injector {
+    fn new() -> Self {
+        Injector {
+            q: Mutex::new(InjectorState { jobs: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue one job and wake one parked worker.
+    fn submit(&self, job: usize) {
+        self.q.lock().unwrap().jobs.push_back(job);
+        self.cv.notify_one();
+    }
+
+    /// No more submissions: wake *every* parked worker so all can observe
+    /// the close and exit once the queue drains.
+    fn close(&self) {
+        self.q.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Claim the next job, parking on the condvar while the queue is empty
+    /// but still open. `None` means closed-and-drained: the worker exits.
+    fn next_job(&self) -> Option<usize> {
+        let mut state = self.q.lock().unwrap();
+        loop {
+            if let Some(j) = state.jobs.pop_front() {
+                return Some(j);
+            }
+            if state.closed {
+                return None;
+            }
+            state = self.cv.wait(state).unwrap();
+        }
+    }
+}
+
+/// Run `f(0..n_jobs)` across `threads` condvar-parked workers; returns the
+/// results in job order. `f` must be safe to call from any worker (the
 /// sweep layer wraps each job in `catch_unwind`, so `f` itself never
 /// unwinds).
 pub fn run_jobs<T, F>(n_jobs: usize, threads: usize, f: F) -> Vec<T>
@@ -43,25 +92,28 @@ where
         return (0..n_jobs).map(f).collect();
     }
 
-    let queues: Vec<Mutex<VecDeque<usize>>> = (0..threads)
-        .map(|w| Mutex::new((0..n_jobs).filter(|j| j % threads == w).collect()))
-        .collect();
+    let injector = Injector::new();
     let results: Vec<Mutex<Option<T>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
 
     std::thread::scope(|scope| {
-        for w in 0..threads {
-            let queues = &queues;
+        for _ in 0..threads {
+            let injector = &injector;
             let results = &results;
             let f = &f;
             scope.spawn(move || {
-                // No job enqueues further jobs, so once every deque is
-                // empty all work has been claimed and this worker is done.
-                while let Some(j) = pop_own(&queues[w]).or_else(|| steal(queues, w)) {
+                while let Some(j) = injector.next_job() {
                     let out = f(j);
                     *results[j].lock().unwrap() = Some(out);
                 }
             });
         }
+        // Submit after spawning so the park/wake path is exercised on
+        // every run, then close so drained workers exit instead of
+        // parking forever.
+        for j in 0..n_jobs {
+            injector.submit(j);
+        }
+        injector.close();
     });
 
     results
@@ -70,24 +122,11 @@ where
         .collect()
 }
 
-fn pop_own(q: &Mutex<VecDeque<usize>>) -> Option<usize> {
-    q.lock().unwrap().pop_front()
-}
-
-fn steal(queues: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
-    let n = queues.len();
-    for off in 1..n {
-        if let Some(j) = queues[(me + off) % n].lock().unwrap().pop_back() {
-            return Some(j);
-        }
-    }
-    None
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
 
     #[test]
     fn results_come_back_in_submission_order() {
@@ -114,16 +153,58 @@ mod tests {
 
     #[test]
     fn skewed_job_durations_still_complete() {
-        // Worker 0's local queue holds all the slow jobs; the others must
-        // steal them for the run to finish promptly — either way, every
-        // result must land.
+        // A quarter of the jobs are slow; fast workers must keep claiming
+        // from the shared injector (not spin on a private queue) for the
+        // run to finish promptly — either way, every result must land.
         let out = run_jobs(24, 4, |j| {
             if j % 4 == 0 {
-                std::thread::sleep(std::time::Duration::from_millis(5));
+                std::thread::sleep(Duration::from_millis(5));
             }
             j
         });
         assert_eq!(out, (0..24).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parked_worker_wakes_on_late_submission() {
+        // Drive the injector directly: a worker that finds the queue empty
+        // parks on the condvar; a submission milliseconds later must wake
+        // it (a sleep-poll loop would also pass, but the run_jobs path
+        // contains no sleeps — this pins the handoff itself).
+        let injector = Injector::new();
+        let got = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            let injector = &injector;
+            let got = &got;
+            scope.spawn(move || {
+                while let Some(j) = injector.next_job() {
+                    got.lock().unwrap().push(j);
+                }
+            });
+            std::thread::sleep(Duration::from_millis(10));
+            injector.submit(7);
+            std::thread::sleep(Duration::from_millis(10));
+            injector.submit(8);
+            injector.close();
+        });
+        assert_eq!(*got.lock().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn close_releases_parked_workers() {
+        // Workers parked on an empty injector must all exit on close
+        // without any job ever being submitted.
+        let injector = Injector::new();
+        std::thread::scope(|scope| {
+            let injector = &injector;
+            for _ in 0..4 {
+                scope.spawn(move || {
+                    assert_eq!(injector.next_job(), None);
+                });
+            }
+            std::thread::sleep(Duration::from_millis(5));
+            injector.close();
+        });
     }
 
     #[test]

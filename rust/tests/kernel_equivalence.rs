@@ -1,0 +1,207 @@
+//! Differential tests for the unified event kernel.
+//!
+//! The kernel (`coordinator/kernel.rs`) replaces the batched driver's
+//! inline loop with typed events and adds the deterministic parallel
+//! fan-outs (run-level, epoch-barrier decay, hop-LUT fill). Nothing
+//! observable may change: a kernel running with a multi-thread partition
+//! width must produce `ServedRequest` streams identical request-by-request
+//! to `simulate_once_scalar` across every topology, both presets and both
+//! ends of the policy spectrum — and `simulate_runs` must produce
+//! `RunReport`s identical byte-for-byte at every thread count.
+//! `tests/batched_equivalence.rs` already pins the (kernel-backed)
+//! `simulate_once` facade; this suite drives the kernel directly at
+//! thread counts > 1 and storms its event ordering.
+
+use dlpim::config::{SimConfig, Topology};
+use dlpim::coordinator::driver::{simulate, simulate_once_scalar_observed};
+use dlpim::coordinator::kernel::Kernel;
+use dlpim::memsys::{Access, ServedRequest};
+use dlpim::policy::PolicyKind;
+use dlpim::workloads::{catalog, Op, Workload};
+use dlpim::CoreId;
+
+type Stream = Vec<(Access, ServedRequest)>;
+
+/// Run the kernel (at `threads`) and the scalar reference on identical
+/// seeds; assert stream equality with a pinpointed first-divergence
+/// message and return both reports.
+fn diff_kernel_vs_scalar(
+    cfg: &SimConfig,
+    workload: &mut dyn Workload,
+    threads: usize,
+    label: &str,
+) -> (Stream, dlpim::coordinator::RunReport, dlpim::coordinator::RunReport) {
+    let mut kernel_stream: Stream = Vec::new();
+    workload.reset(cfg.seed);
+    let rep_k = Kernel::new(threads)
+        .run_once_observed(cfg, workload, |a, r| kernel_stream.push((a, *r)));
+
+    let mut scalar: Stream = Vec::new();
+    workload.reset(cfg.seed);
+    let rep_s = simulate_once_scalar_observed(cfg, workload, |a, r| scalar.push((a, *r)));
+
+    assert_eq!(
+        kernel_stream.len(),
+        scalar.len(),
+        "{label}: request counts diverge (kernel {} vs scalar {})",
+        kernel_stream.len(),
+        scalar.len()
+    );
+    for (i, (k, s)) in kernel_stream.iter().zip(scalar.iter()).enumerate() {
+        assert_eq!(k, s, "{label}: first divergence at request #{i}");
+    }
+    (kernel_stream, rep_s, rep_k)
+}
+
+/// The matrix the tentpole promises: the kernel at a multi-thread
+/// partition width vs the scalar reference over every topology, both
+/// presets, no-subscription baseline and the headline adaptive policy.
+#[test]
+fn kernel_and_scalar_streams_identical_across_matrix() {
+    for preset in ["hmc", "hbm"] {
+        for topology in [Topology::Mesh, Topology::Crossbar, Topology::Ring] {
+            for policy in [PolicyKind::Never, PolicyKind::Adaptive] {
+                let mut cfg = SimConfig::preset(preset).unwrap();
+                cfg.topology = topology;
+                cfg.policy = policy;
+                cfg.warmup_requests = 500;
+                cfg.measure_requests = 3_000;
+                cfg.runs = 1;
+                cfg.validate().unwrap_or_else(|e| {
+                    panic!("{preset}/{}: {}", topology.as_str(), e.join("; "))
+                });
+                let label =
+                    format!("{preset}/{}/{}", topology.as_str(), policy.as_str());
+                let mut w = catalog::build("SPLRad", &cfg).unwrap();
+                let (stream, rep_s, rep_k) = diff_kernel_vs_scalar(&cfg, w.as_mut(), 4, &label);
+                assert!(!stream.is_empty(), "{label}: no requests captured");
+                assert_eq!(rep_k, rep_s, "{label}: reports diverge");
+            }
+        }
+    }
+}
+
+/// A randomized multi-core generator built to storm the kernel's event
+/// ordering: per-core LCG streams mixing zero gaps (same-cycle re-arms
+/// that must pop in core order), unit gaps, short random gaps and huge
+/// gaps (admission-window edges), with random read/write mix over a
+/// region far larger than the L1.
+struct OrderingStorm {
+    state: Vec<u64>,
+    remaining: Vec<u64>,
+    n: u16,
+}
+
+impl OrderingStorm {
+    fn new(n: u16) -> Self {
+        OrderingStorm { state: vec![0; n as usize], remaining: vec![0; n as usize], n }
+    }
+
+    fn next_u64(&mut self, c: usize) -> u64 {
+        // SplitMix64 step: high-quality per-core streams from one seed.
+        let mut z = self.state[c].wrapping_add(0x9E37_79B9_7F4A_7C15);
+        self.state[c] = z;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+impl Workload for OrderingStorm {
+    fn name(&self) -> &'static str {
+        "OrderingStorm"
+    }
+
+    fn next_op(&mut self, core: CoreId) -> Option<Op> {
+        let c = core as usize;
+        if self.remaining[c] == 0 {
+            return None;
+        }
+        self.remaining[c] -= 1;
+        let x = self.next_u64(c);
+        let addr = ((x >> 16) % 500_000) * 64; // ~30 MB region: misses dominate
+        let write = x % 5 == 0;
+        let gap = match (x >> 8) % 8 {
+            0 | 1 | 2 => 0,              // same-cycle re-arm (core-order pops)
+            3 | 4 => 1,                  // back-to-back
+            5 | 6 => (x % 64) as u32,    // short random
+            _ => 100_000 + (x % 7) as u32 * 50_000, // past the admission window
+        };
+        Some(Op { addr, write, gap })
+    }
+
+    fn reset(&mut self, seed: u64) {
+        for c in 0..self.n as usize {
+            self.state[c] = seed ^ (c as u64).wrapping_mul(0xA076_1D64_78BD_642F);
+            self.remaining[c] = 1_500;
+        }
+    }
+}
+
+#[test]
+fn randomized_ordering_storm_matches_scalar() {
+    for seed in [1u64, 0xDEAD_BEEF, 0x1234_5678_9ABC_DEF0] {
+        for policy in [PolicyKind::Never, PolicyKind::Adaptive] {
+            let mut cfg = SimConfig::hmc();
+            cfg.policy = policy;
+            cfg.seed = seed;
+            cfg.warmup_requests = 300;
+            cfg.measure_requests = 5_000;
+            cfg.runs = 1;
+            let mut w = OrderingStorm::new(cfg.n_vaults);
+            let label = format!("storm/{}/seed={seed:#x}", policy.as_str());
+            let (stream, rep_s, rep_k) = diff_kernel_vs_scalar(&cfg, &mut w, 8, &label);
+            assert_eq!(rep_k, rep_s, "{label}: reports diverge");
+            assert!(!stream.is_empty(), "{label}: no requests captured");
+        }
+    }
+}
+
+/// The thread-count determinism matrix of the acceptance criteria: the
+/// same multi-run simulation fanned across 1/2/4/8 kernel threads must
+/// return `RunReport`s identical to the sequential `simulate` loop — not
+/// just value-equal but identical in their full `Debug` rendering (every
+/// field of every run, decision and stat, byte for byte).
+#[test]
+fn simulate_runs_identical_at_every_thread_count() {
+    let mut cfg = SimConfig::hmc().quick();
+    cfg.policy = PolicyKind::Adaptive;
+    cfg.warmup_requests = 300;
+    cfg.measure_requests = 2_000;
+    cfg.runs = 4;
+    let reference = simulate(&cfg, catalog::build("SPLRad", &cfg).unwrap());
+    assert_eq!(reference.runs.len(), 4);
+    let ref_bytes = format!("{reference:?}");
+
+    for threads in [1usize, 2, 4, 8] {
+        let rep = Kernel::new(threads).simulate_runs(&cfg, "SPLRad", || {
+            catalog::build("SPLRad", &cfg).unwrap()
+        });
+        assert_eq!(rep, reference, "threads={threads}: reports diverge");
+        assert_eq!(
+            format!("{rep:?}"),
+            ref_bytes,
+            "threads={threads}: Debug renderings diverge"
+        );
+    }
+}
+
+/// Same determinism bar for a workload whose per-run streams depend on
+/// the seed (each run r reseeds with seed + r): parallel run claiming
+/// must not perturb which seed drives which run slot.
+#[test]
+fn per_run_seeding_survives_parallel_claiming() {
+    let mut cfg = SimConfig::hmc().quick();
+    cfg.policy = PolicyKind::Never;
+    cfg.warmup_requests = 100;
+    cfg.measure_requests = 1_000;
+    cfg.runs = 5; // odd count: uneven split across 2 and 4 workers
+    let reference = simulate(&cfg, catalog::build("STRTriad", &cfg).unwrap());
+
+    for threads in [2usize, 4, 8] {
+        let rep = Kernel::new(threads).simulate_runs(&cfg, "STRTriad", || {
+            catalog::build("STRTriad", &cfg).unwrap()
+        });
+        assert_eq!(rep, reference, "threads={threads}");
+    }
+}
