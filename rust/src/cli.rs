@@ -91,10 +91,15 @@ pub mod flags {
         "config", "memory", "policy", "topology", "quick", "paper-scale", "warmup",
         "measure", "runs", "seed", "epoch", "trace",
     ];
+    /// Observability flags shared by the simulating commands:
+    /// `--metrics-out [FILE]` enables telemetry and exports the metrics
+    /// snapshot (JSON + Prometheus sibling), `--quiet` / `--v` /
+    /// `--verbose` pick the log level.
+    pub const OBS: &[&str] = &["metrics-out", "quiet", "v", "verbose"];
     pub const RUN: &[&str] = &[
         "config", "memory", "policy", "topology", "quick", "paper-scale", "warmup",
         "measure", "runs", "seed", "epoch", "trace", "workload", "record", "no-loop",
-        "threads",
+        "threads", "metrics-out", "quiet", "v", "verbose",
     ];
     pub const TRACE_RECORD: &[&str] = &[
         "config", "memory", "policy", "topology", "quick", "paper-scale", "warmup",
@@ -110,15 +115,18 @@ pub mod flags {
     /// `repro figure`: `--list` enumerates the spec registry;
     /// `--no-disk-cache` keeps this invocation from reading/writing the
     /// persistent report cache.
-    pub const FIGURE: &[&str] = &["list", "no-disk-cache"];
+    pub const FIGURE: &[&str] =
+        &["list", "no-disk-cache", "metrics-out", "quiet", "v", "verbose"];
     /// `repro all-figures`.
-    pub const ALL_FIGURES: &[&str] = &["no-disk-cache"];
+    pub const ALL_FIGURES: &[&str] =
+        &["no-disk-cache", "metrics-out", "quiet", "v", "verbose"];
     /// `repro sweep`: `--spec FILE`, or the ad-hoc axis flags mirroring
     /// the spec-file keys (dashes for underscores).
     pub const SWEEP: &[&str] = &[
         "spec", "name", "title", "memory", "topology", "workloads", "policies",
         "baseline", "table-entries", "thresholds", "epochs", "trace", "trace-mix",
-        "mixes", "warmup", "measure", "runs", "seed", "no-disk-cache",
+        "mixes", "warmup", "measure", "runs", "seed", "no-disk-cache", "metrics-out",
+        "quiet", "v", "verbose",
     ];
     /// `repro cache stats|clear|gc`: `--dir` overrides the store location
     /// (default: `REPRO_CACHE_DIR` or `target/repro/cache`).
@@ -255,6 +263,16 @@ CACHE FLAGS (figure / all-figures / sweep):
     --no-disk-cache  compute every point; don't read or write the
                      persistent report cache (in-process reuse still applies)
 
+OBSERVABILITY FLAGS (run / figure / all-figures / sweep):
+    --metrics-out [FILE]  record telemetry and write the metrics snapshot
+                     as exact-integer JSON (default target/repro/metrics.json)
+                     plus a Prometheus text sibling (.prom). Passive: enabling
+                     it never changes simulated cycles, cache keys or
+                     artifact bytes (see docs/OBSERVABILITY.md)
+    --quiet          suppress progress output (errors still print)
+    --v, --verbose   extra diagnostics (the default prints exactly the
+                     historic progress lines)
+
 ENVIRONMENT:
     REPRO_THREADS        sweep worker threads (default: all cores) and the
                          run command's kernel threads (default: 1)
@@ -264,6 +282,8 @@ ENVIRONMENT:
     REPRO_NO_DISK_CACHE  1|true disables the persistent report cache
     REPRO_TOPOLOGY       override the interconnect for every figure run
                          (mesh|crossbar|ring; default: the preset's topology)
+    REPRO_LOG            quiet|info|debug (or 0|1|2) default log level;
+                         --quiet / --v win when given
 ";
 
 #[cfg(test)]
@@ -350,6 +370,20 @@ mod tests {
         assert!(known_flags("bogus", None).is_none());
         assert!(known_flags("trace", Some("bogus")).is_none());
         assert!(known_flags("cache", Some("bogus")).is_none());
+    }
+
+    #[test]
+    fn obs_flags_on_every_simulating_command() {
+        for (cmd, list) in [
+            ("run", flags::RUN),
+            ("figure", flags::FIGURE),
+            ("all-figures", flags::ALL_FIGURES),
+            ("sweep", flags::SWEEP),
+        ] {
+            for f in flags::OBS {
+                assert!(list.contains(f), "--{f} missing from `{cmd}`");
+            }
+        }
     }
 
     #[test]

@@ -44,6 +44,24 @@ pub fn simulate(cfg: &SimConfig, mut workload: Box<dyn Workload>) -> SimReport {
     SimReport { workload: name, policy: cfg.policy.as_str(), runs }
 }
 
+/// [`simulate`] with a per-request observer threaded through every run —
+/// the sweep engine's metrics path. The observer only reads each
+/// [`ServedRequest`], so the report is identical to [`simulate`] by
+/// construction (pinned by `tests/observability.rs`).
+pub fn simulate_observed<F: FnMut(Access, &ServedRequest)>(
+    cfg: &SimConfig,
+    mut workload: Box<dyn Workload>,
+    mut obs: F,
+) -> SimReport {
+    let name = workload.name().to_string();
+    let mut runs = Vec::with_capacity(cfg.runs as usize);
+    for r in 0..cfg.runs.max(1) {
+        workload.reset(cfg.seed.wrapping_add(r as u64));
+        runs.push(simulate_once_observed(cfg, workload.as_mut(), &mut obs));
+    }
+    SimReport { workload: name, policy: cfg.policy.as_str(), runs }
+}
+
 /// Warmup/measure bookkeeping of one run (shared by the scalar reference
 /// and the event kernel).
 pub(crate) struct MeasureWindow {

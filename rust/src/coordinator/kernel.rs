@@ -198,6 +198,25 @@ impl Kernel {
     where
         B: Fn() -> Box<dyn Workload> + Sync,
     {
+        self.simulate_runs_observed(cfg, name, build, |_, _| {})
+    }
+
+    /// [`Kernel::simulate_runs`] with a per-request observer shared by
+    /// every run worker (`Fn + Sync`: the metrics hooks are global
+    /// atomics, so one stateless closure serves all threads). The
+    /// observer only reads each request, so reports stay bit-identical
+    /// to the unobserved path at any thread count.
+    pub fn simulate_runs_observed<B, F>(
+        &self,
+        cfg: &SimConfig,
+        name: &str,
+        build: B,
+        obs: F,
+    ) -> SimReport
+    where
+        B: Fn() -> Box<dyn Workload> + Sync,
+        F: Fn(Access, &ServedRequest) + Sync,
+    {
         let runs_n = cfg.runs.max(1) as usize;
         let run_workers = self.threads.min(runs_n);
         let per_run = Kernel::new(self.threads / run_workers);
@@ -207,7 +226,7 @@ impl Kernel {
             (0..runs_n)
                 .map(|r| {
                     w.reset(cfg.seed.wrapping_add(r as u64));
-                    per_run.run_once(cfg, w.as_mut())
+                    per_run.run_once_observed(cfg, w.as_mut(), |a, r| obs(a, r))
                 })
                 .collect()
         } else {
@@ -225,7 +244,7 @@ impl Kernel {
                         }
                         let mut w = build();
                         w.reset(cfg.seed.wrapping_add(r as u64));
-                        let rep = per_run.run_once(cfg, w.as_mut());
+                        let rep = per_run.run_once_observed(cfg, w.as_mut(), |a, q| obs(a, q));
                         *slots[r].lock().unwrap() = Some(rep);
                     });
                 }
@@ -420,6 +439,14 @@ impl<F: FnMut(Access, &ServedRequest)> KernelRun<'_, F> {
             self.last_t = self.last_t.max(core.time);
         }
         let end = self.window_end.unwrap_or(self.last_t);
+
+        // End-of-run subscription-table occupancy sample: a pure read,
+        // once per run, only when telemetry is opted in. Deterministic
+        // (simulated state), so it folds into the metrics determinism
+        // pins; it cannot feed back into the report.
+        if crate::obs::enabled() {
+            crate::obs::SUBSCRIPTION_OCCUPANCY.observe(self.mem.total_parked());
+        }
 
         RunReport {
             cycles: end.saturating_sub(self.win.measure_start),

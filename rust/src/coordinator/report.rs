@@ -66,6 +66,27 @@ impl SimReport {
         )
     }
 
+    /// Mean (queue_net, queue_mem) latency fractions: the queue share of
+    /// [`Self::latency_fractions`] split into interconnect-link wait and
+    /// vault controller/bank wait. Per run the two add up to the queue
+    /// fraction exactly (`queue_net`/`queue_mem` partition the queue
+    /// cycles), so `transfer + queue_net + queue_mem + service = 1` —
+    /// the latency-breakdown telemetry row's contract.
+    pub fn queue_fractions(&self) -> (f64, f64) {
+        let split = |r: &RunReport, part: u64| {
+            let total = r.stats.queue_net + r.stats.queue_mem;
+            if total == 0 {
+                0.0
+            } else {
+                r.stats.latency.fractions().1 * part as f64 / total as f64
+            }
+        };
+        (
+            self.mean(|r| split(r, r.stats.queue_net)),
+            self.mean(|r| split(r, r.stats.queue_mem)),
+        )
+    }
+
     /// Mean CoV of per-vault served demand — Figs 3/4/12/13.
     pub fn cov(&self) -> f64 {
         self.mean(|r| r.stats.demand.cov())
@@ -159,6 +180,28 @@ mod tests {
             dl.runs[0].stats.latency.record(0, 0, 50);
         }
         assert!((dl.latency_improvement_vs(&base) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn queue_fractions_partition_the_queue_share() {
+        let mut r = report(1000);
+        r.runs[0].stats.latency = Default::default();
+        // 10 requests, each 20 network + 50 queue + 30 array cycles.
+        for _ in 0..10 {
+            r.runs[0].stats.latency.record(20, 50, 30);
+        }
+        // The queue cycles split 3:2 between links and controllers.
+        r.runs[0].stats.queue_net = 300;
+        r.runs[0].stats.queue_mem = 200;
+        let (net, mem) = r.queue_fractions();
+        let queue_frac = r.latency_fractions().1;
+        assert!((net + mem - queue_frac).abs() < 1e-12);
+        assert!((net - 0.5 * 0.6).abs() < 1e-12);
+        assert!((mem - 0.5 * 0.4).abs() < 1e-12);
+
+        // No recorded queueing: both shares are 0, not NaN.
+        let empty = report(1000);
+        assert_eq!(empty.queue_fractions(), (0.0, 0.0));
     }
 
     #[test]

@@ -50,7 +50,7 @@ pub mod spec;
 pub mod tomlspec;
 
 pub use output::{geomean, print_rows, render_csv, render_json};
-pub use run::{emit_artifact, run_spec, RowResult, SpecRun};
+pub use run::{emit_artifact, run_spec, run_spec_checked, RowResult, SpecFailure, SpecRun};
 pub use spec::{cfg_for, scaled, ExperimentSpec, OutputSchema, TraceSource, WorkloadSet};
 
 use std::path::PathBuf;
@@ -61,11 +61,29 @@ use std::path::PathBuf;
 /// writes `target/figures/<name>.csv` when `write_csv` is set (the bench
 /// plotting contract).
 pub fn run_and_emit(spec: &ExperimentSpec, write_csv: bool) -> Result<PathBuf, String> {
-    let run = run_spec(spec)?;
+    let run = match run_spec_checked(spec) {
+        Ok(run) => run,
+        Err(fail) => {
+            // A failed spec still prints its accounting line — with the
+            // panic count — and emits *no* artifact: a partial figure
+            // JSON would silently poison downstream plots, so the caller
+            // gets an error (and the CLI a non-zero exit) instead.
+            crate::log_info!(
+                "{} | points {} | cached {} | simulated {} | panicked {}",
+                spec.artifact_name(),
+                fail.from_cache + fail.simulated + fail.panicked,
+                fail.from_cache,
+                fail.simulated,
+                fail.panicked
+            );
+            return Err(fail.joined());
+        }
+    };
+    let _render = crate::obs::span(&crate::obs::SPAN_RENDER_NS);
     print_rows(spec, &run);
     // The warm-rerun contract (asserted by CI's cold-vs-warm check): a
     // fully cached figure prints `simulated 0` and scheduled no jobs.
-    println!(
+    crate::log_info!(
         "{} | points {} | cached {} | simulated {}",
         spec.artifact_name(),
         run.from_cache + run.simulated,
@@ -82,7 +100,7 @@ pub fn run_and_emit(spec: &ExperimentSpec, write_csv: bool) -> Result<PathBuf, S
         std::fs::write(&path, csv).map_err(|e| format!("write {path}: {e}"))?;
     }
     let artifact = emit_artifact(spec, &run)?;
-    println!("{} | artifact: {}", spec.artifact_name(), artifact.display());
+    crate::log_info!("{} | artifact: {}", spec.artifact_name(), artifact.display());
     Ok(artifact)
 }
 
@@ -94,6 +112,6 @@ pub fn run_named_figure(name: &str) -> PathBuf {
     let spec = registry::by_figure(name)
         .unwrap_or_else(|| panic!("no spec named {name:?} in the figure registry"));
     let artifact = run_and_emit(&spec, true).unwrap_or_else(|e| panic!("{e}"));
-    println!("{} | wallclock {:.1}s", spec.artifact_name(), t0.elapsed().as_secs_f64());
+    crate::log_info!("{} | wallclock {:.1}s", spec.artifact_name(), t0.elapsed().as_secs_f64());
     artifact
 }

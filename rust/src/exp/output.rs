@@ -18,6 +18,8 @@ pub fn extract(ex: Extract, row: &RowResult) -> f64 {
                 Metric::BytesPerCycle => r.bytes_per_cycle(),
                 Metric::NetworkFraction => r.latency_fractions().0,
                 Metric::QueueFraction => r.latency_fractions().1,
+                Metric::QueueNetFraction => r.queue_fractions().0,
+                Metric::QueueMemFraction => r.queue_fractions().1,
                 Metric::ArrayFraction => r.latency_fractions().2,
                 Metric::RemoteOverhead => {
                     let (n, q, _) = r.latency_fractions();
@@ -147,7 +149,9 @@ pub fn render_json(spec: &ExperimentSpec, run: &SpecRun) -> JsonValue {
 
 /// Print the run as aligned `name | row | col value | …` lines, plus a
 /// geomean summary for speedup-bearing schemas (the paper averages over
-/// workloads geometrically).
+/// workloads geometrically). Rows go through the leveled logger: the
+/// default (`Info`) output is byte-identical to the historic prints,
+/// `--quiet` suppresses them.
 pub fn print_rows(spec: &ExperimentSpec, run: &SpecRun) {
     let name = spec.artifact_name();
     match &spec.output {
@@ -157,7 +161,7 @@ pub fn print_rows(spec: &ExperimentSpec, run: &SpecRun) {
                     .iter()
                     .map(|(k, v)| format!("{k} {v:.3}"))
                     .collect();
-                println!("{name} | {:<12} | {}", row.label, rendered.join(" | "));
+                crate::log_info!("{name} | {:<12} | {}", row.label, rendered.join(" | "));
             }
         }
         OutputSchema::Series(axis) => {
@@ -166,14 +170,14 @@ pub fn print_rows(spec: &ExperimentSpec, run: &SpecRun) {
                     .iter()
                     .map(|(x, s)| format!("{x}:{s:.3}"))
                     .collect();
-                println!("{name} | {:<12} | {}", row.label, rendered.join(" | "));
+                crate::log_info!("{name} | {:<12} | {}", row.label, rendered.join(" | "));
             }
         }
         OutputSchema::Long => {
             for row in &run.rows {
                 for (i, cp) in run.configs.iter().enumerate() {
                     let rep = &row.reports[i];
-                    println!(
+                    crate::log_info!(
                         "{name} | {:<12} | {:<24} | cycles {:>12.0} | avg_lat {:>8.1} | \
                          cov {:.3} | speedup {:.3}",
                         row.label,
@@ -205,9 +209,9 @@ pub fn print_rows(spec: &ExperimentSpec, run: &SpecRun) {
             }
         };
         if s.paper.is_empty() {
-            println!("{name} | {} = {value}", s.label);
+            crate::log_info!("{name} | {} = {value}", s.label);
         } else {
-            println!("{name} | {} = {value} (paper: {})", s.label, s.paper);
+            crate::log_info!("{name} | {} = {value} (paper: {})", s.label, s.paper);
         }
     }
 }

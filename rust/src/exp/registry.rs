@@ -252,6 +252,26 @@ pub fn figures() -> Vec<ExperimentSpec> {
     )];
     specs.push(f19);
 
+    // Telemetry row (not a paper figure): the full four-way latency
+    // decomposition under the HMC baseline — transfer vs interconnect
+    // queueing vs vault queueing vs array service. Same base config and
+    // workload set as Fig 1, so its sweep points cache-share with the
+    // Fig 1 runs (a warm `repro figure latency-breakdown` after `repro
+    // figure 1` simulates nothing).
+    let mut lb = ExperimentSpec {
+        name: "latency-breakdown".to_string(),
+        figure: None,
+        ..figure("1", "four-way latency decomposition (HMC baseline)", MemKind::Hmc)
+    };
+    lb.output = OutputSchema::Columns(vec![
+        Column::new("transfer", metric(0, Metric::NetworkFraction)),
+        Column::new("queue_net", metric(0, Metric::QueueNetFraction)),
+        Column::new("queue_mem", metric(0, Metric::QueueMemFraction)),
+        Column::new("service", metric(0, Metric::ArrayFraction)),
+        Column::new("avg_latency", metric(0, Metric::AvgLatency)),
+    ]);
+    specs.push(lb);
+
     specs
 }
 
@@ -283,7 +303,8 @@ mod tests {
     #[test]
     fn names_match_artifact_convention() {
         for s in figures() {
-            let id = s.figure.as_ref().unwrap();
+            // Telemetry rows (figure: None) pick their own names.
+            let Some(id) = s.figure.as_ref() else { continue };
             assert_eq!(s.name, format!("fig{id:0>2}"));
         }
     }
@@ -293,6 +314,23 @@ mod tests {
         assert_eq!(by_figure("11").unwrap().name, "fig11");
         assert_eq!(by_figure("fig09").unwrap().figure.as_deref(), Some("9"));
         assert!(by_figure("20").is_none());
+    }
+
+    #[test]
+    fn latency_breakdown_row_shares_fig1_points() {
+        let lb = by_figure("latency-breakdown").unwrap();
+        assert_eq!(lb.figure, None, "telemetry row, not a paper figure");
+        let f1 = by_figure("1").unwrap();
+        // Same expanded configs as Fig 1 ⇒ same report-cache keys.
+        let render = |s: &ExperimentSpec| {
+            s.expand()
+                .unwrap()
+                .iter()
+                .map(|p| crate::config::presets::render(&p.cfg))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(render(&lb), render(&f1));
+        assert_eq!(lb.row_labels().unwrap(), f1.row_labels().unwrap());
     }
 
     #[test]

@@ -48,11 +48,56 @@ struct Row {
     trace: Option<String>,
 }
 
+/// Aggregated failure of a spec run: *every* failed point's labelled
+/// message, plus the accounting of the points that did complete, so the
+/// caller can report how much of the figure survived before refusing to
+/// emit a partial artifact.
+#[derive(Clone, Debug)]
+pub struct SpecFailure {
+    /// Points satisfied by the report cache before anything failed.
+    pub from_cache: usize,
+    /// Points that simulated to completion.
+    pub simulated: usize,
+    /// Points whose job panicked inside the sweep engine (the sweep's
+    /// `catch_unwind` converts both build errors and simulator panics
+    /// into per-job failures rather than tearing down the process).
+    pub panicked: usize,
+    /// One labelled message per failed point. Spec-level failures
+    /// (axis expansion, trace preparation) produce a single message with
+    /// zero panic accounting.
+    pub messages: Vec<String>,
+}
+
+impl SpecFailure {
+    fn spec_level(msg: String) -> Self {
+        SpecFailure { from_cache: 0, simulated: 0, panicked: 0, messages: vec![msg] }
+    }
+
+    /// All failure messages as one `; `-joined string (the legacy
+    /// [`run_spec`] error shape).
+    pub fn joined(&self) -> String {
+        self.messages.join("; ")
+    }
+}
+
 /// Run a spec end-to-end on the sweep engine. Errors carry the failing
-/// axis value, workload or trace step.
+/// axis value, workload or trace step. Kept as the `String`-error shape
+/// most callers want; [`run_spec_checked`] exposes the per-point panic
+/// accounting behind it.
 pub fn run_spec(spec: &ExperimentSpec) -> Result<SpecRun, String> {
-    let configs = spec.expand()?;
-    let rows = prepare_rows(spec)?;
+    run_spec_checked(spec).map_err(|f| f.joined())
+}
+
+/// [`run_spec`] with aggregated failure accounting: instead of stopping
+/// at the first failed point, runs the whole grid and reports *all*
+/// failures plus how many points were cached / simulated / panicked.
+pub fn run_spec_checked(spec: &ExperimentSpec) -> Result<SpecRun, SpecFailure> {
+    let (configs, rows) = {
+        let _t = crate::obs::span(&crate::obs::SPAN_SPEC_EXPAND_NS);
+        let configs = spec.expand().map_err(SpecFailure::spec_level)?;
+        let rows = prepare_rows(spec).map_err(SpecFailure::spec_level)?;
+        (configs, rows)
+    };
 
     let mut points = Vec::with_capacity(rows.len() * configs.len());
     for row in &rows {
@@ -67,20 +112,32 @@ pub fn run_spec(spec: &ExperimentSpec) -> Result<SpecRun, String> {
     let mut outcomes = Sweep::new(points).run().into_iter();
 
     let mut results = Vec::with_capacity(rows.len());
-    let (mut from_cache, mut simulated) = (0usize, 0usize);
+    let (mut from_cache, mut simulated, mut panicked) = (0usize, 0usize, 0usize);
+    let mut messages = Vec::new();
     for row in rows {
         let mut reports: Vec<SimReport> = Vec::with_capacity(configs.len());
         for cp in &configs {
             let outcome = outcomes.next().expect("one outcome per point");
-            if outcome.from_cache {
-                from_cache += 1;
-            } else {
-                simulated += 1;
+            match outcome.result {
+                Ok(rep) => {
+                    if outcome.from_cache {
+                        from_cache += 1;
+                    } else {
+                        simulated += 1;
+                    }
+                    reports.push(rep);
+                }
+                Err(e) => {
+                    // Every sweep-level failure is a caught panic: the
+                    // job wrapper converts build errors into panics and
+                    // `catch_unwind` converts panics into this arm.
+                    panicked += 1;
+                    messages.push(format!(
+                        "{}: job ({} x {}) failed: {e}",
+                        spec.name, row.label, cp.label
+                    ));
+                }
             }
-            let rep = outcome.result.map_err(|e| {
-                format!("{}: job ({} x {}) failed: {e}", spec.name, row.label, cp.label)
-            })?;
-            reports.push(rep);
         }
         results.push(RowResult {
             label: row.label,
@@ -89,7 +146,11 @@ pub fn run_spec(spec: &ExperimentSpec) -> Result<SpecRun, String> {
             reports,
         });
     }
-    Ok(SpecRun { configs, rows: results, from_cache, simulated })
+    if messages.is_empty() {
+        Ok(SpecRun { configs, rows: results, from_cache, simulated })
+    } else {
+        Err(SpecFailure { from_cache, simulated, panicked, messages })
+    }
 }
 
 /// Resolve the row axis, materializing trace files where needed.
@@ -226,5 +287,17 @@ mod tests {
         spec.trace = crate::exp::spec::TraceSource::File("/nonexistent/x.dlpt".into());
         let err = run_spec(&spec).unwrap_err();
         assert!(err.contains("x.dlpt") || err.contains("No such file"), "{err}");
+    }
+
+    #[test]
+    fn spec_level_failures_carry_no_panic_accounting() {
+        let mut spec = tiny("unit-sweep-bad-checked");
+        spec.workloads = WorkloadSet::Named(vec!["STRAdd".into()]);
+        spec.trace = crate::exp::spec::TraceSource::File("/nonexistent/x.dlpt".into());
+        let fail = run_spec_checked(&spec).unwrap_err();
+        assert_eq!(fail.panicked, 0, "prepare failure is not a job panic");
+        assert_eq!(fail.from_cache + fail.simulated, 0);
+        assert_eq!(fail.messages.len(), 1);
+        assert_eq!(fail.joined(), fail.messages[0]);
     }
 }

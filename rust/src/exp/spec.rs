@@ -178,6 +178,12 @@ pub enum Metric {
     BytesPerCycle,
     NetworkFraction,
     QueueFraction,
+    /// Interconnect-link share of the queue fraction (the
+    /// `latency-breakdown` telemetry row splits `QueueFraction` into
+    /// this plus [`Metric::QueueMemFraction`]).
+    QueueNetFraction,
+    /// Vault controller/bank share of the queue fraction.
+    QueueMemFraction,
     ArrayFraction,
     /// Network + queue latency fractions — the paper's "remote access
     /// overhead" headline of Figs 1/2.

@@ -49,6 +49,7 @@ pub mod error;
 pub mod exp;
 pub mod figures;
 pub mod memsys;
+pub mod obs;
 pub mod perf;
 pub mod policy;
 pub mod proptest_lite;

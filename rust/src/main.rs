@@ -5,11 +5,13 @@ use std::path::Path;
 
 use dlpim::cli::{self, Cli, HELP};
 use dlpim::config::{presets, SimConfig, Topology};
-use dlpim::coordinator::driver::simulate;
+use dlpim::coordinator::driver::{simulate, simulate_observed};
 use dlpim::coordinator::kernel::Kernel;
 use dlpim::coordinator::report::SimReport;
 use dlpim::error::{bail, err, Result};
 use dlpim::exp;
+use dlpim::log_info;
+use dlpim::obs;
 use dlpim::policy::PolicyKind;
 use dlpim::runtime::ArtifactStore;
 use dlpim::sweep;
@@ -41,6 +43,14 @@ fn run(args: &[String]) -> Result<()> {
     if cli.has("no-disk-cache") {
         sweep::cache::set_disk_cache_enabled(false);
     }
+    obs::log::init(cli.has("quiet"), cli.has("v") || cli.has("verbose"));
+    // `--metrics-out` opts into request telemetry before any simulation
+    // starts; the snapshot is exported only after the command succeeds
+    // (a failed figure leaves no half-truthful metrics artifact behind).
+    let metrics_out = metrics_out_path(&cli);
+    if metrics_out.is_some() {
+        obs::enable();
+    }
     match cli.command.as_str() {
         "run" => cmd_run(&cli),
         "figure" => cmd_figure(&cli),
@@ -53,6 +63,22 @@ fn run(args: &[String]) -> Result<()> {
         "bench" => cmd_bench(&cli),
         "artifacts" => cmd_artifacts(),
         other => bail!("unknown command {other:?}; try `repro help`"),
+    }?;
+    if let Some(path) = metrics_out {
+        let prom = obs::export::write_files(&obs::snapshot(), &path).map_err(|e| err!(e))?;
+        log_info!("metrics         {} (+ {})", path.display(), prom.display());
+    }
+    Ok(())
+}
+
+/// The `--metrics-out` target: an explicit FILE, or the default
+/// `target/repro/metrics.json` when the flag is given bare (the parser
+/// assigns valueless switches "true").
+fn metrics_out_path(cli: &Cli) -> Option<std::path::PathBuf> {
+    match cli.flag("metrics-out") {
+        None => None,
+        Some("true") => Some(std::path::PathBuf::from("target/repro/metrics.json")),
+        Some(p) => Some(std::path::PathBuf::from(p)),
     }
 }
 
@@ -137,11 +163,25 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         // with a proper error before any thread spawns.
         let w = workloads::build_source(cli.flag("workload"), &cfg).map_err(|e| err!(e))?;
         let name = w.name().to_string();
+        // With `--metrics-out` the observed driver paths run instead,
+        // feeding each served request's latency decomposition into the
+        // histograms. Same simulation, same report bytes — the observer
+        // only reads (pinned by tests/observability.rs).
         let rep = if kernel.threads() > 1 {
             let source = cli.flag("workload");
             drop(w);
-            kernel.simulate_runs(&cfg, &name, || {
-                workloads::build_source(source, &cfg).expect("source validated above")
+            let build =
+                || workloads::build_source(source, &cfg).expect("source validated above");
+            if obs::enabled() {
+                kernel.simulate_runs_observed(&cfg, &name, build, |_, r| {
+                    obs::record_request(r.network, r.queued_net, r.queued_mem(), r.array)
+                })
+            } else {
+                kernel.simulate_runs(&cfg, &name, build)
+            }
+        } else if obs::enabled() {
+            simulate_observed(&cfg, w, |_, r| {
+                obs::record_request(r.network, r.queued_net, r.queued_mem(), r.array)
             })
         } else {
             simulate(&cfg, w)
@@ -151,9 +191,9 @@ fn cmd_run(cli: &Cli) -> Result<()> {
     let dt = t0.elapsed();
     print_report(&name, &cfg, &rep);
     if kernel.threads() > 1 {
-        println!("threads         {}", kernel.threads());
+        log_info!("threads         {}", kernel.threads());
     }
-    println!("wallclock       {:.2}s", dt.as_secs_f64());
+    log_info!("wallclock       {:.2}s", dt.as_secs_f64());
     Ok(())
 }
 
@@ -536,14 +576,14 @@ fn cmd_figure_list() -> Result<()> {
 fn cmd_all_figures() -> Result<()> {
     for spec in exp::registry::figures() {
         print_figure(&spec)?;
-        println!();
+        log_info!();
     }
     Ok(())
 }
 
 fn print_figure(spec: &exp::ExperimentSpec) -> Result<()> {
     let id = spec.figure.as_deref().unwrap_or(&spec.name);
-    println!("Figure {id}: {}", spec.title);
+    log_info!("Figure {id}: {}", spec.title);
     exp::run_and_emit(spec, false).map_err(|e| err!(e))?;
     Ok(())
 }
@@ -556,12 +596,14 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
         // Axis flags next to --spec would be silently shadowed by the
         // file; a user who thinks they overrode an axis must hear about
         // it before a potentially hours-long sweep of the wrong configs.
-        // (`--no-disk-cache` is an execution flag, not an axis: it
-        // composes with --spec.)
-        if let Some(extra) = cli::flags::SWEEP
-            .iter()
-            .find(|f| **f != "spec" && **f != "no-disk-cache" && cli.has(f))
-        {
+        // (`--no-disk-cache` and the observability flags are execution
+        // flags, not axes: they compose with --spec.)
+        if let Some(extra) = cli::flags::SWEEP.iter().find(|f| {
+            **f != "spec"
+                && **f != "no-disk-cache"
+                && !cli::flags::OBS.contains(f)
+                && cli.has(f)
+        }) {
             bail!(
                 "--{extra} conflicts with --spec {path}: a spec file defines every \
                  axis; edit the file (or drop --spec) instead"
@@ -575,8 +617,8 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
     };
     let t0 = std::time::Instant::now();
     let points = spec.point_count().map_err(|e| err!(e))?;
-    println!("sweep {}: {points} points ({})", spec.name, spec.axes_summary());
+    log_info!("sweep {}: {points} points ({})", spec.name, spec.axes_summary());
     exp::run_and_emit(&spec, false).map_err(|e| err!(e))?;
-    println!("wallclock       {:.2}s", t0.elapsed().as_secs_f64());
+    log_info!("wallclock       {:.2}s", t0.elapsed().as_secs_f64());
     Ok(())
 }

@@ -1,0 +1,259 @@
+//! Exporters for the observability registry.
+//!
+//! Two renderings of one [`Snapshot`], both hand-rolled (the crate is
+//! dependency-free by design) and both exact: every value is a `u64`
+//! emitted as its full decimal expansion, never routed through `f64` —
+//! the same encoding rule the report store enforces for cached stats.
+//!
+//! * [`prometheus`] — the text exposition format (`# HELP` / `# TYPE`
+//!   headers, cumulative `_bucket{le="..."}` series, `_sum`/`_count`).
+//! * [`json`] — the `target/repro/metrics.json` artifact: one object
+//!   with `counters`, `gauges` and `histograms` maps in fixed registry
+//!   order, raw (non-cumulative) bucket counts.
+//!
+//! Rendering is a pure function of the snapshot, so the round-trip
+//! tests can pin bytes without touching the global registry.
+
+use super::metrics::{HistSnapshot, Histogram, MetricPoint, Snapshot, N_BUCKETS};
+use std::path::{Path, PathBuf};
+
+fn push_u64(out: &mut String, v: u64) {
+    let mut buf = [0u8; 20];
+    let mut i = buf.len();
+    let mut v = v;
+    loop {
+        i -= 1;
+        buf[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    out.push_str(std::str::from_utf8(&buf[i..]).expect("ascii digits"));
+}
+
+fn prom_header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push_str("\n# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+fn prom_point(out: &mut String, p: &MetricPoint, kind: &str) {
+    prom_header(out, p.name, p.help, kind);
+    out.push_str(p.name);
+    out.push(' ');
+    push_u64(out, p.value);
+    out.push('\n');
+}
+
+fn prom_hist(out: &mut String, h: &HistSnapshot) {
+    prom_header(out, h.name, h.help, "histogram");
+    let mut cum = 0u64;
+    for i in 0..N_BUCKETS {
+        cum += h.buckets[i];
+        out.push_str(h.name);
+        out.push_str("_bucket{le=\"");
+        match Histogram::le(i) {
+            Some(edge) => push_u64(out, edge),
+            None => out.push_str("+Inf"),
+        }
+        out.push_str("\"} ");
+        push_u64(out, cum);
+        out.push('\n');
+    }
+    out.push_str(h.name);
+    out.push_str("_sum ");
+    push_u64(out, h.sum);
+    out.push('\n');
+    out.push_str(h.name);
+    out.push_str("_count ");
+    push_u64(out, h.count);
+    out.push('\n');
+}
+
+/// Render the snapshot in the Prometheus text exposition format.
+pub fn prometheus(s: &Snapshot) -> String {
+    let mut out = String::new();
+    for c in &s.counters {
+        prom_point(&mut out, c, "counter");
+    }
+    for g in &s.gauges {
+        prom_point(&mut out, g, "gauge");
+    }
+    for h in &s.hists {
+        prom_hist(&mut out, h);
+    }
+    out
+}
+
+fn json_map<T>(out: &mut String, key: &str, items: &[T], mut one: impl FnMut(&mut String, &T)) {
+    out.push('"');
+    out.push_str(key);
+    out.push_str("\":{");
+    for (i, item) in items.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        one(out, item);
+    }
+    out.push('}');
+}
+
+/// Render the snapshot as the `metrics.json` artifact: exact `u64`
+/// decimals throughout, keys in fixed registry order.
+pub fn json(s: &Snapshot) -> String {
+    let mut out = String::from("{\"format\":1,");
+    json_map(&mut out, "counters", &s.counters, |out, c: &MetricPoint| {
+        out.push('"');
+        out.push_str(c.name);
+        out.push_str("\":");
+        push_u64(out, c.value);
+    });
+    out.push(',');
+    json_map(&mut out, "gauges", &s.gauges, |out, g: &MetricPoint| {
+        out.push('"');
+        out.push_str(g.name);
+        out.push_str("\":");
+        push_u64(out, g.value);
+    });
+    out.push(',');
+    json_map(&mut out, "histograms", &s.hists, |out, h: &HistSnapshot| {
+        out.push('"');
+        out.push_str(h.name);
+        out.push_str("\":{\"buckets\":[");
+        for (i, b) in h.buckets.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            push_u64(out, *b);
+        }
+        out.push_str("],\"sum\":");
+        push_u64(out, h.sum);
+        out.push_str(",\"count\":");
+        push_u64(out, h.count);
+        out.push('}');
+    });
+    out.push('}');
+    out
+}
+
+/// Write both exports: the JSON artifact at `json_path` and the
+/// Prometheus text next to it with a `.prom` extension. Returns the
+/// Prometheus path. Parent directories are created as needed.
+pub fn write_files(s: &Snapshot, json_path: &Path) -> Result<PathBuf, String> {
+    if let Some(dir) = json_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("create {}: {e}", dir.display()))?;
+        }
+    }
+    std::fs::write(json_path, json(s))
+        .map_err(|e| format!("write {}: {e}", json_path.display()))?;
+    let prom_path = json_path.with_extension("prom");
+    std::fs::write(&prom_path, prometheus(s))
+        .map_err(|e| format!("write {}: {e}", prom_path.display()))?;
+    Ok(prom_path)
+}
+
+/// Parse every sample line (`name value` / `name{labels} value`) back
+/// out of a Prometheus exposition, ignoring comments. Test support for
+/// the round-trip pin; labels are kept as part of the name.
+pub fn parse_samples(text: &str) -> Vec<(String, u64)> {
+    text.lines()
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let (name, value) = l.rsplit_once(' ')?;
+            Some((name.to_string(), value.parse::<u64>().ok()?))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic() -> Snapshot {
+        let h = Histogram::new("lat_cycles", "synthetic latency");
+        h.observe(1);
+        h.observe(3);
+        h.observe(u64::MAX);
+        Snapshot {
+            counters: vec![
+                MetricPoint { name: "store_hit", help: "disk store hits", value: 31 },
+                MetricPoint { name: "kernel_requests", help: "requests observed", value: u64::MAX },
+            ],
+            gauges: vec![MetricPoint {
+                name: "sched_queue_depth_max",
+                help: "deepest queue",
+                value: 7,
+            }],
+            hists: vec![h.snap()],
+        }
+    }
+
+    #[test]
+    fn prometheus_round_trips_every_sample() {
+        let snap = synthetic();
+        let text = prometheus(&snap);
+        let samples = parse_samples(&text);
+        let get = |name: &str| -> u64 {
+            samples
+                .iter()
+                .find(|(n, _)| n == name)
+                .unwrap_or_else(|| panic!("missing sample {name}"))
+                .1
+        };
+        assert_eq!(get("store_hit"), 31);
+        assert_eq!(get("kernel_requests"), u64::MAX, "u64::MAX survives exactly");
+        assert_eq!(get("sched_queue_depth_max"), 7);
+        assert_eq!(get("lat_cycles_count"), 3);
+        assert_eq!(get("lat_cycles_sum"), 3u64.wrapping_add(u64::MAX).wrapping_add(1));
+        // Cumulative buckets: le="1" holds the 1, le="2" still 1 (3 is in
+        // le="4"), +Inf holds everything.
+        assert_eq!(get("lat_cycles_bucket{le=\"1\"}"), 1);
+        assert_eq!(get("lat_cycles_bucket{le=\"2\"}"), 1);
+        assert_eq!(get("lat_cycles_bucket{le=\"4\"}"), 2);
+        assert_eq!(get("lat_cycles_bucket{le=\"+Inf\"}"), 3);
+        // Sample count: 3 scalars + 33 buckets + sum + count.
+        assert_eq!(samples.len(), 3 + N_BUCKETS + 2);
+    }
+
+    #[test]
+    fn json_bytes_are_pinned_and_exact() {
+        let mut snap = synthetic();
+        snap.hists.clear(); // keep the pinned literal reviewable
+        let text = json(&snap);
+        assert_eq!(
+            text,
+            "{\"format\":1,\
+             \"counters\":{\"store_hit\":31,\"kernel_requests\":18446744073709551615},\
+             \"gauges\":{\"sched_queue_depth_max\":7},\
+             \"histograms\":{}}"
+        );
+    }
+
+    #[test]
+    fn json_histograms_carry_raw_buckets() {
+        let snap = synthetic();
+        let text = json(&snap);
+        assert!(text.contains("\"lat_cycles\":{\"buckets\":[1,0,1,"));
+        assert!(text.contains(",\"count\":3}"));
+        assert!(
+            text.contains(&format!(
+                "\"sum\":{}",
+                3u64.wrapping_add(u64::MAX).wrapping_add(1)
+            )),
+            "sum is the exact wrapped u64"
+        );
+        // 33 comma-separated buckets inside the array.
+        let arr = text.split("\"buckets\":[").nth(1).unwrap();
+        let arr = arr.split(']').next().unwrap();
+        assert_eq!(arr.split(',').count(), N_BUCKETS);
+    }
+}

@@ -1,0 +1,107 @@
+//! Leveled progress logging for the `repro` CLI.
+//!
+//! Three levels: `Quiet` (errors only — errors go through `main`'s
+//! `eprintln`, not this module), `Info` (the default: exactly the
+//! progress lines the CLI has always printed, byte for byte — CI greps
+//! the summary lines, so the default level must never reword them) and
+//! `Debug` (extra diagnostics). Selected by `--quiet` / `--v` (or
+//! `--verbose`), falling back to the `REPRO_LOG` environment variable
+//! (`quiet` | `info` | `debug`, or `0` | `1` | `2`), defaulting to
+//! `Info`.
+//!
+//! Call sites use the [`log_info!`](crate::log_info) /
+//! [`log_debug!`](crate::log_debug) macros, which check the level and
+//! forward to `println!` — stdout, same stream as before, so piping
+//! behavior is unchanged at the default level.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Verbosity of CLI progress output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Quiet = 0,
+    Info = 1,
+    Debug = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// The active level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Quiet,
+        2 => Level::Debug,
+        _ => Level::Info,
+    }
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Whether messages at `l` should print.
+pub fn enabled(l: Level) -> bool {
+    level() >= l
+}
+
+fn parse(v: &str) -> Option<Level> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "quiet" | "0" => Some(Level::Quiet),
+        "info" | "1" => Some(Level::Info),
+        "debug" | "2" | "v" => Some(Level::Debug),
+        _ => None,
+    }
+}
+
+/// Resolve the level from explicit CLI flags, then `REPRO_LOG`, then the
+/// `Info` default. `--quiet` wins over `--v` when both are given.
+pub fn init(quiet: bool, verbose: bool) {
+    let l = if quiet {
+        Level::Quiet
+    } else if verbose {
+        Level::Debug
+    } else {
+        std::env::var("REPRO_LOG").ok().and_then(|v| parse(&v)).unwrap_or(Level::Info)
+    };
+    set_level(l);
+}
+
+/// Print at `Info` level (the CLI's default progress stream).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            println!($($arg)*);
+        }
+    };
+}
+
+/// Print at `Debug` level (`--v` / `REPRO_LOG=debug` diagnostics).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            println!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_parse() {
+        assert!(Level::Quiet < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert_eq!(parse("quiet"), Some(Level::Quiet));
+        assert_eq!(parse("INFO"), Some(Level::Info));
+        assert_eq!(parse("debug"), Some(Level::Debug));
+        assert_eq!(parse("2"), Some(Level::Debug));
+        assert_eq!(parse("nonsense"), None);
+    }
+
+    // No set_level/init tests here: the level is process-global state and
+    // the test harness runs modules in parallel; tests/observability.rs
+    // exercises init in its own process.
+}

@@ -1,0 +1,250 @@
+//! Typed instruments of the passive observability core.
+//!
+//! Three instrument kinds, all lock-free over `AtomicU64` with `Relaxed`
+//! ordering. Every mutation is a commutative add (or an idempotent
+//! `fetch_max`), so the totals visible after the scheduler joins are
+//! independent of thread interleaving — the property the histogram-merge
+//! determinism test pins across 1/2/4/8 sweep threads. [`Histogram`]
+//! bucket edges are compile-time constants (`le = 2^0 .. 2^31`, then
+//! `+Inf`), so merged output never depends on runtime configuration.
+//!
+//! Instruments carry their own name and help text; the registry in
+//! [`crate::obs`] enumerates them in a fixed order and [`Snapshot`] is
+//! the plain-data view the exporters render. Nothing in this module
+//! reads or writes simulation state: an instrument can observe a value
+//! but can never hand one back to the simulator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count of every [`Histogram`]: `le = 2^0 .. 2^31` plus `+Inf`.
+pub const N_BUCKETS: usize = 33;
+
+/// A monotonically increasing event count.
+pub struct Counter {
+    name: &'static str,
+    help: &'static str,
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new(name: &'static str, help: &'static str) -> Counter {
+        Counter { name, help, v: AtomicU64::new(0) }
+    }
+
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+
+    pub fn point(&self) -> MetricPoint {
+        MetricPoint { name: self.name, help: self.help, value: self.get() }
+    }
+}
+
+/// A sampled value. [`Gauge::set_max`] keeps a high-water mark with an
+/// idempotent `fetch_max`, the only gauge mutation safe under the
+/// scheduler's nondeterministic interleaving.
+pub struct Gauge {
+    name: &'static str,
+    help: &'static str,
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new(name: &'static str, help: &'static str) -> Gauge {
+        Gauge { name, help, v: AtomicU64::new(0) }
+    }
+
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn set_max(&self, v: u64) {
+        self.v.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+
+    pub fn point(&self) -> MetricPoint {
+        MetricPoint { name: self.name, help: self.help, value: self.get() }
+    }
+}
+
+/// A fixed-log2-bucket histogram: bucket `i < 32` counts observations
+/// `v <= 2^i`, the last bucket is `+Inf`. Edges are compile-time
+/// constants and per-bucket counts are commutative atomic adds, so two
+/// exports of the same set of observations are byte-identical no matter
+/// how many threads produced them.
+pub struct Histogram {
+    name: &'static str,
+    help: &'static str,
+    buckets: [AtomicU64; N_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new(name: &'static str, help: &'static str) -> Histogram {
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            name,
+            help,
+            buckets: [Z; N_BUCKETS],
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Index of the bucket holding `v`: the smallest `i` with `v <= 2^i`,
+    /// clamped into the `+Inf` bucket past `2^31`.
+    pub fn bucket_index(v: u64) -> usize {
+        if v <= 1 {
+            0
+        } else {
+            ((64 - (v - 1).leading_zeros()) as usize).min(N_BUCKETS - 1)
+        }
+    }
+
+    /// Upper edge of bucket `i`; `None` is the `+Inf` bucket.
+    pub fn le(i: usize) -> Option<u64> {
+        if i < N_BUCKETS - 1 {
+            Some(1u64 << i)
+        } else {
+            None
+        }
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.sum.store(0, Ordering::Relaxed);
+        self.count.store(0, Ordering::Relaxed);
+    }
+
+    pub fn snap(&self) -> HistSnapshot {
+        let mut buckets = [0u64; N_BUCKETS];
+        for (i, b) in self.buckets.iter().enumerate() {
+            buckets[i] = b.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            name: self.name,
+            help: self.help,
+            buckets,
+            sum: self.sum.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One exported counter or gauge sample.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MetricPoint {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub value: u64,
+}
+
+/// Plain-data view of one histogram (raw per-bucket counts; the
+/// Prometheus exporter derives the cumulative form).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub buckets: [u64; N_BUCKETS],
+    pub sum: u64,
+    pub count: u64,
+}
+
+/// A consistent-enough point-in-time view of the whole registry: the
+/// input both exporters render. Ordering is the registry's declaration
+/// order, fixed across runs.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct Snapshot {
+    pub counters: Vec<MetricPoint>,
+    pub gauges: Vec<MetricPoint>,
+    pub hists: Vec<HistSnapshot>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_covers_the_edges() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 2);
+        assert_eq!(Histogram::bucket_index(5), 3);
+        assert_eq!(Histogram::bucket_index(1 << 31), 31);
+        assert_eq!(Histogram::bucket_index((1 << 31) + 1), N_BUCKETS - 1);
+        assert_eq!(Histogram::bucket_index(u64::MAX), N_BUCKETS - 1);
+        // Every value lands in the bucket whose edge first covers it.
+        for i in 0..N_BUCKETS {
+            if let Some(edge) = Histogram::le(i) {
+                assert_eq!(Histogram::bucket_index(edge), i, "edge 2^{i}");
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_accumulates_sum_count_and_buckets() {
+        let h = Histogram::new("t", "test");
+        for v in [0, 1, 2, 4, 1000, u64::MAX] {
+            h.observe(v);
+        }
+        let s = h.snap();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.sum, 0u64.wrapping_add(1 + 2 + 4 + 1000).wrapping_add(u64::MAX));
+        assert_eq!(s.buckets[0], 2); // the observations 0 and 1
+        assert_eq!(s.buckets[1], 1); // the observation 2
+        assert_eq!(s.buckets[N_BUCKETS - 1], 1); // u64::MAX overflows to +Inf
+        assert_eq!(s.buckets.iter().sum::<u64>(), 6);
+    }
+
+    #[test]
+    fn counter_and_gauge_semantics() {
+        let c = Counter::new("c", "count");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        c.reset();
+        assert_eq!(c.get(), 0);
+
+        let g = Gauge::new("g", "gauge");
+        g.set_max(7);
+        g.set_max(3);
+        assert_eq!(g.get(), 7, "high-water mark keeps the max");
+        g.set(2);
+        assert_eq!(g.get(), 2);
+    }
+}

@@ -1,0 +1,244 @@
+//! Passive observability core: metrics registry, span timers, exporters.
+//!
+//! Everything here is **provably passive**: instruments observe `u64`s
+//! and can never hand a value back to the simulator, so enabling them
+//! cannot perturb simulated timestamps, report-cache keys or artifact
+//! bytes (the invariant rows in `docs/ARCHITECTURE.md`, pinned by
+//! `tests/observability.rs` plus the metrics-on legs of the golden and
+//! kernel-equivalence suites). The design splits instruments in two:
+//!
+//! * **Always-on counters/gauges** (store, report cache, scheduler,
+//!   policy flips) — coarse-grained `Relaxed` atomic adds on paths that
+//!   run at most once per job/epoch; cost is unmeasurable and keeping
+//!   them unconditional keeps the call sites branch-free.
+//! * **Opt-in request telemetry** ([`record_request`], span timers,
+//!   occupancy) — enabled by `--metrics-out`. The per-request hot path
+//!   stays branch-free when observability is off because the choice is
+//!   made *once per run*: the drivers select the `_observed` code path
+//!   with a recording closure only when [`enabled`] is set, otherwise
+//!   the closure is a no-op the optimizer erases.
+//!
+//! Histograms use compile-time log2 bucket edges and commutative atomic
+//! adds, so merged counts are identical at any scheduler thread count —
+//! deterministic for the `_cycles` histograms (simulated time), while
+//! `_ns` histograms record wall time and are inherently run-dependent.
+//!
+//! Naming scheme: `<subsystem>_<event>` for counters,
+//! `<subsystem>_<quantity>_cycles` (simulated time) or `..._ns` (wall
+//! time) for histograms. See `docs/OBSERVABILITY.md` for the registry
+//! API and the rules for adding an instrument without breaking
+//! bit-identity.
+
+pub mod export;
+pub mod log;
+pub mod metrics;
+
+pub use metrics::{Counter, Gauge, HistSnapshot, Histogram, MetricPoint, Snapshot, N_BUCKETS};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Whether opt-in request telemetry (observed driver paths, span
+/// timers, occupancy sampling) is active. Read once per run / job, not
+/// per request.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Turn opt-in telemetry on (the `--metrics-out` switch).
+pub fn enable() {
+    set_enabled(true);
+}
+
+// ---------------------------------------------------------------------
+// The registry. Every instrument is a static declared here; `snapshot`
+// enumerates them in this order, which is therefore the export order.
+// ---------------------------------------------------------------------
+
+/// Demand requests recorded by the per-request observer (opt-in).
+pub static KERNEL_REQUESTS: Counter =
+    Counter::new("kernel_requests", "demand requests observed by the metrics hook");
+/// Content-addressed disk store outcomes (always on).
+pub static STORE_HIT: Counter =
+    Counter::new("store_hit", "disk store loads that returned a cached report");
+pub static STORE_MISS: Counter =
+    Counter::new("store_miss", "disk store loads with no entry on disk");
+pub static STORE_STALE: Counter =
+    Counter::new("store_stale", "disk store entries rejected for a stale build fingerprint");
+pub static STORE_POISONED: Counter =
+    Counter::new("store_poisoned", "disk store entries rejected as corrupt");
+/// In-memory report cache outcomes (always on).
+pub static CACHE_HIT: Counter =
+    Counter::new("cache_hit", "in-memory report cache hits");
+pub static CACHE_MISS: Counter =
+    Counter::new("cache_miss", "in-memory report cache misses");
+/// Sweep scheduler activity (always on).
+pub static SCHED_JOBS: Counter =
+    Counter::new("sched_jobs", "sweep jobs executed");
+pub static SCHED_PARKS: Counter =
+    Counter::new("sched_parks", "times a sweep worker parked on the empty injector");
+pub static SCHED_WAKES: Counter =
+    Counter::new("sched_wakes", "times a parked sweep worker woke");
+pub static SCHED_PANICKED_JOBS: Counter =
+    Counter::new("sched_panicked_jobs", "sweep jobs that panicked");
+/// Policy-layer activity (always on).
+pub static POLICY_FLIPS: Counter =
+    Counter::new("policy_flips", "global indirection enable/disable transitions");
+
+/// Deepest injector queue observed (high-water mark; scheduling-timing
+/// dependent, excluded from determinism pins).
+pub static SCHED_QUEUE_DEPTH_MAX: Gauge =
+    Gauge::new("sched_queue_depth_max", "deepest sweep injector queue observed");
+
+/// Per-request latency decomposition (simulated cycles; deterministic).
+pub static REQUEST_TRANSFER_CYCLES: Histogram =
+    Histogram::new("request_transfer_cycles", "pure network transfer cycles per request");
+pub static REQUEST_QUEUE_NET_CYCLES: Histogram =
+    Histogram::new("request_queue_net_cycles", "interconnect queue-wait cycles per request");
+pub static REQUEST_QUEUE_MEM_CYCLES: Histogram =
+    Histogram::new("request_queue_mem_cycles", "controller/bank queue-wait cycles per request");
+pub static REQUEST_SERVICE_CYCLES: Histogram =
+    Histogram::new("request_service_cycles", "DRAM array service cycles per request");
+/// Blocks parked in subscription tables at end of run (deterministic).
+pub static SUBSCRIPTION_OCCUPANCY: Histogram =
+    Histogram::new("subscription_occupancy", "blocks parked in subscription tables at end of run");
+
+/// Wall-clock histograms (nanoseconds; inherently nondeterministic).
+pub static SCHED_JOB_WALL_NS: Histogram =
+    Histogram::new("sched_job_wall_ns", "wall time per sweep job");
+pub static SPAN_SPEC_EXPAND_NS: Histogram =
+    Histogram::new("span_spec_expand_ns", "wall time expanding an experiment spec");
+pub static SPAN_QUEUE_WAIT_NS: Histogram =
+    Histogram::new("span_queue_wait_ns", "wall time sweep workers spent parked waiting for jobs");
+pub static SPAN_STORE_LOOKUP_NS: Histogram =
+    Histogram::new("span_store_lookup_ns", "wall time per disk store load");
+pub static SPAN_KERNEL_RUN_NS: Histogram =
+    Histogram::new("span_kernel_run_ns", "wall time simulating one sweep point");
+pub static SPAN_RENDER_NS: Histogram =
+    Histogram::new("span_render_ns", "wall time rendering rows and artifacts");
+
+/// Record one served request's latency decomposition. Only called from
+/// the `_observed` driver paths, which are selected when [`enabled`] is
+/// set — the plain paths carry no observer and no branch.
+pub fn record_request(network: u64, queued_net: u64, queued_mem: u64, array: u64) {
+    KERNEL_REQUESTS.inc();
+    REQUEST_TRANSFER_CYCLES.observe(network);
+    REQUEST_QUEUE_NET_CYCLES.observe(queued_net);
+    REQUEST_QUEUE_MEM_CYCLES.observe(queued_mem);
+    REQUEST_SERVICE_CYCLES.observe(array);
+}
+
+/// A scope timer feeding a wall-time histogram on drop. Free when
+/// telemetry is off: no clock is read and the drop is a no-op.
+pub struct SpanTimer {
+    start: Option<Instant>,
+    hist: &'static Histogram,
+}
+
+/// Start timing a pipeline stage (if telemetry is enabled).
+pub fn span(hist: &'static Histogram) -> SpanTimer {
+    SpanTimer { start: if enabled() { Some(Instant::now()) } else { None }, hist }
+}
+
+impl Drop for SpanTimer {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            self.hist.observe(t0.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+/// Snapshot the whole registry in declaration (= export) order.
+pub fn snapshot() -> Snapshot {
+    Snapshot {
+        counters: vec![
+            KERNEL_REQUESTS.point(),
+            STORE_HIT.point(),
+            STORE_MISS.point(),
+            STORE_STALE.point(),
+            STORE_POISONED.point(),
+            CACHE_HIT.point(),
+            CACHE_MISS.point(),
+            SCHED_JOBS.point(),
+            SCHED_PARKS.point(),
+            SCHED_WAKES.point(),
+            SCHED_PANICKED_JOBS.point(),
+            POLICY_FLIPS.point(),
+        ],
+        gauges: vec![SCHED_QUEUE_DEPTH_MAX.point()],
+        hists: vec![
+            REQUEST_TRANSFER_CYCLES.snap(),
+            REQUEST_QUEUE_NET_CYCLES.snap(),
+            REQUEST_QUEUE_MEM_CYCLES.snap(),
+            REQUEST_SERVICE_CYCLES.snap(),
+            SUBSCRIPTION_OCCUPANCY.snap(),
+            SCHED_JOB_WALL_NS.snap(),
+            SPAN_SPEC_EXPAND_NS.snap(),
+            SPAN_QUEUE_WAIT_NS.snap(),
+            SPAN_STORE_LOOKUP_NS.snap(),
+            SPAN_KERNEL_RUN_NS.snap(),
+            SPAN_RENDER_NS.snap(),
+        ],
+    }
+}
+
+/// Zero every instrument (test isolation; the CLI never resets).
+pub fn reset() {
+    KERNEL_REQUESTS.reset();
+    STORE_HIT.reset();
+    STORE_MISS.reset();
+    STORE_STALE.reset();
+    STORE_POISONED.reset();
+    CACHE_HIT.reset();
+    CACHE_MISS.reset();
+    SCHED_JOBS.reset();
+    SCHED_PARKS.reset();
+    SCHED_WAKES.reset();
+    SCHED_PANICKED_JOBS.reset();
+    POLICY_FLIPS.reset();
+    SCHED_QUEUE_DEPTH_MAX.reset();
+    REQUEST_TRANSFER_CYCLES.reset();
+    REQUEST_QUEUE_NET_CYCLES.reset();
+    REQUEST_QUEUE_MEM_CYCLES.reset();
+    REQUEST_SERVICE_CYCLES.reset();
+    SUBSCRIPTION_OCCUPANCY.reset();
+    SCHED_JOB_WALL_NS.reset();
+    SPAN_SPEC_EXPAND_NS.reset();
+    SPAN_QUEUE_WAIT_NS.reset();
+    SPAN_STORE_LOOKUP_NS.reset();
+    SPAN_KERNEL_RUN_NS.reset();
+    SPAN_RENDER_NS.reset();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_orders_match_and_names_are_unique() {
+        let s = snapshot();
+        let mut names: Vec<&str> = s
+            .counters
+            .iter()
+            .chain(s.gauges.iter())
+            .map(|p| p.name)
+            .chain(s.hists.iter().map(|h| h.name))
+            .collect();
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "duplicate metric name in the registry");
+        assert_eq!(s.counters[0].name, "kernel_requests");
+        assert!(s.counters.iter().any(|c| c.name == "store_hit"));
+    }
+
+    // Counter-value assertions live in tests/observability.rs: the
+    // registry is process-global and this module's tests share the lib
+    // test binary with code that legitimately bumps these counters.
+}

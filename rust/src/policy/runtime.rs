@@ -336,6 +336,13 @@ impl PolicyRuntime {
     }
 
     fn apply_global(&mut self, next: bool, at: Cycle) {
+        if next != self.global_enabled {
+            // Observability only: a one-way atomic count of actual
+            // enable/disable transitions (the adaptive policies call
+            // apply_global every epoch, changed or not). Nothing flows
+            // back into the runtime, the decision log or the report.
+            crate::obs::POLICY_FLIPS.inc();
+        }
         self.prev_global_enabled = self.global_at(at);
         self.global_enabled = next;
         // Central-vault computation + broadcast (§III-D4).

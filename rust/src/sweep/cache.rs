@@ -73,8 +73,10 @@ pub fn lookup(key: u64) -> Option<SimReport> {
     let hit = cache().lock().unwrap().get(&key).cloned();
     if hit.is_some() {
         HITS.fetch_add(1, Ordering::Relaxed);
+        crate::obs::CACHE_HIT.inc();
     } else {
         MISSES.fetch_add(1, Ordering::Relaxed);
+        crate::obs::CACHE_MISS.inc();
     }
     hit
 }

@@ -36,8 +36,9 @@ use std::panic::{AssertUnwindSafe, catch_unwind};
 use std::path::PathBuf;
 
 use crate::config::SimConfig;
-use crate::coordinator::driver::simulate;
+use crate::coordinator::driver::{simulate, simulate_observed};
 use crate::coordinator::report::SimReport;
+use crate::obs;
 use crate::workloads::build_source;
 use store::DiskStore;
 
@@ -252,7 +253,18 @@ fn run_point(point: &SweepPoint, key: u64, use_cache: bool, disk: Option<&DiskSt
         // the named Table III workload. Errors (unknown workload, corrupt
         // trace) poison only this job.
         let w = build_source(Some(name.as_str()), &cfg).unwrap_or_else(|e| panic!("{e}"));
-        simulate(&cfg, w)
+        let _t = obs::span(&obs::SPAN_KERNEL_RUN_NS);
+        // The telemetry fork happens once per job, never per request: the
+        // observed path threads a read-only recording closure through the
+        // kernel, the plain path carries no observer at all. Reports are
+        // identical either way (pinned by tests/observability.rs).
+        if obs::enabled() {
+            simulate_observed(&cfg, w, |_, r| {
+                obs::record_request(r.network, r.queued_net, r.queued_mem(), r.array)
+            })
+        } else {
+            simulate(&cfg, w)
+        }
     }));
     match result {
         Ok(report) => {
@@ -267,11 +279,14 @@ fn run_point(point: &SweepPoint, key: u64, use_cache: bool, disk: Option<&DiskSt
             }
             JobOutcome { workload: name, result: Ok(report), from_cache: false }
         }
-        Err(payload) => JobOutcome {
-            workload: name,
-            result: Err(panic_message(payload.as_ref())),
-            from_cache: false,
-        },
+        Err(payload) => {
+            obs::SCHED_PANICKED_JOBS.inc();
+            JobOutcome {
+                workload: name,
+                result: Err(panic_message(payload.as_ref())),
+                from_cache: false,
+            }
+        }
     }
 }
 

@@ -48,7 +48,12 @@ impl Injector {
 
     /// Enqueue one job and wake one parked worker.
     fn submit(&self, job: usize) {
-        self.q.lock().unwrap().jobs.push_back(job);
+        let depth = {
+            let mut state = self.q.lock().unwrap();
+            state.jobs.push_back(job);
+            state.jobs.len()
+        };
+        crate::obs::SCHED_QUEUE_DEPTH_MAX.set_max(depth as u64);
         self.cv.notify_one();
     }
 
@@ -63,16 +68,36 @@ impl Injector {
     /// but still open. `None` means closed-and-drained: the worker exits.
     fn next_job(&self) -> Option<usize> {
         let mut state = self.q.lock().unwrap();
+        // Span timing starts at the first park, so a worker that claims
+        // immediately records nothing (and reads no clock).
+        let mut parked_at: Option<std::time::Instant> = None;
         loop {
             if let Some(j) = state.jobs.pop_front() {
+                if let Some(t0) = parked_at {
+                    crate::obs::SPAN_QUEUE_WAIT_NS.observe(t0.elapsed().as_nanos() as u64);
+                }
                 return Some(j);
             }
             if state.closed {
                 return None;
             }
+            if parked_at.is_none() && crate::obs::enabled() {
+                parked_at = Some(std::time::Instant::now());
+            }
+            crate::obs::SCHED_PARKS.inc();
             state = self.cv.wait(state).unwrap();
+            crate::obs::SCHED_WAKES.inc();
         }
     }
+}
+
+/// Execute one job, counting it and (when telemetry is on) recording its
+/// wall time — the same accounting on the inline single-thread path and
+/// the worker loop, so `sched_jobs` totals match at any thread count.
+fn run_one<T, F: Fn(usize) -> T>(f: &F, j: usize) -> T {
+    crate::obs::SCHED_JOBS.inc();
+    let _t = crate::obs::span(&crate::obs::SCHED_JOB_WALL_NS);
+    f(j)
 }
 
 /// Run `f(0..n_jobs)` across `threads` condvar-parked workers; returns the
@@ -89,7 +114,7 @@ where
     }
     let threads = threads.max(1).min(n_jobs);
     if threads == 1 {
-        return (0..n_jobs).map(f).collect();
+        return (0..n_jobs).map(|j| run_one(&f, j)).collect();
     }
 
     let injector = Injector::new();
@@ -102,7 +127,7 @@ where
             let f = &f;
             scope.spawn(move || {
                 while let Some(j) = injector.next_job() {
-                    let out = f(j);
+                    let out = run_one(f, j);
                     *results[j].lock().unwrap() = Some(out);
                 }
             });

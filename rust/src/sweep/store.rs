@@ -135,9 +135,30 @@ impl DiskStore {
 
     /// Load the report stored under `key`, or `None` on any miss, defect
     /// or mismatch. Never panics: a poisoned entry is just a recompute.
+    /// Outcomes feed the always-on observability counters (`store_hit`,
+    /// `store_miss`, `store_stale`, `store_poisoned`) — `load` is the
+    /// only place stale/corrupt can be told apart, because both collapse
+    /// to `None` here by design.
     pub fn load(&self, key: u64) -> Option<SimReport> {
-        let text = std::fs::read_to_string(self.entry_path(key)).ok()?;
-        decode(&text, key).ok()
+        let _t = crate::obs::span(&crate::obs::SPAN_STORE_LOOKUP_NS);
+        let Ok(text) = std::fs::read_to_string(self.entry_path(key)) else {
+            crate::obs::STORE_MISS.inc();
+            return None;
+        };
+        match decode(&text, key) {
+            Ok(report) => {
+                crate::obs::STORE_HIT.inc();
+                Some(report)
+            }
+            Err(DecodeError::Stale(_)) => {
+                crate::obs::STORE_STALE.inc();
+                None
+            }
+            Err(DecodeError::Corrupt(_)) => {
+                crate::obs::STORE_POISONED.inc();
+                None
+            }
+        }
     }
 
     /// Persist `report` under `key`: serialize, write to a same-directory

@@ -221,6 +221,26 @@ fn registry_figures_match_prerefactor_bytes() {
         }
     }
 
+    // Metrics-on leg of the bit-identity invariant: with telemetry
+    // enabled AND both report-cache levels emptied/disabled (so every
+    // point genuinely re-simulates down the observed driver path), the
+    // artifact bytes must not move.
+    let reference = registry_json("1", Topology::Mesh); // warm: cached points
+    sweep::cache::clear();
+    sweep::cache::set_disk_cache_enabled(false);
+    dlpim::obs::enable();
+    let observed = registry_json("1", Topology::Mesh); // cold + observed
+    assert_eq!(
+        observed, reference,
+        "fig 1 artifact bytes changed when metrics recording was enabled"
+    );
+    assert!(
+        dlpim::obs::KERNEL_REQUESTS.get() > 0,
+        "metrics-on leg never hit the request observer"
+    );
+    dlpim::obs::set_enabled(false);
+    sweep::cache::set_disk_cache_enabled(true);
+
     std::env::remove_var("REPRO_ARTIFACT_DIR");
     let _ = std::fs::remove_dir_all(&tmp);
 }

@@ -186,6 +186,51 @@ fn simulate_runs_identical_at_every_thread_count() {
     }
 }
 
+/// The observability passivity bar: with telemetry enabled and the real
+/// `record_request` hook wired into the observed fan-out, reports must
+/// stay byte-identical (full `Debug` rendering) to the plain sequential
+/// path — and the observed kernel stream must still match the scalar
+/// reference. Enabling telemetry is process-global and deliberately left
+/// on for whichever tests run after this one in the binary: every other
+/// assertion here must hold regardless.
+#[test]
+fn metrics_recording_never_perturbs_reports_or_streams() {
+    dlpim::obs::enable();
+    let mut cfg = SimConfig::hmc().quick();
+    cfg.policy = PolicyKind::Adaptive;
+    cfg.warmup_requests = 300;
+    cfg.measure_requests = 2_000;
+    cfg.runs = 3;
+    let reference = simulate(&cfg, catalog::build("SPLRad", &cfg).unwrap());
+    let ref_bytes = format!("{reference:?}");
+
+    for threads in [1usize, 4] {
+        let rep = Kernel::new(threads).simulate_runs_observed(
+            &cfg,
+            "SPLRad",
+            || catalog::build("SPLRad", &cfg).unwrap(),
+            |_, r| dlpim::obs::record_request(r.network, r.queued_net, r.queued_mem(), r.array),
+        );
+        assert_eq!(
+            format!("{rep:?}"),
+            ref_bytes,
+            "threads={threads}: metrics recording perturbed the report"
+        );
+    }
+    // The hook really ran: both warmup and measured requests are observed.
+    assert!(
+        dlpim::obs::KERNEL_REQUESTS.get() >= 2 * 2_000,
+        "observer never fired (kernel_requests = {})",
+        dlpim::obs::KERNEL_REQUESTS.get()
+    );
+
+    // Stream equality kernel-vs-scalar holds with telemetry enabled too.
+    let mut single = cfg.clone();
+    single.runs = 1;
+    let mut w = catalog::build("SPLRad", &single).unwrap();
+    diff_kernel_vs_scalar(&single, w.as_mut(), 4, "metrics-on");
+}
+
 /// Same determinism bar for a workload whose per-run streams depend on
 /// the seed (each run r reseeds with seed + r): parallel run claiming
 /// must not perturb which seed drives which run slot.

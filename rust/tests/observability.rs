@@ -1,0 +1,205 @@
+//! Observability passivity and determinism suite.
+//!
+//! Pins the three promises the `obs` module makes (the invariant rows in
+//! `docs/ARCHITECTURE.md`):
+//!
+//! 1. **Passivity** — enabling telemetry and wiring the real
+//!    `record_request` hook through the observed driver paths changes no
+//!    report and no sweep outcome, byte for byte (`Debug` rendering).
+//! 2. **Merge determinism** — the `_cycles` histograms and the request
+//!    counter land on identical values whether a sweep ran on 1, 2, 4 or
+//!    8 scheduler threads: log2 buckets + commutative `Relaxed` adds.
+//! 3. **Exporter fidelity** — `write_files` emits both artifacts, the
+//!    JSON is the exact `json()` rendering, and every Prometheus sample
+//!    round-trips through `parse_samples` as an exact `u64`.
+//!
+//! The registry and the log level are process-global, so every check
+//! that mutates them runs sequentially inside the single umbrella test;
+//! the exporter tests build synthetic snapshots and never touch the
+//! registry, so they are free to run in parallel with it.
+
+use dlpim::config::SimConfig;
+use dlpim::coordinator::driver::{simulate, simulate_observed};
+use dlpim::obs::{self, export, HistSnapshot};
+use dlpim::policy::PolicyKind;
+use dlpim::sweep::{Sweep, SweepPoint};
+use dlpim::workloads::catalog;
+
+const WORKLOADS: [&str; 3] = ["SPLRad", "STRTriad", "PHELinReg"];
+
+fn quick_cfg() -> SimConfig {
+    let mut cfg = SimConfig::hmc().quick();
+    cfg.policy = PolicyKind::Adaptive;
+    cfg.warmup_requests = 200;
+    cfg.measure_requests = 1_500;
+    cfg.runs = 2;
+    cfg
+}
+
+fn sweep_points(cfg: &SimConfig) -> Vec<SweepPoint> {
+    WORKLOADS.iter().map(|w| SweepPoint::new(*w, cfg.clone())).collect()
+}
+
+/// The deterministic slice of the registry: simulated-time histograms
+/// only (`_ns` wall-time histograms and the queue-depth gauge are
+/// scheduling-dependent by design and deliberately excluded).
+fn deterministic_hists() -> Vec<HistSnapshot> {
+    vec![
+        obs::REQUEST_TRANSFER_CYCLES.snap(),
+        obs::REQUEST_QUEUE_NET_CYCLES.snap(),
+        obs::REQUEST_QUEUE_MEM_CYCLES.snap(),
+        obs::REQUEST_SERVICE_CYCLES.snap(),
+        obs::SUBSCRIPTION_OCCUPANCY.snap(),
+    ]
+}
+
+#[test]
+fn telemetry_is_passive_and_merges_deterministically() {
+    // ---- log level resolution (flags > REPRO_LOG > Info default) ----
+    use dlpim::obs::log::{init, level, Level};
+    std::env::remove_var("REPRO_LOG");
+    init(false, false);
+    assert_eq!(level(), Level::Info, "default level");
+    init(false, true);
+    assert_eq!(level(), Level::Debug, "--v selects Debug");
+    init(true, true);
+    assert_eq!(level(), Level::Quiet, "--quiet wins over --v");
+    std::env::set_var("REPRO_LOG", "debug");
+    init(false, false);
+    assert_eq!(level(), Level::Debug, "REPRO_LOG honored without flags");
+    std::env::set_var("REPRO_LOG", "bogus");
+    init(false, false);
+    assert_eq!(level(), Level::Info, "unparseable REPRO_LOG falls back to Info");
+    std::env::remove_var("REPRO_LOG");
+    init(false, false); // restore the default for the rest of the binary
+
+    // ---- passivity: simulate vs simulate_observed, byte for byte ----
+    let cfg = quick_cfg();
+    let reference = simulate(&cfg, catalog::build("SPLRad", &cfg).unwrap());
+    obs::enable();
+    let observed = simulate_observed(&cfg, catalog::build("SPLRad", &cfg).unwrap(), |_, r| {
+        obs::record_request(r.network, r.queued_net, r.queued_mem(), r.array)
+    });
+    assert_eq!(
+        format!("{observed:?}"),
+        format!("{reference:?}"),
+        "the observed driver path perturbed the report"
+    );
+    assert!(obs::KERNEL_REQUESTS.get() > 0, "the request observer never fired");
+
+    // ---- passivity: full sweep outcomes, telemetry off vs on ----
+    // The cache is disabled on both legs so every point genuinely
+    // re-simulates and the on-leg exercises the observed fork.
+    obs::set_enabled(false);
+    let off = Sweep::new(sweep_points(&cfg)).threads(4).use_cache(false).run();
+    obs::enable();
+    let on = Sweep::new(sweep_points(&cfg)).threads(4).use_cache(false).run();
+    assert!(off.iter().all(|o| o.result.is_ok()), "off-leg sweep failed");
+    assert_eq!(
+        format!("{on:?}"),
+        format!("{off:?}"),
+        "sweep outcomes moved when telemetry was enabled"
+    );
+
+    // ---- merge determinism across scheduler thread counts ----
+    let mut reference: Option<(Vec<HistSnapshot>, u64)> = None;
+    for threads in [1usize, 2, 4, 8] {
+        obs::reset();
+        obs::enable();
+        let outcomes =
+            Sweep::new(sweep_points(&cfg)).threads(threads).use_cache(false).run();
+        assert!(
+            outcomes.iter().all(|o| o.result.is_ok()),
+            "threads={threads}: sweep failed"
+        );
+        assert!(
+            obs::SCHED_JOBS.get() >= WORKLOADS.len() as u64,
+            "threads={threads}: scheduler counters never moved"
+        );
+        let snaps = deterministic_hists();
+        let requests = obs::KERNEL_REQUESTS.get();
+        assert!(requests > 0, "threads={threads}: no requests observed");
+        match &reference {
+            None => reference = Some((snaps, requests)),
+            Some((ref_snaps, ref_requests)) => {
+                assert_eq!(
+                    &snaps, ref_snaps,
+                    "threads={threads}: histogram merge is thread-count dependent"
+                );
+                assert_eq!(
+                    requests, *ref_requests,
+                    "threads={threads}: request count is thread-count dependent"
+                );
+            }
+        }
+    }
+    obs::set_enabled(false);
+}
+
+/// `write_files` writes both artifacts (creating parents), the JSON is
+/// the exact `json()` rendering, and every Prometheus sample survives a
+/// parse round-trip as an exact integer. Synthetic snapshot only — the
+/// global registry belongs to the umbrella test above.
+#[test]
+fn exporter_files_round_trip_on_disk() {
+    use dlpim::obs::metrics::{Histogram, MetricPoint, Snapshot};
+
+    let h = Histogram::new("request_like_cycles", "synthetic decomposition");
+    h.observe(1);
+    h.observe(900);
+    h.observe(u64::MAX);
+    let snap = Snapshot {
+        counters: vec![
+            MetricPoint { name: "store_hit", help: "hits", value: 5 },
+            MetricPoint { name: "kernel_requests", help: "requests", value: u64::MAX },
+        ],
+        gauges: vec![MetricPoint { name: "sched_queue_depth_max", help: "depth", value: 3 }],
+        hists: vec![h.snap()],
+    };
+
+    let dir = std::env::temp_dir().join(format!("dlpim-obs-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let json_path = dir.join("nested").join("metrics.json");
+    let prom_path = export::write_files(&snap, &json_path).expect("write_files");
+    assert_eq!(prom_path, json_path.with_extension("prom"), ".prom sibling path");
+
+    let json_text = std::fs::read_to_string(&json_path).unwrap();
+    assert_eq!(json_text, export::json(&snap), "on-disk JSON is the exact rendering");
+    assert!(json_text.contains("\"store_hit\":5"));
+    assert!(json_text.contains("\"kernel_requests\":18446744073709551615"));
+
+    let prom_text = std::fs::read_to_string(&prom_path).unwrap();
+    let samples = export::parse_samples(&prom_text);
+    let get = |name: &str| -> u64 {
+        samples
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("missing sample {name}"))
+            .1
+    };
+    assert_eq!(get("store_hit"), 5);
+    assert_eq!(get("kernel_requests"), u64::MAX, "u64::MAX survives the text format");
+    assert_eq!(get("sched_queue_depth_max"), 3);
+    assert_eq!(get("request_like_cycles_count"), 3);
+    assert_eq!(get("request_like_cycles_bucket{le=\"+Inf\"}"), 3);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The keys CI greps out of `metrics.json` exist in the registry (names
+/// only — values belong to whichever tests ran first in this binary).
+#[test]
+fn registry_json_carries_ci_grepped_keys() {
+    let text = export::json(&obs::snapshot());
+    for key in [
+        "\"kernel_requests\":",
+        "\"store_hit\":",
+        "\"sched_jobs\":",
+        "\"request_transfer_cycles\":",
+        "\"request_queue_net_cycles\":",
+        "\"request_queue_mem_cycles\":",
+        "\"request_service_cycles\":",
+    ] {
+        assert!(text.contains(key), "metrics.json lost key {key}");
+    }
+}
