@@ -96,6 +96,12 @@ pub mod flags {
     /// snapshot (JSON + Prometheus sibling), `--quiet` / `--v` /
     /// `--verbose` pick the log level.
     pub const OBS: &[&str] = &["metrics-out", "quiet", "v", "verbose"];
+    /// Sharded-execution flags shared by `figure` and `sweep`:
+    /// `--worker` joins (or runs) a cooperative sharded sweep over the
+    /// disk store, `--workers N` forks N local worker subprocesses,
+    /// `--worker-id S` names this worker in claim leases, and
+    /// `--lease-ttl-ms N` sets the stale-claim takeover threshold.
+    pub const SHARD: &[&str] = &["worker", "workers", "worker-id", "lease-ttl-ms"];
     pub const RUN: &[&str] = &[
         "config", "memory", "policy", "topology", "quick", "paper-scale", "warmup",
         "measure", "runs", "seed", "epoch", "trace", "workload", "record", "no-loop",
@@ -115,8 +121,10 @@ pub mod flags {
     /// `repro figure`: `--list` enumerates the spec registry;
     /// `--no-disk-cache` keeps this invocation from reading/writing the
     /// persistent report cache.
-    pub const FIGURE: &[&str] =
-        &["list", "no-disk-cache", "metrics-out", "quiet", "v", "verbose"];
+    pub const FIGURE: &[&str] = &[
+        "list", "no-disk-cache", "metrics-out", "quiet", "v", "verbose", "worker",
+        "workers", "worker-id", "lease-ttl-ms",
+    ];
     /// `repro all-figures`.
     pub const ALL_FIGURES: &[&str] =
         &["no-disk-cache", "metrics-out", "quiet", "v", "verbose"];
@@ -126,16 +134,17 @@ pub mod flags {
         "spec", "name", "title", "memory", "topology", "workloads", "policies",
         "baseline", "table-entries", "thresholds", "epochs", "trace", "trace-mix",
         "mixes", "warmup", "measure", "runs", "seed", "no-disk-cache", "metrics-out",
-        "quiet", "v", "verbose",
+        "quiet", "v", "verbose", "worker", "workers", "worker-id", "lease-ttl-ms",
     ];
     /// `repro cache stats|clear|gc`: `--dir` overrides the store location
     /// (default: `REPRO_CACHE_DIR` or `target/repro/cache`).
     pub const CACHE: &[&str] = &["dir"];
     /// `repro bench`: the pinned perf trajectory. `--json` emits the
     /// BENCH_*.json document (to `--out FILE`, default
-    /// target/repro/BENCH_7.json), `--check FILE` gates against a
-    /// checked-in baseline at `--threshold` percent (default 10).
-    pub const BENCH: &[&str] = &["json", "out", "check", "threshold"];
+    /// target/repro/BENCH_8.json), `--check FILE` gates against a
+    /// checked-in baseline at `--threshold` percent (default 10),
+    /// `--promote` rewrites the checked-in baseline with fresh numbers.
+    pub const BENCH: &[&str] = &["json", "out", "check", "threshold", "promote"];
     pub const NONE: &[&str] = &[];
 }
 
@@ -240,18 +249,23 @@ COMMANDS:
                     trace remap IN OUT --vaults N
     cache         Manage the persistent report cache shared by figure and
                   sweep runs (entries: target/repro/cache/<key>.json):
-                    cache stats   entry counts, sizes, staleness
-                    cache clear   drop every entry
+                    cache stats   entry counts, sizes, staleness, claims
+                    cache clear   drop every entry (live claims survive)
                     cache gc      drop stale/corrupt entries, keep current
+                                  and anything under a live claim lease
                   All accept --dir DIR to address another store.
     bench         Measure the pinned serve-throughput trajectory (fixed seed
                   and scale; see docs/BENCHMARKING.md):
                     bench                 print per-topology rows
                     bench --json [--out FILE]   also write BENCH_*.json
-                                          (default target/repro/BENCH_7.json)
+                                          (default target/repro/BENCH_8.json)
                     bench --check FILE [--threshold PCT]  fail if headline
                                           serve_ops_per_sec drops > PCT (10)
-                  Env REPRO_BENCH_SKIP=1 skips entirely (noisy runners)
+                    bench --promote [--check FILE]  rewrite the checked-in
+                                          baseline (default BENCH_8.json)
+                                          with this machine's fresh numbers
+                  Env REPRO_BENCH_SKIP=1 skips entirely (noisy runners;
+                  --promote refuses under it)
     artifacts     List figure JSON artifacts and the AOT artifacts (PJRT)
     help          This text
 
@@ -262,6 +276,19 @@ SCALE FLAGS (also env REPRO_WARMUP / REPRO_MEASURE / REPRO_RUNS / REPRO_EPOCH):
 CACHE FLAGS (figure / all-figures / sweep):
     --no-disk-cache  compute every point; don't read or write the
                      persistent report cache (in-process reuse still applies)
+
+SHARD FLAGS (figure / sweep; see docs/ARCHITECTURE.md \"Sharded sweeps\"):
+    --worker         execute this sweep cooperatively through the store's
+                     claim protocol; any number of such processes (on a
+                     shared cache dir) split the points and each renders
+                     the artifact when the grid completes — the bytes are
+                     identical at any worker count
+    --workers N      fork N local worker subprocesses and run one worker
+                     in this process too (a one-command sharded sweep)
+    --worker-id S    name this worker in claim leases (default: w<pid>)
+    --lease-ttl-ms N stale-claim takeover threshold (default 30000; a
+                     worker that stops heartbeating this long loses its
+                     claims to the survivors)
 
 OBSERVABILITY FLAGS (run / figure / all-figures / sweep):
     --metrics-out [FILE]  record telemetry and write the metrics snapshot
@@ -284,6 +311,8 @@ ENVIRONMENT:
                          (mesh|crossbar|ring; default: the preset's topology)
     REPRO_LOG            quiet|info|debug (or 0|1|2) default log level;
                          --quiet / --v win when given
+    REPRO_LEASE_TTL_MS   default stale-claim takeover threshold for
+                         sharded sweeps (--lease-ttl-ms wins when given)
 ";
 
 #[cfg(test)]
@@ -381,6 +410,15 @@ mod tests {
             ("sweep", flags::SWEEP),
         ] {
             for f in flags::OBS {
+                assert!(list.contains(f), "--{f} missing from `{cmd}`");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_flags_on_figure_and_sweep() {
+        for (cmd, list) in [("figure", flags::FIGURE), ("sweep", flags::SWEEP)] {
+            for f in flags::SHARD {
                 assert!(list.contains(f), "--{f} missing from `{cmd}`");
             }
         }

@@ -50,7 +50,9 @@ pub mod spec;
 pub mod tomlspec;
 
 pub use output::{geomean, print_rows, render_csv, render_json};
-pub use run::{emit_artifact, run_spec, run_spec_checked, RowResult, SpecFailure, SpecRun};
+pub use run::{
+    emit_artifact, run_spec, run_spec_checked, run_spec_sharded, RowResult, SpecFailure, SpecRun,
+};
 pub use spec::{cfg_for, scaled, ExperimentSpec, OutputSchema, TraceSource, WorkloadSet};
 
 use std::path::PathBuf;
@@ -99,6 +101,33 @@ pub fn run_and_emit(spec: &ExperimentSpec, write_csv: bool) -> Result<PathBuf, S
         }
         std::fs::write(&path, csv).map_err(|e| format!("write {path}: {e}"))?;
     }
+    let artifact = emit_artifact(spec, &run)?;
+    crate::log_info!("{} | artifact: {}", spec.artifact_name(), artifact.display());
+    Ok(artifact)
+}
+
+/// [`run_and_emit`] through the shard claim protocol: run the spec
+/// cooperatively on `runner`, print the worker's accounting (how many
+/// points it found present, claimed fresh, reclaimed from stale leases),
+/// and render the artifact from the shared store. Every worker renders
+/// once its view of the grid is complete; the writes are atomic and the
+/// bytes interleaving-independent, so concurrent renders are benign and
+/// the last-to-finish worker always leaves a complete artifact behind.
+pub fn run_and_emit_sharded(
+    spec: &ExperimentSpec,
+    runner: &crate::sweep::shard::ShardRunner,
+) -> Result<PathBuf, String> {
+    let (run, outcome) = run_spec_sharded(spec, runner)?;
+    let _render = crate::obs::span(&crate::obs::SPAN_RENDER_NS);
+    print_rows(spec, &run);
+    crate::log_info!(
+        "{} | points {} | present {} | claimed {} | reclaimed {}",
+        spec.artifact_name(),
+        outcome.present + outcome.simulated(),
+        outcome.present,
+        outcome.claimed,
+        outcome.reclaimed
+    );
     let artifact = emit_artifact(spec, &run)?;
     crate::log_info!("{} | artifact: {}", spec.artifact_name(), artifact.display());
     Ok(artifact)

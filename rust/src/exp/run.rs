@@ -153,6 +153,72 @@ pub fn run_spec_checked(spec: &ExperimentSpec) -> Result<SpecRun, SpecFailure> {
     }
 }
 
+/// Run a spec cooperatively with other worker processes through the
+/// shard claim protocol (see [`crate::sweep::shard`]): the expansion is
+/// identical to [`run_spec_checked`] — same configs, same rows, same
+/// point order — but instead of scheduling jobs on the in-process sweep
+/// engine, every point is claimed / simulated / flushed to the shared
+/// disk store by whichever worker gets there first. After the grid is
+/// complete this worker reads every report back from the store **in
+/// expansion order**, so the assembled run (and therefore the artifact
+/// bytes) cannot depend on which worker simulated which point.
+pub fn run_spec_sharded(
+    spec: &ExperimentSpec,
+    runner: &sweep::shard::ShardRunner,
+) -> Result<(SpecRun, sweep::shard::ShardOutcome), String> {
+    let (configs, rows) = {
+        let _t = crate::obs::span(&crate::obs::SPAN_SPEC_EXPAND_NS);
+        let configs = spec.expand()?;
+        let rows = prepare_rows(spec)?;
+        (configs, rows)
+    };
+
+    let mut points = Vec::with_capacity(rows.len() * configs.len());
+    for row in &rows {
+        for cp in &configs {
+            let mut cfg = cp.cfg.clone();
+            if let Some(t) = &row.trace {
+                cfg.trace = Some(t.clone());
+            }
+            points.push(SweepPoint::new(row.label.clone(), cfg));
+        }
+    }
+    let outcome = runner.run(&points)?;
+
+    // Read back in expansion order. A vanished report means someone
+    // cleared the store between completion and render — fail loudly
+    // rather than emit a partial figure.
+    let mut reports = points.iter().map(|p| {
+        runner.store().load(p.key()).ok_or_else(|| {
+            format!(
+                "{}: report for {} ({:016x}) vanished from the store after completion",
+                spec.name,
+                p.workload,
+                p.key()
+            )
+        })
+    });
+    let mut results = Vec::with_capacity(rows.len());
+    for row in rows {
+        let row_reports = (&mut reports)
+            .take(configs.len())
+            .collect::<Result<Vec<SimReport>, String>>()?;
+        results.push(RowResult {
+            label: row.label,
+            tenants: row.tenants,
+            trace: row.trace,
+            reports: row_reports,
+        });
+    }
+    let run = SpecRun {
+        configs,
+        rows: results,
+        from_cache: outcome.present,
+        simulated: outcome.simulated(),
+    };
+    Ok((run, outcome))
+}
+
 /// Resolve the row axis, materializing trace files where needed.
 fn prepare_rows(spec: &ExperimentSpec) -> Result<Vec<Row>, String> {
     let labels = spec.row_labels()?;

@@ -71,6 +71,106 @@ fn run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Whether this invocation executes its sweep through the shard claim
+/// protocol (`--worker` joins one, `--workers N` also forks N local
+/// worker subprocesses).
+fn shard_mode(cli: &Cli) -> bool {
+    cli.has("worker") || cli.has("workers")
+}
+
+/// Build this process's shard runner from the CLI flags: the shared
+/// persistent store, the worker id stamped into claim leases, and the
+/// stale-claim takeover TTL.
+fn shard_runner(cli: &Cli) -> Result<sweep::shard::ShardRunner> {
+    let store = sweep::cache::default_disk_store().ok_or_else(|| {
+        err!(
+            "sharded execution coordinates workers through the persistent \
+             report store; drop --no-disk-cache / unset REPRO_NO_DISK_CACHE"
+        )
+    })?;
+    let ttl = match cli.flag_u64("lease-ttl-ms").map_err(|e| err!(e))? {
+        Some(0) => bail!("--lease-ttl-ms expects at least 1"),
+        Some(ms) => std::time::Duration::from_millis(ms),
+        None => sweep::shard::default_ttl(),
+    };
+    let worker = match cli.flag("worker-id") {
+        Some(id) => id.to_string(),
+        None => format!("w{}", std::process::id()),
+    };
+    Ok(sweep::shard::ShardRunner::new(store, worker, ttl))
+}
+
+/// This invocation's argv minus the orchestration/output flags, so a
+/// forked subprocess re-runs the same figure or sweep as a quiet claim
+/// worker (its own `--worker --worker-id ... --quiet` are appended).
+fn shard_child_args() -> Vec<String> {
+    const DROP: &[&str] =
+        &["workers", "worker-id", "worker", "metrics-out", "quiet", "v", "verbose"];
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut out = Vec::with_capacity(args.len());
+    let mut it = args.into_iter().peekable();
+    while let Some(a) = it.next() {
+        match a.strip_prefix("--") {
+            Some(key) if DROP.contains(&key) => {
+                // The parser would have bound a following non-flag token
+                // to this flag as its value; drop it with the flag.
+                if it.peek().is_some_and(|v| !v.starts_with("--")) {
+                    it.next();
+                }
+            }
+            _ => out.push(a),
+        }
+    }
+    out
+}
+
+/// Run `spec` in shard mode: fork the `--workers N` subprocesses if
+/// asked, then run this process's own worker loop and render. The local
+/// loop doubles as the backstop — it finishes (after the lease TTL)
+/// whatever a crashed subprocess left claimed, so a dead child degrades
+/// throughput, never the figure.
+fn run_spec_sharded_cli(spec: &exp::ExperimentSpec, cli: &Cli) -> Result<()> {
+    let runner = shard_runner(cli)?;
+    let mut children = Vec::new();
+    if let Some(n) = cli.flag_u64("workers").map_err(|e| err!(e))? {
+        if n == 0 {
+            bail!("--workers expects at least 1");
+        }
+        let exe = std::env::current_exe()?;
+        let base_args = shard_child_args();
+        for i in 1..=n {
+            let child = std::process::Command::new(&exe)
+                .args(&base_args)
+                .arg("--worker")
+                .arg("--worker-id")
+                .arg(format!("{}-{i}", runner.worker_id()))
+                .arg("--quiet")
+                .spawn()
+                .map_err(|e| err!("spawn worker {i}: {e}"))?;
+            children.push((i, child));
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let result = exp::run_and_emit_sharded(spec, &runner).map(|_| ()).map_err(|e| err!(e));
+    if result.is_ok() {
+        log_info!(
+            "worker {} | wallclock {:.2}s",
+            runner.worker_id(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    for (i, mut child) in children {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => {
+                log_info!("worker subprocess {i} exited with {status} (surviving workers completed its points)")
+            }
+            Err(e) => log_info!("worker subprocess {i} unreachable: {e}"),
+        }
+    }
+    result
+}
+
 /// The `--metrics-out` target: an explicit FILE, or the default
 /// `target/repro/metrics.json` when the flag is given bare (the parser
 /// assigns valueless switches "true").
@@ -424,6 +524,7 @@ fn cmd_cache(cli: &Cli) -> Result<()> {
             println!("  stale         {} (other build or format version)", s.stale);
             println!("  corrupt       {}", s.corrupt);
             println!("  tmp leftover  {}", s.tmp);
+            println!("claims          {} active, {} stale", s.claims_active, s.claims_stale);
             Ok(())
         }
         "clear" => {
@@ -434,12 +535,13 @@ fn cmd_cache(cli: &Cli) -> Result<()> {
         "gc" => {
             let out = store.gc()?;
             println!(
-                "gc              kept {} | removed {} (stale {}, corrupt {}, tmp {})",
+                "gc              kept {} | removed {} (stale {}, corrupt {}, tmp {}, claims {})",
                 out.kept,
                 out.removed(),
                 out.removed_stale,
                 out.removed_corrupt,
-                out.removed_tmp
+                out.removed_tmp,
+                out.removed_claims
             );
             Ok(())
         }
@@ -453,7 +555,16 @@ fn cmd_cache(cli: &Cli) -> Result<()> {
 /// See `docs/BENCHMARKING.md` for the schema and CI workflow.
 fn cmd_bench(cli: &Cli) -> Result<()> {
     use dlpim::perf;
-    if std::env::var(perf::SKIP_ENV).map(|v| v == "1" || v == "true").unwrap_or(false) {
+    let skip =
+        std::env::var(perf::SKIP_ENV).map(|v| v == "1" || v == "true").unwrap_or(false);
+    if skip && cli.has("promote") {
+        bail!(
+            "--promote refuses to run under {}=1: a promoted baseline must \
+             come from a real measurement",
+            perf::SKIP_ENV
+        );
+    }
+    if skip {
         println!("bench skipped   {}=1", perf::SKIP_ENV);
         return Ok(());
     }
@@ -479,6 +590,15 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
             p.timing.iters
         );
     }
+    for p in &rep.shards {
+        println!(
+            "shard | {:>2} workers | {:>8.2} points/s | {} points x{}",
+            p.workers,
+            p.points_per_sec(),
+            p.points,
+            p.timing.iters
+        );
+    }
     println!(
         "headline        serve_ops_per_sec {:.0} ({:.1} ns/access)",
         rep.serve_ops_per_sec(),
@@ -486,12 +606,23 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
     );
     println!("wallclock       {:.2}s", t0.elapsed().as_secs_f64());
     if cli.has("json") || cli.has("out") {
-        let out = cli.flag_or("out", "target/repro/BENCH_7.json");
+        let out = cli.flag_or("out", "target/repro/BENCH_8.json");
         if let Some(dir) = Path::new(out).parent() {
             std::fs::create_dir_all(dir)?;
         }
         std::fs::write(out, rep.to_json())?;
         println!("wrote           {out}");
+    }
+    if cli.has("promote") {
+        // Promotion replaces the checked-in baseline with this machine's
+        // fresh numbers; the emitter always writes `provisional: false`,
+        // so the next `--check` run gates for real. Gating against the
+        // file we are about to overwrite would be meaningless, so
+        // --promote skips the regression check.
+        let path = cli.flag("check").filter(|p| *p != "true").unwrap_or(perf::BASELINE_FILE);
+        std::fs::write(path, rep.to_json())?;
+        println!("promoted        {path} (provisional: false)");
+        return Ok(());
     }
     if let Some(base_path) = cli.flag("check") {
         let text = std::fs::read_to_string(base_path)
@@ -553,6 +684,11 @@ fn cmd_figure(cli: &Cli) -> Result<()> {
             exp::registry::figure_ids().join(", ")
         )
     })?;
+    if shard_mode(cli) {
+        let id = spec.figure.as_deref().unwrap_or(&spec.name);
+        log_info!("Figure {id}: {}", spec.title);
+        return run_spec_sharded_cli(&spec, cli);
+    }
     print_figure(&spec)
 }
 
@@ -596,12 +732,13 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
         // Axis flags next to --spec would be silently shadowed by the
         // file; a user who thinks they overrode an axis must hear about
         // it before a potentially hours-long sweep of the wrong configs.
-        // (`--no-disk-cache` and the observability flags are execution
-        // flags, not axes: they compose with --spec.)
+        // (`--no-disk-cache`, the observability flags and the shard
+        // flags are execution flags, not axes: they compose with --spec.)
         if let Some(extra) = cli::flags::SWEEP.iter().find(|f| {
             **f != "spec"
                 && **f != "no-disk-cache"
                 && !cli::flags::OBS.contains(f)
+                && !cli::flags::SHARD.contains(f)
                 && cli.has(f)
         }) {
             bail!(
@@ -618,6 +755,9 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
     let t0 = std::time::Instant::now();
     let points = spec.point_count().map_err(|e| err!(e))?;
     log_info!("sweep {}: {points} points ({})", spec.name, spec.axes_summary());
+    if shard_mode(cli) {
+        return run_spec_sharded_cli(&spec, cli);
+    }
     exp::run_and_emit(&spec, false).map_err(|e| err!(e))?;
     log_info!("wallclock       {:.2}s", t0.elapsed().as_secs_f64());
     Ok(())

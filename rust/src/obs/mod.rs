@@ -90,11 +90,23 @@ pub static SCHED_PANICKED_JOBS: Counter =
 /// Policy-layer activity (always on).
 pub static POLICY_FLIPS: Counter =
     Counter::new("policy_flips", "global indirection enable/disable transitions");
+/// Sharded-sweep claim protocol (always on; see `sweep::shard`).
+pub static SHARD_CLAIMS: Counter =
+    Counter::new("shard_claims", "sweep points claimed fresh by this process");
+pub static SHARD_RECLAIMS: Counter =
+    Counter::new("shard_reclaims", "stale claims taken over by this process");
+pub static SHARD_LEASE_EXPIRED: Counter =
+    Counter::new("shard_lease_expired", "claim leases observed past their TTL");
 
 /// Deepest injector queue observed (high-water mark; scheduling-timing
 /// dependent, excluded from determinism pins).
 pub static SCHED_QUEUE_DEPTH_MAX: Gauge =
     Gauge::new("sched_queue_depth_max", "deepest sweep injector queue observed");
+/// Points simulated by shard workers (high-water mark across this
+/// process's workers; wall-clock-path accounting, excluded from
+/// determinism pins).
+pub static SHARD_POINTS_SIMULATED: Gauge =
+    Gauge::new("shard_points_simulated", "sweep points simulated under shard claims");
 
 /// Per-request latency decomposition (simulated cycles; deterministic).
 pub static REQUEST_TRANSFER_CYCLES: Histogram =
@@ -170,8 +182,11 @@ pub fn snapshot() -> Snapshot {
             SCHED_WAKES.point(),
             SCHED_PANICKED_JOBS.point(),
             POLICY_FLIPS.point(),
+            SHARD_CLAIMS.point(),
+            SHARD_RECLAIMS.point(),
+            SHARD_LEASE_EXPIRED.point(),
         ],
-        gauges: vec![SCHED_QUEUE_DEPTH_MAX.point()],
+        gauges: vec![SCHED_QUEUE_DEPTH_MAX.point(), SHARD_POINTS_SIMULATED.point()],
         hists: vec![
             REQUEST_TRANSFER_CYCLES.snap(),
             REQUEST_QUEUE_NET_CYCLES.snap(),
@@ -202,7 +217,11 @@ pub fn reset() {
     SCHED_WAKES.reset();
     SCHED_PANICKED_JOBS.reset();
     POLICY_FLIPS.reset();
+    SHARD_CLAIMS.reset();
+    SHARD_RECLAIMS.reset();
+    SHARD_LEASE_EXPIRED.reset();
     SCHED_QUEUE_DEPTH_MAX.reset();
+    SHARD_POINTS_SIMULATED.reset();
     REQUEST_TRANSFER_CYCLES.reset();
     REQUEST_QUEUE_NET_CYCLES.reset();
     REQUEST_QUEUE_MEM_CYCLES.reset();

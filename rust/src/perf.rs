@@ -19,11 +19,18 @@ use crate::config::{SimConfig, Topology};
 use crate::coordinator::driver::simulate_once;
 use crate::coordinator::kernel::Kernel;
 use crate::policy::PolicyKind;
+use crate::sweep::shard::ShardRunner;
+use crate::sweep::store::DiskStore;
+use crate::sweep::SweepPoint;
 use crate::workloads::catalog;
 
 /// Format version of the emitted JSON document (2 added the
-/// `threads`/`thread_scaling` kernel-scaling series).
-pub const SCHEMA_VERSION: u32 = 2;
+/// `threads`/`thread_scaling` kernel-scaling series; 3 added the
+/// `workers`/`shard_scaling` multi-worker sweep series).
+pub const SCHEMA_VERSION: u32 = 3;
+/// The checked-in baseline at the repository root that `repro bench
+/// --promote` rewrites and CI gates against.
+pub const BASELINE_FILE: &str = "BENCH_8.json";
 /// Fixed seed: the trajectory must measure the same simulated work in
 /// every PR.
 pub const BENCH_SEED: u64 = 0xD11;
@@ -53,6 +60,18 @@ pub const THREAD_BENCH_MEASURE: u64 = 20_000;
 pub const THREAD_BENCH_RUNS: u32 = 8;
 /// Timed iterations per thread count (median taken).
 pub const THREAD_BENCH_ITERS: usize = 3;
+/// Worker counts of the shard-scaling series.
+pub const SHARD_WORKER_COUNTS: &[usize] = &[1, 2, 4];
+/// Workloads of the pinned shard-scaling sweep (crossed with the
+/// never/adaptive policy pair → 6 points per timed iteration).
+pub const SHARD_BENCH_WORKLOADS: &[&str] = &["SPLRad", "PHELinReg", "STRTriad"];
+/// Warmup requests per point in the shard-scaling series (small: the
+/// series multiplies by points and worker counts).
+pub const SHARD_BENCH_WARMUP: u64 = 1_000;
+/// Measured requests per point in the shard-scaling series.
+pub const SHARD_BENCH_MEASURE: u64 = 10_000;
+/// Timed iterations per worker count (median taken).
+pub const SHARD_BENCH_ITERS: usize = 3;
 
 /// One measured (topology, policy) point of the trajectory.
 pub struct BenchPoint {
@@ -99,12 +118,36 @@ impl ThreadPoint {
     }
 }
 
+/// One worker count of the shard-scaling series: the pinned sweep grid
+/// executed cooperatively by `workers` in-process shard runners over a
+/// fresh store, timed end to end (claims, simulations and report
+/// flushes included — the protocol overhead is what the series exists
+/// to watch).
+pub struct ShardPoint {
+    pub workers: usize,
+    /// Sweep points per timed iteration.
+    pub points: usize,
+    pub timing: Timing,
+}
+
+impl ShardPoint {
+    /// Sweep points completed per second at this worker count.
+    pub fn points_per_sec(&self) -> f64 {
+        if self.timing.median_ns <= 0.0 {
+            return 0.0;
+        }
+        self.points as f64 / (self.timing.median_ns / 1e9)
+    }
+}
+
 /// The full trajectory measurement (one [`BenchPoint`] per config, plus
-/// the kernel thread-scaling series — empty when only the serve-hotpath
-/// points were measured, e.g. from [`run_with_scale`]).
+/// the kernel thread-scaling and shard worker-scaling series — empty
+/// when only the serve-hotpath points were measured, e.g. from
+/// [`run_with_scale`]).
 pub struct BenchReport {
     pub points: Vec<BenchPoint>,
     pub threads: Vec<ThreadPoint>,
+    pub shards: Vec<ShardPoint>,
     pub warmup_requests: u64,
     pub measure_requests: u64,
 }
@@ -184,6 +227,27 @@ impl BenchReport {
                 if i + 1 == self.threads.len() { "" } else { "," }
             ));
         }
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"workers\": [{}],\n",
+            SHARD_WORKER_COUNTS.iter().map(|w| w.to_string()).collect::<Vec<_>>().join(", ")
+        ));
+        // Rows use `points_per_sec`, never `serve_ops_per_sec`: the
+        // first occurrence of the headline key in the document must stay
+        // the headline ([`parse_baseline`] takes the first match).
+        s.push_str("  \"shard_scaling\": [\n");
+        for (i, p) in self.shards.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"workers\": {}, \"points\": {}, \"median_ms\": {}, \
+                 \"mad_ms\": {}, \"points_per_sec\": {}}}{}\n",
+                p.workers,
+                p.points,
+                json_num(p.timing.median_ns / 1e6),
+                json_num(p.timing.mad_ns / 1e6),
+                json_num(p.points_per_sec()),
+                if i + 1 == self.shards.len() { "" } else { "," }
+            ));
+        }
         s.push_str("  ]\n}\n");
         s
     }
@@ -248,7 +312,56 @@ pub fn run_trajectory() -> BenchReport {
         THREAD_BENCH_RUNS,
         THREAD_BENCH_ITERS,
     );
+    rep.shards = shard_scaling(SHARD_BENCH_WARMUP, SHARD_BENCH_MEASURE, SHARD_BENCH_ITERS);
     rep
+}
+
+/// Measure the shard protocol's worker scaling: for each entry of
+/// [`SHARD_WORKER_COUNTS`], time the pinned sweep grid executed
+/// cooperatively by that many in-process [`ShardRunner`]s over one
+/// fresh store directory per iteration. In-process workers keep the
+/// measurement hermetic (no subprocess spawn noise) and the shard run
+/// path never consults the in-memory report cache, so every iteration
+/// simulates the full grid from scratch; cross-*process* correctness is
+/// covered by `tests/shard_sweep.rs` and CI's `--workers 3` figure leg.
+pub fn shard_scaling(warmup: u64, measure: u64, iters: usize) -> Vec<ShardPoint> {
+    let mut points = Vec::new();
+    for wl in SHARD_BENCH_WORKLOADS {
+        for policy in [PolicyKind::Never, PolicyKind::Adaptive] {
+            let cfg = bench_cfg(Topology::Mesh, policy, warmup, measure);
+            debug_assert!(cfg.validate().is_ok());
+            points.push(SweepPoint::new(*wl, cfg));
+        }
+    }
+    static DIR_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    SHARD_WORKER_COUNTS
+        .iter()
+        .map(|&workers| {
+            let timing = benchkit::time(1, iters, || {
+                let dir = std::env::temp_dir().join(format!(
+                    "dlpim-shardbench-{}-{}",
+                    std::process::id(),
+                    DIR_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+                ));
+                std::thread::scope(|s| {
+                    for i in 0..workers {
+                        let store = DiskStore::at(dir.as_path());
+                        let points = &points;
+                        s.spawn(move || {
+                            let runner = ShardRunner::new(
+                                store,
+                                format!("bench-{i}"),
+                                crate::sweep::shard::DEFAULT_TTL,
+                            );
+                            runner.run(points).expect("shard bench sweep");
+                        });
+                    }
+                });
+                let _ = std::fs::remove_dir_all(&dir);
+            });
+            ShardPoint { workers, points: points.len(), timing }
+        })
+        .collect()
 }
 
 /// Measure the kernel's run-level scaling: for each entry of
@@ -290,7 +403,13 @@ pub fn run_with_scale(warmup: u64, measure: u64, iters: usize) -> BenchReport {
     for topo in [Topology::Mesh, Topology::Crossbar, Topology::Ring] {
         points.push(measure_point(topo, PolicyKind::Adaptive, warmup, measure, iters));
     }
-    BenchReport { points, threads: Vec::new(), warmup_requests: warmup, measure_requests: measure }
+    BenchReport {
+        points,
+        threads: Vec::new(),
+        shards: Vec::new(),
+        warmup_requests: warmup,
+        measure_requests: measure,
+    }
 }
 
 /// The comparison-relevant part of a checked-in `BENCH_*.json`.
@@ -393,6 +512,8 @@ mod tests {
             "\"topology\": \"ring\"",
             "\"threads\": [1, 2, 4, 8]",
             "\"thread_scaling\"",
+            "\"workers\": [1, 2, 4]",
+            "\"shard_scaling\"",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
@@ -417,6 +538,7 @@ mod tests {
         let rep = BenchReport {
             points: Vec::new(),
             threads: pts,
+            shards: Vec::new(),
             warmup_requests: 50,
             measure_requests: 200,
         };
@@ -424,6 +546,30 @@ mod tests {
         for t in THREAD_COUNTS {
             assert!(json.contains(&format!("\"threads\": {t},")), "row for {t}");
         }
+    }
+
+    #[test]
+    fn micro_shard_scaling_measures_every_worker_count() {
+        // Tiny scale: shape and serialization, not wall-clock. Each
+        // iteration runs the full pinned grid on a fresh store.
+        let pts = shard_scaling(50, 200, 1);
+        assert_eq!(pts.len(), SHARD_WORKER_COUNTS.len());
+        for p in &pts {
+            assert_eq!(p.points, SHARD_BENCH_WORKLOADS.len() * 2);
+            assert!(p.points_per_sec() > 0.0, "workers={}", p.workers);
+        }
+        let rep = BenchReport {
+            points: Vec::new(),
+            threads: Vec::new(),
+            shards: pts,
+            warmup_requests: 50,
+            measure_requests: 200,
+        };
+        let json = rep.to_json();
+        for w in SHARD_WORKER_COUNTS {
+            assert!(json.contains(&format!("{{\"workers\": {w},")), "row for {w}");
+        }
+        assert!(json.contains("\"points_per_sec\""));
     }
 
     #[test]

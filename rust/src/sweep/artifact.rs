@@ -25,11 +25,14 @@ pub fn path_in(dir: &Path, name: &str) -> PathBuf {
     dir.join(format!("{name}.json"))
 }
 
-/// Write `value` as `<dir>/<name>.json`, creating the directory.
+/// Write `value` as `<dir>/<name>.json`, creating the directory. The
+/// write is atomic (temp + rename): sharded sweeps can have several
+/// worker processes rendering the same figure, and a reader must see a
+/// complete artifact from one of them, never a torn interleaving.
 pub fn write_json_to(dir: &Path, name: &str, value: &JsonValue) -> io::Result<PathBuf> {
     std::fs::create_dir_all(dir)?;
     let path = path_in(dir, name);
-    std::fs::write(&path, value.render() + "\n")?;
+    super::store::write_atomic(&path, (value.render() + "\n").as_bytes())?;
     Ok(path)
 }
 

@@ -30,6 +30,7 @@ pub mod artifact;
 pub mod cache;
 pub mod json;
 pub mod scheduler;
+pub mod shard;
 pub mod store;
 
 use std::panic::{AssertUnwindSafe, catch_unwind};
@@ -242,17 +243,18 @@ impl Sweep {
     }
 }
 
-/// Execute one point with panic isolation: a workload that panics (or that
-/// does not exist) poisons only its own job. `key` is the point's cache
-/// key, computed once by the caller (meaningless when `use_cache` is off).
-fn run_point(point: &SweepPoint, key: u64, use_cache: bool, disk: Option<&DiskStore>) -> JobOutcome {
+/// Simulate one point with panic isolation: the shared job body of the
+/// in-process sweep ([`run_point`]) and the cross-process shard workers
+/// ([`shard::ShardRunner`]). A workload that panics (or that does not
+/// exist) yields `Err` with the panic message, never tears anything down.
+pub(crate) fn simulate_point(point: &SweepPoint) -> Result<SimReport, String> {
     let cfg = point.job_cfg();
-    let name = point.workload.clone();
+    let name = point.workload.as_str();
     let result = catch_unwind(AssertUnwindSafe(|| {
         // Trace-backed configs replay their file; generator configs build
         // the named Table III workload. Errors (unknown workload, corrupt
         // trace) poison only this job.
-        let w = build_source(Some(name.as_str()), &cfg).unwrap_or_else(|e| panic!("{e}"));
+        let w = build_source(Some(name), &cfg).unwrap_or_else(|e| panic!("{e}"));
         let _t = obs::span(&obs::SPAN_KERNEL_RUN_NS);
         // The telemetry fork happens once per job, never per request: the
         // observed path threads a read-only recording closure through the
@@ -266,7 +268,18 @@ fn run_point(point: &SweepPoint, key: u64, use_cache: bool, disk: Option<&DiskSt
             simulate(&cfg, w)
         }
     }));
-    match result {
+    result.map_err(|payload| {
+        obs::SCHED_PANICKED_JOBS.inc();
+        panic_message(payload.as_ref())
+    })
+}
+
+/// Execute one point with panic isolation: a workload that panics (or that
+/// does not exist) poisons only its own job. `key` is the point's cache
+/// key, computed once by the caller (meaningless when `use_cache` is off).
+fn run_point(point: &SweepPoint, key: u64, use_cache: bool, disk: Option<&DiskStore>) -> JobOutcome {
+    let name = point.workload.clone();
+    match simulate_point(point) {
         Ok(report) => {
             if use_cache {
                 cache::store(key, &report);
@@ -279,14 +292,7 @@ fn run_point(point: &SweepPoint, key: u64, use_cache: bool, disk: Option<&DiskSt
             }
             JobOutcome { workload: name, result: Ok(report), from_cache: false }
         }
-        Err(payload) => {
-            obs::SCHED_PANICKED_JOBS.inc();
-            JobOutcome {
-                workload: name,
-                result: Err(panic_message(payload.as_ref())),
-                from_cache: false,
-            }
-        }
+        Err(e) => JobOutcome { workload: name, result: Err(e), from_cache: false },
     }
 }
 

@@ -1,0 +1,553 @@
+//! Sharded sweep execution: a work-claiming protocol over the store
+//! directory that lets N independent `repro` processes cooperatively
+//! execute one sweep — with byte-identical artifacts at any worker count.
+//!
+//! ## The protocol
+//!
+//! Workers share nothing but the store directory. For each pending
+//! [`SweepPoint`](super::SweepPoint), in point order:
+//!
+//! 1. **Probe** — `store.load(key)`: if the report is already present
+//!    (this sweep's or any earlier run's), the point is done.
+//! 2. **Claim** — atomically create `<key>.claim` next to the entry
+//!    (write the lease to a uniquely named temp file, `hard_link` it
+//!    into place — creation with full contents is a single atomic step,
+//!    same discipline as [`super::store::write_atomic`]). The lease
+//!    carries the worker id, pid, build fingerprint, a unique nonce and
+//!    a heartbeat timestamp a background thread refreshes on a coarse
+//!    interval (TTL/3).
+//! 3. **Simulate + flush** — the existing `Sweep`/`Kernel` job body
+//!    ([`super::simulate_point`]), then `store.save(key, report)`.
+//! 4. **Release** — remove the claim file (only if the lease is still
+//!    ours: a peer may have legitimately reclaimed it after a heartbeat
+//!    stall).
+//!
+//! A point whose claim is held by a *live* peer is skipped and revisited
+//! on the next pass; a worker with nothing claimable sleeps briefly and
+//! re-polls. Every worker loops until all reports are present, so the
+//! globally last worker to finish always observes a complete point set —
+//! which is what makes "any process can render; last-to-finish renders"
+//! safe without any coordinator.
+//!
+//! ## Crash recovery
+//!
+//! A killed worker's heartbeat stops; once it is older than the TTL
+//! (`REPRO_LEASE_TTL_MS`, default 30 s) any peer may **reclaim** the
+//! lease: atomically overwrite the claim with its own lease, then read
+//! it back — two racing reclaimers are serialized by the rename, and the
+//! nonce read-back tells each whether it won. The loser treats the point
+//! as held. An unreadable (torn mid-write) lease falls back to file
+//! mtime, which a torn write has just refreshed — so corruption never
+//! causes premature reclaim, only a full TTL wait.
+//!
+//! ## Why artifact bytes cannot depend on interleaving
+//!
+//! Reports are deterministic functions of their point (seeds derive from
+//! the point, never from scheduling), saves are atomic renames of
+//! identical bytes, and the renderer reads every report back from the
+//! store in registry order ([`crate::exp::run_spec_sharded`]). Duplicate
+//! simulation — two workers racing the same point through the ABA window
+//! between a stale read and a reclaim — is therefore benign: both flush
+//! the same bytes. Claims only ever gate *who computes*, never *what is
+//! rendered*. `tests/shard_sweep.rs` pins 1-vs-N byte identity,
+//! including under a mid-claim worker crash.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use super::store::{self, DiskStore};
+use super::SweepPoint;
+use crate::obs;
+
+/// Default lease TTL before a silent worker's claims become reclaimable.
+/// Coarse on purpose: heartbeats are cheap (one small atomic write per
+/// TTL/3), and a too-small TTL risks reclaiming a merely slow worker.
+pub const DEFAULT_TTL: Duration = Duration::from_secs(30);
+
+/// The lease TTL: `REPRO_LEASE_TTL_MS` or [`DEFAULT_TTL`].
+pub fn default_ttl() -> Duration {
+    std::env::var("REPRO_LEASE_TTL_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .map(Duration::from_millis)
+        .unwrap_or(DEFAULT_TTL)
+}
+
+fn now_ms() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_millis() as u64
+}
+
+/// Process-unique claim nonce: pid, a process-wide sequence and the
+/// clock, avalanched. Nonces never reach reports or artifacts — they
+/// only disambiguate who holds a claim file.
+fn fresh_nonce() -> u64 {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let mut z = (std::process::id() as u64)
+        ^ now_ms().rotate_left(20)
+        ^ (SEQ.fetch_add(1, Ordering::Relaxed) << 48);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One claim lease, as stored in `<key>.claim`. Plain `key = value`
+/// lines — human-readable in a debugging session, no JSON machinery.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lease {
+    /// Worker id (`--worker-id`, default `w<pid>`).
+    pub worker: String,
+    pub pid: u32,
+    /// Build fingerprint of the claimant (diagnostic only: a claim is
+    /// honored whatever build wrote it — reclaim is by heartbeat age).
+    pub build: String,
+    /// Unique per claim; the ownership check for release and reclaim.
+    pub nonce: u64,
+    /// Epoch milliseconds of the last heartbeat refresh.
+    pub heartbeat_ms: u64,
+}
+
+impl Lease {
+    /// A fresh lease for `worker` with the current heartbeat.
+    pub fn new(worker: &str, heartbeat_ms: u64) -> Lease {
+        Lease {
+            worker: worker.to_string(),
+            pid: std::process::id(),
+            build: store::build_fingerprint().to_string(),
+            nonce: fresh_nonce(),
+            heartbeat_ms,
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "worker = {}\npid = {}\nbuild = {}\nnonce = {}\nheartbeat_ms = {}\n",
+            self.worker, self.pid, self.build, self.nonce, self.heartbeat_ms
+        )
+    }
+
+    /// Parse a lease; `None` for torn or foreign content (the staleness
+    /// check then falls back to file mtime).
+    pub fn parse(text: &str) -> Option<Lease> {
+        let (mut worker, mut pid, mut build, mut nonce, mut hb) = (None, None, None, None, None);
+        for line in text.lines() {
+            let Some((k, v)) = line.split_once('=') else { continue };
+            match (k.trim(), v.trim()) {
+                ("worker", v) => worker = Some(v.to_string()),
+                ("pid", v) => pid = v.parse().ok(),
+                ("build", v) => build = Some(v.to_string()),
+                ("nonce", v) => nonce = v.parse().ok(),
+                ("heartbeat_ms", v) => hb = v.parse().ok(),
+                _ => {}
+            }
+        }
+        Some(Lease {
+            worker: worker?,
+            pid: pid?,
+            build: build?,
+            nonce: nonce?,
+            heartbeat_ms: hb?,
+        })
+    }
+
+    /// Read and parse the lease at `path`.
+    pub fn read(path: &Path) -> Option<Lease> {
+        Lease::parse(&std::fs::read_to_string(path).ok()?)
+    }
+
+    /// Whether this lease's heartbeat is older than `ttl` at `now_ms`.
+    pub fn is_stale(&self, ttl: Duration, now_ms: u64) -> bool {
+        now_ms.saturating_sub(self.heartbeat_ms) > ttl.as_millis() as u64
+    }
+}
+
+/// Whether the claim file at `path` is reclaimable: its lease heartbeat
+/// (or, for an unreadable lease, the file's mtime — which a torn write
+/// has just refreshed, so corruption waits out the full TTL) is older
+/// than `ttl`. A vanished file is not stale — the claim was released and
+/// the caller should re-probe.
+pub fn claim_is_stale(path: &Path, ttl: Duration) -> bool {
+    match Lease::read(path) {
+        Some(lease) => lease.is_stale(ttl, now_ms()),
+        None => std::fs::metadata(path)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|m| SystemTime::now().duration_since(m).ok())
+            .map(|age| age > ttl)
+            .unwrap_or(false),
+    }
+}
+
+/// A held claim. Deliberately **not** released on drop: a worker that
+/// panics mid-simulation must leave its claim file behind so the TTL
+/// reclaim path — not unwind cleanup — is what recovers the point
+/// (crash fidelity; the claim of a worker killed by SIGKILL gets no
+/// destructor either). Call [`ShardRunner::release`] explicitly.
+#[derive(Debug)]
+pub struct Claim {
+    key: u64,
+    nonce: u64,
+    /// True when this claim took over a stale lease.
+    pub reclaimed: bool,
+}
+
+/// Per-worker accounting of one [`ShardRunner::run`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardOutcome {
+    /// Points this worker simulated under a fresh claim.
+    pub claimed: usize,
+    /// Points this worker simulated after reclaiming a stale lease.
+    pub reclaimed: usize,
+    /// Points whose report another worker (or an earlier run) had
+    /// already flushed when this worker probed them.
+    pub present: usize,
+}
+
+impl ShardOutcome {
+    /// Points this worker simulated itself.
+    pub fn simulated(&self) -> usize {
+        self.claimed + self.reclaimed
+    }
+}
+
+type ClaimHook = Box<dyn FnMut(u64) + Send>;
+
+/// Shared state between a runner and its heartbeat thread. The mutex is
+/// the serialization point between refresh and release: the heartbeat
+/// rewrites the lease only while holding it, and release clears
+/// `current` under the same lock before removing the file, so a
+/// released claim can never be resurrected by a late refresh.
+struct Beat {
+    state: Mutex<BeatState>,
+    cv: Condvar,
+}
+
+struct BeatState {
+    current: Option<(PathBuf, Lease)>,
+    stop: bool,
+}
+
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // A hook panic (the crash-injection tests) poisons its mutex; the
+    // data is a plain Option either way, so recovery is always safe.
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// One cooperating worker: claims, simulates and flushes points of a
+/// shared sweep. Owns a background heartbeat thread that keeps the
+/// currently held claim's lease fresh (a runner holds at most one claim
+/// at a time — [`Self::run`] releases each point before the next).
+pub struct ShardRunner {
+    store: DiskStore,
+    worker: String,
+    ttl: Duration,
+    beat: Arc<Beat>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    hook: Mutex<Option<ClaimHook>>,
+}
+
+impl ShardRunner {
+    /// A worker named `worker` over `store`, with lease TTL `ttl`.
+    pub fn new(store: DiskStore, worker: impl Into<String>, ttl: Duration) -> ShardRunner {
+        let beat = Arc::new(Beat {
+            state: Mutex::new(BeatState { current: None, stop: false }),
+            cv: Condvar::new(),
+        });
+        // Refresh well inside the TTL so one missed wakeup cannot make a
+        // live worker look dead.
+        let interval = (ttl / 3).max(Duration::from_millis(5));
+        let thread_beat = Arc::clone(&beat);
+        let thread = std::thread::spawn(move || {
+            let mut st = lock_recover(&thread_beat.state);
+            loop {
+                if st.stop {
+                    return;
+                }
+                if let Some((path, lease)) = st.current.as_mut() {
+                    lease.heartbeat_ms = now_ms();
+                    // Best-effort: a failed refresh only risks an early
+                    // reclaim, which duplicates work, never corrupts it.
+                    let _ = store::write_atomic(path, lease.render().as_bytes());
+                }
+                st = match thread_beat.cv.wait_timeout(st, interval) {
+                    Ok((g, _)) => g,
+                    Err(p) => p.into_inner().0,
+                };
+            }
+        });
+        ShardRunner {
+            store,
+            worker: worker.into(),
+            ttl,
+            beat,
+            thread: Some(thread),
+            hook: Mutex::new(None),
+        }
+    }
+
+    /// [`Self::new`] with the environment TTL and a `w<pid>` default id.
+    pub fn with_defaults(store: DiskStore, worker_id: Option<String>) -> ShardRunner {
+        let id = worker_id.unwrap_or_else(|| format!("w{}", std::process::id()));
+        ShardRunner::new(store, id, default_ttl())
+    }
+
+    pub fn store(&self) -> &DiskStore {
+        &self.store
+    }
+
+    pub fn worker_id(&self) -> &str {
+        &self.worker
+    }
+
+    /// Test-only injection point: called with the point's key right
+    /// after a claim is acquired, before simulation. A hook that panics
+    /// models a worker dying mid-claim (the claim file stays behind —
+    /// see [`Claim`] — and peers must reclaim it after the TTL).
+    pub fn on_claim(&mut self, hook: impl FnMut(u64) + Send + 'static) {
+        *lock_recover(&self.hook) = Some(Box::new(hook));
+    }
+
+    /// Try to claim `key`: `Ok(Some)` on acquisition (fresh or via
+    /// stale-lease takeover), `Ok(None)` when a live peer holds it.
+    pub fn try_claim(&self, key: u64) -> io::Result<Option<Claim>> {
+        std::fs::create_dir_all(self.store.dir())?;
+        let path = self.store.claim_path(key);
+        let lease = Lease::new(&self.worker, now_ms());
+        // Atomic create-with-contents: link a fully written temp file
+        // into place. Either the link lands (we own the claim) or the
+        // name exists (someone else does) — no torn intermediate.
+        let tmp = path.with_file_name(format!(
+            ".{:016x}.claim.{}.{}.tmp",
+            key,
+            std::process::id(),
+            lease.nonce
+        ));
+        std::fs::write(&tmp, lease.render())?;
+        let linked = std::fs::hard_link(&tmp, &path);
+        let _ = std::fs::remove_file(&tmp);
+        match linked {
+            Ok(()) => {
+                self.register(path, lease.clone());
+                obs::SHARD_CLAIMS.inc();
+                Ok(Some(Claim { key, nonce: lease.nonce, reclaimed: false }))
+            }
+            Err(e) if e.kind() == io::ErrorKind::AlreadyExists => {
+                if !claim_is_stale(&path, self.ttl) {
+                    return Ok(None);
+                }
+                obs::SHARD_LEASE_EXPIRED.inc();
+                // Takeover: atomically replace the stale lease, then read
+                // back — racing reclaimers are serialized by the rename,
+                // and the nonce tells each whether it won.
+                let mut fresh = lease;
+                fresh.heartbeat_ms = now_ms();
+                store::write_atomic(&path, fresh.render().as_bytes())?;
+                match Lease::read(&path) {
+                    Some(cur) if cur.nonce == fresh.nonce => {
+                        let nonce = fresh.nonce;
+                        self.register(path, fresh);
+                        obs::SHARD_RECLAIMS.inc();
+                        Ok(Some(Claim { key, nonce, reclaimed: true }))
+                    }
+                    _ => Ok(None),
+                }
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Release a held claim: deregister it from the heartbeat, then
+    /// remove the file — but only while the lease is still ours (after a
+    /// heartbeat stall a peer may have reclaimed the point; their
+    /// release handles it then).
+    pub fn release(&self, claim: Claim) {
+        let mut st = lock_recover(&self.beat.state);
+        st.current = None;
+        let path = self.store.claim_path(claim.key);
+        if Lease::read(&path).map(|l| l.nonce == claim.nonce).unwrap_or(false) {
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    fn register(&self, path: PathBuf, lease: Lease) {
+        lock_recover(&self.beat.state).current = Some((path, lease));
+    }
+
+    /// Work the point set until every report is present in the store.
+    /// Passes over the points in order: probe, claim, simulate, flush,
+    /// release. Points held by live peers are revisited; a pass that
+    /// made no progress sleeps briefly before re-polling.
+    ///
+    /// A deterministic simulation failure (unknown workload, poisoned
+    /// trace) releases the claim and fails this worker loudly — peers
+    /// retry the same point immediately and fail the same way, so no
+    /// worker wedges waiting on a TTL that cannot help.
+    pub fn run(&self, points: &[SweepPoint]) -> Result<ShardOutcome, String> {
+        let keys: Vec<u64> = points.iter().map(|p| p.key()).collect();
+        let mut done = vec![false; points.len()];
+        let mut out = ShardOutcome::default();
+        let poll = (self.ttl / 5).clamp(Duration::from_millis(10), Duration::from_secs(1));
+        loop {
+            let mut progress = false;
+            for (i, point) in points.iter().enumerate() {
+                if done[i] {
+                    continue;
+                }
+                if self.store.load(keys[i]).is_some() {
+                    done[i] = true;
+                    out.present += 1;
+                    progress = true;
+                    continue;
+                }
+                let claim = self
+                    .try_claim(keys[i])
+                    .map_err(|e| format!("{}: claim {:016x}: {e}", self.worker, keys[i]))?;
+                let Some(claim) = claim else {
+                    continue; // held by a live peer; revisit next pass
+                };
+                if let Some(hook) = lock_recover(&self.hook).as_mut() {
+                    hook(keys[i]);
+                }
+                let reclaimed = claim.reclaimed;
+                match super::simulate_point(point) {
+                    Ok(report) => {
+                        let saved = self.store.save(keys[i], &report);
+                        self.release(claim);
+                        saved.map_err(|e| {
+                            format!("{}: flush {:016x}: {e}", self.worker, keys[i])
+                        })?;
+                        done[i] = true;
+                        if reclaimed {
+                            out.reclaimed += 1;
+                        } else {
+                            out.claimed += 1;
+                        }
+                        obs::SHARD_POINTS_SIMULATED.set_max(out.simulated() as u64);
+                        progress = true;
+                    }
+                    Err(e) => {
+                        self.release(claim);
+                        return Err(format!(
+                            "{}: point {} ({:016x}) failed: {e}",
+                            self.worker, point.workload, keys[i]
+                        ));
+                    }
+                }
+            }
+            if done.iter().all(|&d| d) {
+                return Ok(out);
+            }
+            if !progress {
+                std::thread::sleep(poll);
+            }
+        }
+    }
+}
+
+impl Drop for ShardRunner {
+    fn drop(&mut self) {
+        {
+            let mut st = lock_recover(&self.beat.state);
+            st.stop = true;
+            // The held claim (if any) is deliberately left on disk: a
+            // dropped-while-holding runner is a crashed worker, and the
+            // TTL reclaim path is the recovery mechanism under test.
+        }
+        self.beat.cv.notify_all();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(tag: &str) -> DiskStore {
+        let dir = std::env::temp_dir()
+            .join(format!("dlpim-shard-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        DiskStore::at(dir)
+    }
+
+    #[test]
+    fn lease_renders_and_parses_round_trip() {
+        let lease = Lease::new("w-test", 1_234_567);
+        let got = Lease::parse(&lease.render()).expect("parses back");
+        assert_eq!(got, lease);
+        assert_eq!(got.build, store::build_fingerprint());
+        assert!(Lease::parse("").is_none());
+        assert!(Lease::parse("worker = a\npid = x\n").is_none(), "bad pid");
+        assert!(Lease::parse("not a lease at all").is_none());
+    }
+
+    #[test]
+    fn staleness_is_heartbeat_age_against_ttl() {
+        let lease = Lease::new("w", 10_000);
+        let ttl = Duration::from_millis(500);
+        assert!(!lease.is_stale(ttl, 10_400), "within TTL");
+        assert!(lease.is_stale(ttl, 10_501), "past TTL");
+        assert!(!lease.is_stale(ttl, 9_000), "clock skew backwards is fresh");
+    }
+
+    #[test]
+    fn claim_contention_and_release_cycle() {
+        let store = tmp_store("contend");
+        let a = ShardRunner::new(store.clone(), "a", Duration::from_secs(30));
+        let b = ShardRunner::new(store.clone(), "b", Duration::from_secs(30));
+        let c = a.try_claim(7).unwrap().expect("free key is claimable");
+        assert!(!c.reclaimed);
+        assert!(b.try_claim(7).unwrap().is_none(), "live lease is held");
+        a.release(c);
+        assert!(!store.claim_path(7).exists(), "release removes the file");
+        let c2 = b.try_claim(7).unwrap().expect("released key is claimable");
+        assert!(!c2.reclaimed);
+        b.release(c2);
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+
+    #[test]
+    fn stale_lease_is_reclaimed_fresh_lease_is_not() {
+        let store = tmp_store("reclaim");
+        std::fs::create_dir_all(store.dir()).unwrap();
+        // An ancient heartbeat, written as if by a long-dead worker.
+        let dead = Lease::new("w-dead", 1);
+        std::fs::write(store.claim_path(9), dead.render()).unwrap();
+        let b = ShardRunner::new(store.clone(), "b", Duration::from_millis(50));
+        let c = b.try_claim(9).unwrap().expect("stale lease is reclaimable");
+        assert!(c.reclaimed);
+        let cur = Lease::read(&store.claim_path(9)).unwrap();
+        assert_eq!(cur.worker, "b", "reclaim rewrote the lease");
+        b.release(c);
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+
+    #[test]
+    fn heartbeat_keeps_a_slow_worker_live() {
+        let store = tmp_store("heartbeat");
+        let ttl = Duration::from_millis(400);
+        let a = ShardRunner::new(store.clone(), "a", ttl);
+        let c = a.try_claim(3).unwrap().expect("claimable");
+        // Sleep several TTLs: without refreshes the lease would be long
+        // stale, but the heartbeat thread rewrites it every TTL/3.
+        std::thread::sleep(Duration::from_millis(1200));
+        let b = ShardRunner::new(store.clone(), "b", ttl);
+        assert!(b.try_claim(3).unwrap().is_none(), "heartbeat kept the lease fresh");
+        a.release(c);
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+
+    #[test]
+    fn torn_lease_falls_back_to_mtime_and_stays_held() {
+        let store = tmp_store("torn");
+        std::fs::create_dir_all(store.dir()).unwrap();
+        // Unparseable content with a fresh mtime: must read as held.
+        std::fs::write(store.claim_path(5), "garbage").unwrap();
+        assert!(!claim_is_stale(&store.claim_path(5), Duration::from_secs(30)));
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+}

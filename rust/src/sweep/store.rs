@@ -47,6 +47,15 @@
 //! * `repro cache stats|clear|gc` manages the store; `gc` removes stale
 //!   and corrupt entries (plus temp files old enough to only be crash
 //!   leftovers, never a live writer's) while keeping current entries.
+//!
+//! ## Claims
+//!
+//! Sharded sweeps ([`super::shard`]) coordinate through `<key>.claim`
+//! lease files in the same directory. `gc` and `clear` are lease-aware:
+//! they never reap an entry or temp file belonging to a claim whose
+//! heartbeat is within the TTL (the claimant is about to overwrite it),
+//! and they remove stale claim files (a crashed worker's leftovers)
+//! while leaving live ones alone.
 
 use std::io;
 use std::path::{Path, PathBuf};
@@ -84,6 +93,11 @@ pub struct StoreStats {
     pub corrupt: usize,
     /// Leftover temporary files (a crashed writer).
     pub tmp: usize,
+    /// Shard claim files with a live heartbeat (a worker is simulating
+    /// that point right now).
+    pub claims_active: usize,
+    /// Shard claim files past the lease TTL (a crashed worker's).
+    pub claims_stale: usize,
     /// Total bytes across all of the above.
     pub bytes: u64,
 }
@@ -101,11 +115,13 @@ pub struct GcOutcome {
     pub removed_stale: usize,
     pub removed_corrupt: usize,
     pub removed_tmp: usize,
+    /// Stale shard claim files removed (live claims are never touched).
+    pub removed_claims: usize,
 }
 
 impl GcOutcome {
     pub fn removed(&self) -> usize {
-        self.removed_stale + self.removed_corrupt + self.removed_tmp
+        self.removed_stale + self.removed_corrupt + self.removed_tmp + self.removed_claims
     }
 }
 
@@ -131,6 +147,11 @@ impl DiskStore {
     /// Path of the entry for `key`.
     pub fn entry_path(&self, key: u64) -> PathBuf {
         self.dir.join(format!("{key:016x}.json"))
+    }
+
+    /// Path of the shard claim lease for `key` (see [`super::shard`]).
+    pub fn claim_path(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.claim"))
     }
 
     /// Load the report stored under `key`, or `None` on any miss, defect
@@ -181,6 +202,8 @@ impl DiskStore {
                 FileKind::Stale => stats.stale += 1,
                 FileKind::Corrupt => stats.corrupt += 1,
                 FileKind::Tmp => stats.tmp += 1,
+                FileKind::ClaimLive => stats.claims_active += 1,
+                FileKind::ClaimStale => stats.claims_stale += 1,
                 FileKind::Foreign => continue,
             }
             stats.bytes += std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
@@ -188,11 +211,14 @@ impl DiskStore {
         Ok(stats)
     }
 
-    /// Remove every entry and temp file (files this store did not write —
-    /// wrong name shape — are left alone). Returns the number removed.
-    /// Classification is by *name only*: clear deletes entries whatever
-    /// their contents, so there is no reason to read them.
+    /// Remove every entry, temp file and stale claim (files this store
+    /// did not write — wrong name shape — are left alone). Returns the
+    /// number removed. Lease-aware: an entry, temp file or claim
+    /// belonging to a claim with a live heartbeat survives — a worker in
+    /// another process is mid-flight on that point, and `clear` must not
+    /// yank its lease or in-flight publish out from under it.
     pub fn clear(&self) -> io::Result<usize> {
+        let live = self.live_claim_keys()?;
         let mut removed = 0;
         let entries = match std::fs::read_dir(&self.dir) {
             Ok(e) => e,
@@ -204,13 +230,43 @@ impl DiskStore {
             let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
                 continue;
             };
+            let owner = entry_key(name)
+                .or_else(|| claim_key(name))
+                .or_else(|| tmp_key(name));
+            if owner.is_some_and(|k| live.contains(&k)) {
+                continue;
+            }
             let ours = entry_key(name).is_some()
+                || claim_key(name).is_some()
                 || (name.starts_with('.') && name.ends_with(".tmp"));
             if ours && std::fs::remove_file(&path).is_ok() {
                 removed += 1;
             }
         }
         Ok(removed)
+    }
+
+    /// Keys of claim files whose heartbeat is within the shard TTL.
+    fn live_claim_keys(&self) -> io::Result<std::collections::HashSet<u64>> {
+        let ttl = super::shard::default_ttl();
+        let mut live = std::collections::HashSet::new();
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(live),
+            Err(e) => return Err(e),
+        };
+        for entry in entries {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            if let Some(key) = claim_key(name) {
+                if !super::shard::claim_is_stale(&path, ttl) {
+                    live.insert(key);
+                }
+            }
+        }
+        Ok(live)
     }
 
     /// Remove stale and corrupt entries, keep entries this build can
@@ -223,23 +279,43 @@ impl DiskStore {
     }
 
     /// [`Self::gc`] with an explicit temp-file age threshold (tests).
+    /// Lease-aware: files belonging to a live claim — the entry being
+    /// rewritten, a temp file mid-publish, the claim itself — are kept
+    /// whatever their classification; stale claims are removed.
     pub fn gc_with_tmp_age(&self, tmp_older_than: std::time::Duration) -> io::Result<GcOutcome> {
+        let live = self.live_claim_keys()?;
         let mut out = GcOutcome::default();
         for (path, kind) in self.classify_dir()? {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            let claimed = entry_key(name)
+                .or_else(|| tmp_key(name))
+                .is_some_and(|k| live.contains(&k));
             match kind {
                 FileKind::Current => out.kept += 1,
-                FileKind::Foreign => {}
-                FileKind::Stale => {
+                FileKind::Foreign | FileKind::ClaimLive => {}
+                FileKind::ClaimStale => {
                     if std::fs::remove_file(&path).is_ok() {
+                        out.removed_claims += 1;
+                    }
+                }
+                FileKind::Stale => {
+                    if claimed {
+                        out.kept += 1;
+                    } else if std::fs::remove_file(&path).is_ok() {
                         out.removed_stale += 1;
                     }
                 }
                 FileKind::Corrupt => {
-                    if std::fs::remove_file(&path).is_ok() {
+                    if claimed {
+                        out.kept += 1;
+                    } else if std::fs::remove_file(&path).is_ok() {
                         out.removed_corrupt += 1;
                     }
                 }
                 FileKind::Tmp => {
+                    if claimed {
+                        continue;
+                    }
                     let age = std::fs::metadata(&path)
                         .and_then(|m| m.modified())
                         .ok()
@@ -268,6 +344,12 @@ impl DiskStore {
             };
             let kind = if name.starts_with('.') && name.ends_with(".tmp") {
                 FileKind::Tmp
+            } else if claim_key(name).is_some() {
+                if super::shard::claim_is_stale(&path, super::shard::default_ttl()) {
+                    FileKind::ClaimStale
+                } else {
+                    FileKind::ClaimLive
+                }
             } else if let Some(key) = entry_key(name) {
                 match std::fs::read_to_string(&path) {
                     Err(_) => FileKind::Corrupt,
@@ -292,6 +374,8 @@ enum FileKind {
     Stale,
     Corrupt,
     Tmp,
+    ClaimLive,
+    ClaimStale,
     Foreign,
 }
 
@@ -328,6 +412,24 @@ fn entry_key(name: &str) -> Option<u64> {
         return None;
     }
     u64::from_str_radix(stem, 16).ok()
+}
+
+/// `<16 hex>.claim` → the key of a shard claim lease.
+fn claim_key(name: &str) -> Option<u64> {
+    let stem = name.strip_suffix(".claim")?;
+    if stem.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(stem, 16).ok()
+}
+
+/// Map a temp-file name (`.{16 hex}.json.{pid}.{seq}.tmp`) back to the
+/// entry key it was publishing, or `None` for non-entry temps (claim
+/// temps, trace sidecars).
+fn tmp_key(name: &str) -> Option<u64> {
+    let rest = name.strip_prefix('.')?.strip_suffix(".tmp")?;
+    let dot = rest.find(".json")?;
+    entry_key(&rest[..dot + ".json".len()])
 }
 
 // ---------------------------------------------------------------------
@@ -1070,5 +1172,71 @@ mod tests {
         assert_eq!(entry_key("7.json"), None, "short stems are foreign");
         assert_eq!(entry_key("fig09.json"), None);
         assert_eq!(entry_key("0000000000000007.txt"), None);
+    }
+
+    #[test]
+    fn claim_and_tmp_keys_parse_store_names_only() {
+        assert_eq!(claim_key("0000000000000007.claim"), Some(7));
+        assert_eq!(claim_key("7.claim"), None);
+        assert_eq!(claim_key("0000000000000007.json"), None);
+        assert_eq!(tmp_key(".0000000000000007.json.99.0.tmp"), Some(7));
+        assert_eq!(tmp_key(".0000000000000007.claim.99.0.tmp"), None, "claim temps carry no entry");
+        assert_eq!(tmp_key(".notes.json.99.0.tmp"), None);
+        assert_eq!(tmp_key("0000000000000007.json"), None);
+    }
+
+    #[test]
+    fn gc_and_clear_respect_live_claims() {
+        use super::super::shard::Lease;
+        let now_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_millis() as u64;
+        let store = tmp_store("claims");
+        let report = thorny_report();
+        // Key 1: current entry under a live claim. Key 2: *stale* entry
+        // under a live claim (its worker is about to rewrite it). Key 3:
+        // only a stale claim (crashed worker). Key 4: live claim plus an
+        // in-flight publish temp file. Key 5: plain unclaimed entry.
+        store.save(1, &report).unwrap();
+        let stale = encode(2, &report).replacen(build_fingerprint(), "ffffffffffffffff", 1);
+        std::fs::write(store.entry_path(2), stale).unwrap();
+        store.save(5, &report).unwrap();
+        for key in [1u64, 2, 4] {
+            std::fs::write(store.claim_path(key), Lease::new("w-live", now_ms).render())
+                .unwrap();
+        }
+        std::fs::write(store.claim_path(3), Lease::new("w-dead", 1).render()).unwrap();
+        let tmp4 = store.dir().join(".0000000000000004.json.99.0.tmp");
+        std::fs::write(&tmp4, "x").unwrap();
+
+        let stats = store.scan().unwrap();
+        assert_eq!(
+            (stats.current, stats.stale, stats.tmp, stats.claims_active, stats.claims_stale),
+            (2, 1, 1, 3, 1),
+            "{stats:?}"
+        );
+
+        // Even with the temp-age threshold collapsed, gc must keep the
+        // stale entry and the temp file under live claims, and must keep
+        // the live claims themselves — only the dead worker's claim goes.
+        let gc = store.gc_with_tmp_age(std::time::Duration::ZERO).unwrap();
+        assert_eq!(
+            (gc.kept, gc.removed_stale, gc.removed_tmp, gc.removed_claims),
+            (3, 0, 0, 1),
+            "{gc:?}"
+        );
+        assert!(store.entry_path(2).exists(), "claimed stale entry survives gc");
+        assert!(tmp4.exists(), "claimed tmp survives gc");
+        assert!(store.claim_path(1).exists() && !store.claim_path(3).exists());
+
+        // Clear removes only what no live claim owns: the unclaimed
+        // entry 5. Everything mid-flight survives.
+        let removed = store.clear().unwrap();
+        assert_eq!(removed, 1, "only the unclaimed entry");
+        assert!(store.entry_path(1).exists() && store.entry_path(2).exists());
+        assert!(!store.entry_path(5).exists());
+        assert!(tmp4.exists() && store.claim_path(4).exists());
+        std::fs::remove_dir_all(store.dir()).unwrap();
     }
 }

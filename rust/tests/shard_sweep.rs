@@ -1,0 +1,131 @@
+//! Sharded sweep execution: cross-worker integration pins.
+//!
+//! The claims of `sweep::shard` that matter to users are (1) a sweep's
+//! artifact bytes are identical at any worker count, (2) that holds even
+//! when a worker dies mid-claim — the survivors take over after the
+//! lease TTL — and (3) a crashed worker's claim is recovered by the TTL
+//! path, not by unwind cleanup. These tests drive the real
+//! `run_spec_sharded` pipeline over real stores; the claim-file
+//! mechanics have unit tests in `sweep::shard` itself.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use dlpim::exp::{self, render_json};
+use dlpim::sweep::shard::ShardRunner;
+use dlpim::sweep::store::DiskStore;
+
+/// A 4-point grid (2 workloads x 2 policies), small enough to simulate
+/// in milliseconds but wide enough that workers actually contend.
+fn spec() -> exp::ExperimentSpec {
+    exp::tomlspec::from_text(
+        "name = shard-sweep\n\
+         workloads = STRAdd,STRCpy\n\
+         policies = never,always\n\
+         warmup = 100\n\
+         measure = 800\n\
+         runs = 1\n",
+    )
+    .unwrap()
+}
+
+fn tmp_store(tag: &str) -> DiskStore {
+    let dir = std::env::temp_dir()
+        .join(format!("dlpim-shard-sweep-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    DiskStore::at(dir)
+}
+
+fn claim_files(store: &DiskStore) -> usize {
+    std::fs::read_dir(store.dir())
+        .map(|entries| {
+            entries
+                .filter_map(|e| e.ok())
+                .filter(|e| e.file_name().to_string_lossy().ends_with(".claim"))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+#[test]
+fn sharded_artifact_matches_plain_run_byte_for_byte() {
+    let spec = spec();
+    let plain = exp::run_spec(&spec).unwrap();
+    let store = tmp_store("bytes");
+    let runner = ShardRunner::new(store.clone(), "w1", Duration::from_secs(30));
+    let (sharded, outcome) = exp::run_spec_sharded(&spec, &runner).unwrap();
+    assert_eq!(outcome.simulated(), 4, "a fresh store simulates every point: {outcome:?}");
+    assert_eq!(outcome.present, 0);
+    assert_eq!(
+        render_json(&spec, &plain).render(),
+        render_json(&spec, &sharded).render(),
+        "artifact bytes must not depend on the execution path"
+    );
+    std::fs::remove_dir_all(store.dir()).unwrap();
+}
+
+#[test]
+fn three_workers_split_one_sweep_and_all_render_identically() {
+    let spec = spec();
+    let expected = render_json(&spec, &exp::run_spec(&spec).unwrap()).render();
+    let store = tmp_store("three");
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..3)
+            .map(|i| {
+                let store = store.clone();
+                let spec = &spec;
+                let expected = &expected;
+                s.spawn(move || {
+                    let runner =
+                        ShardRunner::new(store, format!("w{i}"), Duration::from_secs(30));
+                    let (run, outcome) = exp::run_spec_sharded(spec, &runner).unwrap();
+                    // Every worker accounts for the whole grid, however
+                    // the points were split.
+                    assert_eq!(outcome.simulated() + outcome.present, 4, "{outcome:?}");
+                    // ... and every worker — not just the last — renders
+                    // the same bytes as a plain single-process run.
+                    assert_eq!(render_json(spec, &run).render(), *expected, "worker {i}");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    assert_eq!(claim_files(&store), 0, "all claims released");
+    std::fs::remove_dir_all(store.dir()).unwrap();
+}
+
+#[test]
+fn a_dead_workers_claim_is_reclaimed_after_the_ttl() {
+    let spec = spec();
+    let store = tmp_store("crash");
+    let ttl = Duration::from_millis(150);
+
+    // Worker A dies (injected panic) right after acquiring its first
+    // claim: the claim file must stay behind — recovery is the TTL
+    // reclaim path, not unwind cleanup.
+    let mut a = ShardRunner::new(store.clone(), "a", ttl);
+    a.on_claim(|key| panic!("injected crash holding {key:016x}"));
+    let crashed = catch_unwind(AssertUnwindSafe(|| exp::run_spec_sharded(&spec, &a)));
+    assert!(crashed.is_err(), "the injected panic must escape the worker");
+    drop(a); // stops A's heartbeat; the lease now ages toward the TTL
+    assert_eq!(claim_files(&store), 1, "the crashed worker leaves its claim on disk");
+
+    // Worker B completes the sweep: it spins on the held point until the
+    // lease goes stale, reclaims it, and finishes the grid.
+    let b = ShardRunner::new(store.clone(), "b", ttl);
+    let (run, outcome) = exp::run_spec_sharded(&spec, &b).unwrap();
+    assert!(outcome.reclaimed >= 1, "the abandoned point was taken over: {outcome:?}");
+    assert_eq!(outcome.simulated() + outcome.present, 4, "{outcome:?}");
+    assert_eq!(claim_files(&store), 0, "the reclaimed lease was released");
+
+    // The crash changed nothing about the artifact.
+    let plain = exp::run_spec(&spec).unwrap();
+    assert_eq!(
+        render_json(&spec, &run).render(),
+        render_json(&spec, &plain).render(),
+        "artifact bytes survive a mid-sweep worker crash"
+    );
+    std::fs::remove_dir_all(store.dir()).unwrap();
+}
