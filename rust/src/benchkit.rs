@@ -31,10 +31,10 @@ pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
         f();
         samples.push(t0.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     let median = samples[samples.len() / 2];
     let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
-    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    devs.sort_by(f64::total_cmp);
     Timing {
         median_ns: median,
         mad_ns: devs[devs.len() / 2],
@@ -57,6 +57,7 @@ pub fn fmt_ns(ns: f64) -> String {
 }
 
 /// Print one benchmark row.
+#[allow(clippy::print_stdout)] // bench output is this harness's product
 pub fn report(target: &str, name: &str, t: &Timing) {
     println!(
         "bench | {:<28} | {:<20} | median {} | mad {} | min {} | n {}",
@@ -70,6 +71,7 @@ pub fn report(target: &str, name: &str, t: &Timing) {
 }
 
 /// Print a figure-table row (figure benches share this shape).
+#[allow(clippy::print_stdout)] // bench output is this harness's product
 pub fn row(figure: &str, label: &str, cols: &[(&str, f64)]) {
     let mut line = format!("{figure} | {label:<12}");
     for (k, v) in cols {

@@ -29,7 +29,9 @@ impl Cli {
                     return Err("bare `--` not supported".into());
                 }
                 let value = match it.peek() {
-                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    Some(v) if !v.starts_with("--") => {
+                        it.next().expect("peeked value exists").clone()
+                    }
                     _ => "true".to_string(),
                 };
                 cli.flags.insert(key.to_string(), value);
@@ -145,6 +147,9 @@ pub mod flags {
     /// checked-in baseline at `--threshold` percent (default 10),
     /// `--promote` rewrites the checked-in baseline with fresh numbers.
     pub const BENCH: &[&str] = &["json", "out", "check", "threshold", "promote"];
+    /// `repro lint`: `--json` emits the findings document, `--fix-allow`
+    /// inserts placeholder `lint:allow` annotations at violation sites.
+    pub const LINT: &[&str] = &["json", "fix-allow"];
     pub const NONE: &[&str] = &[];
 }
 
@@ -159,6 +164,7 @@ pub fn known_flags(command: &str, sub: Option<&str>) -> Option<&'static [&'stati
         ("all-figures", _) => flags::ALL_FIGURES,
         ("workloads" | "artifacts", _) => flags::NONE,
         ("bench", _) => flags::BENCH,
+        ("lint", _) => flags::LINT,
         ("cache", Some("stats" | "clear" | "gc") | None) => flags::CACHE,
         ("trace", Some("record")) => flags::TRACE_RECORD,
         ("trace", Some("replay")) => flags::TRACE_REPLAY,
@@ -267,6 +273,17 @@ COMMANDS:
                   Env REPRO_BENCH_SKIP=1 skips entirely (noisy runners;
                   --promote refuses under it)
     artifacts     List figure JSON artifacts and the AOT artifacts (PJRT)
+    lint          Run the determinism & invariant static-analysis pass over
+                  rust/src (rules D1–D5; see docs/LINTING.md). Exits non-zero
+                  on any unallowed finding, one line per finding sorted by
+                  (file, line):
+                    lint [PATH]      lint the repo at PATH (default: walk up
+                                     from the current directory)
+                    lint --json      emit the full findings document (incl.
+                                     justified allows) as JSON on stdout
+                    lint --fix-allow insert placeholder `lint:allow` comments
+                                     at violation sites (stays red until the
+                                     TODO justifications are written)
     help          This text
 
 SCALE FLAGS (also env REPRO_WARMUP / REPRO_MEASURE / REPRO_RUNS / REPRO_EPOCH):
@@ -385,7 +402,7 @@ mod tests {
     fn every_command_has_a_flag_list() {
         for cmd in [
             "run", "figure", "all-figures", "sweep", "workloads", "config", "artifacts",
-            "cache", "bench",
+            "cache", "bench", "lint",
         ]
         {
             assert!(known_flags(cmd, None).is_some(), "{cmd}");

@@ -1,0 +1,123 @@
+//! The one place `REPRO_*` environment variables are read.
+//!
+//! Lint rule D2 (see `rust/docs/LINTING.md`) bans `std::env::var` in the
+//! simulation and sweep layers: an env read buried in a hot path is an
+//! undocumented input that can silently change results between runs.
+//! Every knob gets a named reader here instead — callers receive a typed
+//! `Option` and decide their own default, and the full inventory of
+//! environment inputs is this file.
+//!
+//! (`REPRO_LOG` is read by `obs::log` and `REPRO_BENCH_SKIP` by the
+//! bench harness — both layers are on the D2 allowlist because they
+//! cannot affect simulation results by construction.)
+//!
+//! The readers are thin wrappers over pure `parse_*` helpers; the tests
+//! exercise the helpers, because mutating process-global environment
+//! state from parallel unit tests is exactly the kind of hazard this
+//! module exists to fence off.
+
+use std::path::PathBuf;
+
+use crate::config::Topology;
+
+fn var(key: &str) -> Option<String> {
+    std::env::var(key).ok()
+}
+
+/// `REPRO_THREADS`: worker-thread count for sweeps and the run command's
+/// kernel fan-out. `Some(n)` only for a parseable value >= 1.
+pub fn threads() -> Option<usize> {
+    parse_threads(&var("REPRO_THREADS")?)
+}
+
+fn parse_threads(v: &str) -> Option<usize> {
+    v.parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+/// `REPRO_CACHE_DIR`: where the persistent report cache lives.
+pub fn cache_dir() -> Option<PathBuf> {
+    var("REPRO_CACHE_DIR").map(PathBuf::from)
+}
+
+/// `REPRO_NO_DISK_CACHE`: `1`/`true` disables the persistent report cache.
+pub fn no_disk_cache() -> bool {
+    var("REPRO_NO_DISK_CACHE").as_deref().is_some_and(parse_switch)
+}
+
+fn parse_switch(v: &str) -> bool {
+    v == "1" || v.eq_ignore_ascii_case("true")
+}
+
+/// `REPRO_ARTIFACT_DIR`: where figure JSON artifacts land.
+pub fn artifact_dir() -> Option<PathBuf> {
+    var("REPRO_ARTIFACT_DIR").map(PathBuf::from)
+}
+
+/// `REPRO_WARMUP`: warmup request count override.
+pub fn warmup_requests() -> Option<u64> {
+    var("REPRO_WARMUP")?.parse().ok()
+}
+
+/// `REPRO_MEASURE`: measured request count override.
+pub fn measure_requests() -> Option<u64> {
+    var("REPRO_MEASURE")?.parse().ok()
+}
+
+/// `REPRO_RUNS`: per-point run count override.
+pub fn runs() -> Option<u64> {
+    var("REPRO_RUNS")?.parse().ok()
+}
+
+/// `REPRO_EPOCH`: adaptive-policy epoch length override, in cycles.
+pub fn epoch_cycles() -> Option<u64> {
+    var("REPRO_EPOCH")?.parse().ok()
+}
+
+/// `REPRO_TOPOLOGY`: force one interconnect across the whole suite.
+/// Panics on an unparseable value — a typo'd topology must not silently
+/// run the preset default (same contract as the old inline read).
+pub fn topology() -> Option<Topology> {
+    var("REPRO_TOPOLOGY").map(|t| parse_topology(&t))
+}
+
+fn parse_topology(t: &str) -> Topology {
+    Topology::parse(t)
+        .unwrap_or_else(|| panic!("unknown REPRO_TOPOLOGY {t:?} (mesh|crossbar|ring)"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_counts_reject_zero_and_garbage() {
+        assert_eq!(parse_threads("3"), Some(3));
+        assert_eq!(parse_threads("1"), Some(1));
+        assert_eq!(parse_threads("0"), None);
+        assert_eq!(parse_threads("lots"), None);
+        assert_eq!(parse_threads(""), None);
+    }
+
+    #[test]
+    fn switch_accepts_1_and_true_only() {
+        assert!(parse_switch("1"));
+        assert!(parse_switch("true"));
+        assert!(parse_switch("TRUE"));
+        assert!(!parse_switch("0"));
+        assert!(!parse_switch("yes"));
+        assert!(!parse_switch(""));
+    }
+
+    #[test]
+    fn topology_parses_the_three_interconnects() {
+        assert_eq!(parse_topology("mesh"), Topology::Mesh);
+        assert_eq!(parse_topology("crossbar"), Topology::Crossbar);
+        assert_eq!(parse_topology("ring"), Topology::Ring);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown REPRO_TOPOLOGY")]
+    fn topology_rejects_typos_loudly() {
+        parse_topology("mseh");
+    }
+}

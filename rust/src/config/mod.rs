@@ -1,6 +1,7 @@
 //! System configuration: memory-technology presets (Table I / Table II of
 //! the paper) plus every tunable the evaluation sweeps over.
 
+pub mod env;
 pub mod parse;
 pub mod presets;
 

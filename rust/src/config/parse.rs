@@ -88,7 +88,7 @@ fn parse_num<T: std::str::FromStr>(key: &str, v: &str) -> Result<T, String> {
 /// Apply every recognized key; unknown keys are an error (catches typos).
 pub fn apply(cfg: &mut SimConfig, kv: &KvFile) -> Result<(), String> {
     for key in kv.keys().collect::<Vec<_>>() {
-        let v = kv.get(key).unwrap();
+        let v = kv.get(key).expect("iterating the file's own keys");
         match key {
             "preset" => {} // handled by caller
             "mem" => {

@@ -53,7 +53,7 @@ impl PimCore {
         self.misses += 1;
         self.window.push_back(done);
         if self.window.len() > self.mlp {
-            let oldest = self.window.pop_front().unwrap();
+            let oldest = self.window.pop_front().expect("window non-empty: len > mlp >= 0");
             self.time = self.time.max(oldest);
         }
     }

@@ -133,12 +133,7 @@ impl Kernel {
     /// across points, and nesting a per-run fan-out under a point
     /// fan-out would oversubscribe the machine.
     pub fn from_env() -> Self {
-        let threads = std::env::var("REPRO_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&n| n >= 1)
-            .unwrap_or(1);
-        Kernel::new(threads)
+        Kernel::new(crate::config::env::threads().unwrap_or(1))
     }
 
     /// The configured thread count.
@@ -238,6 +233,10 @@ impl Kernel {
             std::thread::scope(|scope| {
                 for _ in 0..run_workers {
                     scope.spawn(|| loop {
+                        // lint:allow(D3) -- run-claim ticket: which thread
+                        // claims which run is irrelevant, because run `r` is
+                        // seeded from `r` alone and lands in `slots[r]` —
+                        // results are merged in run order regardless.
                         let r = next.fetch_add(1, Ordering::Relaxed);
                         if r >= runs_n {
                             break;
@@ -245,13 +244,17 @@ impl Kernel {
                         let mut w = build();
                         w.reset(cfg.seed.wrapping_add(r as u64));
                         let rep = per_run.run_once_observed(cfg, w.as_mut(), |a, q| obs(a, q));
-                        *slots[r].lock().unwrap() = Some(rep);
+                        *slots[r].lock().expect("run slot mutex poisoned") = Some(rep);
                     });
                 }
             });
             slots
                 .into_iter()
-                .map(|m| m.into_inner().unwrap().expect("every run produced a report"))
+                .map(|m| {
+                    m.into_inner()
+                        .expect("run slot mutex poisoned")
+                        .expect("every run produced a report")
+                })
                 .collect()
         };
 

@@ -27,24 +27,21 @@ use crate::workloads::catalog;
 /// `REPRO_TOPOLOGY` to force one interconnect across the whole suite
 /// (the CI smoke job's topology axis).
 pub fn scaled(mut cfg: SimConfig) -> SimConfig {
-    fn env_u64(key: &str) -> Option<u64> {
-        std::env::var(key).ok()?.parse().ok()
-    }
-    if let Some(v) = env_u64("REPRO_WARMUP") {
+    use crate::config::env;
+    if let Some(v) = env::warmup_requests() {
         cfg.warmup_requests = v;
     }
-    if let Some(v) = env_u64("REPRO_MEASURE") {
+    if let Some(v) = env::measure_requests() {
         cfg.measure_requests = v;
     }
-    if let Some(v) = env_u64("REPRO_RUNS") {
+    if let Some(v) = env::runs() {
         cfg.runs = v as u32;
     }
-    if let Some(v) = env_u64("REPRO_EPOCH") {
+    if let Some(v) = env::epoch_cycles() {
         cfg.epoch_cycles = v;
     }
-    if let Ok(t) = std::env::var("REPRO_TOPOLOGY") {
-        cfg.topology = Topology::parse(&t)
-            .unwrap_or_else(|| panic!("unknown REPRO_TOPOLOGY {t:?} (mesh|crossbar|ring)"));
+    if let Some(t) = env::topology() {
+        cfg.topology = t;
     }
     cfg
 }
@@ -498,7 +495,7 @@ impl ExperimentSpec {
 
         // Duplicate-free across the whole expansion (e.g. `baseline`
         // plus an overlapping default-knob `never` axis point).
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for p in &out {
             if !seen.insert(crate::config::presets::render(&p.cfg)) {
                 return Err(format!(

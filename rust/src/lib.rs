@@ -41,6 +41,15 @@
 //! }
 //! ```
 
+// Clippy policy (see rust/docs/LINTING.md): CI runs `-D warnings`, which
+// promotes these to hard errors there while plain `cargo build` stays
+// usable mid-refactor. `unwrap_used` is scoped to non-test code — tests
+// unwrap freely; library code must `expect` with a reason or propagate.
+#![warn(clippy::dbg_macro)]
+#![warn(clippy::print_stdout)]
+#![warn(clippy::print_stderr)]
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 pub mod benchkit;
 pub mod cli;
 pub mod config;
@@ -48,6 +57,7 @@ pub mod coordinator;
 pub mod error;
 pub mod exp;
 pub mod figures;
+pub mod lint;
 pub mod memsys;
 pub mod obs;
 pub mod perf;

@@ -1,0 +1,326 @@
+//! `repro lint`: a determinism & invariant static-analysis pass.
+//!
+//! The bit-identity guarantees this reproduction makes — byte-identical
+//! figure artifacts at any thread count, with telemetry on or off, at any
+//! shard-worker count — are pinned by equivalence tests, but tests only
+//! catch the hazards someone thought to storm. This module mechanically
+//! enforces the *preconditions* those tests rely on, at the source level:
+//!
+//! * **D1** — no hash-ordered collections in determinism-critical modules;
+//! * **D2** — no wall-clock/randomness/env reads outside the harness
+//!   allowlist;
+//! * **D3** — atomics in determinism-critical modules use `SeqCst` or a
+//!   justified allow;
+//! * **D4** — no floating point in report-accumulation paths;
+//! * **D5** — the ARCHITECTURE.md invariant tables and `rust/tests/`
+//!   agree (every pinned test exists; every test is documented);
+//! * **A0** — every `// lint:allow(<rule>) -- <justification>` escape
+//!   hatch names real rules and carries a real justification.
+//!
+//! Zero dependencies, matching the crate convention: the scanner in
+//! [`scan`] is a hand-rolled lexer, rules in [`rules`] are table rows,
+//! and `--json` output reuses [`crate::sweep::json::JsonValue`]. See
+//! `rust/docs/LINTING.md` for the rule catalogue and rationale.
+
+pub mod rules;
+pub mod scan;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{bail, Context, Result};
+use crate::sweep::json::JsonValue;
+
+/// One finding. `allowed` carries the justification when the finding is
+/// shielded by a `lint:allow`; such findings still appear in `--json`
+/// output (the justification is part of the audit trail) but do not fail
+/// the run.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Repo-relative path with `/` separators.
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub message: String,
+    pub allowed: Option<String>,
+}
+
+/// Everything the rules need to see, loaded once.
+pub struct Repo {
+    pub root: PathBuf,
+    /// `rust/src/**/*.rs`, sorted by path.
+    pub sources: Vec<scan::SourceFile>,
+    /// `rust/tests/*.rs` (top level only — fixture trees below are data,
+    /// not targets), sorted by path.
+    pub tests: Vec<scan::SourceFile>,
+    /// `(rel_path, text)` for `rust/README.md`, `rust/docs/*.md` and
+    /// `CHANGES.md` — the corpus D5 searches for test mentions.
+    pub docs: Vec<(String, String)>,
+    /// `rust/docs/ARCHITECTURE.md`, when present.
+    pub architecture: Option<(String, String)>,
+}
+
+impl Repo {
+    pub fn load(root: &Path) -> Result<Repo> {
+        let src_dir = root.join("rust/src");
+        if !src_dir.join("lib.rs").is_file() {
+            bail!(
+                "{} does not look like the repo root (no rust/src/lib.rs)",
+                root.display()
+            );
+        }
+        let mut src_paths = Vec::new();
+        collect_rs(&src_dir, &mut src_paths)?;
+        src_paths.sort();
+        let sources = scan_all(root, &src_paths)?;
+
+        let mut test_paths: Vec<PathBuf> = match fs::read_dir(root.join("rust/tests")) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.is_file() && p.extension().is_some_and(|x| x == "rs"))
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        test_paths.sort();
+        let tests = scan_all(root, &test_paths)?;
+
+        let mut docs = Vec::new();
+        for p in [root.join("rust/README.md"), root.join("CHANGES.md")] {
+            if let Ok(text) = fs::read_to_string(&p) {
+                docs.push((rel(root, &p), text));
+            }
+        }
+        let mut doc_paths: Vec<PathBuf> = match fs::read_dir(root.join("rust/docs")) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.is_file() && p.extension().is_some_and(|x| x == "md"))
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        doc_paths.sort();
+        for p in doc_paths {
+            let text = fs::read_to_string(&p)
+                .with_context(|| format!("read {}", p.display()))?;
+            docs.push((rel(root, &p), text));
+        }
+        let architecture = docs
+            .iter()
+            .find(|(p, _)| p.ends_with("docs/ARCHITECTURE.md"))
+            .cloned();
+
+        Ok(Repo { root: root.to_path_buf(), sources, tests, docs, architecture })
+    }
+}
+
+fn scan_all(root: &Path, paths: &[PathBuf]) -> Result<Vec<scan::SourceFile>> {
+    paths
+        .iter()
+        .map(|p| {
+            let text = fs::read_to_string(p)
+                .with_context(|| format!("read {}", p.display()))?;
+            Ok(scan::scan_source(&rel(root, p), &text))
+        })
+        .collect()
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in
+        fs::read_dir(dir).with_context(|| format!("read dir {}", dir.display()))?
+    {
+        let path = entry.with_context(|| format!("read dir {}", dir.display()))?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// The lint result: all findings (allowed and not), sorted by
+/// (file, line, rule, message) so output is diff-stable.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// Number of files scanned (sources + tests).
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn violations(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.allowed.is_none())
+    }
+
+    pub fn allowed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.allowed.is_some())
+    }
+
+    /// One line per violation, `file:line: RULE message`, plus a summary
+    /// tail. Allowed findings are not listed (see `--json` for those).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in self.violations() {
+            out.push_str(&format!("{}:{}: {} {}\n", f.file, f.line, f.rule, f.message));
+        }
+        let v = self.violations().count();
+        let a = self.allowed().count();
+        if v == 0 {
+            out.push_str(&format!(
+                "lint: clean — {} files scanned, {a} allowed exception(s)\n",
+                self.files_scanned
+            ));
+        } else {
+            out.push_str(&format!(
+                "lint: {v} violation(s), {a} allowed exception(s), {} files scanned\n",
+                self.files_scanned
+            ));
+        }
+        out
+    }
+
+    /// The full report (violations *and* justified allows) as a JSON
+    /// document via the crate's hand-rolled encoder.
+    pub fn to_json(&self) -> JsonValue {
+        let rules: Vec<JsonValue> = rules::RULES
+            .iter()
+            .map(|r| {
+                JsonValue::obj(vec![
+                    ("id", JsonValue::str(r.id)),
+                    ("title", JsonValue::str(r.title)),
+                ])
+            })
+            .chain([
+                JsonValue::obj(vec![
+                    ("id", JsonValue::str("D5")),
+                    (
+                        "title",
+                        JsonValue::str(
+                            "ARCHITECTURE.md invariant tables and rust/tests agree",
+                        ),
+                    ),
+                ]),
+                JsonValue::obj(vec![
+                    ("id", JsonValue::str(rules::A0_ID)),
+                    ("title", JsonValue::str("lint:allow annotations are well-formed")),
+                ]),
+            ])
+            .collect();
+        let findings: Vec<JsonValue> = self
+            .findings
+            .iter()
+            .map(|f| {
+                JsonValue::obj(vec![
+                    ("rule", JsonValue::str(f.rule)),
+                    ("file", JsonValue::str(f.file.as_str())),
+                    ("line", JsonValue::Num(f.line as f64)),
+                    ("message", JsonValue::str(f.message.as_str())),
+                    ("allowed", JsonValue::Bool(f.allowed.is_some())),
+                    (
+                        "justification",
+                        match &f.allowed {
+                            Some(j) => JsonValue::str(j.as_str()),
+                            None => JsonValue::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        JsonValue::obj(vec![
+            ("schema", JsonValue::str("repro-lint-v1")),
+            ("rules", JsonValue::Arr(rules)),
+            ("files_scanned", JsonValue::Num(self.files_scanned as f64)),
+            ("violations", JsonValue::Num(self.violations().count() as f64)),
+            ("allowed", JsonValue::Num(self.allowed().count() as f64)),
+            ("findings", JsonValue::Arr(findings)),
+        ])
+    }
+}
+
+/// Walk up from `start` to the repo root (the directory containing
+/// `rust/src/lib.rs`).
+pub fn find_root(start: &Path) -> Result<PathBuf> {
+    let mut dir = start.to_path_buf();
+    loop {
+        if dir.join("rust/src/lib.rs").is_file() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            bail!(
+                "no repo root (rust/src/lib.rs) at or above {}",
+                start.display()
+            );
+        }
+    }
+}
+
+/// Run every rule over the repo at `root`.
+pub fn run(root: &Path) -> Result<Report> {
+    let repo = Repo::load(root)?;
+    let mut findings = Vec::new();
+    for file in &repo.sources {
+        findings.extend(rules::check_file(file));
+    }
+    for file in &repo.tests {
+        // Integration tests are all-test code, so the line rules don't
+        // apply — but their allow annotations (for D5) must be valid.
+        findings.extend(rules::check_allows(file));
+    }
+    findings.extend(rules::check_cross_file(&repo));
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
+    });
+    Ok(Report { findings, files_scanned: repo.sources.len() + repo.tests.len() })
+}
+
+/// `--fix-allow`: insert a placeholder
+/// `// lint:allow(<rule>) -- TODO: justify this exception` above every
+/// unallowed D1–D4 violation (and at the top of undocumented test files
+/// for D5). The placeholder keeps the tree red via A0 until a human
+/// replaces `TODO…` with the actual reason. Returns the number of files
+/// rewritten.
+pub fn fix_allow(root: &Path, report: &Report) -> Result<usize> {
+    use std::collections::BTreeMap;
+    // file -> [(line, rule)], deduped, applied bottom-up so insertions
+    // don't shift later targets.
+    let mut by_file: BTreeMap<&str, Vec<(usize, &str)>> = BTreeMap::new();
+    for f in report.violations() {
+        if f.rule == rules::A0_ID || !f.file.ends_with(".rs") {
+            continue; // A0 means a human must edit; markdown rows too
+        }
+        let line = if f.rule == "D5" { 1 } else { f.line };
+        let v = by_file.entry(f.file.as_str()).or_default();
+        if !v.contains(&(line, f.rule)) {
+            v.push((line, f.rule));
+        }
+    }
+    for (file, targets) in &mut by_file {
+        let path = root.join(file);
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let mut lines: Vec<String> = text.split('\n').map(String::from).collect();
+        targets.sort();
+        for &(line, rule) in targets.iter().rev() {
+            let at = line.saturating_sub(1).min(lines.len());
+            let indent: String = lines
+                .get(at)
+                .map(|l| l.chars().take_while(|c| c.is_whitespace()).collect())
+                .unwrap_or_default();
+            lines.insert(
+                at,
+                format!("{indent}// lint:allow({rule}) -- TODO: justify this exception"),
+            );
+        }
+        fs::write(&path, lines.join("\n"))
+            .with_context(|| format!("write {}", path.display()))?;
+    }
+    Ok(by_file.len())
+}

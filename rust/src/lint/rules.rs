@@ -1,0 +1,515 @@
+//! Lint rules. Line rules (D1–D4) are rows in the [`RULES`] table — adding
+//! a rule means adding a row, mirroring the `exp` registry design. D5 is a
+//! cross-file check over `rust/docs/ARCHITECTURE.md` and `rust/tests/`;
+//! A0 validates the `lint:allow` annotations themselves.
+//!
+//! Rule rationale lives in `rust/docs/LINTING.md`; each rule's `title`
+//! here is the one-line version of it.
+
+use crate::lint::scan::SourceFile;
+use crate::lint::{Finding, Repo};
+
+/// Modules whose execution must be a pure function of (config, seed):
+/// they feed the bit-identical artifact guarantee pinned by the golden,
+/// kernel-equivalence and shard-sweep tests.
+pub const DETERMINISM_CRITICAL: &[&str] = &[
+    "sim",
+    "memsys",
+    "coordinator",
+    "subscription",
+    "policy",
+    "exp",
+    "sweep",
+    "trace",
+    "stats",
+];
+
+/// Modules allowed to read wall clocks, randomness and the environment:
+/// the measurement harnesses (`perf`, `benchkit`), passive telemetry
+/// (`obs`), the process boundary (`cli`, `main`, `config` — all `REPRO_*`
+/// reads live in `config::env`), and shard identity (`sweep::shard`
+/// derives worker nonces from time by design).
+pub const D2_ALLOWED: &[&str] =
+    &["perf", "obs", "cli", "main", "config", "benchkit", "sweep::shard"];
+
+/// Modules that accumulate per-run statistics into reports. Floating
+/// point here would make warm-cache artifacts drift; floats belong in the
+/// render layer (`exp/output.rs`, `figures.rs`) or the declared derived-
+/// metric read-outs in [`D4_EXEMPT_FILES`].
+pub const D4_MODULES: &[&str] = &["stats", "coordinator", "subscription", "exp", "sweep"];
+
+/// Read-out files exempt from D4: they *derive* presentation ratios from
+/// already-frozen integer counters (never accumulated back into state),
+/// or render/parse JSON numbers generically.
+pub const D4_EXEMPT_FILES: &[&str] = &[
+    "stats/breakdown.rs",
+    "stats/cov.rs",
+    "stats/reuse.rs",
+    "stats/traffic.rs",
+    "coordinator/report.rs",
+    "exp/output.rs",
+    "sweep/json.rs",
+];
+
+/// Reserved id for the allow-annotation checker (not a table row: it
+/// guards the escape hatch itself, so it cannot be allowed away).
+pub const A0_ID: &str = "A0";
+
+/// A line-level rule: fires when any `patterns` token appears in the
+/// stripped code text of a file where `applies` holds.
+pub struct LineRule {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub patterns: &'static [&'static str],
+    pub applies: fn(&SourceFile) -> bool,
+    pub message: &'static str,
+}
+
+/// The rule registry. New rules are new rows.
+pub const RULES: &[LineRule] = &[
+    LineRule {
+        id: "D1",
+        title: "no hash-ordered collections in determinism-critical modules",
+        patterns: &["HashMap", "HashSet"],
+        applies: |f| module_in(&f.module, DETERMINISM_CRITICAL),
+        message: "hash-ordered collection in a determinism-critical module; \
+                  iteration order varies per process — use BTreeMap/BTreeSet \
+                  or a sorted Vec",
+    },
+    LineRule {
+        id: "D2",
+        title: "no wall-clock/randomness/env sources outside the harness allowlist",
+        patterns: &["Instant::now", "SystemTime", "thread_rng", "env::var", "env::var_os"],
+        applies: |f| !module_in(&f.module, D2_ALLOWED),
+        message: "nondeterministic input source outside the perf/obs/cli/config \
+                  allowlist; simulation output must be a pure function of \
+                  (config, seed)",
+    },
+    LineRule {
+        id: "D3",
+        title: "atomics in determinism-critical modules must be SeqCst or justified",
+        patterns: &[
+            "Ordering::Relaxed",
+            "Ordering::Acquire",
+            "Ordering::Release",
+            "Ordering::AcqRel",
+        ],
+        applies: |f| module_in(&f.module, DETERMINISM_CRITICAL),
+        message: "non-SeqCst atomic ordering in a determinism-critical module; \
+                  use SeqCst or justify why the ordering cannot affect results",
+    },
+    LineRule {
+        id: "D4",
+        title: "no floating-point arithmetic in report-accumulation paths",
+        patterns: &["f64", "f32"],
+        applies: |f| {
+            module_in(&f.module, D4_MODULES)
+                && !D4_EXEMPT_FILES.iter().any(|e| f.rel_path.ends_with(e))
+        },
+        message: "floating-point type in a report-accumulation path; artifacts \
+                  stay byte-identical only with exact integer accumulation \
+                  (render floats in exp/output.rs or figures.rs)",
+    },
+];
+
+/// True when `module` equals an entry or is nested under one
+/// (`sweep::shard` is in `sweep`; `sweeper` is not).
+pub fn module_in(module: &str, list: &[&str]) -> bool {
+    list.iter().any(|e| {
+        module
+            .strip_prefix(e)
+            .is_some_and(|rest| rest.is_empty() || rest.starts_with("::"))
+    })
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Token-boundary search: `tok` must not be flanked by identifier chars,
+/// so `f64` does not match `push_f64` and `env::var` does not match
+/// `env::var_os`.
+pub fn has_token(code: &str, tok: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(tok) {
+        let at = start + pos;
+        let end = at + tok.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+/// Run every applicable line rule over one file, resolving `lint:allow`
+/// shields, then validate the file's allow annotations (A0).
+pub fn check_file(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for rule in RULES {
+        if !(rule.applies)(file) {
+            continue;
+        }
+        for line in &file.lines {
+            if line.in_test {
+                continue;
+            }
+            for pat in rule.patterns {
+                if !has_token(&line.code, pat) {
+                    continue;
+                }
+                let allowed = file
+                    .allows_for(line.number)
+                    .find(|a| a.rules.iter().any(|r| r == rule.id))
+                    .and_then(|a| a.justification.clone());
+                out.push(Finding {
+                    rule: rule.id,
+                    file: file.rel_path.clone(),
+                    line: line.number,
+                    message: format!("`{pat}`: {}", squeeze(rule.message)),
+                    allowed,
+                });
+            }
+        }
+    }
+    out.extend(check_allows(file));
+    out
+}
+
+/// A0: every `lint:allow` must name known rule ids and carry a real
+/// justification. `--fix-allow` inserts `TODO` placeholders, which are
+/// still errors — the tree stays red until a human writes the reason.
+pub fn check_allows(file: &SourceFile) -> Vec<Finding> {
+    let known: Vec<&str> = RULES.iter().map(|r| r.id).chain(["D5"]).collect();
+    let mut out = Vec::new();
+    for (_, allow) in &file.allows {
+        let at = |message: String| Finding {
+            rule: A0_ID,
+            file: file.rel_path.clone(),
+            line: allow.line,
+            message,
+            allowed: None,
+        };
+        if allow.rules.is_empty() {
+            out.push(at("lint:allow names no rule id".to_string()));
+        }
+        for r in &allow.rules {
+            if !known.contains(&r.as_str()) {
+                out.push(at(format!("lint:allow names unknown rule id `{r}`")));
+            }
+        }
+        match &allow.justification {
+            None => out.push(at(
+                "lint:allow without a justification (append `-- <why>`)".to_string(),
+            )),
+            Some(j) if j.starts_with("TODO") => out.push(at(format!(
+                "lint:allow justification is a placeholder: {j:?}"
+            ))),
+            Some(_) => {}
+        }
+    }
+    out
+}
+
+// Multi-line string literals in the table above keep source lines short
+// but embed the indentation; collapse runs of whitespace for reports.
+fn squeeze(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut ws = false;
+    for c in s.chars() {
+        if c.is_whitespace() {
+            ws = true;
+        } else {
+            if ws && !out.is_empty() {
+                out.push(' ');
+            }
+            ws = false;
+            out.push(c);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// D5: the ARCHITECTURE.md invariant tables and rust/tests/ must agree.
+// ---------------------------------------------------------------------------
+
+/// What a backticked span in a "Pinned by" cell claims to name.
+enum TestRef {
+    /// `tests/foo.rs` — an integration test file.
+    File(String),
+    /// `some_test_fn` or `path::to::fn_name` or `fn_prefix*`.
+    Fn { name: String, prefix: bool },
+}
+
+/// D5, both directions:
+/// 1. every row of a "Pinned by" table in ARCHITECTURE.md must name at
+///    least one test that exists (a `tests/*.rs` file or a `fn` defined
+///    somewhere under `rust/src` or `rust/tests`);
+/// 2. every `rust/tests/*.rs` file must be mentioned in at least one doc
+///    (`rust/README.md`, `rust/docs/*.md`) or a CHANGES.md entry.
+pub fn check_cross_file(repo: &Repo) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if let Some((arch_path, arch_text)) = &repo.architecture {
+        check_invariant_tables(repo, arch_path, arch_text, &mut out);
+    }
+    check_tests_documented(repo, &mut out);
+    out
+}
+
+fn check_invariant_tables(
+    repo: &Repo,
+    arch_path: &str,
+    arch_text: &str,
+    out: &mut Vec<Finding>,
+) {
+    let mut in_table = false;
+    for (idx, raw) in arch_text.lines().enumerate() {
+        let line_no = idx + 1;
+        let t = raw.trim();
+        if !t.starts_with('|') {
+            in_table = false;
+            continue;
+        }
+        let cells = split_row(t);
+        if !in_table {
+            in_table = cells.last().is_some_and(|c| c.contains("Pinned by"));
+            continue;
+        }
+        if cells.iter().all(|c| c.chars().all(|ch| matches!(ch, '-' | ':' | ' '))) {
+            continue; // the |---|---| separator under the header
+        }
+        let Some(pinned_cell) = cells.last() else { continue };
+        // Rows may carry `<!-- lint:allow(D5) -- why -->`; the allow (and
+        // its A0 validation) is handled exactly like the Rust form.
+        let allow = crate::lint::scan::parse_allow(raw, line_no).map(|mut a| {
+            if let Some(j) = a.justification.take() {
+                let j = j.trim_end_matches("-->").trim().to_string();
+                a.justification = (!j.is_empty()).then_some(j);
+            }
+            a
+        });
+        let shields_d5 = allow.as_ref().is_some_and(|a| {
+            a.rules.iter().any(|r| r == "D5") && a.justification.is_some()
+        });
+        let justification = allow.as_ref().and_then(|a| a.justification.clone());
+        let finding = |message: String| Finding {
+            rule: "D5",
+            file: arch_path.to_string(),
+            line: line_no,
+            message,
+            allowed: if shields_d5 { justification.clone() } else { None },
+        };
+        let refs = test_refs(pinned_cell);
+        if refs.is_empty() {
+            out.push(finding(
+                "invariant row pins no test (name a `tests/*.rs` file or a \
+                 `#[test]` fn in backticks in the last column)"
+                    .to_string(),
+            ));
+        }
+        for r in refs {
+            match r {
+                TestRef::File(rel) => {
+                    if !repo.tests.iter().any(|t| t.rel_path == format!("rust/{rel}")) {
+                        out.push(finding(format!(
+                            "invariant row pins `{rel}`, which does not exist under rust/tests/"
+                        )));
+                    }
+                }
+                TestRef::Fn { name, prefix } => {
+                    let defined = repo
+                        .sources
+                        .iter()
+                        .chain(&repo.tests)
+                        .any(|f| defines_fn(&f.raw, &name, prefix));
+                    if !defined {
+                        out.push(finding(format!(
+                            "invariant row pins fn `{name}{}`, which is not defined \
+                             under rust/src or rust/tests",
+                            if prefix { "*" } else { "" }
+                        )));
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn check_tests_documented(repo: &Repo, out: &mut Vec<Finding>) {
+    for test in &repo.tests {
+        let stem = test
+            .rel_path
+            .rsplit('/')
+            .next()
+            .and_then(|n| n.strip_suffix(".rs"))
+            .unwrap_or(&test.rel_path);
+        let documented = repo.docs.iter().any(|(_, text)| text.contains(stem));
+        if documented {
+            continue;
+        }
+        // An undocumented test can carry a justified file-level allow.
+        let allow = test
+            .allows
+            .iter()
+            .map(|(_, a)| a)
+            .find(|a| a.rules.iter().any(|r| r == "D5"));
+        out.push(Finding {
+            rule: "D5",
+            file: test.rel_path.clone(),
+            line: 1,
+            message: format!(
+                "integration test `{stem}` is not mentioned in any doc \
+                 (rust/README.md, rust/docs/*.md) or CHANGES.md entry"
+            ),
+            allowed: allow.and_then(|a| a.justification.clone()),
+        });
+    }
+}
+
+/// Split a markdown table row into trimmed cells.
+fn split_row(row: &str) -> Vec<String> {
+    row.trim()
+        .trim_start_matches('|')
+        .trim_end_matches('|')
+        .split('|')
+        .map(|c| c.trim().to_string())
+        .collect()
+}
+
+/// Extract test references from the backticked spans of a "Pinned by"
+/// cell. Spans that are neither `tests/*.rs` paths nor snake_case fn
+/// names (e.g. `SimConfig`, CI job names) are ignored.
+fn test_refs(cell: &str) -> Vec<TestRef> {
+    let mut refs = Vec::new();
+    for span in backtick_spans(cell) {
+        if span.starts_with("tests/") && span.ends_with(".rs") {
+            refs.push(TestRef::File(span));
+        } else if span.contains('_')
+            && span.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | ':' | '*'))
+        {
+            let prefix = span.ends_with('*');
+            let name = span
+                .trim_end_matches('*')
+                .rsplit("::")
+                .next()
+                .unwrap_or(&span)
+                .to_string();
+            if !name.is_empty() {
+                refs.push(TestRef::Fn { name, prefix });
+            }
+        }
+    }
+    refs
+}
+
+fn backtick_spans(text: &str) -> Vec<String> {
+    let mut spans = Vec::new();
+    let mut rest = text;
+    while let Some(open) = rest.find('`') {
+        let after = &rest[open + 1..];
+        let Some(close) = after.find('`') else { break };
+        spans.push(after[..close].to_string());
+        rest = &after[close + 1..];
+    }
+    spans
+}
+
+/// Is `fn <name>` defined anywhere in `raw`? With `prefix`, `name` only
+/// needs to start the fn identifier. Searches raw text (comments and all)
+/// — test names are long snake_case strings, so collisions are unlikely
+/// and this keeps the check cheap.
+fn defines_fn(raw: &str, name: &str, prefix: bool) -> bool {
+    let pat = format!("fn {name}");
+    let bytes = raw.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = raw[start..].find(&pat) {
+        let at = start + pos;
+        let end = at + pat.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = prefix || end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::scan_source;
+
+    #[test]
+    fn module_matching_is_prefix_safe() {
+        assert!(module_in("sweep", DETERMINISM_CRITICAL));
+        assert!(module_in("sweep::shard", DETERMINISM_CRITICAL));
+        assert!(!module_in("sweeper", DETERMINISM_CRITICAL));
+        assert!(!module_in("lint::rules", DETERMINISM_CRITICAL));
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("let m: HashMap<u64, u8>;", "HashMap"));
+        assert!(!has_token("fn push_f64(v: u64) {}", "f64"));
+        assert!(has_token("raw.parse::<f64>()", "f64"));
+        assert!(!has_token("std::env::var_os(k)", "env::var"));
+        assert!(has_token("std::env::var(k)", "env::var"));
+        assert!(!has_token("MyHashMapLike", "HashMap"));
+    }
+
+    #[test]
+    fn d1_fires_in_critical_module_and_not_in_cli() {
+        let bad = scan_source("rust/src/sim/core.rs", "let m = HashMap::new();");
+        assert_eq!(check_file(&bad).len(), 1);
+        let ok = scan_source("rust/src/cli.rs", "let m = HashMap::new();");
+        assert!(check_file(&ok).is_empty());
+    }
+
+    #[test]
+    fn allow_with_justification_shields_and_without_is_a0() {
+        let shielded = scan_source(
+            "rust/src/sim/core.rs",
+            "let m = HashMap::new(); // lint:allow(D1) -- scratch map, drained sorted",
+        );
+        let fs = check_file(&shielded);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].allowed.as_deref(), Some("scratch map, drained sorted"));
+
+        let bare = scan_source(
+            "rust/src/sim/core.rs",
+            "let m = HashMap::new(); // lint:allow(D1)",
+        );
+        let fs = check_file(&bare);
+        assert!(fs.iter().any(|f| f.rule == "D1" && f.allowed.is_none()));
+        assert!(fs.iter().any(|f| f.rule == A0_ID));
+    }
+
+    #[test]
+    fn unknown_rule_id_is_a0() {
+        let f = scan_source("rust/src/sim/core.rs", "x(); // lint:allow(D9) -- nope");
+        assert!(check_file(&f).iter().any(|f| f.rule == A0_ID
+            && f.message.contains("unknown rule id `D9`")));
+    }
+
+    #[test]
+    fn backtick_and_ref_extraction() {
+        let refs = test_refs("`tests/golden.rs`, `figure_rows_*` and `SimConfig`");
+        assert_eq!(refs.len(), 2);
+        assert!(matches!(&refs[0], TestRef::File(p) if p == "tests/golden.rs"));
+        assert!(matches!(&refs[1], TestRef::Fn { name, prefix: true } if name == "figure_rows_"));
+    }
+
+    #[test]
+    fn fn_definition_search() {
+        let raw = "pub fn figure_rows_match() {}\nfn other() {}";
+        assert!(defines_fn(raw, "figure_rows_match", false));
+        assert!(!defines_fn(raw, "figure_rows", false));
+        assert!(defines_fn(raw, "figure_rows_", true));
+        assert!(!defines_fn(raw, "missing", false));
+    }
+}

@@ -1,0 +1,457 @@
+//! Source scanner for the lint engine: splits a Rust source file into
+//! per-line *code text* with string literals, comments and `#[cfg(test)]`
+//! blocks stripped, and collects `lint:allow` annotations.
+//!
+//! This is deliberately **not** a parser (the repo is dependency-free, so
+//! `syn` is off the table) — it is a line/token-level scanner with just
+//! enough lexical state to be trustworthy:
+//!
+//! * string literals (including multi-line and raw `r#"…"#` strings) and
+//!   char literals are blanked out, so a rule pattern inside a string can
+//!   never fire;
+//! * `//` line comments and (nested) `/* … */` block comments are blanked
+//!   out of the code text, with line-comment text kept aside for
+//!   `lint:allow` parsing;
+//! * `#[cfg(test)]` items are tracked by brace depth and their lines
+//!   marked `in_test`, so unit-test code is never linted (the production
+//!   rules exist to protect shipped determinism, not test scaffolding).
+//!
+//! The allow syntax is `// lint:allow(D1,D3) -- <justification>`. The
+//! justification is **mandatory** — an allow without one (or with a
+//! `TODO…` placeholder, which is what `repro lint --fix-allow` inserts) is
+//! itself reported under rule [`A0`](crate::lint::rules::A0_ID). A
+//! trailing allow applies to its own line; an allow on a line of its own
+//! applies to the next line that carries code.
+
+/// One `lint:allow(…)` annotation, parsed from a `//` comment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allow {
+    /// Rule ids listed inside the parentheses, e.g. `["D1", "D3"]`.
+    pub rules: Vec<String>,
+    /// The text after `--`, if present and non-empty.
+    pub justification: Option<String>,
+    /// 1-based line the annotation itself sits on.
+    pub line: usize,
+}
+
+/// One physical source line after lexical stripping.
+#[derive(Debug)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// The line's code content; stripped spans are replaced by spaces so
+    /// column arithmetic stays meaningful.
+    pub code: String,
+    /// True for lines inside a `#[cfg(test)]` item (the attribute line
+    /// and the braced block it gates).
+    pub in_test: bool,
+}
+
+/// A scanned source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Repo-relative path with `/` separators, e.g. `rust/src/sweep/shard.rs`.
+    pub rel_path: String,
+    /// Module path derived from the file path, e.g. `sweep::shard`.
+    pub module: String,
+    pub lines: Vec<Line>,
+    /// `(target_line, allow)` pairs: the line each annotation shields.
+    pub allows: Vec<(usize, Allow)>,
+    /// The raw, unstripped text (cross-file rules search it for `fn` names).
+    pub raw: String,
+}
+
+impl SourceFile {
+    /// Allows shielding `line`, in file order.
+    pub fn allows_for(&self, line: usize) -> impl Iterator<Item = &Allow> {
+        self.allows.iter().filter(move |(t, _)| *t == line).map(|(_, a)| a)
+    }
+}
+
+/// Module path for a source file path: `rust/src/sweep/shard.rs` →
+/// `sweep::shard`, `rust/src/config/mod.rs` → `config`, `rust/src/main.rs`
+/// → `main`.
+pub fn module_of(rel_path: &str) -> String {
+    let p = rel_path
+        .strip_prefix("rust/src/")
+        .or_else(|| rel_path.strip_prefix("src/"))
+        .unwrap_or(rel_path);
+    let p = p.strip_suffix(".rs").unwrap_or(p);
+    let p = p.strip_suffix("/mod").unwrap_or(p);
+    p.replace('/', "::")
+}
+
+/// Lexer state that survives line breaks.
+enum Mode {
+    Code,
+    /// Nested depth of `/* … */`.
+    Block(u32),
+    /// Inside a `"…"` string literal.
+    Str,
+    /// Inside an `r##"…"##` raw string with this many `#`s.
+    RawStr(u32),
+}
+
+/// Scan `text` into per-line code/comment pairs and `lint:allow`s.
+pub fn scan_source(rel_path: &str, text: &str) -> SourceFile {
+    let module = module_of(rel_path);
+    let mut mode = Mode::Code;
+    // (code text, line-comment text) per physical line.
+    let mut stripped: Vec<(String, String)> = Vec::new();
+    for raw_line in text.split('\n') {
+        let chars: Vec<char> = raw_line.chars().collect();
+        let mut code = String::with_capacity(chars.len());
+        let mut comment = String::new();
+        let mut i = 0usize;
+        while i < chars.len() {
+            match mode {
+                Mode::Block(depth) => {
+                    if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        mode = if depth > 1 { Mode::Block(depth - 1) } else { Mode::Code };
+                        code.push_str("  ");
+                        i += 2;
+                    } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(depth + 1);
+                        code.push_str("  ");
+                        i += 2;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if chars[i] == '\\' {
+                        code.push_str("  ");
+                        i += 2; // escape sequence (possibly past EOL: line continuation)
+                    } else if chars[i] == '"' {
+                        code.push('"');
+                        mode = Mode::Code;
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    if chars[i] == '"'
+                        && (1..=hashes as usize)
+                            .all(|k| chars.get(i + k) == Some(&'#'))
+                    {
+                        code.push('"');
+                        for _ in 0..hashes {
+                            code.push(' ');
+                        }
+                        mode = Mode::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    let c = chars[i];
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        comment = chars[i + 2..].iter().collect();
+                        break; // rest of the line is comment
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(1);
+                        code.push_str("  ");
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        mode = Mode::Str;
+                        i += 1;
+                    } else if c == 'r'
+                        && !prev_is_ident(&code)
+                        && raw_str_hashes(&chars[i + 1..]).is_some()
+                    {
+                        let hashes = raw_str_hashes(&chars[i + 1..]).unwrap_or(0);
+                        code.push('r');
+                        for _ in 0..=hashes {
+                            code.push(' ');
+                        }
+                        mode = Mode::RawStr(hashes);
+                        i += 2 + hashes as usize;
+                    } else if c == '\'' {
+                        // Char literal vs lifetime: a literal closes within
+                        // a couple of chars ('x', '\n', '\u{1F600}'); a
+                        // lifetime ('a, 'static) never closes.
+                        match char_literal_len(&chars[i..]) {
+                            Some(len) => {
+                                for _ in 0..len {
+                                    code.push(' ');
+                                }
+                                i += len;
+                            }
+                            None => {
+                                code.push('\'');
+                                i += 1;
+                            }
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        stripped.push((code, comment));
+    }
+
+    // #[cfg(test)] tracking over the code text.
+    let mut lines = Vec::with_capacity(stripped.len());
+    let mut in_test = false;
+    let mut pending = false; // saw the attribute, waiting for the block
+    let mut depth: i64 = 0;
+    for (idx, (code, _)) in stripped.iter().enumerate() {
+        let mut this_is_test = in_test;
+        if in_test {
+            depth += brace_delta(code);
+            if depth <= 0 {
+                in_test = false;
+            }
+        } else if pending {
+            this_is_test = true;
+            if code.contains('{') {
+                depth = brace_delta(code);
+                pending = false;
+                in_test = depth > 0;
+            } else if code.contains(';') {
+                pending = false; // attribute gated a braceless item
+            }
+        } else if code.contains("cfg(test)") {
+            this_is_test = true;
+            let rest: String =
+                code[code.find("cfg(test)").unwrap_or(0)..].chars().collect();
+            if let Some(b) = rest.find('{') {
+                depth = brace_delta(&rest[b..]);
+                in_test = depth > 0;
+            } else if !rest.contains(';') {
+                pending = true;
+            }
+        }
+        lines.push(Line { number: idx + 1, code: code.clone(), in_test: this_is_test });
+    }
+
+    // lint:allow parsing + attachment.
+    let mut allows = Vec::new();
+    for (idx, (code, comment)) in stripped.iter().enumerate() {
+        let Some(allow) = parse_allow(comment, idx + 1) else { continue };
+        let target = if code.trim().is_empty() {
+            // Standalone comment: shield the next line that carries code.
+            stripped
+                .iter()
+                .enumerate()
+                .skip(idx + 1)
+                .find(|(_, (c, _))| !c.trim().is_empty())
+                .map(|(j, _)| j + 1)
+                .unwrap_or(idx + 1)
+        } else {
+            idx + 1
+        };
+        allows.push((target, allow));
+    }
+
+    SourceFile { rel_path: rel_path.to_string(), module, lines, allows, raw: text.to_string() }
+}
+
+/// Parse `lint:allow(R1,R2) -- justification` out of a comment's text.
+/// Returns `None` when the comment carries no annotation at all;
+/// a malformed annotation still returns (with empty rules and/or no
+/// justification) so the engine can report it.
+///
+/// Doc comments (`///`, `//!`) are documentation, not annotations — the
+/// syntax may be *described* there (as this very module does) without
+/// creating an escape hatch.
+pub fn parse_allow(comment: &str, line: usize) -> Option<Allow> {
+    if comment.starts_with('/') || comment.starts_with('!') {
+        return None;
+    }
+    let start = comment.find("lint:allow(")?;
+    let after = &comment[start + "lint:allow(".len()..];
+    let close = after.find(')');
+    let (inside, rest) = match close {
+        Some(c) => (&after[..c], &after[c + 1..]),
+        None => (after, ""),
+    };
+    let rules: Vec<String> = inside
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    let justification = rest
+        .trim_start()
+        .strip_prefix("--")
+        .map(|j| j.trim())
+        .filter(|j| !j.is_empty())
+        .map(|j| j.to_string());
+    Some(Allow { rules, justification, line })
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// If `chars` (just past an `r`) opens a raw string, the number of `#`s.
+fn raw_str_hashes(chars: &[char]) -> Option<u32> {
+    let mut n = 0u32;
+    for &c in chars {
+        match c {
+            '#' => n += 1,
+            '"' => return Some(n),
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// Length of a char literal starting at `chars[0] == '\''`, or `None`
+/// for a lifetime.
+fn char_literal_len(chars: &[char]) -> Option<usize> {
+    match chars.get(1)? {
+        '\\' => {
+            // Escape: scan to the closing quote (bounded — a lifetime
+            // can't start with a backslash, so this is always a literal).
+            let close = chars.iter().skip(2).position(|&c| c == '\'')?;
+            Some(close + 3)
+        }
+        _ => (chars.get(2) == Some(&'\'')).then_some(3),
+    }
+}
+
+fn brace_delta(code: &str) -> i64 {
+    let mut d = 0i64;
+    for c in code.chars() {
+        match c {
+            '{' => d += 1,
+            '}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(text: &str) -> Vec<String> {
+        scan_source("rust/src/sim/mod.rs", text).lines.into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn module_paths() {
+        assert_eq!(module_of("rust/src/sweep/shard.rs"), "sweep::shard");
+        assert_eq!(module_of("rust/src/config/mod.rs"), "config");
+        assert_eq!(module_of("rust/src/main.rs"), "main");
+        assert_eq!(module_of("rust/src/figures.rs"), "figures");
+        assert_eq!(module_of("src/obs/log.rs"), "obs::log");
+    }
+
+    #[test]
+    fn strings_are_blanked() {
+        let c = codes(r#"let x = "HashMap::new()"; call(x);"#);
+        assert!(!c[0].contains("HashMap"), "{:?}", c[0]);
+        assert!(c[0].contains("call(x)"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked_across_lines() {
+        let c = codes("let x = r#\"first HashMap\nsecond SystemTime\"#;\nlet y = 1;");
+        assert!(!c[0].contains("HashMap"));
+        assert!(!c[1].contains("SystemTime"));
+        assert!(c[2].contains("let y = 1"));
+    }
+
+    #[test]
+    fn line_comments_are_blanked_but_kept_for_allows() {
+        let f = scan_source(
+            "rust/src/sim/mod.rs",
+            "let a = 1; // HashMap here is fine\nlet b = 2; // lint:allow(D1) -- test reason",
+        );
+        assert!(!f.lines[0].code.contains("HashMap"));
+        assert_eq!(f.allows.len(), 1);
+        assert_eq!(f.allows[0].0, 2);
+        assert_eq!(f.allows[0].1.rules, vec!["D1"]);
+        assert_eq!(f.allows[0].1.justification.as_deref(), Some("test reason"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let c = codes("a; /* x /* HashMap */ still comment */ b;\n/* open\nSystemTime\n*/ c;");
+        assert!(!c[0].contains("HashMap"));
+        assert!(c[0].contains("b;"));
+        assert!(!c[2].contains("SystemTime"));
+        assert!(c[3].contains("c;"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let c = codes("let q = '\"'; let s = \"HashMap\"; fn f<'a>(x: &'a str) {}");
+        assert!(!c[0].contains("HashMap"), "{:?}", c[0]);
+        assert!(c[0].contains("fn f<'a>"), "{:?}", c[0]);
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_marked() {
+        let f = scan_source(
+            "rust/src/sim/mod.rs",
+            "fn real() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x() }\n}\nfn after() {}",
+        );
+        let flags: Vec<bool> = f.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_block() {
+        let f = scan_source(
+            "rust/src/sim/mod.rs",
+            "#[cfg(not(test))]\nfn real() {\n    body();\n}",
+        );
+        assert!(f.lines.iter().all(|l| !l.in_test));
+    }
+
+    #[test]
+    fn cfg_test_on_braceless_item_ends_at_semicolon() {
+        let f = scan_source(
+            "rust/src/sim/mod.rs",
+            "#[cfg(test)]\nuse std::collections::HashMap;\nfn real() {}",
+        );
+        assert!(f.lines[1].in_test);
+        assert!(!f.lines[2].in_test);
+    }
+
+    #[test]
+    fn standalone_allow_attaches_to_next_code_line() {
+        let f = scan_source(
+            "rust/src/sim/mod.rs",
+            "// lint:allow(D2,D3) -- both justified\n\nlet t = now();",
+        );
+        assert_eq!(f.allows.len(), 1);
+        assert_eq!(f.allows[0].0, 3);
+        assert_eq!(f.allows[0].1.rules, vec!["D2", "D3"]);
+    }
+
+    #[test]
+    fn allow_without_justification_parses_as_none() {
+        let a = parse_allow("lint:allow(D1)", 7).unwrap();
+        assert_eq!(a.rules, vec!["D1"]);
+        assert_eq!(a.justification, None);
+        let b = parse_allow("lint:allow(D1) --   ", 7).unwrap();
+        assert_eq!(b.justification, None);
+        assert_eq!(parse_allow("no annotation here", 1), None);
+    }
+
+    #[test]
+    fn doc_comments_are_not_annotations() {
+        // `///` and `//!` comments reach parse_allow with a leading `/` or
+        // `!`; describing the syntax in docs must not create an allow.
+        assert_eq!(parse_allow("/ the syntax is `// lint:allow(D1) -- why`", 1), None);
+        assert_eq!(parse_allow("! see lint:allow(D2) -- in LINTING.md", 1), None);
+        let f = scan_source(
+            "rust/src/sim/mod.rs",
+            "/// docs: lint:allow(D1) -- example\nfn real() {}",
+        );
+        assert!(f.allows.is_empty());
+    }
+}

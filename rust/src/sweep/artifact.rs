@@ -15,9 +15,7 @@ use super::json::JsonValue;
 /// Directory artifacts are written to: `REPRO_ARTIFACT_DIR` or the
 /// default `target/repro`.
 pub fn artifact_dir() -> PathBuf {
-    std::env::var("REPRO_ARTIFACT_DIR")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("target/repro"))
+    crate::config::env::artifact_dir().unwrap_or_else(|| PathBuf::from("target/repro"))
 }
 
 /// Path of the artifact named `name` (no extension) under `dir`.

@@ -17,7 +17,7 @@
 //! `target/repro/cache`) and the kill switches (`--no-disk-cache` via
 //! [`set_disk_cache_enabled`], or `REPRO_NO_DISK_CACHE=1`).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -29,12 +29,15 @@ use crate::coordinator::report::SimReport;
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
 
-static CACHE: OnceLock<Mutex<HashMap<u64, SimReport>>> = OnceLock::new();
+// BTreeMap, not HashMap (lint D1): nothing iterates this map today, but
+// a determinism-critical module must not keep a hash-ordered collection
+// around for a future `.iter()` to leak nondeterminism through.
+static CACHE: OnceLock<Mutex<BTreeMap<u64, SimReport>>> = OnceLock::new();
 static HITS: AtomicU64 = AtomicU64::new(0);
 static MISSES: AtomicU64 = AtomicU64::new(0);
 
-fn cache() -> &'static Mutex<HashMap<u64, SimReport>> {
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+fn cache() -> &'static Mutex<BTreeMap<u64, SimReport>> {
+    CACHE.get_or_init(|| Mutex::new(BTreeMap::new()))
 }
 
 #[inline]
@@ -70,42 +73,48 @@ pub fn config_key(workload: &str, cfg: &SimConfig) -> u64 {
 
 /// Cached report for `key`, if any.
 pub fn lookup(key: u64) -> Option<SimReport> {
-    let hit = cache().lock().unwrap().get(&key).cloned();
+    let hit = lock_cache().get(&key).cloned();
     if hit.is_some() {
-        HITS.fetch_add(1, Ordering::Relaxed);
+        HITS.fetch_add(1, Ordering::SeqCst);
         crate::obs::CACHE_HIT.inc();
     } else {
-        MISSES.fetch_add(1, Ordering::Relaxed);
+        MISSES.fetch_add(1, Ordering::SeqCst);
         crate::obs::CACHE_MISS.inc();
     }
     hit
 }
 
+fn lock_cache() -> std::sync::MutexGuard<'static, BTreeMap<u64, SimReport>> {
+    // A panic while holding this lock means a panic mid-`get`/`insert`
+    // on plain data — nothing to recover; poisoning is fatal by design.
+    cache().lock().expect("report cache mutex poisoned")
+}
+
 /// Store a computed report under `key`.
 pub fn store(key: u64, report: &SimReport) {
-    cache().lock().unwrap().insert(key, report.clone());
+    lock_cache().insert(key, report.clone());
 }
 
 /// Lifetime hit count (for tests and the CLI's cache report).
 pub fn hits() -> u64 {
-    HITS.load(Ordering::Relaxed)
+    HITS.load(Ordering::SeqCst)
 }
 
 /// Lifetime miss count.
 pub fn misses() -> u64 {
-    MISSES.load(Ordering::Relaxed)
+    MISSES.load(Ordering::SeqCst)
 }
 
 /// Number of cached reports.
 pub fn entries() -> usize {
-    cache().lock().unwrap().len()
+    lock_cache().len()
 }
 
 /// Drop every cached report (tests; long-lived tools sweeping huge grids).
 /// Only the in-memory level — the on-disk store is managed by
 /// `repro cache clear|gc`.
 pub fn clear() {
-    cache().lock().unwrap().clear();
+    lock_cache().clear();
 }
 
 // ---------------------------------------------------------------------
@@ -118,27 +127,23 @@ static DISK_DISABLED: AtomicBool = AtomicBool::new(false);
 /// `--no-disk-cache`). Sweeps that were handed an explicit store are not
 /// affected.
 pub fn set_disk_cache_enabled(yes: bool) {
-    DISK_DISABLED.store(!yes, Ordering::Relaxed);
+    DISK_DISABLED.store(!yes, Ordering::SeqCst);
 }
 
 /// The directory the process-default disk store lives in:
 /// `REPRO_CACHE_DIR`, or `target/repro/cache`.
 pub fn default_cache_dir() -> PathBuf {
-    std::env::var("REPRO_CACHE_DIR")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("target/repro/cache"))
+    crate::config::env::cache_dir().unwrap_or_else(|| PathBuf::from("target/repro/cache"))
 }
 
 /// The process-default disk store, or `None` when persistence is turned
 /// off (`--no-disk-cache`, or `REPRO_NO_DISK_CACHE=1` in the environment).
 pub fn default_disk_store() -> Option<DiskStore> {
-    if DISK_DISABLED.load(Ordering::Relaxed) {
+    if DISK_DISABLED.load(Ordering::SeqCst) {
         return None;
     }
-    if let Ok(v) = std::env::var("REPRO_NO_DISK_CACHE") {
-        if v == "1" || v.eq_ignore_ascii_case("true") {
-            return None;
-        }
+    if crate::config::env::no_disk_cache() {
+        return None;
     }
     Some(DiskStore::at(default_cache_dir()))
 }

@@ -16,14 +16,9 @@ use std::sync::{Condvar, Mutex};
 /// Worker-thread count: `REPRO_THREADS` overrides the machine's available
 /// parallelism (useful for CI determinism checks and sizing experiments).
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("REPRO_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
-    }
-    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    crate::config::env::threads().unwrap_or_else(|| {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    })
 }
 
 /// The shared injector: a FIFO of job indices plus the closed flag, with
@@ -49,7 +44,7 @@ impl Injector {
     /// Enqueue one job and wake one parked worker.
     fn submit(&self, job: usize) {
         let depth = {
-            let mut state = self.q.lock().unwrap();
+            let mut state = self.q.lock().expect("injector mutex poisoned");
             state.jobs.push_back(job);
             state.jobs.len()
         };
@@ -60,14 +55,14 @@ impl Injector {
     /// No more submissions: wake *every* parked worker so all can observe
     /// the close and exit once the queue drains.
     fn close(&self) {
-        self.q.lock().unwrap().closed = true;
+        self.q.lock().expect("injector mutex poisoned").closed = true;
         self.cv.notify_all();
     }
 
     /// Claim the next job, parking on the condvar while the queue is empty
     /// but still open. `None` means closed-and-drained: the worker exits.
     fn next_job(&self) -> Option<usize> {
-        let mut state = self.q.lock().unwrap();
+        let mut state = self.q.lock().expect("injector mutex poisoned");
         // Span timing starts at the first park, so a worker that claims
         // immediately records nothing (and reads no clock).
         let mut parked_at: Option<std::time::Instant> = None;
@@ -82,10 +77,13 @@ impl Injector {
                 return None;
             }
             if parked_at.is_none() && crate::obs::enabled() {
+                // lint:allow(D2) -- queue-wait telemetry only, and only when
+                // `--metrics-out` opted in; the claimed job sequence (what
+                // determinism depends on) never reads this clock.
                 parked_at = Some(std::time::Instant::now());
             }
             crate::obs::SCHED_PARKS.inc();
-            state = self.cv.wait(state).unwrap();
+            state = self.cv.wait(state).expect("injector mutex poisoned");
             crate::obs::SCHED_WAKES.inc();
         }
     }
@@ -128,7 +126,7 @@ where
             scope.spawn(move || {
                 while let Some(j) = injector.next_job() {
                     let out = run_one(f, j);
-                    *results[j].lock().unwrap() = Some(out);
+                    *results[j].lock().expect("result slot mutex poisoned") = Some(out);
                 }
             });
         }
@@ -143,7 +141,7 @@ where
 
     results
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("every job ran"))
+        .map(|m| m.into_inner().expect("result slot mutex poisoned").expect("every job ran"))
         .collect()
 }
 

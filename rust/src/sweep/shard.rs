@@ -88,6 +88,9 @@ fn fresh_nonce() -> u64 {
     static SEQ: AtomicU64 = AtomicU64::new(0);
     let mut z = (std::process::id() as u64)
         ^ now_ms().rotate_left(20)
+        // lint:allow(D3) -- nonce entropy: any distinct value works, no
+        // cross-thread ordering is observable (nonces never reach reports
+        // or artifacts, per the doc above).
         ^ (SEQ.fetch_add(1, Ordering::Relaxed) << 48);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);

@@ -247,9 +247,9 @@ impl DiskStore {
     }
 
     /// Keys of claim files whose heartbeat is within the shard TTL.
-    fn live_claim_keys(&self) -> io::Result<std::collections::HashSet<u64>> {
+    fn live_claim_keys(&self) -> io::Result<std::collections::BTreeSet<u64>> {
         let ttl = super::shard::default_ttl();
-        let mut live = std::collections::HashSet::new();
+        let mut live = std::collections::BTreeSet::new();
         let entries = match std::fs::read_dir(&self.dir) {
             Ok(e) => e,
             Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(live),
@@ -319,6 +319,9 @@ impl DiskStore {
                     let age = std::fs::metadata(&path)
                         .and_then(|m| m.modified())
                         .ok()
+                        // lint:allow(D2) -- GC lease protocol: tmp-file age vs the
+                        // wall clock decides *whether stale files are deleted*,
+                        // never a simulation result or an artifact byte.
                         .and_then(|m| std::time::SystemTime::now().duration_since(m).ok())
                         .unwrap_or_default();
                     if age >= tmp_older_than && std::fs::remove_file(&path).is_ok() {
@@ -393,6 +396,9 @@ pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
     tmp.set_file_name(format!(
         ".{name}.{}.{}.tmp",
         std::process::id(),
+        // lint:allow(D3) -- the counter only makes tmp names unique within
+        // this process; no ordering between threads is observable (each
+        // value is used once, and the rename target is the same either way).
         SEQ.fetch_add(1, Ordering::Relaxed)
     ));
     std::fs::write(&tmp, bytes)?;
@@ -446,6 +452,8 @@ fn push_str(out: &mut String, s: &str) {
     out.push('"');
 }
 
+// lint:allow(D4) -- generic JSON float support for *parsing foreign
+// fields*; every report counter goes through the exact-u64 path above.
 fn push_f64(out: &mut String, v: f64) {
     // Rust's f64 Display is the shortest representation that parses back
     // to the same bits, so finite values round-trip exactly.
@@ -641,6 +649,8 @@ fn decode_run(v: &parse::Jv) -> Result<RunReport, String> {
                     .map_err(|_| "vaults_enabled out of range".to_string())?,
                 avg_latency: match &d[4] {
                     parse::Jv::Null => None,
+                    // lint:allow(D4) -- decodes a policy decision's recorded
+                    // float; never accumulated, round-trips losslessly.
                     other => Some(other.f64()?),
                 },
             })
@@ -757,9 +767,12 @@ mod parse {
             }
         }
 
+        // lint:allow(D4) -- typed read-out for JSON floats (decisions'
+        // avg_latency); report counters use the exact `u64` reader above.
         pub(super) fn f64(&self) -> Result<f64, String> {
             match self {
                 Jv::Num(raw) => {
+                    // lint:allow(D4) -- same justification as the signature.
                     raw.parse::<f64>().map_err(|_| format!("bad number {raw:?}"))
                 }
                 other => Err(format!("expected number, got {}", kind(other))),
@@ -839,9 +852,12 @@ mod parse {
             ) {
                 self.i += 1;
             }
-            let raw = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+            let raw = std::str::from_utf8(&self.b[start..self.i])
+                .expect("number token bytes are ASCII");
             // Validate now so a malformed token fails the parse, not a
             // later typed read.
+            // lint:allow(D4) -- syntax validation of a JSON number token;
+            // the parsed value is discarded (Jv keeps the raw digits).
             raw.parse::<f64>().map_err(|_| format!("bad number {raw:?}"))?;
             Ok(Jv::Num(raw.to_string()))
         }
@@ -891,7 +907,7 @@ mod parse {
                         // read_to_string already validated).
                         let rest = std::str::from_utf8(&self.b[self.i..])
                             .map_err(|_| "invalid UTF-8")?;
-                        let c = rest.chars().next().unwrap();
+                        let c = rest.chars().next().expect("non-empty slice");
                         out.push(c);
                         self.i += c.len_utf8();
                     }

@@ -52,7 +52,7 @@ pub mod transform;
 pub mod varint;
 pub mod writer;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Mutex, OnceLock};
 
@@ -158,8 +158,11 @@ pub(crate) fn write_file(path: &Path, bytes: &[u8]) -> Result<(), String> {
 /// `Workload::name(&self) -> &'static str` without leaking one allocation
 /// per sweep job that opens the same file.
 pub fn intern(name: &str) -> &'static str {
-    static NAMES: OnceLock<Mutex<HashMap<String, &'static str>>> = OnceLock::new();
-    let mut map = NAMES.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    static NAMES: OnceLock<Mutex<BTreeMap<String, &'static str>>> = OnceLock::new();
+    let mut map = NAMES
+        .get_or_init(|| Mutex::new(BTreeMap::new()))
+        .lock()
+        .expect("intern table mutex poisoned");
     if let Some(s) = map.get(name) {
         return *s;
     }
@@ -186,7 +189,7 @@ pub fn record_run(cfg: &SimConfig, workload: &str, path: &Path) -> Result<SimRep
     let writer = writer::shared(meta);
     let rec = Recording::new(inner, writer.clone());
     let report = crate::coordinator::driver::simulate(&cfg, Box::new(rec));
-    let guard = writer.lock().unwrap();
+    let guard = writer.lock().expect("trace writer mutex poisoned");
     guard.save(path)?;
     Ok(report)
 }

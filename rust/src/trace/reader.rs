@@ -38,18 +38,25 @@ impl TraceData {
                 "not a dlpim trace: bad magic {magic:02x?} (expected {MAGIC:02x?})"
             ));
         }
-        let version = u16::from_le_bytes(take(bytes, &mut pos, 2, "version")?.try_into().unwrap());
+        // `take` returns exactly the requested byte count, so the array
+        // conversions below cannot fail.
+        let version =
+            u16::from_le_bytes(take(bytes, &mut pos, 2, "version")?.try_into().expect("2 bytes"));
         if version != VERSION {
             return Err(format!(
                 "unsupported trace version {version} (this build reads version {VERSION})"
             ));
         }
-        let n_cores = u16::from_le_bytes(take(bytes, &mut pos, 2, "n_cores")?.try_into().unwrap());
-        let block_bytes =
-            u32::from_le_bytes(take(bytes, &mut pos, 4, "block_bytes")?.try_into().unwrap());
-        let config_hash =
-            u64::from_le_bytes(take(bytes, &mut pos, 8, "config_hash")?.try_into().unwrap());
-        let seed = u64::from_le_bytes(take(bytes, &mut pos, 8, "seed")?.try_into().unwrap());
+        let n_cores =
+            u16::from_le_bytes(take(bytes, &mut pos, 2, "n_cores")?.try_into().expect("2 bytes"));
+        let block_bytes = u32::from_le_bytes(
+            take(bytes, &mut pos, 4, "block_bytes")?.try_into().expect("4 bytes"),
+        );
+        let config_hash = u64::from_le_bytes(
+            take(bytes, &mut pos, 8, "config_hash")?.try_into().expect("8 bytes"),
+        );
+        let seed =
+            u64::from_le_bytes(take(bytes, &mut pos, 8, "seed")?.try_into().expect("8 bytes"));
         let workload = read_str(bytes, &mut pos, "workload name")?;
         let mem = read_str(bytes, &mut pos, "memory kind")?;
         let topology = read_str(bytes, &mut pos, "topology")?;
@@ -164,7 +171,7 @@ fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize, what: &str) -> Result<&'
 
 fn read_str(bytes: &[u8], pos: &mut usize, what: &str) -> Result<String, String> {
     let len =
-        u16::from_le_bytes(take(bytes, pos, 2, what)?.try_into().unwrap()) as usize;
+        u16::from_le_bytes(take(bytes, pos, 2, what)?.try_into().expect("2 bytes")) as usize;
     let raw = take(bytes, pos, len, what)?;
     String::from_utf8(raw.to_vec()).map_err(|_| format!("{what} is not valid UTF-8"))
 }

@@ -124,14 +124,14 @@ impl<W: Workload> Workload for Recording<W> {
     fn next_op(&mut self, core: CoreId) -> Option<Op> {
         let op = self.inner.next_op(core);
         if let Some(op) = op {
-            self.writer.lock().unwrap().append(core, op);
+            self.writer.lock().expect("trace writer mutex poisoned").append(core, op);
         }
         op
     }
 
     fn reset(&mut self, seed: u64) {
         self.inner.reset(seed);
-        self.writer.lock().unwrap().restart(seed);
+        self.writer.lock().expect("trace writer mutex poisoned").restart(seed);
     }
 }
 

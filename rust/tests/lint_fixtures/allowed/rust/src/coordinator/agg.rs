@@ -1,0 +1,13 @@
+//! Fixture: harness read-outs whose hazards are all justified.
+
+pub fn elapsed_ns() -> u64 {
+    // lint:allow(D2) -- progress telemetry only, never enters report state
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos() as u64
+}
+
+// lint:allow(D4) -- derived read-out ratio, never accumulated back
+pub fn ratio(a: u64, b: u64) -> f64 {
+    // lint:allow(D4) -- same read-out as the signature
+    a as f64 / b as f64
+}

@@ -1,0 +1,6 @@
+//! Fixture crate root. This tree is *data* for `tests/lint_engine.rs`,
+//! never compiled — every seeded hazard below carries a justified allow,
+//! so `repro lint` over this root reports zero violations.
+
+pub mod coordinator;
+pub mod sim;

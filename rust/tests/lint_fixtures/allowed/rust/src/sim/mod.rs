@@ -1,0 +1,13 @@
+//! Fixture: determinism-critical module whose hazards are all justified.
+
+use std::collections::HashMap; // lint:allow(D1) -- drained in sorted order before any fold
+
+static SEQ: core::sync::atomic::AtomicU64 = core::sync::atomic::AtomicU64::new(0);
+
+pub fn sim_order_is_stable() -> u64 {
+    // lint:allow(D3) -- ticket counter: claim order cannot affect results
+    let t = SEQ.fetch_add(1, core::sync::atomic::Ordering::Relaxed);
+    // lint:allow(D1) -- scratch map, drained through a sorted Vec below
+    let m: HashMap<u64, u64> = Default::default();
+    t + m.len() as u64
+}

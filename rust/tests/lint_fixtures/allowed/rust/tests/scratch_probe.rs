@@ -1,0 +1,6 @@
+// lint:allow(D5) -- scratch fixture probe; intentionally undocumented
+
+#[test]
+fn probe_runs() {
+    assert_eq!(2 + 2, 4);
+}

@@ -1,0 +1,7 @@
+//! Fixture: report-accumulation path seeded with D2/D4 violations.
+
+pub fn sample() -> u64 {
+    let t0 = std::time::Instant::now();
+    let x: f64 = 0.5;
+    t0.elapsed().as_nanos() as u64 + x as u64
+}

@@ -1,0 +1,9 @@
+//! Fixture crate root. This tree is *data* for `tests/lint_engine.rs`,
+//! never compiled — `Repo::load` requires `rust/src/lib.rs` to accept a
+//! directory as a repo root.
+
+pub mod coordinator;
+pub mod sim;
+
+/// Referenced by an ARCHITECTURE.md invariant row (fn-ref resolution).
+pub fn fixture_probe_works() {}

@@ -1,0 +1,15 @@
+//! Fixture: determinism-critical module seeded with D1/D3/A0 violations.
+
+use std::collections::HashMap;
+
+static COUNTER: core::sync::atomic::AtomicU64 = core::sync::atomic::AtomicU64::new(0);
+
+pub fn run() -> u64 {
+    let mut m: HashMap<u64, u64> = HashMap::new();
+    m.insert(1, 2);
+    let t = COUNTER.fetch_add(1, core::sync::atomic::Ordering::Relaxed);
+    let h: std::collections::HashSet<u64> = Default::default(); // lint:allow(D1)
+    t + m.len() as u64 + h.len() as u64
+}
+
+pub fn other() {} // lint:allow(D9) -- not a real rule id

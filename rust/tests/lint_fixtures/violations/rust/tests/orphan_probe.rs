@@ -1,0 +1,6 @@
+//! Fixture: an integration test no doc or CHANGES entry mentions (D5).
+
+#[test]
+fn probe() {
+    assert_eq!(1 + 1, 2);
+}
